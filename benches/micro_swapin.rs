@@ -1,0 +1,73 @@
+//! Micro-bench: swap-in channels (paper §4). Compares the simulated
+//! standard path (page cache + CPU copy + GPU convert) against the
+//! zero-copy DMA path, and measures REAL file reads (buffered vs
+//! O_DIRECT) on this host's storage.
+
+use std::io::Write;
+
+use swapnet::config::{DeviceProfile, Processor, MB};
+use swapnet::memsim::MemSim;
+use swapnet::model::BlockInfo;
+use swapnet::storage::{direct_read, Storage};
+use swapnet::swap::{SwapController, SwapMode};
+use swapnet::util::bench::bench;
+
+fn block(size_mb: u64) -> BlockInfo {
+    BlockInfo {
+        index: 0,
+        layer_lo: 0,
+        layer_hi: 4,
+        size_bytes: size_mb * MB,
+        depth: 16,
+        flops: 0,
+    }
+}
+
+fn main() {
+    println!("=== micro: swap-in channels ===\n");
+    let prof = DeviceProfile::jetson_nx();
+
+    // ---- simulated device costs --------------------------------------
+    for proc in [Processor::Cpu, Processor::Gpu] {
+        for (label, mode) in [("standard", SwapMode::Standard), ("zero-copy", SwapMode::ZeroCopy)] {
+            let mut st = Storage::new(512 * MB);
+            let mut mem = MemSim::new(8_000 * MB);
+            let ctl = SwapController::new(mode, "m");
+            let rb = ctl.swap_in_sim(&block(100), 1, proc, &mut st, &mut mem, &prof);
+            println!(
+                "device model: {proc} {label:<9} swap-in 100 MB: {:>7.1} ms, resident {:>4} MB",
+                rb.swap_in_s * 1e3,
+                mem.current() / MB
+            );
+        }
+    }
+
+    // ---- real host I/O --------------------------------------------------
+    let dir = std::env::temp_dir().join(format!("swapnet-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("block.bin");
+    {
+        let mut f = std::fs::File::create(&path).unwrap();
+        let chunk = vec![7u8; 1 << 20];
+        for _ in 0..64 {
+            f.write_all(&chunk).unwrap();
+        }
+    }
+    println!("\nreal host reads of a 64 MB block file:");
+    let rb = bench("buffered read (page cache)", 600, || {
+        let v = std::fs::read(&path).unwrap();
+        std::hint::black_box(v.len());
+    });
+    println!("{}", rb.report());
+    let rd = bench("direct read (O_DIRECT or fallback)", 600, || {
+        let v = direct_read(&path).unwrap();
+        std::hint::black_box(v.len());
+    });
+    println!("{}", rd.report());
+    println!(
+        "\nstability: buffered p95/p50 = {:.2}, direct p95/p50 = {:.2} (paper: DMA channel latency is stable)",
+        rb.p95_s / rb.p50_s,
+        rd.p95_s / rd.p50_s
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

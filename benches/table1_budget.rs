@@ -1,0 +1,33 @@
+//! Table 1 reproduction: memory allocation of non-DNN tasks and the
+//! remaining budget for DNN tasks on the autonomous-vehicle platform.
+//! Paper: OS 1038 MB / SLAM 1815 / Map 1229 / Video 488 / CUDA 1518,
+//! remaining 2104 MB (25.7% of 8 GB).
+
+use swapnet::config::MB;
+use swapnet::util::table;
+use swapnet::workload;
+
+fn main() {
+    println!("=== Table 1: non-DNN memory allocation (paper §2.1) ===\n");
+    let tasks = workload::table1_non_dnn();
+    let total = 8192 * MB;
+    let used: u64 = tasks.iter().map(|t| t.mem_bytes).sum();
+    let mut rows: Vec<Vec<String>> = tasks
+        .iter()
+        .map(|t| {
+            vec![
+                t.name.clone(),
+                format!("{} MB", t.mem_bytes / MB),
+                format!("{:.1}%", 100.0 * t.mem_bytes as f64 / total as f64),
+            ]
+        })
+        .collect();
+    rows.push(vec![
+        "Remaining Memory".into(),
+        format!("{} MB", (total - used) / MB),
+        format!("{:.1}%", 100.0 * (total - used) as f64 / total as f64),
+    ]);
+    println!("{}", table::render(&["Tasks", "Memory Usage", "Percentage"], &rows));
+    assert_eq!((total - used) / MB, 2104, "Table 1 remaining must match paper");
+    println!("paper check: remaining 2104 MB (25.7%) -- MATCH");
+}

@@ -1,0 +1,45 @@
+//! Table 2 reproduction: the ResNet-101 model information table
+//! (per-layer size / parameter depth / FLOPs) that SwapNet profiles into
+//! a meta file for the scheduler. Paper shows e.g. Layer1 0.38 MB /
+//! depth 1 / 26.2 MFLOPs ... Layer101 17.45 MB.
+
+use swapnet::model::families;
+use swapnet::util::table;
+
+fn main() {
+    println!("=== Table 2: model info tables (paper §6.1) ===\n");
+    for name in ["resnet101", "vgg19", "yolov3", "fcn"] {
+        let m = families::by_name(name).unwrap();
+        let mut rows = Vec::new();
+        for (i, l) in m.layers.iter().enumerate() {
+            if i < 5 || i + 2 >= m.layers.len() {
+                rows.push(vec![
+                    format!("Layer{}", i + 1),
+                    format!("{:.2} MB", l.size_bytes as f64 / 1e6),
+                    l.depth.to_string(),
+                    if l.flops > 1_000_000 {
+                        format!("{:.1} M", l.flops as f64 / 1e6)
+                    } else {
+                        format!("{:.1} K", l.flops as f64 / 1e3)
+                    },
+                ]);
+            } else if i == 5 {
+                rows.push(vec!["...".into(), "...".into(), "...".into(), "...".into()]);
+            }
+        }
+        println!("{name}:");
+        println!("{}", table::render(&["Layer", "Size", "Depth", "FLOPs"], &rows));
+        println!(
+            "  total {:.0} MB over {} chain layers, {:.1} GFLOPs (paper: {} MB)\n",
+            m.size_bytes() as f64 / 1e6,
+            m.layers.len(),
+            m.total_flops() as f64 / 1e9,
+            match name {
+                "resnet101" => 170,
+                "vgg19" => 548,
+                "yolov3" => 236,
+                _ => 207,
+            }
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! §Perf harness: whole-stack hot-path profiling for the optimization
+//! pass (EXPERIMENTS.md §Perf). Times each L3 hot path in isolation so
+//! before/after deltas are attributable:
+//!   1. partition lookup-table construction (registration/adaptation path)
+//!   2. run_snet_model (the per-inference simulated coordinator)
+//!   3. real PJRT forward: literal creation vs execution split
+//!   4. serving throughput at overload (batcher + pipeline)
+//!
+//!     cargo run --release --example perf_stack
+
+use std::time::Instant;
+
+use swapnet::config::{DeviceProfile, MB};
+use swapnet::coordinator::{run_snet_model, SnetConfig};
+use swapnet::delay::DelayModel;
+use swapnet::model::artifacts::{artifacts_dir, ArtifactModel};
+use swapnet::model::families;
+use swapnet::runtime::{DirectRunner, Runtime};
+use swapnet::scheduler::partition;
+use swapnet::server::{serve, ServeConfig};
+use swapnet::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let prof = DeviceProfile::jetson_nx();
+    let dm = DelayModel::from_profile(&prof);
+
+    println!("== 1. partition lookup tables (registration / adaptation path) ==");
+    let resnet = families::resnet101();
+    let yolo = families::yolov3();
+    for (m, n) in [(&resnet, 3usize), (&resnet, 4), (&yolo, 3), (&yolo, 6)] {
+        let r = bench(&format!("build_lookup_table({}, n={})", m.name, n), 400, || {
+            std::hint::black_box(partition::build_lookup_table(m, n, &dm));
+        });
+        println!("{}", r.report());
+    }
+    let t = partition::build_lookup_table(&resnet, 3, &dm);
+    let r = bench("best_within (595-row prune)", 200, || {
+        std::hint::black_box(t.best_within(120 * MB));
+    });
+    println!("{}", r.report());
+
+    println!("\n== 2. run_snet_model (simulated coordinator, per inference) ==");
+    for m in [&resnet, &yolo] {
+        let r = bench(&format!("run_snet_model({})", m.name), 400, || {
+            std::hint::black_box(
+                run_snet_model(m, 140 * MB, &prof, &SnetConfig::default()).unwrap(),
+            );
+        });
+        println!("{}", r.report());
+    }
+
+    if !artifacts_dir().join("manifest.json").exists() {
+        println!("\n(artifacts missing; skipping real-runtime sections)");
+        return Ok(());
+    }
+
+    println!("\n== 3. real PJRT forward breakdown (tiny_cnn, batch 8) ==");
+    let model = ArtifactModel::load(&artifacts_dir().join("tiny_cnn"))?;
+    let rt = Runtime::cpu()?;
+    let runner = DirectRunner::new(&rt, model.clone(), 8);
+    runner.warmup()?;
+    let feat: usize = model.in_shape.iter().skip(1).product();
+    let x = vec![0.3f32; feat * 8];
+    let r = bench("DirectRunner::forward (disk params each call)", 1500, || {
+        std::hint::black_box(runner.forward(&x).unwrap());
+    });
+    println!("{}", r.report());
+    // split: param literal construction only
+    let bufs: Vec<Vec<u8>> = (0..model.units.len())
+        .map(|u| std::fs::read(model.params_path(u)).unwrap())
+        .collect();
+    let r = bench("param literal construction (all units)", 800, || {
+        for (u, buf) in model.units.iter().zip(&bufs) {
+            for e in &u.skeleton {
+                let s = &buf[e.offset_bytes..e.offset_bytes + e.size_bytes];
+                std::hint::black_box(
+                    swapnet::runtime::literal_f32(&e.shape, s).unwrap(),
+                );
+            }
+        }
+    });
+    println!("{}", r.report());
+    let r = bench("param file reads (all units)", 800, || {
+        for u in 0..model.units.len() {
+            std::hint::black_box(std::fs::read(model.params_path(u)).unwrap());
+        }
+    });
+    println!("{}", r.report());
+    if !model.units[0].hlo_ref_by_batch.is_empty() {
+        let resident = swapnet::runtime::ResidentModelRunner::new(&rt, model.clone(), 8)?;
+        let r = bench("ResidentModelRunner::forward (device-resident)", 1500, || {
+            std::hint::black_box(resident.forward(&x).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    println!("\n== 4. serving throughput at overload ==");
+    let t0 = Instant::now();
+    let rep = serve(
+        &rt,
+        &model,
+        &ServeConfig { rate_hz: 1e6, requests: 512, points: vec![2, 4], ..Default::default() },
+    )?;
+    println!(
+        "512 requests, 3 blocks, overload: {:.0} req/s (virtual), wall {:.2}s, batches {}",
+        rep.throughput_rps,
+        t0.elapsed().as_secs_f64(),
+        rep.batches
+    );
+    Ok(())
+}

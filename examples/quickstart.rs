@@ -1,0 +1,94 @@
+//! Quickstart: load the trained tiny_cnn artifact, run it whole, then run
+//! it as SwapNet blocks under a tight memory budget, and check that (a)
+//! the outputs agree bit-for-bit in structure and (b) the measured eval
+//! accuracy matches the training-time accuracy recorded by the AOT path.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` to have run.
+
+use anyhow::{anyhow, Result};
+use swapnet::model::artifacts::{artifacts_dir, ArtifactModel};
+use swapnet::pipeline::real::{run_partitioned, ExecStrategy};
+use swapnet::runtime::{DirectRunner, Runtime};
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let model = ArtifactModel::load(&dir.join("tiny_cnn"))?;
+    let rt = Runtime::cpu()?;
+    println!(
+        "loaded {} ({} units, {} params) on {}",
+        model.name,
+        model.units.len(),
+        swapnet::util::table::human_bytes(model.size_bytes),
+        rt.platform()
+    );
+
+    // --- 1. whole-model inference (DInf-style) ------------------------
+    let runner = DirectRunner::new(&rt, model.clone(), 1);
+    let compile_s = runner.warmup()?;
+    println!("compiled {} unit executables in {:.2}s", model.units.len(), compile_s);
+
+    // --- 2. eval accuracy over the procedural test split ---------------
+    let eval_x = std::fs::read(dir.join("eval/tiny_eval_x.bin"))?;
+    let eval_y = std::fs::read(dir.join("eval/tiny_eval_y.bin"))?;
+    let n = eval_y.len() / 4;
+    let feat = 32 * 32 * 3;
+    let xs: Vec<f32> = eval_x
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let ys: Vec<i32> = eval_y
+        .chunks_exact(4)
+        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+
+    let mut hits = 0usize;
+    let sample = 128.min(n);
+    for i in 0..sample {
+        let out = runner.forward(&xs[i * feat..(i + 1) * feat])?;
+        let pred = out
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(k, _)| k as i32)
+            .unwrap();
+        hits += (pred == ys[i]) as usize;
+    }
+    let acc = hits as f64 / sample as f64;
+    println!(
+        "eval accuracy over {sample} samples: {:.3} (AOT-recorded: {:.3})",
+        acc,
+        model.accuracy.unwrap_or(0.0)
+    );
+    if (acc - model.accuracy.unwrap_or(0.0)).abs() > 0.08 {
+        return Err(anyhow!("accuracy mismatch vs training-time eval"));
+    }
+
+    // --- 3. SwapNet blocks: partitioned + overlapped -------------------
+    let x = &xs[0..feat];
+    let whole = runner.forward(x)?;
+    for points in [vec![2, 4], vec![1, 2, 3, 4, 5]] {
+        let rep = run_partitioned(&rt, &model, 1, &points, ExecStrategy::Overlapped, x)?;
+        let max_diff = rep
+            .output
+            .iter()
+            .zip(&whole)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!(
+            "partition {:?}: {} blocks, latency {}, swap {} / exec {}, max |diff| = {:.2e}",
+            points,
+            rep.blocks.len(),
+            swapnet::util::table::human_secs(rep.latency_s),
+            swapnet::util::table::human_secs(rep.total_swap_s()),
+            swapnet::util::table::human_secs(rep.total_exec_s()),
+            max_diff
+        );
+        if max_diff > 1e-4 {
+            return Err(anyhow!("block-swapped output diverged from whole model"));
+        }
+    }
+    println!("quickstart OK: swapping is lossless and overlapped");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Self-driving scenario (paper §8.2, Fig 11): four DNNs (VGG-19 +
+//! ResNet-101 on CPU, YOLOv3 + FCN on GPU) sharing the DNN budget left
+//! after the Table 1 non-DNN tasks, compared across DInf / DCha / TPrg /
+//! SNet on memory, latency and accuracy.
+//!
+//!     cargo run --release --example self_driving
+
+use swapnet::config::DeviceProfile;
+use swapnet::coordinator::{run_scenario, SnetConfig};
+use swapnet::metrics::reduction_pct;
+use swapnet::util::table;
+use swapnet::workload;
+
+fn main() -> anyhow::Result<()> {
+    let sc = workload::self_driving();
+    let prof = DeviceProfile::jetson_nx();
+
+    println!("== Table 1: non-DNN memory allocation ==");
+    for t in &sc.non_dnn {
+        println!("  {:<28} {}", t.name, table::human_bytes(t.mem_bytes));
+    }
+    println!(
+        "  DNN budget: {} for a {} fleet (pressure {:.2}x; paper: 843 MB / 1161 MB)\n",
+        table::human_bytes(sc.dnn_budget),
+        table::human_bytes(sc.fleet_bytes()),
+        sc.pressure()
+    );
+
+    let methods = ["DInf", "DCha", "TPrg", "SNet"];
+    let mut rows = Vec::new();
+    let mut reports = std::collections::HashMap::new();
+    for m in methods {
+        let rs = run_scenario(&sc, m, &prof, &SnetConfig::default()).map_err(anyhow::Error::msg)?;
+        for r in &rs {
+            rows.push(r.row());
+        }
+        reports.insert(m, rs);
+    }
+    println!("== Fig 11: per-model memory / latency / accuracy ==");
+    println!("{}", table::render(&["model", "method", "peak mem", "latency", "accuracy"], &rows));
+
+    // Paper's headline reductions.
+    let snet = &reports["SNet"];
+    for base in ["DInf", "TPrg", "DCha"] {
+        let rs = &reports[base];
+        let reds: Vec<f64> = snet
+            .iter()
+            .zip(rs)
+            .map(|(s, b)| reduction_pct(s.peak_bytes, b.peak_bytes))
+            .collect();
+        let lo = reds.iter().copied().fold(f64::MAX, f64::min);
+        let hi = reds.iter().copied().fold(f64::MIN, f64::max);
+        println!("SNet memory reduction vs {base}: {lo:.1}% - {hi:.1}%");
+    }
+    let dinf = &reports["DInf"];
+    let diffs: Vec<f64> = snet
+        .iter()
+        .zip(dinf)
+        .map(|(s, d)| (s.latency_s - d.latency_s) * 1e3)
+        .collect();
+    println!(
+        "SNet latency overhead vs DInf: {:.0} - {:.0} ms (paper: 26-46 ms)",
+        diffs.iter().copied().fold(f64::MAX, f64::min),
+        diffs.iter().copied().fold(f64::MIN, f64::max)
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! UAV surveillance + runtime adaptation (paper Fig 13 + Fig 18): the
+//! two-model UAV fleet under an ampler budget, then a live budget-squeeze
+//! trace on the RosMaster-style deployment where SwapNet re-partitions
+//! ResNet-101 on the fly (paper: adaptation completes in 60-74 ms).
+//!
+//!     cargo run --release --example uav_adaptation
+
+use swapnet::config::DeviceProfile;
+use swapnet::coordinator::{run_scenario, run_snet_model, SnetConfig};
+use swapnet::model::families;
+use swapnet::scheduler::adapt::AdaptiveScheduler;
+use swapnet::util::table;
+use swapnet::workload;
+
+fn main() -> anyhow::Result<()> {
+    let prof = DeviceProfile::jetson_nx();
+
+    // ---- Fig 13: UAV scenario --------------------------------------
+    let sc = workload::uav();
+    println!(
+        "UAV fleet: {} into {} budget",
+        table::human_bytes(sc.fleet_bytes()),
+        table::human_bytes(sc.dnn_budget)
+    );
+    let mut rows = Vec::new();
+    for method in ["DInf", "DCha", "TPrg", "SNet"] {
+        for r in run_scenario(&sc, method, &prof, &SnetConfig::default())
+            .map_err(anyhow::Error::msg)?
+        {
+            rows.push(r.row());
+        }
+    }
+    println!("{}", table::render(&["model", "method", "peak mem", "latency", "accuracy"], &rows));
+
+    // ---- Fig 18: dynamic budget adaptation ---------------------------
+    println!("== Fig 18: runtime adaptation (ResNet-101) ==");
+    let mut ad = AdaptiveScheduler::register(families::resnet101(), &prof, 6);
+    for (t, budget) in workload::fig18_budget_trace() {
+        let s = ad.adapt(budget).map_err(anyhow::Error::msg)?;
+        let (_, _, dt) = *ad.history.last().unwrap();
+        // Re-simulate the run under the new schedule to report latency.
+        let run = run_snet_model(&families::resnet101(), budget, &prof, &SnetConfig::default())
+            .map_err(anyhow::Error::msg)?;
+        println!(
+            "  t={t:>5.1}s budget {:>8}: {} blocks {:?}  latency {}  (adaptation {:.1} ms, paper: 60-74 ms)",
+            table::human_bytes(budget),
+            s.n_blocks,
+            s.points,
+            table::human_secs(run.latency_s),
+            dt * 1e3,
+        );
+    }
+    Ok(())
+}

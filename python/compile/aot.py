@@ -1,0 +1,295 @@
+"""AOT compile path: lower every model unit to HLO text + parameter files.
+
+This is the ONLY place Python runs (invoked once by ``make artifacts``).
+Outputs, per model, under ``artifacts/<model>/``:
+
+  * ``unit_NNN.b<B>.hlo.txt`` — HLO *text* of the unit forward at batch B.
+    Text (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+    64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    parser reassigns ids (see /opt/xla-example/README.md).
+  * ``params_NNN.bin`` — the unit's parameters as one flat little-endian
+    f32 array: the ``Fil{pars}`` file that SwapNet swaps in. The skeleton
+    (per-parameter name/shape/offset) goes into meta.json — that is the
+    ``Obj{sket}`` pointer table the Rust assembly controller registers by
+    reference (paper §5.2).
+  * ``meta.json`` — model info table (paper Table 2: size / depth / FLOPs
+    per unit) + activation shapes + artifact file map.
+
+Also emits the procedural eval split, the tiny_cnn training log (loss
+curve for EXPERIMENTS.md), pruned TPrg variants with *measured* accuracy,
+and a top-level ``manifest.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from . import model as M
+from . import train as T
+
+EVAL_N = 512
+TINY_BATCHES = (1, 4, 8)
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_unit(unit, batch_in_shape, return_tuple: bool = True) -> str:
+    """Lower ``fwd(act, *params) -> act_out`` to HLO text.
+
+    The Pallas (TPU) variant returns a 1-tuple (the classic interchange
+    shape); the ref (CPU serving) variant returns a bare array so its
+    output PJRT buffer can feed the next unit's execute_b directly —
+    activations never leave the device between units (§Perf).
+    """
+
+    if return_tuple:
+        def fn(act, *params):
+            return (unit.fwd(act, list(params), True),)
+    else:
+        def fn(act, *params):
+            return unit.fwd(act, list(params), True)
+
+    specs = [jax.ShapeDtypeStruct(batch_in_shape, jnp.float32)] + [
+        jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in unit.params
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs), return_tuple=return_tuple)
+
+
+def flat_params_bytes(unit_params: List[jnp.ndarray]) -> bytes:
+    if not unit_params:
+        return b""
+    return np.concatenate(
+        [np.asarray(p, dtype="<f4").reshape(-1) for p in unit_params]
+    ).tobytes()
+
+
+def export_model(m: M.ChainModel, params, outdir: str, batches=(1,),
+                 ref_builder=None) -> Dict:
+    """Write all per-unit artifacts for one model; return its meta dict.
+
+    Two HLO variants are emitted per unit+batch (§Perf, EXPERIMENTS.md):
+      * ``unit_NNN.b<B>.hlo.txt``     — the Pallas kernels (TPU artifact;
+        interpret-lowered so it runs anywhere, but the interpret machinery
+        costs ~14 ms per kernel call on CPU);
+      * ``unit_NNN.b<B>.ref.hlo.txt`` — the pure-jnp oracle implementation
+        (XLA fuses it natively; the CPU-optimized serving variant).
+    The two are bit-compatible in parameter layout and verified equal by
+    the pytest suite; the Rust runtime picks per backend
+    (SWAPNET_KERNELS=pallas|ref).
+    """
+    os.makedirs(outdir, exist_ok=True)
+    units_meta = []
+    for ui, (u, ps) in enumerate(zip(m.units, params)):
+        blob = flat_params_bytes(ps)
+        pfile = f"params_{ui:03d}.bin"
+        with open(os.path.join(outdir, pfile), "wb") as f:
+            f.write(blob)
+        offset = 0
+        skeleton = []
+        for spec, arr in zip(u.params, ps):
+            nbytes = 4 * int(np.prod(spec.shape))
+            skeleton.append(
+                {
+                    "name": spec.name,
+                    "shape": list(spec.shape),
+                    "offset_bytes": offset,
+                    "size_bytes": nbytes,
+                }
+            )
+            offset += nbytes
+        units_meta.append(
+            {
+                "name": u.name,
+                "kind": u.kind,
+                "params_file": pfile,
+                "in_shape": list(u.in_shape),
+                "out_shape": list(u.out_shape),
+                "flops": int(u.flops),
+                "size_bytes": int(u.size_bytes),
+                "depth": int(u.depth),
+                "params": skeleton,
+                "hlo_by_batch": {},
+                "hlo_ref_by_batch": {},
+            }
+        )
+
+    for b in batches:
+        t0 = time.time()
+        mb = _rebatch(m, b)
+        mr = ref_builder(b) if ref_builder else None
+        for ui, u in enumerate(mb.units):
+            hfile = f"unit_{ui:03d}.b{b}.hlo.txt"
+            text = lower_unit(u, u.in_shape)
+            _check_signature(text, 1 + len(u.params), f"{m.name}/{u.name}@b{b}")
+            with open(os.path.join(outdir, hfile), "w") as f:
+                f.write(text)
+            units_meta[ui]["hlo_by_batch"][str(b)] = hfile
+            if mr is not None:
+                rfile = f"unit_{ui:03d}.b{b}.ref.hlo.txt"
+                rtext = lower_unit(mr.units[ui], mr.units[ui].in_shape,
+                                   return_tuple=False)
+                with open(os.path.join(outdir, rfile), "w") as f:
+                    f.write(rtext)
+                units_meta[ui]["hlo_ref_by_batch"][str(b)] = rfile
+        print(f"  [aot] {m.name}: lowered {len(mb.units)} units @batch={b} "
+              f"in {time.time() - t0:.1f}s")
+
+    meta = {
+        "name": m.name,
+        "family": m.family,
+        "num_classes": m.num_classes,
+        "batches": list(batches),
+        "in_shape": list(m.in_shape),
+        "out_shape": list(m.out_shape),
+        "size_bytes": int(m.size_bytes),
+        "flops": int(m.flops),
+        "units": units_meta,
+    }
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def _check_signature(hlo_text: str, expected_args: int, what: str) -> None:
+    """The HLO entry signature must carry exactly (act + every declared
+    parameter). jit silently DCEs unused arguments, which would desync the
+    Rust call convention from the skeleton — fail at export time instead
+    (this guard caught a dropped-bias bug in the transformer unit)."""
+    import re
+
+    entry = hlo_text.split("ENTRY", 1)[1]
+    nargs = len(re.findall(r"^\s*\S+ = [a-z0-9\[\],{} ]+ parameter\(\d+\)",
+                           entry, flags=re.M))
+    if nargs != expected_args:
+        raise AssertionError(
+            f"{what}: HLO entry has {nargs} parameters but the skeleton "
+            f"declares {expected_args} (unused-arg DCE?)"
+        )
+
+
+def _rebatch(m: M.ChainModel, batch: int) -> M.ChainModel:
+    """Rebuild the same architecture at a different batch size. For pruned
+    variants (not in BUILDERS) fall back to batch=as-built."""
+    if m.name in M.BUILDERS:
+        return M.build(m.name, batch=batch)
+    if m.in_shape[0] == batch:
+        return m
+    raise ValueError(f"cannot rebatch pruned model {m.name} to {batch}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--skip-fleet", action="store_true",
+                    help="only tiny_cnn (fast dev cycle)")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    t_all = time.time()
+
+    # ---- 1. train the quickstart model (real loss curve) -----------------
+    ref_m, trained, curve, acc = T.train_tiny_cnn(steps=args.train_steps)
+    tiny = M.build("tiny_cnn", batch=1)  # pallas variant, same param layout
+    meta_tiny = export_model(
+        tiny, trained, os.path.join(out, "tiny_cnn"), batches=TINY_BATCHES,
+        ref_builder=lambda b: M.build("tiny_cnn", batch=b, use_pallas=False),
+    )
+    meta_tiny["accuracy"] = acc
+    with open(os.path.join(out, "tiny_cnn", "meta.json"), "w") as f:
+        json.dump(meta_tiny, f, indent=1)
+
+    # ---- 2. pruned TPrg variants with measured accuracy ------------------
+    xt, yt = data.make_split(EVAL_N, seed=7)
+    pruned_meta = []
+    for ratio in (0.25, 0.5, 0.75):
+        pm, pp = T.prune_channels(ref_m, trained, ratio)
+        pp_ft, acc_p = _finetune(pm, pp, steps=60)
+        # Export the Pallas variant of the pruned architecture at batch=1.
+        c1_n = pm.units[0].params[0].shape[3]
+        c2_n = pm.units[2].params[0].shape[3]
+        pm_pallas = T.build_pruned_arch(pm.name, c1_n, c2_n, batch=1,
+                                        use_pallas=True)
+        meta_p = export_model(
+            pm_pallas, pp_ft, os.path.join(out, pm.name), batches=(1,),
+            ref_builder=lambda b, c1=c1_n, c2=c2_n, nm=pm.name: T.build_pruned_arch(
+                nm, c1, c2, batch=b, use_pallas=False),
+        )
+        meta_p["accuracy"] = acc_p
+        meta_p["pruned_from"] = "tiny_cnn"
+        meta_p["prune_ratio"] = ratio
+        with open(os.path.join(out, pm.name, "meta.json"), "w") as f:
+            json.dump(meta_p, f, indent=1)
+        pruned_meta.append(meta_p)
+        print(f"  [aot] {pm.name}: size {pm.size_bytes / 1e3:.0f} kB, "
+              f"measured acc {acc_p:.3f} (unpruned {acc:.3f})")
+
+    # ---- 3. the evaluation fleet (deterministic weights) ------------------
+    fleet_meta = []
+    fleet = [] if args.skip_fleet else [
+        "vgg_s", "resnet_s", "yolo_s", "fcn_s", "tiny_transformer",
+    ]
+    for name in fleet:
+        m = M.build(name, batch=1)
+        ps = m.init_params(seed=hash(name) % 2**31)
+        fleet_meta.append(export_model(
+            m, ps, os.path.join(out, name),
+            ref_builder=lambda b, nm=name: M.build(nm, batch=b, use_pallas=False),
+        ))
+
+    # ---- 4. eval split + training log ------------------------------------
+    ev = os.path.join(out, "eval")
+    os.makedirs(ev, exist_ok=True)
+    xt.astype("<f4").tofile(os.path.join(ev, "tiny_eval_x.bin"))
+    yt.astype("<i4").tofile(os.path.join(ev, "tiny_eval_y.bin"))
+    with open(os.path.join(out, "train_log.json"), "w") as f:
+        json.dump({"model": "tiny_cnn", "loss_curve": curve,
+                   "test_accuracy": acc}, f, indent=1)
+
+    manifest = {
+        "generated_by": "python/compile/aot.py",
+        "models": [meta_tiny["name"]] + [p["name"] for p in pruned_meta]
+        + [m["name"] for m in fleet_meta],
+        "eval": {"x": "eval/tiny_eval_x.bin", "y": "eval/tiny_eval_y.bin",
+                 "n": EVAL_N, "shape": [EVAL_N, 32, 32, 3]},
+        "tiny_cnn_accuracy": acc,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote artifacts for {len(manifest['models'])} models "
+          f"to {out} in {time.time() - t_all:.1f}s")
+
+
+def _finetune(m: M.ChainModel, params, steps: int = 60):
+    """Short post-pruning fine-tune (standard Torch-Pruning practice)."""
+    xs, ys = data.make_split(2048, seed=43)
+    loss_grad = jax.jit(jax.value_and_grad(lambda p, x, y: T._loss_fn(p, m, x, y)))
+    mu, nu, t = T._adam_init(params)
+    rng = np.random.default_rng(5)
+    batch = 64
+    for _ in range(steps):
+        idx = rng.integers(0, len(xs), size=batch)
+        _, grads = loss_grad(params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        params, mu, nu, t = T._adam_step(params, grads, mu, nu, t, lr=5e-4)
+    xt, yt = data.make_split(EVAL_N, seed=7)
+    return params, T.accuracy(m, params, xt, yt)
+
+
+if __name__ == "__main__":
+    main()

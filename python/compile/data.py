@@ -1,0 +1,50 @@
+"""Procedural dataset for the build-time training of tiny_cnn.
+
+The paper trains its fleet on GTSRB/CIFAR-100/COCO, which are not available
+in this environment (DESIGN.md §1 substitution table). We substitute a
+deterministic procedural 10-class image dataset whose classes are separable
+but non-trivial: each class is a 2-D sinusoidal texture with a
+class-specific frequency/orientation/color signature plus per-sample phase,
+amplitude jitter and pixel noise. This exercises the identical code path
+(conv feature extraction -> dense classification) and yields a real,
+measurable accuracy signal for the TPrg pruning comparison.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG = 32
+
+
+def _class_signature(c: int):
+    rng = np.random.default_rng(1000 + c)
+    freq = rng.uniform(0.15, 1.0, size=2)  # cycles / 8px in x, y
+    color = rng.uniform(0.35, 0.85, size=3)
+    checker = c % 3 == 0
+    return freq, color, checker
+
+
+def make_split(n: int, seed: int):
+    """Returns (x: (n,32,32,3) f32 in [0,1], y: (n,) int32)."""
+    rng = np.random.default_rng(seed)
+    xs = np.empty((n, IMG, IMG, 3), np.float32)
+    ys = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    ii, jj = np.meshgrid(np.arange(IMG), np.arange(IMG), indexing="ij")
+    for idx in range(n):
+        c = int(ys[idx])
+        freq, color, checker = _class_signature(c)
+        phase = rng.uniform(0, 2 * np.pi)
+        amp = rng.uniform(0.35, 1.0)
+        # small per-sample frequency jitter blurs class boundaries
+        fj = freq * rng.uniform(0.85, 1.15, size=2)
+        wave = np.sin(2 * np.pi * (fj[0] * ii + fj[1] * jj) / 8.0 + phase)
+        if checker:
+            wave = np.sign(wave)
+        base = 0.5 + 0.5 * amp * wave
+        img = base[..., None] * color[None, None, :]
+        img *= rng.uniform(0.6, 1.4)  # brightness jitter
+        img += rng.normal(0, 0.30, img.shape)
+        xs[idx] = np.clip(img, 0.0, 1.0)
+    return xs, ys

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for the SwapNet reproduction.
+
+The compute hot-spot of every DNN block (convolution / dense GEMM) is
+expressed as Pallas kernels tiled for TPU VMEM + MXU, and lowered with
+``interpret=True`` so the resulting HLO runs on the CPU PJRT plugin (real
+TPU lowering emits Mosaic custom-calls the CPU client cannot execute).
+
+Kernels:
+  - :mod:`.matmul`    — tiled GEMM with fused bias + activation epilogue.
+  - :mod:`.conv`      — NHWC conv2d via im2col feeding the GEMM kernel.
+  - :mod:`.pool`      — 2x2 max pooling.
+  - :mod:`.attention` — fused flash-style multi-head attention (the §10
+                        transformer/LLM extension).
+  - :mod:`.ref`       — pure-jnp oracle used by the pytest/hypothesis suite.
+"""
+
+from . import attention, conv, matmul, pool, ref  # noqa: F401

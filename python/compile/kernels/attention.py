@@ -1,0 +1,111 @@
+"""Fused multi-head attention Pallas kernel (flash-attention-style).
+
+Realizes the paper's §10 future-work direction — SwapNet for
+transformer/LLM topologies — at the kernel layer. TPU mapping: the grid
+is (batch*heads, Q-blocks, K-blocks); each step stages one (bq, d) query
+tile and one (bk, d) key/value tile in VMEM, contracts on the MXU, and
+maintains an *online softmax* (running max + normalizer) across the
+K-block axis so the full (S, S) score matrix never materializes in HBM —
+the same insight flash-attention expresses with CUDA shared memory,
+re-tiled for VMEM/BlockSpec.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls);
+correctness vs the pure-jnp oracle is enforced by pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, k_steps):
+    """One (bq, d) output tile; grid axis 2 walks K blocks with an online
+    softmax carried in (m_ref, l_ref)."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bk, d)
+    v = v_ref[0]  # (bk, d)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    m_prev = m_ref[0]  # (bq, 1)
+    l_prev = l_ref[0]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)  # rescale factor for the old state
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    o_ref[0] = o_ref[0] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(ki == k_steps - 1)
+    def _finalize():
+        o_ref[0] = o_ref[0] / l_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def mha(q, k, v, *, bq: int = 64, bk: int = 64, interpret: bool = True):
+    """Multi-head attention: q, k, v are (BH, S, D) -> (BH, S, D).
+
+    BH = batch*heads (pre-folded); S must be divisible by the block sizes
+    after clamping (we clamp the blocks to S, so any S works).
+    """
+    if q.ndim != 3 or q.shape != k.shape or q.shape != v.shape:
+        raise ValueError(f"mha expects equal (BH,S,D) shapes, got {q.shape}")
+    bh, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    if s % bq or s % bk:
+        # pad sequence to a common multiple; padded keys are masked by
+        # giving them NEG_INF scores via zero queries? Simpler: pad to
+        # lcm and mask keys with -inf rows is complex in-kernel; instead
+        # fall back to full-sequence blocks.
+        bq = s
+        bk = s
+    scale = 1.0 / (d**0.5)
+    k_steps = s // bk
+    grid = (bh, s // bq, k_steps)
+
+    out, _m, _l = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qi, ki: (h, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qi, ki: (h, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bq, 1), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bq, 1), lambda h, qi, ki: (h, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out
+
+
+def attention_flops(bh: int, s: int, d: int) -> int:
+    """2 GEMMs of (S,S,D) per head-batch."""
+    return 2 * 2 * bh * s * s * d
+
+
+def vmem_bytes(bq: int = 64, bk: int = 64, d: int = 64) -> int:
+    """Per-step VMEM residency: q/k/v tiles + output + carries + scores."""
+    return 4 * (bq * d + 2 * bk * d + bq * d + 2 * bq + bq * bk)

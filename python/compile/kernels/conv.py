@@ -1,0 +1,81 @@
+"""NHWC conv2d as im2col + the tiled Pallas GEMM.
+
+The paper's workloads are convolution-dominated (VGG/ResNet/YOLO/FCN). On
+CUDA the hot path is cuDNN's implicit-GEMM convolution; the TPU idiom is
+the same algebra staged for the MXU: gather input patches (im2col) and run
+one big GEMM through :func:`..matmul.matmul_bias_act`, which tiles the
+(patches x filters) contraction into VMEM.
+
+Patch extraction is pure jnp (gather/reshape — bandwidth-bound, fused by
+XLA); the FLOP-heavy contraction is the Pallas kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul
+
+
+def _im2col(x, kh: int, kw: int, stride: int, padding: int):
+    """(N, H, W, C) -> (N*OH*OW, KH*KW*C) patch matrix."""
+    n, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    # Extract one strided slice per kernel offset; stack along the channel
+    # axis. kh*kw is a small static constant (<= 9 here), so this unrolls
+    # into a handful of slices XLA fuses well.
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = jax.lax.slice(
+                x,
+                (0, di, dj, 0),
+                (n, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(sl)
+    patches = jnp.concatenate(cols, axis=-1)  # (N, OH, OW, KH*KW*C)
+    return patches.reshape(n * oh * ow, kh * kw * c), oh, ow
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "act", "interpret")
+)
+def conv2d_bias_act(
+    x,
+    w,
+    b,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+    act: str = "relu",
+    interpret: bool = True,
+):
+    """``act(conv2d(x, w) + b)`` in NHWC / HWIO layout.
+
+    x: (N, H, W, Cin), w: (KH, KW, Cin, Cout), b: (Cout,).
+    """
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d expects NHWC/HWIO, got x{x.shape} w{w.shape}")
+    kh, kw, cin, cout = w.shape
+    if x.shape[3] != cin:
+        raise ValueError(f"Cin mismatch: x{x.shape} w{w.shape}")
+    n = x.shape[0]
+    patches, oh, ow = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = matmul.matmul_bias_act(patches, wmat, b, act=act, interpret=interpret)
+    return out.reshape(n, oh, ow, cout)
+
+
+def conv_flops(x_shape, w_shape, stride: int = 1, padding: int = 1) -> int:
+    """Multiply-add count (2*MACs) of the convolution — feeds the model
+    info table (paper Table 2) consumed by the Rust delay model."""
+    n, h, w_, _ = x_shape
+    kh, kw, cin, cout = w_shape
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w_ + 2 * padding - kw) // stride + 1
+    return 2 * n * oh * ow * kh * kw * cin * cout

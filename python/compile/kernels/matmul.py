@@ -1,0 +1,139 @@
+"""Tiled GEMM Pallas kernel with fused bias + activation epilogue.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CUDA hot loop
+(threadblock GEMM in cuDNN) becomes a VMEM-tiled MXU GEMM here. The grid is
+(M/bm, N/bn, K/bk); each step loads one (bm, bk) LHS tile and one (bk, bn)
+RHS tile into VMEM via BlockSpec — the HBM->VMEM schedule that CUDA code
+expresses with shared-memory staging. The inner product is a whole-tile
+``jnp.dot`` with ``preferred_element_type=float32`` so the MXU systolic
+array (not scalar units) is the target. Accumulation runs over the K grid
+axis into the output ref; bias-add + activation fuse into the last K step
+(epilogue fusion, saving an extra HBM round trip).
+
+VMEM footprint at the default 128x128x128 tile: 3 f32 tiles = 192 KiB,
+well under the ~16 MiB VMEM budget; see EXPERIMENTS.md §Perf.
+
+Everything is lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls); correctness vs :mod:`.ref` is enforced by the pytest +
+hypothesis suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile. Small models pad up to one tile.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+ACTIVATIONS = ("none", "relu", "leaky_relu")
+
+
+def _apply_act(x, act: str):
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "leaky_relu":
+        return jnp.where(x > 0.0, x, 0.1 * x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, k_steps: int):
+    """One (bm, bn) output tile; grid axis 2 walks the K dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped tile contraction, f32 accumulation.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...], act)
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret")
+)
+def matmul_bias_act(
+    x,
+    w,
+    b,
+    *,
+    act: str = "none",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+):
+    """``act(x @ w + b)`` with a VMEM-tiled Pallas GEMM.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 -> (M, N) f32.
+    Inputs are zero-padded up to tile multiples and the result sliced back,
+    so arbitrary (small) shapes are supported.
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError("matmul_bias_act expects x:(M,K) w:(K,N) b:(N,)")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    # Clamp tiles to (padded) problem size so tiny layers do not blow up the
+    # interpret-mode grid.
+    bm = min(bm, _ceil_mult(m, 8))
+    bn = min(bn, _ceil_mult(n, 8))
+    bk = min(bk, _ceil_mult(k, 8))
+
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    wp = _pad_to(w.astype(jnp.float32), bk, bn)
+    bp = jnp.pad(b.astype(jnp.float32), (0, wp.shape[1] - n))[None, :]
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, act=act, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _ceil_mult(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> int:
+    """Estimated VMEM residency of one grid step (f32 operand+output tiles).
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf for the TPU roofline estimate —
+    interpret=True gives no hardware timing, so kernel quality is assessed
+    structurally (VMEM fit + MXU-shaped contraction).
+    """
+    return 4 * (bm * bk + bk * bn + bm * bn + bn)

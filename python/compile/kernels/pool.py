@@ -1,0 +1,36 @@
+"""2x2 max-pool Pallas kernel (NHWC).
+
+Pooling is bandwidth-bound; the kernel streams one (H, W) image plane per
+grid step through VMEM and reduces 2x2 windows with vectorized max — the
+VPU (vector unit) shape, no MXU involvement. Grid = (N, C) so block shapes
+stay static for any spatial size.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, H, W, 1) one image plane of one channel
+    h, w = x.shape[1], x.shape[2]
+    x = x.reshape(h // 2, 2, w // 2, 2)
+    o_ref[...] = jnp.max(jnp.max(x, axis=3), axis=1)[None, :, :, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def maxpool2x2(x, *, interpret: bool = True):
+    """(N, H, W, C) -> (N, H/2, W/2, C); H and W must be even."""
+    n, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2x2 needs even H, W; got {x.shape}")
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(n, c),
+        in_specs=[pl.BlockSpec((1, h, w, 1), lambda i, j: (i, 0, 0, j))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, 1), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, h // 2, w // 2, c), jnp.float32),
+        interpret=interpret,
+    )(x)

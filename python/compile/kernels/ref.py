@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the pytest + hypothesis suite holds the Pallas
+kernels to (assert_allclose), and what `aot.py --no-pallas` lowers when a
+plain-XLA artifact variant is wanted for A/B comparison.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_act(x, act: str):
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "leaky_relu":
+        return jnp.where(x > 0.0, x, 0.1 * x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def matmul_bias_act(x, w, b, *, act: str = "none"):
+    return apply_act(x @ w + b, act)
+
+
+def conv2d_bias_act(x, w, b, *, stride: int = 1, padding: int = 1, act: str = "relu"):
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return apply_act(out + b, act)
+
+
+def mha(q, k, v):
+    """Multi-head attention oracle: q, k, v are (BH, S, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q, k) / (d**0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def maxpool2x2(x):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

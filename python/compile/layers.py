@@ -1,0 +1,359 @@
+"""Unit-level building blocks for the SwapNet block-wise models.
+
+SwapNet (paper §6.2, "Adaptively Partition and Exchange Blocks") treats
+each *layer* as the smallest swappable unit: ``get_layers(Net)`` extracts a
+chain of layers once per model, and the scheduler later groups consecutive
+layers into blocks (``create_blocks``). We mirror that contract exactly:
+
+  * a :class:`Unit` is one chain element with a static activation
+    interface ``fwd(act, params) -> act``;
+  * every unit is AOT-lowered to its own HLO artifact so the Rust runtime
+    can assemble *any* block partition at run time without re-lowering;
+  * a unit's parameters are stored as one flat f32 array (``Fil{pars}``),
+    and the skeleton (``Obj{sket}``) records (name, shape, offset) per
+    parameter — the pointer-index layout §5.2 registers by reference.
+
+Residual bottlenecks are a single unit (their skip edge is internal), which
+keeps the inter-unit interface a pure chain — the paper notes ResNet is
+"harder to partition" precisely because partitions cannot cut a residual
+edge; making the residual unit atomic encodes that constraint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import matmul as kmatmul
+from .kernels import pool as kpool
+from .kernels import ref as kref
+
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """One parameter tensor inside a unit's flat parameter file."""
+
+    name: str
+    shape: Shape
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass
+class Unit:
+    """One swappable chain element (paper: the smallest block)."""
+
+    name: str
+    kind: str
+    params: List[ParamSpec]
+    fwd: Callable  # fwd(act, params: list[jnp.ndarray], interpret) -> act
+    in_shape: Shape
+    out_shape: Shape
+    flops: int
+
+    @property
+    def depth(self) -> int:
+        """Parameter depth d_i — the number of parameter tensors. Drives
+        the paper's assembly-delay model t_in/as ∝ d_i."""
+        return len(self.params)
+
+    @property
+    def size_bytes(self) -> int:
+        return 4 * sum(p.size for p in self.params)
+
+
+def _conv_unit(
+    name: str,
+    in_shape: Shape,
+    cout: int,
+    *,
+    k: int = 3,
+    stride: int = 1,
+    act: str = "relu",
+    use_pallas: bool = True,
+) -> Unit:
+    n, h, w, cin = in_shape
+    pad = k // 2
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    wshape = (k, k, cin, cout)
+
+    def fwd(x, params, interpret=True):
+        wgt, bias = params
+        if use_pallas:
+            return kconv.conv2d_bias_act(
+                x, wgt, bias, stride=stride, padding=pad, act=act,
+                interpret=interpret,
+            )
+        return kref.conv2d_bias_act(x, wgt, bias, stride=stride, padding=pad, act=act)
+
+    return Unit(
+        name=name,
+        kind="conv",
+        params=[ParamSpec("weight", wshape), ParamSpec("bias", (cout,))],
+        fwd=fwd,
+        in_shape=in_shape,
+        out_shape=(n, oh, ow, cout),
+        flops=kconv.conv_flops(in_shape, wshape, stride=stride, padding=pad),
+    )
+
+
+def _pool_unit(name: str, in_shape: Shape, *, use_pallas: bool = True) -> Unit:
+    n, h, w, c = in_shape
+
+    def fwd(x, params, interpret=True):
+        del params
+        if use_pallas:
+            return kpool.maxpool2x2(x, interpret=interpret)
+        return kref.maxpool2x2(x)
+
+    return Unit(
+        name=name,
+        kind="maxpool",
+        params=[],
+        fwd=fwd,
+        in_shape=in_shape,
+        out_shape=(n, h // 2, w // 2, c),
+        flops=n * h * w * c,  # one compare per input element (approx)
+    )
+
+
+def _dense_unit(
+    name: str,
+    in_shape: Shape,
+    out_features: int,
+    *,
+    act: str = "relu",
+    flatten: bool = False,
+    use_pallas: bool = True,
+) -> Unit:
+    n = in_shape[0]
+    in_features = math.prod(in_shape[1:])
+    wshape = (in_features, out_features)
+
+    def fwd(x, params, interpret=True):
+        wgt, bias = params
+        if flatten:
+            x = x.reshape(x.shape[0], -1)
+        if use_pallas:
+            return kmatmul.matmul_bias_act(x, wgt, bias, act=act, interpret=interpret)
+        return kref.matmul_bias_act(x, wgt, bias, act=act)
+
+    return Unit(
+        name=name,
+        kind="dense",
+        params=[ParamSpec("weight", wshape), ParamSpec("bias", (out_features,))],
+        fwd=fwd,
+        in_shape=in_shape,
+        out_shape=(n, out_features),
+        flops=2 * n * in_features * out_features,
+    )
+
+
+def _bottleneck_unit(
+    name: str,
+    in_shape: Shape,
+    width: int,
+    *,
+    stride: int = 1,
+    expansion: int = 4,
+    use_pallas: bool = True,
+) -> Unit:
+    """ResNet bottleneck (1x1 -> 3x3 -> 1x1 + skip) as ONE atomic unit.
+
+    The skip edge never crosses a unit boundary, so any block partition of
+    the unit chain is valid — this is how we encode the paper's "residual
+    connections make ResNet harder to partition" at the interface level.
+    """
+    n, h, w, cin = in_shape
+    cout = width * expansion
+    oh, ow = (h + stride - 1) // stride, (w + stride - 1) // stride
+    has_proj = stride != 1 or cin != cout
+
+    params = [
+        ParamSpec("conv1.weight", (1, 1, cin, width)),
+        ParamSpec("conv1.bias", (width,)),
+        ParamSpec("conv2.weight", (3, 3, width, width)),
+        ParamSpec("conv2.bias", (width,)),
+        ParamSpec("conv3.weight", (1, 1, width, cout)),
+        ParamSpec("conv3.bias", (cout,)),
+    ]
+    if has_proj:
+        params += [
+            ParamSpec("proj.weight", (1, 1, cin, cout)),
+            ParamSpec("proj.bias", (cout,)),
+        ]
+
+    conv_fn = kconv.conv2d_bias_act
+
+    def fwd(x, ps, interpret=True):
+        if use_pallas:
+            def cv(a, wgt, bias, s, p, act):
+                return conv_fn(a, wgt, bias, stride=s, padding=p, act=act,
+                               interpret=interpret)
+        else:
+            def cv(a, wgt, bias, s, p, act):
+                return kref.conv2d_bias_act(a, wgt, bias, stride=s, padding=p, act=act)
+
+        y = cv(x, ps[0], ps[1], 1, 0, "relu")
+        y = cv(y, ps[2], ps[3], stride, 1, "relu")
+        y = cv(y, ps[4], ps[5], 1, 0, "none")
+        if has_proj:
+            sk = cv(x, ps[6], ps[7], stride, 0, "none")
+        else:
+            sk = x
+        return jnp.maximum(y + sk, 0.0)
+
+    flops = (
+        kconv.conv_flops(in_shape, (1, 1, cin, width), stride=1, padding=0)
+        + kconv.conv_flops((n, h, w, width), (3, 3, width, width), stride=stride, padding=1)
+        + kconv.conv_flops((n, oh, ow, width), (1, 1, width, cout), stride=1, padding=0)
+        + (kconv.conv_flops(in_shape, (1, 1, cin, cout), stride=stride, padding=0) if has_proj else 0)
+    )
+    return Unit(
+        name=name,
+        kind="bottleneck",
+        params=params,
+        fwd=fwd,
+        in_shape=in_shape,
+        out_shape=(n, oh, ow, cout),
+        flops=flops,
+    )
+
+
+def _upsample_unit(name: str, in_shape: Shape, factor: int) -> Unit:
+    """Bilinear upsample (FCN decoder). Pure-jnp: bandwidth-bound, no MXU
+    work — not worth a Pallas kernel (see DESIGN.md §Hardware-Adaptation)."""
+    n, h, w, c = in_shape
+
+    def fwd(x, params, interpret=True):
+        del params, interpret
+        return jax.image.resize(x, (n, h * factor, w * factor, c), method="bilinear")
+
+    return Unit(
+        name=name,
+        kind="upsample",
+        params=[],
+        fwd=fwd,
+        in_shape=in_shape,
+        out_shape=(n, h * factor, w * factor, c),
+        flops=8 * n * h * factor * w * factor * c,
+    )
+
+
+def _global_pool_unit(name: str, in_shape: Shape) -> Unit:
+    n, h, w, c = in_shape
+
+    def fwd(x, params, interpret=True):
+        del params, interpret
+        return jnp.mean(x, axis=(1, 2))
+
+    return Unit(
+        name=name,
+        kind="avgpool",
+        params=[],
+        fwd=fwd,
+        in_shape=in_shape,
+        out_shape=(n, c),
+        flops=n * h * w * c,
+    )
+
+
+def _transformer_unit(
+    name: str,
+    in_shape: Shape,
+    heads: int,
+    *,
+    mlp_ratio: int = 4,
+    use_pallas: bool = True,
+) -> Unit:
+    """Pre-norm transformer block (the §10 LLM-extension unit).
+
+    act: (B, S, E) -> (B, S, E). One block = one swappable unit, exactly
+    how SwapNet would treat an LLM layer: the QKV/out/MLP weights are the
+    block's `Fil{pars}`, and the attention hot-spot runs the fused Pallas
+    kernel (`kernels.attention`).
+    """
+    from .kernels import attention as kattn
+
+    b, s, e = in_shape
+    assert e % heads == 0, f"embed {e} not divisible by heads {heads}"
+    hd = e // heads
+    params = [
+        ParamSpec("ln1.scale", (e,)),
+        ParamSpec("wq", (e, e)),
+        ParamSpec("wk", (e, e)),
+        ParamSpec("wv", (e, e)),
+        ParamSpec("wo", (e, e)),
+        ParamSpec("ln2.scale", (e,)),
+        ParamSpec("w1", (e, mlp_ratio * e)),
+        ParamSpec("b1", (mlp_ratio * e,)),
+        ParamSpec("w2", (mlp_ratio * e, e)),
+        ParamSpec("b2", (e,)),
+    ]
+
+    def rms(x, scale):
+        return x * scale / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+    def fwd(x, ps, interpret=True):
+        ln1, wq, wk, wv, wo, ln2, w1, b1, w2, b2 = ps
+        zeros_e = jnp.zeros((e,), jnp.float32)
+
+        def mm(a2d, w, bias, act):
+            if use_pallas:
+                return kmatmul.matmul_bias_act(a2d, w, bias, act=act, interpret=interpret)
+            return kref.matmul_bias_act(a2d, w, bias, act=act)
+
+        h = rms(x, ln1)
+        flat = h.reshape(b * s, e)
+        q = mm(flat, wq, zeros_e, "none").reshape(b, s, heads, hd)
+        k = mm(flat, wk, zeros_e, "none").reshape(b, s, heads, hd)
+        v = mm(flat, wv, zeros_e, "none").reshape(b, s, heads, hd)
+        # fold (B, heads) for the attention kernel
+        qf = q.transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * heads, s, hd)
+        if use_pallas:
+            att = kattn.mha(qf, kf, vf, interpret=interpret)
+        else:
+            att = kref.mha(qf, kf, vf)
+        att = att.reshape(b, heads, s, hd).transpose(0, 2, 1, 3).reshape(b * s, e)
+        x = x + mm(att, wo, zeros_e, "none").reshape(b, s, e)
+
+        h2 = rms(x, ln2).reshape(b * s, e)
+        m1 = mm(h2, w1, b1, "relu")
+        m2 = mm(m1, w2, b2, "none").reshape(b, s, e)
+        return x + m2
+
+    from .kernels import attention as ka
+
+    flops = (
+        4 * 2 * b * s * e * e  # qkv + out projections
+        + ka.attention_flops(b * heads, s, hd)
+        + 2 * 2 * b * s * e * mlp_ratio * e  # mlp
+    )
+    return Unit(
+        name=name,
+        kind="transformer",
+        params=params,
+        fwd=fwd,
+        in_shape=in_shape,
+        out_shape=in_shape,
+        flops=flops,
+    )
+
+
+def chain_shapes_ok(units: Sequence[Unit]) -> bool:
+    """Invariant: consecutive units agree on activation shapes."""
+    return all(
+        units[i].out_shape == units[i + 1].in_shape for i in range(len(units) - 1)
+    )

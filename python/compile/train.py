@@ -1,0 +1,163 @@
+"""Build-time training of the tiny_cnn quickstart model.
+
+Runs once inside `make artifacts` (never on the request path): a few
+hundred Adam steps of softmax cross-entropy on the procedural dataset
+(data.py), logging the loss curve that EXPERIMENTS.md records as the
+end-to-end training validation. Training uses the pure-jnp reference
+forward (fast to trace); the resulting weights are bit-identical inputs to
+the Pallas artifact path because both forwards share one parameter layout
+(pytest asserts the two forwards agree on these weights).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from . import model as M
+
+
+def _loss_fn(params, m, x, y):
+    logits = m.forward(x, params)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+def _adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params), 0
+
+
+def _adam_step(params, grads, mu, nu, t, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = t + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, nu, grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), mu)
+    nh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), nu)
+    params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, nh
+    )
+    return params, mu, nu, t
+
+
+def accuracy(m: M.ChainModel, params, x, y, batch: int = 64) -> float:
+    hits = 0
+    for i in range(0, len(x), batch):
+        xb = jnp.asarray(x[i : i + batch])
+        logits = m.forward(xb, params)
+        hits += int((jnp.argmax(logits, axis=1) == jnp.asarray(y[i : i + batch])).sum())
+    return hits / len(x)
+
+
+def train_tiny_cnn(
+    steps: int = 300,
+    batch: int = 64,
+    train_n: int = 4096,
+    seed: int = 0,
+) -> Tuple[M.ChainModel, List, List[Tuple[int, float]], float]:
+    """Returns (ref_model, trained params, loss curve [(step, loss)], test acc)."""
+    m = M.tiny_cnn(batch=batch, use_pallas=False)
+    params = m.init_params(seed)
+    xs, ys = data.make_split(train_n, seed=42)
+
+    loss_grad = jax.jit(jax.value_and_grad(lambda p, x, y: _loss_fn(p, m, x, y)))
+    mu, nu, t = _adam_init(params)
+    rng = np.random.default_rng(seed)
+    curve: List[Tuple[int, float]] = []
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, train_n, size=batch)
+        xb, yb = jnp.asarray(xs[idx]), jnp.asarray(ys[idx])
+        loss, grads = loss_grad(params, xb, yb)
+        params, mu, nu, t = _adam_step(params, grads, mu, nu, t)
+        if step % 20 == 0 or step == steps - 1:
+            curve.append((step, float(loss)))
+    xt, yt = data.make_split(1024, seed=7)
+    acc = accuracy(m, params, xt, yt)
+    print(
+        f"[train] tiny_cnn: {steps} steps in {time.time() - t0:.1f}s, "
+        f"final loss {curve[-1][1]:.4f}, test acc {acc:.3f}"
+    )
+    return m, params, curve, acc
+
+
+def build_pruned_arch(
+    name: str, c1_n: int, c2_n: int, batch: int = 1, *, use_pallas: bool = True
+) -> M.ChainModel:
+    """tiny_cnn architecture with pruned conv widths (c1_n, c2_n)."""
+    from . import layers as L
+
+    s = (batch, 32, 32, 3)
+    units = []
+    u = L._conv_unit("conv1", s, c1_n, use_pallas=use_pallas)
+    units.append(u)
+    u2 = L._pool_unit("pool1", u.out_shape, use_pallas=use_pallas)
+    units.append(u2)
+    u3 = L._conv_unit("conv2", u2.out_shape, c2_n, use_pallas=use_pallas)
+    units.append(u3)
+    u4 = L._pool_unit("pool2", u3.out_shape, use_pallas=use_pallas)
+    units.append(u4)
+    u5 = L._dense_unit("fc1", u4.out_shape, 64, act="relu", flatten=True,
+                       use_pallas=use_pallas)
+    units.append(u5)
+    u6 = L._dense_unit("fc2", u5.out_shape, 10, act="none",
+                       use_pallas=use_pallas)
+    units.append(u6)
+    return M.ChainModel(name, "tiny", units, 10)
+
+
+def prune_channels(m: M.ChainModel, params, ratio: float):
+    """Structured channel pruning (the TPrg baseline, paper §8.2).
+
+    Removes the lowest-L2-norm fraction `ratio` of output channels from
+    each conv layer (and the matching input slices downstream), mimicking
+    Torch-Pruning's dependency-graph channel pruning on this chain. Returns
+    a NEW (model, params) pair whose true memory footprint is smaller —
+    accuracy is then *measured*, not assumed.
+    """
+    assert m.name == "tiny_cnn", "pruning implemented for the trained model"
+    keep_idx = {}
+    for u, ps in zip(m.units, params):
+        if u.kind == "conv":
+            w = np.asarray(ps[0])  # (kh,kw,cin,cout)
+            norms = np.sqrt((w**2).sum(axis=(0, 1, 2)))
+            cout = w.shape[3]
+            k = max(1, int(round(cout * (1 - ratio))))
+            keep_idx[u.name] = np.sort(np.argsort(norms)[-k:])
+
+    c1 = keep_idx["conv1"]
+    c2 = keep_idx["conv2"]
+    # Reference (pure-jnp) variant for fine-tuning; its fwd closures are
+    # batch-polymorphic, so declared batch=1 still fine-tunes at batch=64.
+    pm = build_pruned_arch(
+        f"tiny_cnn_p{int(ratio * 100)}", len(c1), len(c2), batch=1,
+        use_pallas=False,
+    )
+
+    # Slice the trained weights down to the kept channels.
+    p = [np.asarray(t) for t in sum(params, [])]
+    (w1, b1), (w2, b2), (wf1, bf1), (wf2, bf2) = (
+        (p[0], p[1]),
+        (p[2], p[3]),
+        (p[4], p[5]),
+        (p[6], p[7]),
+    )
+    w1n, b1n = w1[:, :, :, c1], b1[c1]
+    w2n, b2n = w2[:, :, c1, :][:, :, :, c2], b2[c2]
+    # fc1 input is (8*8*32) flattened NHWC; keep only surviving channels.
+    wf1_r = wf1.reshape(8, 8, 32, 64)[:, :, c2, :].reshape(-1, 64)
+    new_params = [
+        [jnp.asarray(w1n), jnp.asarray(b1n)],
+        [],
+        [jnp.asarray(w2n), jnp.asarray(b2n)],
+        [],
+        [jnp.asarray(wf1_r), jnp.asarray(bf1)],
+        [jnp.asarray(wf2), jnp.asarray(bf2)],
+    ]
+    return pm, new_params

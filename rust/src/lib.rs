@@ -1,0 +1,24 @@
+//! # SwapNet — DNN inference beyond the memory budget
+//!
+//! Reproduction of *SwapNet: Efficient Swapping for DNN Inference on Edge
+//! AI Devices Beyond the Memory Budget* (IEEE TMC 2024) as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod assembly;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod delay;
+pub mod memsim;
+pub mod metrics;
+pub mod model;
+pub mod pipeline;
+pub mod power;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod storage;
+pub mod swap;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,366 @@
+//! SwapNet CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands map to the paper's experiments:
+//!   scenario   run a multi-DNN scenario under a method (Figs 11-13)
+//!   ablation   intermediate system versions (Fig 15)
+//!   profile    delay-coefficient regression (Fig 9)
+//!   partition  build + prune a lookup table (Table 3)
+//!   adapt      dynamic-budget adaptation trace (Fig 18)
+//!   serve      real PJRT serving of an artifact model (e2e driver)
+//!   overhead   memory + power overhead (Fig 19)
+//!   table1     non-DNN memory trace (Table 1)
+//!   table2     model info table (Table 2)
+//!
+//! (clap is not in the offline crate universe; a small hand-rolled parser
+//! covers the `--key value` grammar.)
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use swapnet::config::{DeviceProfile, MB};
+use swapnet::coordinator::{run_scenario, run_snet_model, SnetConfig};
+use swapnet::delay::{profiler, DelayModel};
+use swapnet::model::{artifacts, families};
+use swapnet::scheduler::{self, adapt::AdaptiveScheduler, partition};
+use swapnet::util::table;
+use swapnet::workload;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn device(flags: &HashMap<String, String>) -> DeviceProfile {
+    let name = flags.get("device").map(String::as_str).unwrap_or("nx");
+    DeviceProfile::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown device {name}, using jetson-nx");
+        DeviceProfile::jetson_nx()
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&argv[argv.len().min(1)..]);
+
+    match cmd {
+        "scenario" => cmd_scenario(&flags),
+        "ablation" => cmd_ablation(&flags),
+        "profile" => cmd_profile(&flags),
+        "partition" => cmd_partition(&flags),
+        "adapt" => cmd_adapt(&flags),
+        "serve" => cmd_serve(&flags),
+        "overhead" => cmd_overhead(&flags),
+        "table1" => cmd_table1(),
+        "table2" => cmd_table2(&flags),
+        _ => {
+            println!(
+                "swapnet — DNN inference beyond the memory budget (TMC'24 reproduction)\n\
+                 usage: swapnet <scenario|ablation|profile|partition|adapt|serve|overhead|table1|table2> [--flags]\n\
+                 see README.md for examples"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_scenario(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("name").map(String::as_str).unwrap_or("self-driving");
+    let sc = workload::by_name(name).ok_or_else(|| anyhow!("unknown scenario {name}"))?;
+    let prof = device(flags);
+    let methods: Vec<&str> = flags
+        .get("method")
+        .map(|m| vec![m.as_str()])
+        .unwrap_or_else(|| vec!["DInf", "DCha", "TPrg", "SNet"]);
+    println!(
+        "scenario {} on {}: fleet {} over budget {} (pressure {:.2}x)",
+        sc.name,
+        prof.name,
+        table::human_bytes(sc.fleet_bytes()),
+        table::human_bytes(sc.dnn_budget),
+        sc.pressure()
+    );
+    let mut rows = Vec::new();
+    for m in methods {
+        for r in run_scenario(&sc, m, &prof, &SnetConfig::default()).map_err(|e| anyhow!(e))? {
+            rows.push(r.row());
+        }
+    }
+    println!("{}", table::render(&["model", "method", "peak mem", "latency", "accuracy"], &rows));
+    Ok(())
+}
+
+fn cmd_ablation(flags: &HashMap<String, String>) -> Result<()> {
+    let prof = device(flags);
+    let sc = workload::self_driving();
+    let variants: [(&str, SnetConfig); 4] = [
+        ("SNet (full)", SnetConfig::default()),
+        ("w/o-uni-add", SnetConfig { unified_addressing: false, ..Default::default() }),
+        ("w/o-mod-ske", SnetConfig { skeleton_assembly: false, ..Default::default() }),
+        ("w/o-pat-sch", SnetConfig { partition_scheduling: false, ..Default::default() }),
+    ];
+    let mut rows = Vec::new();
+    let budgets = swapnet::coordinator::scenario_budgets(&sc, &prof);
+    for (label, cfg) in variants {
+        for (model, &budget) in sc.models.iter().zip(&budgets) {
+            let run = run_snet_model(model, budget, &prof, &cfg).map_err(|e| anyhow!(e))?;
+            rows.push(vec![
+                label.to_string(),
+                model.name.clone(),
+                table::human_bytes(run.peak_bytes),
+                table::human_secs(run.latency_s),
+            ]);
+        }
+    }
+    println!("{}", table::render(&["variant", "model", "peak mem", "latency"], &rows));
+    Ok(())
+}
+
+fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
+    let prof = device(flags);
+    let sweep = profiler::measure_sweep(&prof, 300, 0.03, 42);
+    let fit = profiler::fit(&sweep);
+    println!("device {}: fitted coefficients (Fig 9)", prof.name);
+    println!(
+        "  alpha = {:.3e} s/B (true {:.3e})  r2_in={:.4}",
+        fit.alpha_s_per_byte, prof.alpha_s_per_byte, fit.r2_in
+    );
+    println!(
+        "  beta  = {:.1} us/ref (true {:.1})",
+        fit.beta_s_per_depth * 1e6,
+        prof.beta_s_per_depth * 1e6
+    );
+    println!(
+        "  gamma = {:.3e} s/FLOP (true {:.3e})  r2_ex={:.4}",
+        fit.gamma_s_per_flop, prof.gamma_cpu_s_per_flop, fit.r2_ex
+    );
+    println!(
+        "  eta   = {:.1} us/ref (true {:.1})  gc={:.1} ms  r2_out={:.4}",
+        fit.eta_s_per_depth * 1e6,
+        prof.eta_s_per_depth * 1e6,
+        fit.gc_s * 1e3,
+        fit.r2_out
+    );
+    Ok(())
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("resnet101");
+    let budget_mb: u64 = flags.get("budget-mb").and_then(|s| s.parse().ok()).unwrap_or(102);
+    let n: usize = flags.get("blocks").and_then(|s| s.parse().ok()).unwrap_or(3);
+    let model = families::by_name(model_name).ok_or_else(|| anyhow!("unknown model"))?;
+    let prof = device(flags);
+    let dm = DelayModel::from_profile(&prof);
+    let t = partition::build_lookup_table(&model, n, &dm);
+    println!(
+        "{} into {} blocks: {} candidate partitions ({} table)",
+        model.name,
+        n,
+        t.rows.len(),
+        table::human_bytes(t.approx_bytes())
+    );
+    let usable = (budget_mb as f64 * MB as f64 * 0.964) as u64;
+    let mut rows = Vec::new();
+    for r in t.rows.iter().take(5) {
+        rows.push(row_of(r, usable));
+    }
+    rows.push(vec!["...".into(), "...".into(), "...".into()]);
+    if let Some(best) = t.best_within(usable) {
+        rows.push(row_of(best, usable));
+        println!(
+            "{}",
+            table::render(&["partition points", "max memory", "predicted latency"], &rows)
+        );
+        println!(
+            "best within {budget_mb} MB: {:?} -> {}",
+            best.points,
+            table::human_secs(best.predicted_latency_s)
+        );
+    } else {
+        println!(
+            "{}",
+            table::render(&["partition points", "max memory", "predicted latency"], &rows)
+        );
+        println!("no feasible {n}-block partition within {budget_mb} MB");
+    }
+    Ok(())
+}
+
+fn row_of(r: &partition::Row, usable: u64) -> Vec<String> {
+    vec![
+        format!("{:?}", r.points),
+        if r.max_mem_bytes <= usable {
+            table::human_bytes(r.max_mem_bytes)
+        } else {
+            "exceed".into()
+        },
+        if r.max_mem_bytes <= usable {
+            table::human_secs(r.predicted_latency_s)
+        } else {
+            "null".into()
+        },
+    ]
+}
+
+fn cmd_adapt(flags: &HashMap<String, String>) -> Result<()> {
+    let prof = device(flags);
+    let mut ad = AdaptiveScheduler::register(families::resnet101(), &prof, 6);
+    println!("Fig 18: runtime adaptation of ResNet-101 partitioning");
+    for (t, budget) in workload::fig18_budget_trace() {
+        let s = ad.adapt(budget).map_err(|e| anyhow!(e))?;
+        let (_, _, dt) = *ad.history.last().unwrap();
+        println!(
+            "  t={t:>5.1}s budget={:>8} -> {} blocks at {:?}, predicted {} (adaptation {:.1} ms)",
+            table::human_bytes(budget),
+            s.n_blocks,
+            s.points,
+            table::human_secs(s.predicted_latency_s),
+            dt * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = artifacts::artifacts_dir();
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("tiny_cnn");
+    let model = artifacts::ArtifactModel::load(&dir.join(model_name))?;
+    let rt = swapnet::runtime::Runtime::cpu()?;
+    let cfg = swapnet::server::ServeConfig {
+        rate_hz: flags.get("rate").and_then(|s| s.parse().ok()).unwrap_or(100.0),
+        requests: flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(200),
+        points: flags
+            .get("points")
+            .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+            .unwrap_or_default(),
+        ..Default::default()
+    };
+    let rep = swapnet::server::serve(&rt, &model, &cfg)?;
+    println!(
+        "served {} requests in {:.2}s wall: {:.1} req/s, batch avg {:.2}, latency p50 {} p95 {} p99 {}",
+        rep.served,
+        rep.wall_s,
+        rep.throughput_rps,
+        rep.mean_batch,
+        table::human_secs(rep.latency.p(50.0)),
+        table::human_secs(rep.latency.p(95.0)),
+        table::human_secs(rep.latency.p(99.0)),
+    );
+    Ok(())
+}
+
+fn cmd_overhead(flags: &HashMap<String, String>) -> Result<()> {
+    let prof = device(flags);
+    println!("Fig 19a: SwapNet memory overhead per model");
+    let mut rows = Vec::new();
+    for m in workload::self_driving().models {
+        let budget = scheduler::minimal_budget(&m).max(m.size_bytes() / 3);
+        let sched = scheduler::schedule_model(&m, budget, &DelayModel::from_profile(&prof), &prof)
+            .map_err(|e| anyhow!(e))?;
+        let blocks = m.create_blocks(&sched.points).map_err(|e| anyhow!(e))?;
+        let sk: u64 = blocks
+            .iter()
+            .map(|b| {
+                swapnet::assembly::AssemblyController::skeleton_bytes(
+                    &swapnet::assembly::synthetic_skeleton(b),
+                )
+            })
+            .sum();
+        let act = swapnet::baselines::activation_bytes(&m.family);
+        let tbl = 600_000u64;
+        rows.push(vec![
+            m.name.clone(),
+            table::human_bytes(sk),
+            table::human_bytes(act),
+            table::human_bytes(tbl),
+            format!("{:.1}%", 100.0 * (sk + act + tbl) as f64 / m.size_bytes() as f64),
+        ]);
+    }
+    println!(
+        "{}",
+        table::render(&["model", "skeleton", "activations", "tables", "of model"], &rows)
+    );
+
+    println!("\nFig 19b: power (W) — SNet vs DInf on {}", prof.name);
+    let m = families::resnet101();
+    let run = run_snet_model(&m, 120 * MB, &prof, &SnetConfig::default()).map_err(|e| anyhow!(e))?;
+    let tr = swapnet::power::trace_for_timeline(&run.timeline, m.processor, &prof, 0.005, 0.2);
+    let dinf_tl = swapnet::pipeline::timeline(&[swapnet::pipeline::BlockTimes {
+        t_in: 0.0,
+        t_ex: DelayModel::from_profile(&prof).t_ex(&m.single_block(), m.processor),
+        t_out: 0.0,
+    }]);
+    let tr_dinf = swapnet::power::trace_for_timeline(&dinf_tl, m.processor, &prof, 0.005, 0.2);
+    println!(
+        "  idle {:.2} W | SNet active {:.2} W (peak {:.2}) | DInf active {:.2} W | swap overhead {:+.2} W",
+        prof.power.idle_w,
+        tr.avg_active_w(&prof),
+        tr.peak_w(),
+        tr_dinf.avg_active_w(&prof),
+        tr.avg_active_w(&prof) - tr_dinf.avg_active_w(&prof)
+    );
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    let tasks = workload::table1_non_dnn();
+    let total: u64 = 8192 * MB;
+    let used: u64 = tasks.iter().map(|t| t.mem_bytes).sum();
+    let mut rows: Vec<Vec<String>> = tasks
+        .iter()
+        .map(|t| {
+            vec![
+                t.name.clone(),
+                table::human_bytes(t.mem_bytes),
+                format!("{:.1}%", 100.0 * t.mem_bytes as f64 / total as f64),
+            ]
+        })
+        .collect();
+    rows.push(vec![
+        "Remaining Memory".into(),
+        table::human_bytes(total - used),
+        format!("{:.1}%", 100.0 * (total - used) as f64 / total as f64),
+    ]);
+    println!("{}", table::render(&["Tasks", "Memory Usage", "Percentage"], &rows));
+    Ok(())
+}
+
+fn cmd_table2(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("model").map(String::as_str).unwrap_or("resnet101");
+    let m = families::by_name(name).ok_or_else(|| anyhow!("unknown model"))?;
+    let mut rows = Vec::new();
+    for (i, l) in m.layers.iter().enumerate() {
+        if i < 6 || i + 2 >= m.layers.len() {
+            rows.push(vec![
+                format!("Layer{} ({})", i + 1, l.name),
+                table::human_bytes(l.size_bytes),
+                l.depth.to_string(),
+                format!("{:.1} M", l.flops as f64 / 1e6),
+            ]);
+        } else if i == 6 {
+            rows.push(vec!["...".into(), "...".into(), "...".into(), "...".into()]);
+        }
+    }
+    println!("{}", table::render(&["Layer", "Size", "Depth", "FLOPs"], &rows));
+    println!(
+        "total: {} over {} layers, {:.1} GFLOPs",
+        table::human_bytes(m.size_bytes()),
+        m.layers.len(),
+        m.total_flops() as f64 / 1e9
+    );
+    Ok(())
+}

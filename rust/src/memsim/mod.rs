@@ -1,0 +1,219 @@
+//! Unified-memory architecture simulator (the Jetson substrate).
+//!
+//! Edge AI devices physically share one SoC DRAM between CPU and GPU but
+//! address it through *logically separate* spaces (paper §2.2, §4.1): a
+//! buffer destined for the GPU is converted and copied into a "fake GPU
+//! memory" region of the same physical DRAM, and buffered file reads leave
+//! an extra page-cache copy. This module models exactly those allocation
+//! spaces and accounting so the baselines' 2x/3x peak-memory blow-up and
+//! SwapNet's elimination of it emerge from the simulated *operation
+//! sequences*, not from hard-coded factors.
+//!
+//! Submodules: [`page_cache`] (LRU page cache), [`trace`] (the Fig 5
+//! allocation-site dependence graph + malloc -> cudaMallocManaged rewire).
+
+pub mod page_cache;
+pub mod trace;
+
+use std::collections::HashMap;
+
+/// Logical space an allocation lives in. All spaces share the one
+/// physical arena (`MemSim::current()` sums them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Space {
+    /// CPU-addressable heap (malloc).
+    Cpu,
+    /// The "fake GPU memory": GPU-format region of the same DRAM.
+    Gpu,
+    /// OS page cache copies created by buffered reads.
+    PageCache,
+    /// cudaMallocManaged unified-addressing allocations (CPU+GPU visible).
+    Unified,
+}
+
+/// Allocator selection (the Fig 5/6 patch point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocMode {
+    /// Stock framework: CPU tensors via malloc, GPU dispatch converts+copies.
+    Malloc,
+    /// SwapNet: allocations in unified addressing; dispatch is a pointer
+    /// return.
+    CudaMallocManaged,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AllocId(u64);
+
+#[derive(Debug, Clone)]
+struct Allocation {
+    space: Space,
+    bytes: u64,
+    tag: String,
+}
+
+/// Byte-accurate allocation accounting with per-tag peaks.
+#[derive(Debug)]
+pub struct MemSim {
+    total: u64,
+    cur: u64,
+    peak: u64,
+    allocs: HashMap<AllocId, Allocation>,
+    next: u64,
+    per_tag: HashMap<String, TagStat>,
+    per_space: HashMap<Space, u64>,
+    /// Number of alloc calls that exceeded `total` (OOM events — the
+    /// paper's DInf handles these by killing non-DNN tasks).
+    pub oom_events: u64,
+    pub alloc_mode: AllocMode,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TagStat {
+    pub cur: u64,
+    pub peak: u64,
+}
+
+impl MemSim {
+    pub fn new(total: u64) -> Self {
+        MemSim {
+            total,
+            cur: 0,
+            peak: 0,
+            allocs: HashMap::new(),
+            next: 1,
+            per_tag: HashMap::new(),
+            per_space: HashMap::new(),
+            oom_events: 0,
+            alloc_mode: AllocMode::Malloc,
+        }
+    }
+
+    /// Allocate `bytes` in `space`, attributed to `tag` (one tag per DNN
+    /// task). Never fails — overcommit is recorded as an OOM event, like
+    /// the real device where the OOM killer fires asynchronously.
+    pub fn alloc(&mut self, tag: &str, space: Space, bytes: u64) -> AllocId {
+        let id = AllocId(self.next);
+        self.next += 1;
+        self.cur += bytes;
+        if self.cur > self.total {
+            self.oom_events += 1;
+        }
+        self.peak = self.peak.max(self.cur);
+        let t = self.per_tag.entry(tag.to_string()).or_default();
+        t.cur += bytes;
+        t.peak = t.peak.max(t.cur);
+        *self.per_space.entry(space).or_insert(0) += bytes;
+        self.allocs.insert(id, Allocation { space, bytes, tag: tag.to_string() });
+        id
+    }
+
+    pub fn free(&mut self, id: AllocId) {
+        if let Some(a) = self.allocs.remove(&id) {
+            self.cur -= a.bytes;
+            if let Some(t) = self.per_tag.get_mut(&a.tag) {
+                t.cur -= a.bytes;
+            }
+            if let Some(s) = self.per_space.get_mut(&a.space) {
+                *s -= a.bytes;
+            }
+        }
+    }
+
+    pub fn size_of(&self, id: AllocId) -> Option<u64> {
+        self.allocs.get(&id).map(|a| a.bytes)
+    }
+
+    pub fn current(&self) -> u64 {
+        self.cur
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn current_in(&self, space: Space) -> u64 {
+        self.per_space.get(&space).copied().unwrap_or(0)
+    }
+
+    pub fn tag_stat(&self, tag: &str) -> TagStat {
+        self.per_tag.get(tag).cloned().unwrap_or_default()
+    }
+
+    /// Reset peaks (global + per tag) to current levels — used between
+    /// experiment phases.
+    pub fn reset_peaks(&mut self) {
+        self.peak = self.cur;
+        for t in self.per_tag.values_mut() {
+            t.peak = t.cur;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Live allocation count (leak checks in tests).
+    pub fn live_allocs(&self) -> usize {
+        self.allocs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_accounting() {
+        let mut m = MemSim::new(1000);
+        let a = m.alloc("t1", Space::Cpu, 400);
+        let b = m.alloc("t1", Space::Gpu, 300);
+        assert_eq!(m.current(), 700);
+        assert_eq!(m.peak(), 700);
+        assert_eq!(m.current_in(Space::Cpu), 400);
+        m.free(a);
+        assert_eq!(m.current(), 300);
+        assert_eq!(m.peak(), 700); // peak sticky
+        m.free(b);
+        assert_eq!(m.current(), 0);
+        assert_eq!(m.live_allocs(), 0);
+    }
+
+    #[test]
+    fn per_tag_peaks_independent() {
+        let mut m = MemSim::new(10_000);
+        let a = m.alloc("vgg", Space::Cpu, 100);
+        let _b = m.alloc("resnet", Space::Cpu, 50);
+        m.free(a);
+        let _c = m.alloc("vgg", Space::Cpu, 30);
+        assert_eq!(m.tag_stat("vgg").peak, 100);
+        assert_eq!(m.tag_stat("vgg").cur, 30);
+        assert_eq!(m.tag_stat("resnet").peak, 50);
+    }
+
+    #[test]
+    fn oom_recorded_not_fatal() {
+        let mut m = MemSim::new(100);
+        let _a = m.alloc("t", Space::Cpu, 150);
+        assert_eq!(m.oom_events, 1);
+        assert_eq!(m.current(), 150);
+    }
+
+    #[test]
+    fn double_free_harmless() {
+        let mut m = MemSim::new(100);
+        let a = m.alloc("t", Space::Cpu, 10);
+        m.free(a);
+        m.free(a);
+        assert_eq!(m.current(), 0);
+    }
+
+    #[test]
+    fn reset_peaks() {
+        let mut m = MemSim::new(1000);
+        let a = m.alloc("t", Space::Cpu, 500);
+        m.free(a);
+        assert_eq!(m.peak(), 500);
+        m.reset_peaks();
+        assert_eq!(m.peak(), 0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Allocation-site dependence graph (paper Fig 5) and the
+//! malloc -> cudaMallocManaged rewire (§4.2.2).
+//!
+//! The paper patches PyTorch by parsing the framework source for call
+//! chains matching {'cpu', 'alloc'} keywords, deriving the dependence
+//! graph G of CPU-allocation call sites, and replacing the bottom-most
+//! `malloc` with `cudaMallocManaged`. We reproduce the mechanism over our
+//! own framework stand-in: a call-graph description of the simulated
+//! tensor stack, a keyword-filtered `parse` that extracts G, and a
+//! `rewire` that swaps the allocator at the graph's sink.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::AllocMode;
+
+/// A call-graph over framework functions (node -> callees).
+#[derive(Debug, Clone, Default)]
+pub struct CallGraph {
+    pub edges: BTreeMap<String, Vec<String>>,
+}
+
+impl CallGraph {
+    pub fn add(&mut self, caller: &str, callee: &str) {
+        self.edges
+            .entry(caller.to_string())
+            .or_default()
+            .push(callee.to_string());
+        self.edges.entry(callee.to_string()).or_default();
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &String> {
+        self.edges.keys()
+    }
+
+    /// Sinks: nodes with no callees.
+    pub fn sinks(&self) -> Vec<String> {
+        self.edges
+            .iter()
+            .filter(|(_, v)| v.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+}
+
+/// The framework stand-in's CPU-allocation call chain, mirroring the
+/// PyTorch chain of Fig 5 (`to` -> `copy_` -> ... -> allocator -> malloc).
+pub fn framework_call_graph() -> CallGraph {
+    let mut g = CallGraph::default();
+    // tensor creation / dispatch path
+    g.add("tensor.to", "dispatch_stub");
+    g.add("dispatch_stub", "copy_");
+    g.add("copy_", "empty_like");
+    g.add("empty_like", "empty_cpu");
+    g.add("empty_cpu", "cpu_allocator.allocate");
+    g.add("cpu_allocator.allocate", "alloc_cpu");
+    g.add("alloc_cpu", "malloc");
+    // unrelated paths that keyword filtering must exclude
+    g.add("tensor.to", "compute_strides");
+    g.add("serialize", "write_file");
+    g.add("dataloader.next", "decode_jpeg");
+    g
+}
+
+/// `parse({src}, {keywords}) -> G` (paper Eq. in §4.2.2): keep only call
+/// chains whose every node matches at least one keyword OR leads to one
+/// that does, ending at an allocation sink.
+pub fn parse(graph: &CallGraph, keywords: &[&str]) -> CallGraph {
+    // A node is relevant if its name contains a keyword or any path from
+    // it reaches a relevant sink containing 'alloc' or 'malloc'.
+    fn relevant(name: &str, keywords: &[&str]) -> bool {
+        keywords.iter().any(|k| name.contains(k))
+    }
+    // reverse-reachability from keyword-matching sinks
+    let sinks: BTreeSet<String> = graph
+        .sinks()
+        .into_iter()
+        .filter(|s| relevant(s, keywords))
+        .collect();
+    // iterate to fixpoint: node kept if it matches a keyword, or one of
+    // its callees is kept.
+    let mut kept: BTreeSet<String> = sinks.clone();
+    loop {
+        let mut grew = false;
+        for (n, callees) in &graph.edges {
+            if kept.contains(n) {
+                continue;
+            }
+            if callees.iter().any(|c| kept.contains(c)) {
+                kept.insert(n.clone());
+                grew = true;
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    let mut out = CallGraph::default();
+    for (n, callees) in &graph.edges {
+        if !kept.contains(n) {
+            continue;
+        }
+        out.edges.entry(n.clone()).or_default();
+        for c in callees {
+            if kept.contains(c) {
+                out.add(n, c);
+            }
+        }
+    }
+    out
+}
+
+/// Replace the allocator at the dependence graph's sink. Returns the
+/// rewired graph and the name of the new sink.
+pub fn rewire(g: &CallGraph, mode: AllocMode) -> (CallGraph, String) {
+    let new_sink = match mode {
+        AllocMode::Malloc => "malloc".to_string(),
+        AllocMode::CudaMallocManaged => "cudaMallocManaged".to_string(),
+    };
+    let mut out = g.clone();
+    let sinks = g.sinks();
+    for (_, callees) in out.edges.iter_mut() {
+        for c in callees.iter_mut() {
+            if sinks.contains(c) {
+                *c = new_sink.clone();
+            }
+        }
+    }
+    for s in sinks {
+        out.edges.remove(&s);
+    }
+    out.edges.entry(new_sink.clone()).or_default();
+    (out, new_sink)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_extracts_alloc_chain() {
+        let g = framework_call_graph();
+        let dep = parse(&g, &["cpu", "alloc", "malloc"]);
+        // The Fig 5 chain survives...
+        for n in [
+            "tensor.to",
+            "copy_",
+            "empty_cpu",
+            "cpu_allocator.allocate",
+            "alloc_cpu",
+            "malloc",
+        ] {
+            assert!(dep.edges.contains_key(n), "missing {n}");
+        }
+        // ...unrelated paths do not.
+        assert!(!dep.edges.contains_key("decode_jpeg"));
+        assert!(!dep.edges.contains_key("write_file"));
+    }
+
+    #[test]
+    fn rewire_swaps_bottom_allocator() {
+        let g = framework_call_graph();
+        let dep = parse(&g, &["cpu", "alloc", "malloc"]);
+        let (rw, sink) = rewire(&dep, AllocMode::CudaMallocManaged);
+        assert_eq!(sink, "cudaMallocManaged");
+        assert!(rw.edges.contains_key("cudaMallocManaged"));
+        assert!(!rw.edges.contains_key("malloc"));
+        // the caller of the old sink now calls the new one
+        assert!(rw.edges["alloc_cpu"].contains(&"cudaMallocManaged".to_string()));
+    }
+
+    #[test]
+    fn rewire_back_to_malloc() {
+        let g = framework_call_graph();
+        let dep = parse(&g, &["cpu", "alloc", "malloc"]);
+        let (rw, _) = rewire(&dep, AllocMode::CudaMallocManaged);
+        let (rw2, sink2) = rewire(&rw, AllocMode::Malloc);
+        assert_eq!(sink2, "malloc");
+        assert!(rw2.edges["alloc_cpu"].contains(&"malloc".to_string()));
+    }
+}

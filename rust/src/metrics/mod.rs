@@ -1,0 +1,127 @@
+//! Metrics: latency recorders, CDFs (Fig 14), and scenario report rows.
+
+use crate::util::stats;
+
+/// Streaming latency recorder.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p(&self, q: f64) -> f64 {
+        stats::percentile(&self.samples, q)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Empirical CDF over `k` evenly spaced points spanning the range.
+    pub fn cdf(&self, k: usize) -> Vec<(f64, f64)> {
+        if self.samples.is_empty() || k == 0 {
+            return vec![];
+        }
+        let lo = self.p(0.0);
+        let hi = self.p(100.0);
+        let pts: Vec<f64> = (0..k)
+            .map(|i| lo + (hi - lo) * i as f64 / (k - 1).max(1) as f64)
+            .collect();
+        let cs = stats::cdf_at(&self.samples, &pts);
+        pts.into_iter().zip(cs).collect()
+    }
+}
+
+/// One (model, method) result row of a scenario figure (Figs 11-13).
+#[derive(Debug, Clone)]
+pub struct MethodReport {
+    pub model: String,
+    pub method: String,
+    pub peak_bytes: u64,
+    pub latency_s: f64,
+    /// Task accuracy (%); lossless methods keep the model's nominal value.
+    pub accuracy: f64,
+}
+
+impl MethodReport {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.model.clone(),
+            self.method.clone(),
+            crate::util::table::human_bytes(self.peak_bytes),
+            crate::util::table::human_secs(self.latency_s),
+            format!("{:.1}%", self.accuracy),
+        ]
+    }
+}
+
+/// Reduction of `ours` vs `other` in percent (paper's "reduces memory by
+/// X% vs Y" phrasing).
+pub fn reduction_pct(ours: u64, other: u64) -> f64 {
+    if other == 0 {
+        return 0.0;
+    }
+    100.0 * (other as f64 - ours as f64) / other as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_percentiles() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.len(), 100);
+        assert!((r.mean() - 50.5).abs() < 1e-9);
+        assert!((r.p(50.0) - 50.5).abs() < 1.0);
+        assert_eq!(r.p(100.0), 100.0);
+    }
+
+    #[test]
+    fn cdf_monotone_0_to_1() {
+        let mut r = LatencyRecorder::new();
+        for i in 0..50 {
+            r.record((i * i) as f64);
+        }
+        let cdf = r.cdf(20);
+        assert_eq!(cdf.len(), 20);
+        for w in cdf.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduction_math() {
+        assert!((reduction_pct(30, 100) - 70.0).abs() < 1e-9);
+        assert_eq!(reduction_pct(10, 0), 0.0);
+    }
+
+    #[test]
+    fn empty_cdf() {
+        assert!(LatencyRecorder::new().cdf(5).is_empty());
+    }
+}

@@ -1,0 +1,300 @@
+//! Artifact-backed models: parse `artifacts/<model>/meta.json` written by
+//! the Python AOT path into (a) a [`ModelInfo`] chain for the scheduler
+//! and (b) an [`ArtifactModel`] with everything the PJRT runtime needs to
+//! execute units: HLO file map, activation shapes, and the parameter
+//! skeleton (`Obj{sket}`: name/shape/offset per tensor inside the unit's
+//! flat `Fil{pars}` file) that assembly-by-reference registers.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{LayerInfo, ModelInfo};
+use crate::config::Processor;
+use crate::util::json::Json;
+
+/// One parameter tensor's slot in the flat parameter file.
+#[derive(Debug, Clone)]
+pub struct SkeletonEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+/// One swappable unit (smallest block) of an artifact model.
+#[derive(Debug, Clone)]
+pub struct UnitMeta {
+    pub name: String,
+    pub kind: String,
+    pub params_file: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub flops: u64,
+    pub size_bytes: u64,
+    pub depth: u32,
+    pub skeleton: Vec<SkeletonEntry>,
+    /// batch -> Pallas-kernel HLO filename (the TPU artifact).
+    pub hlo_by_batch: Vec<(usize, String)>,
+    /// batch -> pure-jnp (XLA-fused) HLO filename — the CPU-optimized
+    /// serving variant (§Perf); numerically equal by the pytest suite.
+    pub hlo_ref_by_batch: Vec<(usize, String)>,
+}
+
+/// Which kernel implementation the runtime should execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelImpl {
+    /// The Pallas kernels (interpret-lowered; the TPU-shaped artifact).
+    Pallas,
+    /// The pure-jnp reference lowering (XLA fuses it; fastest on CPU).
+    Ref,
+}
+
+impl KernelImpl {
+    /// From SWAPNET_KERNELS (default: pallas — the faithful L1 path).
+    pub fn from_env() -> Self {
+        match std::env::var("SWAPNET_KERNELS").as_deref() {
+            Ok("ref") => KernelImpl::Ref,
+            _ => KernelImpl::Pallas,
+        }
+    }
+}
+
+impl UnitMeta {
+    pub fn hlo_for_batch(&self, batch: usize) -> Option<&str> {
+        self.hlo_for_batch_impl(batch, KernelImpl::from_env())
+    }
+
+    pub fn hlo_for_batch_impl(&self, batch: usize, imp: KernelImpl) -> Option<&str> {
+        let primary = match imp {
+            KernelImpl::Pallas => &self.hlo_by_batch,
+            KernelImpl::Ref => &self.hlo_ref_by_batch,
+        };
+        primary
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, f)| f.as_str())
+            // fall back to the pallas artifact when no ref variant exists
+            .or_else(|| {
+                self.hlo_by_batch
+                    .iter()
+                    .find(|(b, _)| *b == batch)
+                    .map(|(_, f)| f.as_str())
+            })
+    }
+}
+
+/// A fully described artifact model.
+#[derive(Debug, Clone)]
+pub struct ArtifactModel {
+    pub name: String,
+    pub family: String,
+    pub dir: PathBuf,
+    pub num_classes: usize,
+    pub batches: Vec<usize>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub size_bytes: u64,
+    pub flops: u64,
+    /// Measured accuracy (fraction) if the AOT path evaluated it.
+    pub accuracy: Option<f64>,
+    pub units: Vec<UnitMeta>,
+}
+
+fn shape_vec(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("expected shape array"))?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect())
+}
+
+impl ArtifactModel {
+    /// Parse `dir/meta.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactModel> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", meta_path.display()))?;
+
+        let units_j = j
+            .get("units")
+            .and_then(|u| u.as_arr())
+            .ok_or_else(|| anyhow!("meta.json missing units"))?;
+
+        let mut units = Vec::with_capacity(units_j.len());
+        for u in units_j {
+            let mut skeleton = Vec::new();
+            for p in u.get("params").and_then(|p| p.as_arr()).unwrap_or(&[]) {
+                skeleton.push(SkeletonEntry {
+                    name: p.get("name").and_then(|v| v.as_str()).unwrap_or("").into(),
+                    shape: shape_vec(p.get("shape").ok_or_else(|| anyhow!("param shape"))?)?,
+                    offset_bytes: p.get("offset_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+                    size_bytes: p.get("size_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+                });
+            }
+            let parse_map = |key: &str| -> Vec<(usize, String)> {
+                let mut out = Vec::new();
+                if let Some(Json::Obj(m)) = u.get(key) {
+                    for (k, v) in m {
+                        if let (Ok(b), Some(f)) = (k.parse::<usize>(), v.as_str()) {
+                            out.push((b, f.to_string()));
+                        }
+                    }
+                }
+                out.sort();
+                out
+            };
+            let hlo_by_batch = parse_map("hlo_by_batch");
+            let hlo_ref_by_batch = parse_map("hlo_ref_by_batch");
+            units.push(UnitMeta {
+                name: u.get("name").and_then(|v| v.as_str()).unwrap_or("").into(),
+                kind: u.get("kind").and_then(|v| v.as_str()).unwrap_or("").into(),
+                params_file: u
+                    .get("params_file")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .into(),
+                in_shape: shape_vec(u.get("in_shape").ok_or_else(|| anyhow!("in_shape"))?)?,
+                out_shape: shape_vec(u.get("out_shape").ok_or_else(|| anyhow!("out_shape"))?)?,
+                flops: u.get("flops").and_then(|v| v.as_u64()).unwrap_or(0),
+                size_bytes: u.get("size_bytes").and_then(|v| v.as_u64()).unwrap_or(0),
+                depth: u.get("depth").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                skeleton,
+                hlo_by_batch,
+                hlo_ref_by_batch,
+            });
+        }
+
+        Ok(ArtifactModel {
+            name: j.get("name").and_then(|v| v.as_str()).unwrap_or("").into(),
+            family: j.get("family").and_then(|v| v.as_str()).unwrap_or("").into(),
+            dir: dir.to_path_buf(),
+            num_classes: j.get("num_classes").and_then(|v| v.as_usize()).unwrap_or(0),
+            batches: j
+                .get("batches")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            in_shape: shape_vec(j.get("in_shape").ok_or_else(|| anyhow!("in_shape"))?)?,
+            out_shape: shape_vec(j.get("out_shape").ok_or_else(|| anyhow!("out_shape"))?)?,
+            size_bytes: j.get("size_bytes").and_then(|v| v.as_u64()).unwrap_or(0),
+            flops: j.get("flops").and_then(|v| v.as_u64()).unwrap_or(0),
+            accuracy: j.get("accuracy").and_then(|v| v.as_f64()),
+            units,
+        })
+    }
+
+    /// Project to the scheduler's [`ModelInfo`] chain view. All unit
+    /// boundaries are legal cut points (residual units are already atomic
+    /// on the Python side).
+    pub fn to_model_info(&self, processor: Processor) -> ModelInfo {
+        ModelInfo {
+            name: self.name.clone(),
+            family: self.family.clone(),
+            layers: self
+                .units
+                .iter()
+                .map(|u| LayerInfo {
+                    name: u.name.clone(),
+                    kind: u.kind.clone(),
+                    size_bytes: u.size_bytes,
+                    depth: u.depth,
+                    flops: u.flops,
+                    cut_after: true,
+                })
+                .collect(),
+            accuracy: self.accuracy.unwrap_or(0.0) * 100.0,
+            processor,
+        }
+    }
+
+    pub fn params_path(&self, unit: usize) -> PathBuf {
+        self.dir.join(&self.units[unit].params_file)
+    }
+
+    pub fn hlo_path(&self, unit: usize, batch: usize) -> Result<PathBuf> {
+        let f = self.units[unit]
+            .hlo_for_batch(batch)
+            .ok_or_else(|| anyhow!("{}: no HLO for batch {batch}", self.units[unit].name))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+/// Load the artifact manifest and every model it lists.
+pub fn load_manifest(artifacts_dir: &Path) -> Result<Vec<ArtifactModel>> {
+    let text = std::fs::read_to_string(artifacts_dir.join("manifest.json"))
+        .context("reading manifest.json (run `make artifacts` first)")?;
+    let j = Json::parse(&text)?;
+    let names = j
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| anyhow!("manifest missing models"))?;
+    names
+        .iter()
+        .filter_map(|n| n.as_str())
+        .map(|n| ArtifactModel::load(&artifacts_dir.join(n)))
+        .collect()
+}
+
+/// Locate the artifacts directory: $SWAPNET_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SWAPNET_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_tiny_cnn_meta() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = ArtifactModel::load(&artifacts_dir().join("tiny_cnn")).unwrap();
+        assert_eq!(m.name, "tiny_cnn");
+        assert_eq!(m.units.len(), 6);
+        assert!(m.batches.contains(&1));
+        assert!(m.accuracy.unwrap_or(0.0) > 0.5);
+        // conv1 skeleton: weight + bias with contiguous offsets
+        let u = &m.units[0];
+        assert_eq!(u.skeleton.len(), 2);
+        assert_eq!(u.skeleton[0].offset_bytes, 0);
+        assert_eq!(
+            u.skeleton[1].offset_bytes,
+            u.skeleton[0].size_bytes
+        );
+        // params file exists and matches declared size
+        let plen = std::fs::metadata(m.params_path(0)).unwrap().len();
+        assert_eq!(plen, u.size_bytes);
+    }
+
+    #[test]
+    fn manifest_lists_fleet() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let models = load_manifest(&artifacts_dir()).unwrap();
+        let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+        assert!(names.contains(&"tiny_cnn"));
+        assert!(names.contains(&"vgg_s"));
+        for m in &models {
+            assert!(!m.units.is_empty(), "{} empty", m.name);
+            let chain = m.to_model_info(Processor::Cpu);
+            assert_eq!(chain.size_bytes(), m.units.iter().map(|u| u.size_bytes).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactModel::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+}

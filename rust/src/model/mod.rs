@@ -1,0 +1,193 @@
+//! Model representation: layer tables, partitions, and blocks.
+//!
+//! The paper's abstractions (§6.1-6.2): a model is a chain of *layers*
+//! (the smallest swappable unit, extracted once by `get_layers`); the
+//! scheduler groups consecutive layers into *blocks* (`create_blocks`)
+//! described by the tuple (size s_i, parameter depth d_i, FLOPs f_i) that
+//! drives the three delay components.
+//!
+//! Two sources of layer tables exist:
+//!  * [`families`] — paper-scale tables (true MB / GFLOPs of VGG-19,
+//!    ResNet-101, YOLOv3, FCN) computed from the real architectures; used
+//!    by the scenario simulations (Figs 11-19).
+//!  * [`artifacts`] — tables loaded from `artifacts/<model>/meta.json`
+//!    emitted by the Python AOT path; used for real PJRT execution.
+
+pub mod artifacts;
+pub mod families;
+
+use crate::config::Processor;
+
+/// One chain layer (paper Table 2 row).
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String,
+    /// Parameter bytes (f32).
+    pub size_bytes: u64,
+    /// Parameter depth d_i: number of parameter tensors (weights, biases,
+    /// buffers) — the unit of the paper's 50-55 us address references.
+    pub depth: u32,
+    /// FLOPs to execute this layer at the model's eval resolution.
+    pub flops: u64,
+    /// Whether a block boundary may be placed AFTER this layer. Residual
+    /// units forbid internal cuts — the paper's "ResNet is harder to
+    /// partition" constraint.
+    pub cut_after: bool,
+}
+
+/// A model's full chain description.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub family: String,
+    pub layers: Vec<LayerInfo>,
+    /// Nominal task accuracy (%) of the uncompressed model — carried for
+    /// the paper's accuracy comparisons (lossless methods keep it).
+    pub accuracy: f64,
+    /// Which processor the scenario assigns this model to (§8.1.2).
+    pub processor: Processor,
+}
+
+impl ModelInfo {
+    pub fn size_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.size_bytes).sum()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    pub fn total_depth(&self) -> u32 {
+        self.layers.iter().map(|l| l.depth).sum()
+    }
+
+    /// Legal partition points: indices `p` such that a cut between layer
+    /// p-1 and p is allowed (1..layers.len()).
+    pub fn legal_cut_points(&self) -> Vec<usize> {
+        (1..self.layers.len())
+            .filter(|&p| self.layers[p - 1].cut_after)
+            .collect()
+    }
+
+    /// `create_blocks(part_points, ...)` (paper §6.2): split the chain at
+    /// the given ascending cut points into contiguous blocks.
+    pub fn create_blocks(&self, part_points: &[usize]) -> Result<Vec<BlockInfo>, String> {
+        let n = self.layers.len();
+        let mut prev = 0usize;
+        let mut blocks = Vec::with_capacity(part_points.len() + 1);
+        for (bi, &p) in part_points.iter().chain(std::iter::once(&n)).enumerate() {
+            if p <= prev || p > n {
+                return Err(format!(
+                    "invalid partition point {p} (prev {prev}, layers {n})"
+                ));
+            }
+            if p < n && !self.layers[p - 1].cut_after {
+                return Err(format!(
+                    "illegal cut after layer {} ({} forbids it)",
+                    p - 1,
+                    self.layers[p - 1].name
+                ));
+            }
+            let ls = &self.layers[prev..p];
+            blocks.push(BlockInfo {
+                index: bi,
+                layer_lo: prev,
+                layer_hi: p,
+                size_bytes: ls.iter().map(|l| l.size_bytes).sum(),
+                depth: ls.iter().map(|l| l.depth).sum(),
+                flops: ls.iter().map(|l| l.flops).sum(),
+            });
+            prev = p;
+        }
+        Ok(blocks)
+    }
+
+    /// Whole model as a single block (the DInf view).
+    pub fn single_block(&self) -> BlockInfo {
+        self.create_blocks(&[]).unwrap().pop().unwrap()
+    }
+}
+
+/// A contiguous group of layers — the swapping unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockInfo {
+    pub index: usize,
+    pub layer_lo: usize,
+    pub layer_hi: usize,
+    pub size_bytes: u64,
+    pub depth: u32,
+    pub flops: u64,
+}
+
+impl BlockInfo {
+    pub fn num_layers(&self) -> usize {
+        self.layer_hi - self.layer_lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ModelInfo {
+        ModelInfo {
+            name: "toy".into(),
+            family: "toy".into(),
+            layers: (0..6)
+                .map(|i| LayerInfo {
+                    name: format!("l{i}"),
+                    kind: "conv".into(),
+                    size_bytes: 10 * (i as u64 + 1),
+                    depth: 2,
+                    flops: 100,
+                    cut_after: i != 2, // cut after layer 2 forbidden
+                })
+                .collect(),
+            accuracy: 90.0,
+            processor: Processor::Cpu,
+        }
+    }
+
+    #[test]
+    fn blocks_partition_everything() {
+        let m = toy();
+        let blocks = m.create_blocks(&[2, 4]).unwrap();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks.iter().map(|b| b.size_bytes).sum::<u64>(), m.size_bytes());
+        assert_eq!(blocks.iter().map(|b| b.depth).sum::<u32>(), m.total_depth());
+        assert_eq!(blocks.iter().map(|b| b.flops).sum::<u64>(), m.total_flops());
+        assert_eq!(blocks[1].layer_lo, 2);
+        assert_eq!(blocks[1].layer_hi, 4);
+    }
+
+    #[test]
+    fn illegal_cut_rejected() {
+        let m = toy();
+        assert!(m.create_blocks(&[3]).is_err()); // layer 2 has cut_after=false
+        assert!(m.create_blocks(&[2]).is_ok());
+    }
+
+    #[test]
+    fn monotonic_points_required() {
+        let m = toy();
+        assert!(m.create_blocks(&[4, 2]).is_err());
+        assert!(m.create_blocks(&[2, 2]).is_err());
+        assert!(m.create_blocks(&[0]).is_err());
+        assert!(m.create_blocks(&[7]).is_err());
+    }
+
+    #[test]
+    fn legal_cut_points_respects_flags() {
+        let m = toy();
+        assert_eq!(m.legal_cut_points(), vec![1, 2, 4, 5]);
+    }
+
+    #[test]
+    fn single_block_covers_model() {
+        let m = toy();
+        let b = m.single_block();
+        assert_eq!(b.num_layers(), 6);
+        assert_eq!(b.size_bytes, m.size_bytes());
+    }
+}

@@ -1,0 +1,134 @@
+//! Power model (paper Fig 19b, INA3221 substitute).
+//!
+//! Integrates the device profile's component draws over an execution
+//! timeline: idle + CPU/GPU-active during block execution + I/O-active
+//! during swap transfers. Reproduces the Fig 19b shape: SwapNet draws
+//! ~0.3 W more than DInf while running (swap I/O active) but its curve
+//! leads DInf's because assembly is faster.
+
+use crate::config::{DeviceProfile, Processor};
+use crate::pipeline::Timeline;
+
+/// A sampled power trace.
+#[derive(Debug, Clone)]
+pub struct PowerTrace {
+    pub dt_s: f64,
+    pub watts: Vec<f64>,
+}
+
+impl PowerTrace {
+    pub fn duration_s(&self) -> f64 {
+        self.dt_s * self.watts.len() as f64
+    }
+
+    pub fn avg_w(&self) -> f64 {
+        crate::util::stats::mean(&self.watts)
+    }
+
+    /// Average draw over the busy (non-idle-tail) part only.
+    pub fn avg_active_w(&self, prof: &DeviceProfile) -> f64 {
+        let active: Vec<f64> = self
+            .watts
+            .iter()
+            .copied()
+            .filter(|w| *w > prof.power.idle_w + 1e-9)
+            .collect();
+        crate::util::stats::mean(&active)
+    }
+
+    /// Mean draw while the processor is executing (what the INA3221
+    /// shows during "a model is running" in Fig 19b — the swap channel's
+    /// draw appears only where it overlaps execution).
+    pub fn avg_exec_busy_w(&self, prof: &DeviceProfile, proc: Processor) -> f64 {
+        let floor = prof.power.idle_w
+            + match proc {
+                Processor::Cpu => prof.power.cpu_active_w,
+                Processor::Gpu => prof.power.gpu_active_w,
+            };
+        let busy: Vec<f64> = self
+            .watts
+            .iter()
+            .copied()
+            .filter(|w| *w >= floor - 1e-9)
+            .collect();
+        crate::util::stats::mean(&busy)
+    }
+
+    pub fn peak_w(&self) -> f64 {
+        self.watts.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.watts.iter().sum::<f64>() * self.dt_s
+    }
+}
+
+fn busy(intervals: &[(f64, f64)], t: f64) -> bool {
+    intervals.iter().any(|&(a, b)| t >= a && t < b)
+}
+
+/// Sample the power draw of one model execution timeline.
+pub fn trace_for_timeline(
+    tl: &Timeline,
+    proc: Processor,
+    prof: &DeviceProfile,
+    dt_s: f64,
+    tail_s: f64,
+) -> PowerTrace {
+    let end = tl.latency() + tail_s;
+    let io = tl.io_busy();
+    let ex = tl.exec_busy();
+    let n = (end / dt_s).ceil() as usize;
+    let mut watts = Vec::with_capacity(n);
+    for k in 0..n {
+        let t = k as f64 * dt_s;
+        let mut w = prof.power.idle_w;
+        if busy(&ex, t) {
+            w += match proc {
+                Processor::Cpu => prof.power.cpu_active_w,
+                Processor::Gpu => prof.power.gpu_active_w,
+            };
+        }
+        if busy(&io, t) {
+            w += prof.power.io_active_w;
+        }
+        watts.push(w);
+    }
+    PowerTrace { dt_s, watts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{timeline, BlockTimes};
+
+    fn tl(n: usize) -> Timeline {
+        timeline(&vec![BlockTimes { t_in: 0.05, t_ex: 0.2, t_out: 0.03 }; n])
+    }
+
+    #[test]
+    fn idle_tail_draws_idle_power() {
+        let prof = DeviceProfile::jetson_nx();
+        let tr = trace_for_timeline(&tl(2), Processor::Cpu, &prof, 0.01, 0.5);
+        let last = *tr.watts.last().unwrap();
+        assert!((last - prof.power.idle_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_power_above_idle_below_budget() {
+        let prof = DeviceProfile::jetson_nx();
+        let tr = trace_for_timeline(&tl(3), Processor::Cpu, &prof, 0.005, 0.0);
+        assert!(tr.peak_w() >= prof.power.idle_w + prof.power.cpu_active_w - 1e-9);
+        assert!(tr.avg_w() > prof.power.idle_w);
+        // Paper: running draw ~6 W on NX, idle ~3 W.
+        assert!(tr.peak_w() < 8.0, "{}", tr.peak_w());
+    }
+
+    #[test]
+    fn energy_scales_with_work() {
+        let prof = DeviceProfile::jetson_nx();
+        let a = trace_for_timeline(&tl(2), Processor::Gpu, &prof, 0.01, 0.0);
+        let b = trace_for_timeline(&tl(4), Processor::Gpu, &prof, 0.01, 0.0);
+        assert!(b.energy_j() > a.energy_j());
+    }
+}

@@ -1,0 +1,401 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts and execute model
+//! units from the Rust request path (Python is never involved here).
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO *text* -> HloModuleProto
+//! -> XlaComputation -> PjRtClient::compile -> execute. Executables are
+//! cached per (unit, batch) — compilation happens once at model-register
+//! time, mirroring SwapNet keeping skeletons resident while parameters
+//! swap.
+//!
+//! NOTE: the xla crate's handles wrap raw pointers (!Send), so the
+//! runtime is thread-confined; the real pipeline overlaps *file I/O* on a
+//! second thread and keeps all PJRT calls on the executor thread — which
+//! is exactly SwapNet's swap-in/execute overlap boundary.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::assembly::{param_slice, ParamRef};
+use crate::model::artifacts::{ArtifactModel, UnitMeta};
+
+/// Thread-confined PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative compile time (s) — reported by the perf pass.
+    pub compile_s: RefCell<f64>,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this environment; real
+    /// devices would select cuda/tpu plugins here).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_s: RefCell::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by canonical path).
+    pub fn load_hlo(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        *self.compile_s.borrow_mut() += t0.elapsed().as_secs_f64();
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute one unit: `fwd(act, *params) -> (act_out,)`.
+    pub fn execute_unit(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        act: &xla::Literal,
+        params: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + params.len());
+        args.push(act);
+        args.extend(params.iter());
+        let out = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // Pallas artifacts are lowered with return_tuple=True (1-tuple);
+        // ref artifacts return a bare array. Handle both.
+        let fallback = lit.clone();
+        Ok(lit.to_tuple1().unwrap_or(fallback))
+    }
+
+    /// Upload host f32 data as a device buffer (resident parameters).
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall: the copy
+    /// completes before returning). `BufferFromHostLiteral` on the TFRT
+    /// CPU client is ASYNC — it can read the literal after this function
+    /// returns, a use-after-free with temporaries.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Upload raw little-endian f32 bytes as a device buffer.
+    pub fn upload_f32_bytes(&self, bytes: &[u8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let expected: usize = dims.iter().product::<usize>() * 4;
+        if bytes.len() != expected {
+            return Err(anyhow!(
+                "upload bytes {} != shape {:?} ({} bytes)",
+                bytes.len(),
+                dims,
+                expected
+            ));
+        }
+        // f32 from LE bytes; on this (little-endian) target the cast view
+        // is the bytes themselves, but go through a properly aligned copy.
+        let vals: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        self.upload_f32(&vals, dims)
+    }
+
+    /// Execute a (non-tuple) unit over device buffers; the output buffer
+    /// can feed the next unit without a host round trip.
+    pub fn execute_unit_b(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let mut out = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        Ok(out.swap_remove(0).swap_remove(0))
+    }
+}
+
+/// Bounds-checked slice of a parameter buffer (truncated/corrupted files
+/// must fail loudly, not panic or silently mis-execute).
+pub fn slice_checked<'a>(
+    buf: &'a [u8],
+    offset: usize,
+    len: usize,
+    what: &str,
+) -> Result<&'a [u8]> {
+    buf.get(offset..offset + len).ok_or_else(|| {
+        anyhow!(
+            "{what}: parameter slice [{offset}, {}) exceeds buffer of {} bytes \
+             (truncated or corrupted params file?)",
+            offset + len,
+            buf.len()
+        )
+    })
+}
+
+/// f32 literal from raw little-endian bytes (the zero-copy view into a
+/// swapped-in flat parameter buffer).
+pub fn literal_f32(shape: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
+    let expected: usize = shape.iter().product::<usize>() * 4;
+    if bytes.len() != expected {
+        return Err(anyhow!(
+            "literal bytes {} != shape {:?} ({} bytes)",
+            bytes.len(),
+            shape,
+            expected
+        ));
+    }
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("literal: {e:?}"))
+}
+
+/// f32 literal from a slice of values.
+pub fn literal_from_f32s(shape: &[usize], vals: &[f32]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4) };
+    literal_f32(shape, bytes)
+}
+
+/// Read an f32 literal back into a Vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+/// Build the parameter literals of one unit from its assembled refs over
+/// the flat buffer (assembly-by-reference -> runtime hand-off).
+pub fn unit_param_literals(
+    unit: &UnitMeta,
+    refs: &[ParamRef],
+    buf: &[u8],
+) -> Result<Vec<xla::Literal>> {
+    if refs.len() != unit.skeleton.len() {
+        return Err(anyhow!(
+            "{}: {} refs vs {} skeleton slots",
+            unit.name,
+            refs.len(),
+            unit.skeleton.len()
+        ));
+    }
+    refs.iter()
+        .map(|p| literal_f32(&p.shape, param_slice(buf, p)))
+        .collect()
+}
+
+/// Convenience: run a full artifact model (all units, params read straight
+/// from disk, no swapping) — the correctness oracle for the swap paths and
+/// the DInf real-execution baseline.
+pub struct DirectRunner<'rt> {
+    pub rt: &'rt Runtime,
+    pub model: ArtifactModel,
+    pub batch: usize,
+}
+
+impl<'rt> DirectRunner<'rt> {
+    pub fn new(rt: &'rt Runtime, model: ArtifactModel, batch: usize) -> Self {
+        DirectRunner { rt, model, batch }
+    }
+
+    /// Compile all units up front; returns total compile seconds.
+    pub fn warmup(&self) -> Result<f64> {
+        let t0 = Instant::now();
+        for ui in 0..self.model.units.len() {
+            self.rt.load_hlo(&self.model.hlo_path(ui, self.batch)?)?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Forward `input` (flattened f32s of the model's batch input shape).
+    pub fn forward(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut shape = self.model.in_shape.clone();
+        shape[0] = self.batch;
+        let mut act = literal_from_f32s(&shape, input)?;
+        for (ui, unit) in self.model.units.iter().enumerate() {
+            let exe = self.rt.load_hlo(&self.model.hlo_path(ui, self.batch)?)?;
+            let buf = std::fs::read(self.model.params_path(ui))
+                .with_context(|| format!("params for {}", unit.name))?;
+            let params: Vec<xla::Literal> = unit
+                .skeleton
+                .iter()
+                .map(|e| {
+                    let s = slice_checked(&buf, e.offset_bytes, e.size_bytes, &unit.name)?;
+                    literal_f32(&e.shape, s)
+                })
+                .collect::<Result<_>>()?;
+            act = self.rt.execute_unit(&exe, &act, &params)?;
+        }
+        literal_to_vec(&act)
+    }
+}
+
+/// Serving fast path (§Perf): parameters uploaded to device buffers ONCE
+/// (the swap-in cost), activations chained on-device between units (no
+/// host round trips), non-tuple ref artifacts. This is what a resident
+/// (non-swapped) model uses between swap events.
+pub struct ResidentModelRunner<'rt> {
+    pub rt: &'rt Runtime,
+    pub model: ArtifactModel,
+    pub batch: usize,
+    exes: Vec<Rc<xla::PjRtLoadedExecutable>>,
+    param_bufs: Vec<Vec<xla::PjRtBuffer>>,
+}
+
+impl<'rt> ResidentModelRunner<'rt> {
+    /// Compile all unit executables (ref variant preferred) and upload
+    /// every unit's parameters to the device.
+    pub fn new(rt: &'rt Runtime, model: ArtifactModel, batch: usize) -> Result<Self> {
+        use crate::model::artifacts::KernelImpl;
+        let mut exes = Vec::with_capacity(model.units.len());
+        let mut param_bufs = Vec::with_capacity(model.units.len());
+        for (ui, unit) in model.units.iter().enumerate() {
+            // Buffer chaining needs the non-tuple ref artifact; fall back
+            // is handled by hlo_for_batch_impl.
+            let f = unit
+                .hlo_for_batch_impl(batch, KernelImpl::Ref)
+                .ok_or_else(|| anyhow!("{}: no HLO for batch {batch}", unit.name))?;
+            if !f.contains(".ref.") {
+                return Err(anyhow!(
+                    "{}: resident runner needs the ref artifact variant",
+                    unit.name
+                ));
+            }
+            exes.push(rt.load_hlo(&model.dir.join(f))?);
+            let buf = std::fs::read(model.params_path(ui))?;
+            let bufs: Vec<xla::PjRtBuffer> = unit
+                .skeleton
+                .iter()
+                .map(|e| {
+                    let s = slice_checked(&buf, e.offset_bytes, e.size_bytes, &unit.name)?;
+                    rt.upload_f32_bytes(s, &e.shape)
+                })
+                .collect::<Result<_>>()?;
+            param_bufs.push(bufs);
+        }
+        Ok(ResidentModelRunner { rt, model, batch, exes, param_bufs })
+    }
+
+    /// Forward with device-resident weights and on-device activations.
+    pub fn forward(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut shape = self.model.in_shape.clone();
+        shape[0] = self.batch;
+        let mut act = self.rt.upload_f32(input, &shape)?;
+        for (ui, exe) in self.exes.iter().enumerate() {
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.param_bufs[ui].len());
+            args.push(&act);
+            args.extend(self.param_bufs[ui].iter());
+            act = self.rt.execute_unit_b(exe, &args)?;
+        }
+        let lit = act
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        literal_to_vec(&lit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::artifacts::{artifacts_dir, ArtifactModel};
+
+    fn tiny() -> Option<ArtifactModel> {
+        let dir = artifacts_dir().join("tiny_cnn");
+        if dir.join("meta.json").exists() {
+            Some(ArtifactModel::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: no artifacts");
+            None
+        }
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let vals = vec![1.0f32, -2.0, 3.5, 0.0, 9.25, -7.125];
+        let lit = literal_from_f32s(&[2, 3], &vals).unwrap();
+        assert_eq!(literal_to_vec(&lit).unwrap(), vals);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[4], &[0u8; 12]).is_err());
+    }
+
+    #[test]
+    fn direct_runner_executes_tiny_cnn() {
+        let Some(model) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let runner = DirectRunner::new(&rt, model, 1);
+        let n: usize = runner.model.in_shape.iter().skip(1).product();
+        let input = vec![0.5f32; n];
+        let out = runner.forward(&input).unwrap();
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(model) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let runner = DirectRunner::new(&rt, model, 1);
+        runner.warmup().unwrap();
+        let n = rt.cached_executables();
+        runner.warmup().unwrap();
+        assert_eq!(rt.cached_executables(), n, "second warmup must hit cache");
+        assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn resident_runner_matches_direct() {
+        let Some(model) = tiny() else { return };
+        if model.units[0].hlo_ref_by_batch.is_empty() {
+            eprintln!("skipping: artifacts lack ref variants (re-run make artifacts)");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let n: usize = model.in_shape.iter().skip(1).product();
+        let x: Vec<f32> = (0..n).map(|i| (i % 89) as f32 / 89.0).collect();
+        let direct = DirectRunner::new(&rt, model.clone(), 1).forward(&x).unwrap();
+        let resident = ResidentModelRunner::new(&rt, model, 1).unwrap();
+        let fast = resident.forward(&x).unwrap();
+        assert_eq!(fast.len(), direct.len());
+        for (a, b) in fast.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batch_variants_exist() {
+        let Some(model) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        for b in [1usize, 4, 8] {
+            let runner = DirectRunner::new(&rt, model.clone(), b);
+            let n: usize = model.in_shape.iter().skip(1).product();
+            let out = runner.forward(&vec![0.1f32; n * b]).unwrap();
+            assert_eq!(out.len(), 10 * b);
+        }
+    }
+}

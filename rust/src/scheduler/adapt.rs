@@ -1,0 +1,171 @@
+//! Runtime adaptation to dynamic memory budgets (paper §6.2.2 end, Fig 18).
+//!
+//! The layer chain is extracted once (`get_layers`); adapting to a new
+//! budget only re-selects partition points over the cached chain and
+//! pre-built lookup tables — the paper measures 60-74 ms per adaptation,
+//! dominated by table pruning + block re-referencing, NOT re-dividing the
+//! model from scratch.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::DeviceProfile;
+use crate::delay::DelayModel;
+use crate::model::ModelInfo;
+use crate::scheduler::{num_blocks, partition, Schedule};
+
+/// Cached adaptation state for one registered model.
+pub struct AdaptiveScheduler {
+    pub model: ModelInfo,
+    dm: DelayModel,
+    /// Pre-built lookup tables per block count (the "several partition
+    /// strategy lookup tables computed before execution").
+    tables: HashMap<usize, partition::LookupTable>,
+    pub current: Option<Schedule>,
+    /// History of (budget, n_blocks, adaptation wall seconds).
+    pub history: Vec<(u64, usize, f64)>,
+}
+
+impl AdaptiveScheduler {
+    /// Register a model: extract layers (already in `ModelInfo`) and
+    /// precompute lookup tables for the plausible n range.
+    pub fn register(model: ModelInfo, prof: &DeviceProfile, max_n: usize) -> Self {
+        let dm = DelayModel::from_profile(prof);
+        let mut tables = HashMap::new();
+        let cap = (model.legal_cut_points().len() + 1).min(max_n);
+        for n in 2..=cap.max(2) {
+            tables.insert(n, partition::build_lookup_table(&model, n, &dm));
+        }
+        AdaptiveScheduler {
+            model,
+            dm,
+            tables,
+            current: None,
+            history: Vec::new(),
+        }
+    }
+
+    /// Adapt to a new budget: prune the cached tables, choose the best
+    /// feasible row, rebuild blocks. Returns the new schedule; records
+    /// the adaptation wall time (paper: 60-74 ms).
+    pub fn adapt(&mut self, budget: u64) -> Result<Schedule, String> {
+        let t0 = Instant::now();
+        let usable = crate::scheduler::usable_budget(&self.model, budget);
+        let s = self.model.size_bytes();
+        let sched = if s <= usable {
+            let b = self.model.single_block();
+            Schedule {
+                model: self.model.name.clone(),
+                budget_bytes: budget,
+                n_blocks: 1,
+                points: vec![],
+                predicted_latency_s: self.dm.t_in(&b)
+                    + self.dm.t_ex(&b, self.model.processor),
+                peak_bytes: s,
+            }
+        } else {
+            if usable == 0 {
+                return Err(format!("{}: budget {} infeasible", self.model.name, budget));
+            }
+            let max_n = self.model.legal_cut_points().len() + 1;
+            let mut n = num_blocks(s, usable).clamp(2, max_n + 1);
+            loop {
+                let table = match self.tables.get(&n) {
+                    Some(t) => t,
+                    None => {
+                        // beyond the precomputed range: build on demand
+                        let t = partition::build_lookup_table(&self.model, n, &self.dm);
+                        self.tables.entry(n).or_insert(t)
+                    }
+                };
+                if let Some(row) = table.best_within(usable) {
+                    break Schedule {
+                        model: self.model.name.clone(),
+                        budget_bytes: budget,
+                        n_blocks: n,
+                        points: row.points.clone(),
+                        predicted_latency_s: row.predicted_latency_s,
+                        peak_bytes: row.max_mem_bytes,
+                    };
+                }
+                n += 1;
+                if n > self.model.legal_cut_points().len() + 1 {
+                    return Err(format!("{}: budget {} infeasible", self.model.name, budget));
+                }
+            }
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        self.history.push((budget, sched.n_blocks, dt));
+        self.current = Some(sched.clone());
+        Ok(sched)
+    }
+
+    /// Total resident bytes of the cached strategy tables (part of the
+    /// paper's delta overhead, §8.5: 0.5-3.4 MB).
+    pub fn tables_bytes(&self) -> u64 {
+        self.tables.values().map(|t| t.approx_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceProfile, MB};
+    use crate::model::families;
+
+    #[test]
+    fn adapts_like_fig18() {
+        // Fig 18: ResNet-101 (170 MB): 136 MB budget -> 3 blocks; first
+        // squeeze keeps 3 blocks with new points; second squeeze -> 4.
+        // Our computed ResNet-101 is 178 MB vs the paper's quoted 170 MB,
+        // so the budget steps scale slightly (n = ceil(2s/b') boundaries).
+        let prof = DeviceProfile::jetson_nx();
+        let mut ad = AdaptiveScheduler::register(families::resnet101(), &prof, 5);
+        let s1 = ad.adapt(136 * MB).unwrap();
+        assert_eq!(s1.n_blocks, 3, "{s1:?}");
+        let s2 = ad.adapt(125 * MB).unwrap();
+        assert_eq!(s2.n_blocks, 3, "{s2:?}");
+        assert_ne!(s1.points, s2.points, "tighter budget must move cuts");
+        assert!(s2.predicted_latency_s >= s1.predicted_latency_s - 1e-6);
+        let s3 = ad.adapt(95 * MB).unwrap();
+        assert_eq!(s3.n_blocks, 4, "{s3:?}");
+    }
+
+    #[test]
+    fn adaptation_is_fast() {
+        // The paper reports 60-74 ms on a Jetson; on this host the cached
+        // table prune must be well under that.
+        let prof = DeviceProfile::jetson_nx();
+        let mut ad = AdaptiveScheduler::register(families::resnet101(), &prof, 5);
+        ad.adapt(136 * MB).unwrap();
+        ad.adapt(110 * MB).unwrap();
+        for (_, _, dt) in &ad.history {
+            assert!(*dt < 0.074, "adaptation took {dt}s");
+        }
+    }
+
+    #[test]
+    fn ample_budget_single_block() {
+        let prof = DeviceProfile::jetson_nx();
+        let mut ad = AdaptiveScheduler::register(families::resnet101(), &prof, 5);
+        let s = ad.adapt(400 * MB).unwrap();
+        assert_eq!(s.n_blocks, 1);
+    }
+
+    #[test]
+    fn impossible_budget_errors() {
+        let prof = DeviceProfile::jetson_nx();
+        let mut ad = AdaptiveScheduler::register(families::vgg19(), &prof, 4);
+        assert!(ad.adapt(10 * MB).is_err());
+    }
+
+    #[test]
+    fn tables_overhead_in_paper_band() {
+        let prof = DeviceProfile::jetson_nx();
+        let ad = AdaptiveScheduler::register(families::resnet101(), &prof, 4);
+        // Our chain has 36 units vs the paper's 101 layers, so the tables
+        // are proportionally smaller but the same order of magnitude.
+        let sz = ad.tables_bytes();
+        assert!(sz > 10_000 && sz < 4_000_000, "{sz}");
+    }
+}

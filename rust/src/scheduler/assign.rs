@@ -1,0 +1,226 @@
+//! Processor assignment optimizer.
+//!
+//! The paper assigns models to processors by hand ("we configure VGG and
+//! ResNet to execute on CPU, and YOLO and FCN on GPU based on the
+//! complexity of tasks", §8.1.2). This module derives such an assignment
+//! automatically: choose CPU/GPU per model to minimize the fleet
+//! makespan, under the constraint that each processor runs its models
+//! sequentially (per-core affinity isolation keeps models from
+//! interfering, but a processor is still a serial resource).
+//!
+//! Exact search for small fleets (<= 16 models: 2^n enumeration), greedy
+//! longest-processing-time otherwise.
+
+use crate::config::Processor;
+use crate::delay::DelayModel;
+use crate::model::ModelInfo;
+
+/// Per-model execution cost on each processor.
+#[derive(Debug, Clone)]
+pub struct AssignCosts {
+    pub name: String,
+    pub cpu_s: f64,
+    pub gpu_s: f64,
+}
+
+impl AssignCosts {
+    pub fn of(model: &ModelInfo, dm: &DelayModel) -> Self {
+        let b = model.single_block();
+        AssignCosts {
+            name: model.name.clone(),
+            cpu_s: dm.t_ex(&b, Processor::Cpu),
+            gpu_s: dm.t_ex(&b, Processor::Gpu),
+        }
+    }
+}
+
+/// An assignment with its makespan.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub processors: Vec<Processor>,
+    pub cpu_load_s: f64,
+    pub gpu_load_s: f64,
+}
+
+impl Assignment {
+    pub fn makespan(&self) -> f64 {
+        self.cpu_load_s.max(self.gpu_load_s)
+    }
+}
+
+/// Minimize makespan over CPU/GPU assignments.
+pub fn assign(costs: &[AssignCosts]) -> Assignment {
+    let n = costs.len();
+    if n == 0 {
+        return Assignment { processors: vec![], cpu_load_s: 0.0, gpu_load_s: 0.0 };
+    }
+    if n <= 16 {
+        exact(costs)
+    } else {
+        greedy(costs)
+    }
+}
+
+fn evaluate(costs: &[AssignCosts], mask: u64) -> (f64, f64) {
+    let mut cpu = 0.0;
+    let mut gpu = 0.0;
+    for (i, c) in costs.iter().enumerate() {
+        if mask & (1 << i) != 0 {
+            gpu += c.gpu_s;
+        } else {
+            cpu += c.cpu_s;
+        }
+    }
+    (cpu, gpu)
+}
+
+fn exact(costs: &[AssignCosts]) -> Assignment {
+    let n = costs.len();
+    let mut best_mask = 0u64;
+    let mut best = f64::MAX;
+    for mask in 0..(1u64 << n) {
+        let (cpu, gpu) = evaluate(costs, mask);
+        let mk = cpu.max(gpu);
+        if mk < best {
+            best = mk;
+            best_mask = mask;
+        }
+    }
+    let (cpu, gpu) = evaluate(costs, best_mask);
+    Assignment {
+        processors: (0..n)
+            .map(|i| if best_mask & (1 << i) != 0 { Processor::Gpu } else { Processor::Cpu })
+            .collect(),
+        cpu_load_s: cpu,
+        gpu_load_s: gpu,
+    }
+}
+
+fn greedy(costs: &[AssignCosts]) -> Assignment {
+    // LPT: sort by max cost descending, place each on the processor that
+    // minimizes the resulting makespan.
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| {
+        (costs[b].cpu_s.max(costs[b].gpu_s))
+            .total_cmp(&costs[a].cpu_s.max(costs[a].gpu_s))
+    });
+    let mut procs = vec![Processor::Cpu; costs.len()];
+    let mut cpu = 0.0;
+    let mut gpu = 0.0;
+    for i in order {
+        let as_cpu = (cpu + costs[i].cpu_s).max(gpu);
+        let as_gpu = cpu.max(gpu + costs[i].gpu_s);
+        if as_gpu < as_cpu {
+            procs[i] = Processor::Gpu;
+            gpu += costs[i].gpu_s;
+        } else {
+            cpu += costs[i].cpu_s;
+        }
+    }
+    Assignment { processors: procs, cpu_load_s: cpu, gpu_load_s: gpu }
+}
+
+/// Apply an assignment to a fleet (returns re-targeted models).
+pub fn apply(models: &[ModelInfo], a: &Assignment) -> Vec<ModelInfo> {
+    models
+        .iter()
+        .zip(&a.processors)
+        .map(|(m, &p)| {
+            let mut m = m.clone();
+            m.processor = p;
+            m
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceProfile;
+    use crate::model::families;
+
+    fn dm() -> DelayModel {
+        DelayModel::from_profile(&DeviceProfile::jetson_nx())
+    }
+
+    #[test]
+    fn empty_fleet() {
+        let a = assign(&[]);
+        assert_eq!(a.makespan(), 0.0);
+    }
+
+    #[test]
+    fn single_model_goes_to_faster_processor() {
+        let c = vec![AssignCosts { name: "m".into(), cpu_s: 1.0, gpu_s: 0.1 }];
+        let a = assign(&c);
+        assert_eq!(a.processors, vec![Processor::Gpu]);
+    }
+
+    #[test]
+    fn exact_beats_all_cpu_and_all_gpu() {
+        let dmv = dm();
+        let models = [
+            families::vgg19(),
+            families::resnet101(),
+            families::yolov3(),
+            families::fcn(),
+        ];
+        let costs: Vec<AssignCosts> = models.iter().map(|m| AssignCosts::of(m, &dmv)).collect();
+        let a = assign(&costs);
+        let all_cpu: f64 = costs.iter().map(|c| c.cpu_s).sum();
+        let all_gpu: f64 = costs.iter().map(|c| c.gpu_s).sum();
+        assert!(a.makespan() <= all_cpu + 1e-12);
+        assert!(a.makespan() <= all_gpu + 1e-12);
+        // With a 10x-faster GPU, at least one heavy model must use it.
+        assert!(a.processors.iter().any(|&p| p == Processor::Gpu));
+    }
+
+    #[test]
+    fn paper_fleet_assignment_is_balanced() {
+        // The optimizer should spread the self-driving fleet across both
+        // processors (the paper's hand split does too).
+        let dmv = dm();
+        let models = [
+            families::vgg19(),
+            families::resnet101(),
+            families::yolov3(),
+            families::fcn(),
+        ];
+        let costs: Vec<AssignCosts> = models.iter().map(|m| AssignCosts::of(m, &dmv)).collect();
+        let a = assign(&costs);
+        let imbalance = (a.cpu_load_s - a.gpu_load_s).abs() / a.makespan();
+        assert!(imbalance < 0.9, "one side idle: {a:?}");
+    }
+
+    #[test]
+    fn greedy_close_to_exact_on_random_fleets() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let n = 3 + rng.below(10);
+            let costs: Vec<AssignCosts> = (0..n)
+                .map(|i| AssignCosts {
+                    name: format!("m{i}"),
+                    cpu_s: rng.range(0.05, 1.0),
+                    gpu_s: rng.range(0.02, 0.5),
+                })
+                .collect();
+            let ex = exact(&costs);
+            let gr = greedy(&costs);
+            assert!(gr.makespan() <= ex.makespan() * 1.5 + 1e-9,
+                "greedy too far off: {} vs {}", gr.makespan(), ex.makespan());
+        }
+    }
+
+    #[test]
+    fn apply_retargets_models() {
+        let dmv = dm();
+        let models = vec![families::vgg19(), families::yolov3()];
+        let costs: Vec<AssignCosts> = models.iter().map(|m| AssignCosts::of(m, &dmv)).collect();
+        let a = assign(&costs);
+        let out = apply(&models, &a);
+        for (m, &p) in out.iter().zip(&a.processors) {
+            assert_eq!(m.processor, p);
+        }
+    }
+}

@@ -1,0 +1,351 @@
+//! Multi-DNN scheduling (paper §6.2): memory-budget allocation across
+//! models (Eq. 1), block partitioning within a model (Eq. 2-4, Table 3
+//! lookup tables), and fast runtime adaptation (§6.2.2 / Fig 18).
+
+pub mod adapt;
+pub mod assign;
+pub mod partition;
+
+use crate::config::{DeviceProfile, Processor, PARALLELISM_M};
+use crate::delay::DelayModel;
+use crate::model::ModelInfo;
+
+/// One model's demand as seen by the budget allocator.
+#[derive(Debug, Clone)]
+pub struct ModelDemand {
+    pub name: String,
+    /// Memory required to hold the whole model (M_i).
+    pub mem_bytes: u64,
+    /// Standalone inference latency estimate (for PS).
+    pub latency_s: f64,
+    /// Urgency degree u (user-configured; default 1).
+    pub urgency: f64,
+}
+
+impl ModelDemand {
+    pub fn from_model(m: &ModelInfo, dm: &DelayModel, urgency: f64) -> Self {
+        let b = m.single_block();
+        ModelDemand {
+            name: m.name.clone(),
+            mem_bytes: m.size_bytes(),
+            latency_s: dm.t_ex(&b, m.processor),
+            urgency,
+        }
+    }
+
+    /// Performance score PS = u * latency / memory (paper §6.2.2): high
+    /// for complex-but-compact models (ResNet), low for simple-but-large
+    /// ones (VGG).
+    pub fn performance_score(&self) -> f64 {
+        self.urgency * self.latency_s / (self.mem_bytes as f64 / 1e9)
+    }
+}
+
+/// Minimal feasible budget for a model: even the finest legal partition
+/// keeps two adjacent atomic segments resident (m=2), so the floor is the
+/// largest adjacent-segment pair divided by (1 - delta). This is how the
+/// paper's footnote 2 manifests ("VGG's largest layer takes 392 MB, so a
+/// relatively large budget is required" — its budget is raised to fit).
+pub fn minimal_budget(model: &ModelInfo) -> u64 {
+    // Atomic segments: split at EVERY legal cut point.
+    let cuts = model.legal_cut_points();
+    let segs = model
+        .create_blocks(&cuts)
+        .expect("all-legal cuts must be valid");
+    let sizes: Vec<u64> = segs.iter().map(|b| b.size_bytes).collect();
+    let peak = crate::pipeline::peak_resident_bytes(&sizes);
+    (peak as f64 / 0.995).ceil() as u64 + overhead_bytes(model) + 1
+}
+
+/// Resident overhead of running one model under SwapNet: skeletons +
+/// strategy tables + activation buffers — the paper's delta reservation
+/// (§8.5: ~3.6% of model size on average), carried in absolute bytes so
+/// tight budgets stay correct.
+pub fn overhead_bytes(model: &ModelInfo) -> u64 {
+    crate::baselines::activation_bytes(&model.family) + 650_000 /* tables */ + 64_000 /* skeletons */
+}
+
+/// Usable block-residency budget after the overhead reservation.
+pub fn usable_budget(model: &ModelInfo, budget: u64) -> u64 {
+    (budget.saturating_sub(overhead_bytes(model)) as f64 * 0.995) as u64
+}
+
+/// Eq. 1: allocate `total` bytes across models. If everything fits,
+/// each model gets its demand; otherwise (1 - 1/n) of the budget is
+/// split proportional to demand and the reserved 1/n proportional to
+/// normalized performance score. Allocations are then lifted to each
+/// model's feasibility floor (see [`minimal_budget`]), taking the deficit
+/// proportionally from models with surplus.
+pub fn allocate_budgets_with_floors(
+    demands: &[ModelDemand],
+    floors: &[u64],
+    total: u64,
+) -> Vec<u64> {
+    let mut alloc = allocate_budgets(demands, total);
+    for _ in 0..4 {
+        // lift below-floor models
+        let mut deficit: i64 = 0;
+        for (a, &f) in alloc.iter_mut().zip(floors) {
+            if *a < f {
+                deficit += (f - *a) as i64;
+                *a = f;
+            }
+        }
+        if deficit == 0 {
+            break;
+        }
+        // take the deficit from surplus models proportionally
+        let surplus: i64 = alloc
+            .iter()
+            .zip(floors)
+            .map(|(&a, &f)| (a as i64 - f as i64).max(0))
+            .sum();
+        if surplus <= 0 {
+            break; // infeasible overall; schedule_model will report it
+        }
+        for (a, &f) in alloc.iter_mut().zip(floors) {
+            let sur = (*a as i64 - f as i64).max(0);
+            let cut = deficit * sur / surplus;
+            *a = (*a as i64 - cut).max(f as i64) as u64;
+        }
+    }
+    alloc
+}
+
+/// Eq. 1 without floors (the raw paper formula).
+pub fn allocate_budgets(demands: &[ModelDemand], total: u64) -> Vec<u64> {
+    let n = demands.len();
+    if n == 0 {
+        return vec![];
+    }
+    let sum_m: u64 = demands.iter().map(|d| d.mem_bytes).sum();
+    if sum_m <= total {
+        return demands.iter().map(|d| d.mem_bytes).collect();
+    }
+    let nf = n as f64;
+    let totalf = total as f64;
+    let sum_ps: f64 = demands.iter().map(|d| d.performance_score()).sum();
+    demands
+        .iter()
+        .map(|d| {
+            let share_m = d.mem_bytes as f64 / sum_m as f64;
+            let share_ps = if sum_ps > 0.0 {
+                d.performance_score() / sum_ps
+            } else {
+                1.0 / nf
+            };
+            let a = share_m * (1.0 - 1.0 / nf) * totalf + share_ps * (1.0 / nf) * totalf;
+            a as u64
+        })
+        .collect()
+}
+
+/// Paper §6.2.2: number of blocks n = ceil(m * s / b) for parallelism m.
+pub fn num_blocks(model_bytes: u64, budget_bytes: u64) -> usize {
+    if budget_bytes == 0 {
+        return usize::MAX;
+    }
+    let n = (PARALLELISM_M as u64 * model_bytes).div_ceil(budget_bytes) as usize;
+    n.max(1)
+}
+
+/// Full per-model scheduling decision.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub model: String,
+    pub budget_bytes: u64,
+    pub n_blocks: usize,
+    pub points: Vec<usize>,
+    pub predicted_latency_s: f64,
+    pub peak_bytes: u64,
+}
+
+/// Schedule one model into its budget: pick n = ceil(m*s/b), search the
+/// partition lookup table, fall back to increasing n if infeasible.
+pub fn schedule_model(
+    model: &ModelInfo,
+    budget: u64,
+    dm: &DelayModel,
+    prof: &DeviceProfile,
+) -> Result<Schedule, String> {
+    let _ = prof;
+    let usable = usable_budget(model, budget);
+    let s = model.size_bytes();
+    if s <= usable {
+        // fits whole: single block, no swapping during steady state
+        let b = model.single_block();
+        return Ok(Schedule {
+            model: model.name.clone(),
+            budget_bytes: budget,
+            n_blocks: 1,
+            points: vec![],
+            predicted_latency_s: dm.t_in(&b) + dm.t_ex(&b, model.processor),
+            peak_bytes: s,
+        });
+    }
+    if usable == 0 {
+        return Err(format!("{}: budget {} infeasible", model.name, budget));
+    }
+    let max_n = model.legal_cut_points().len() + 1;
+    let mut n = num_blocks(s, usable).clamp(2, max_n + 1);
+    while n <= max_n {
+        let table = partition::build_lookup_table(model, n, dm);
+        if let Some(row) = table.best_within(usable) {
+            return Ok(Schedule {
+                model: model.name.clone(),
+                budget_bytes: budget,
+                n_blocks: n,
+                points: row.points.clone(),
+                predicted_latency_s: row.predicted_latency_s,
+                peak_bytes: row.max_mem_bytes,
+            });
+        }
+        n += 1;
+    }
+    Err(format!(
+        "{}: no feasible partition within {} MB",
+        model.name,
+        usable / 1_000_000
+    ))
+}
+
+/// Schedule a whole fleet: Eq. 1 budgets then per-model partitions.
+pub fn schedule_fleet(
+    models: &[ModelInfo],
+    total_budget: u64,
+    dm: &DelayModel,
+    prof: &DeviceProfile,
+    urgency: &[f64],
+) -> Result<Vec<Schedule>, String> {
+    let demands: Vec<ModelDemand> = models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| ModelDemand::from_model(m, dm, urgency.get(i).copied().unwrap_or(1.0)))
+        .collect();
+    let floors: Vec<u64> = models.iter().map(minimal_budget).collect();
+    let budgets = allocate_budgets_with_floors(&demands, &floors, total_budget);
+    models
+        .iter()
+        .zip(budgets)
+        .map(|(m, b)| schedule_model(m, b, dm, prof))
+        .collect()
+}
+
+/// Processor gamma selection helper used around the scheduler.
+pub fn gamma_of(prof: &DeviceProfile, proc: Processor) -> f64 {
+    prof.gamma(proc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+    use crate::model::families;
+
+    fn dm() -> DelayModel {
+        DelayModel::from_profile(&DeviceProfile::jetson_nx())
+    }
+
+    #[test]
+    fn budgets_passthrough_when_fits() {
+        let d = vec![
+            ModelDemand { name: "a".into(), mem_bytes: 100, latency_s: 1.0, urgency: 1.0 },
+            ModelDemand { name: "b".into(), mem_bytes: 200, latency_s: 1.0, urgency: 1.0 },
+        ];
+        assert_eq!(allocate_budgets(&d, 1000), vec![100, 200]);
+    }
+
+    #[test]
+    fn budgets_sum_close_to_total_under_pressure() {
+        let d = vec![
+            ModelDemand { name: "vgg".into(), mem_bytes: 548 * MB, latency_s: 1.1, urgency: 1.0 },
+            ModelDemand { name: "resnet".into(), mem_bytes: 170 * MB, latency_s: 0.45, urgency: 1.0 },
+            ModelDemand { name: "yolo".into(), mem_bytes: 236 * MB, latency_s: 0.19, urgency: 1.0 },
+            ModelDemand { name: "fcn".into(), mem_bytes: 207 * MB, latency_s: 0.31, urgency: 1.0 },
+        ];
+        let total = 843 * MB;
+        let a = allocate_budgets(&d, total);
+        let sum: u64 = a.iter().sum();
+        assert!(sum <= total && sum > total - 4, "sum {} vs {}", sum, total);
+        // The largest-demand model gets the largest budget.
+        assert!(a[0] > a[1] && a[0] > a[2] && a[0] > a[3]);
+    }
+
+    #[test]
+    fn high_ps_model_gains_share() {
+        // Same memory, one much slower (higher PS) -> bigger allocation.
+        let d = vec![
+            ModelDemand { name: "slow".into(), mem_bytes: 100 * MB, latency_s: 2.0, urgency: 1.0 },
+            ModelDemand { name: "fast".into(), mem_bytes: 100 * MB, latency_s: 0.2, urgency: 1.0 },
+        ];
+        let a = allocate_budgets(&d, 100 * MB);
+        assert!(a[0] > a[1]);
+    }
+
+    #[test]
+    fn urgency_scales_ps() {
+        let d = vec![
+            ModelDemand { name: "u".into(), mem_bytes: 100 * MB, latency_s: 1.0, urgency: 3.0 },
+            ModelDemand { name: "v".into(), mem_bytes: 100 * MB, latency_s: 1.0, urgency: 1.0 },
+        ];
+        let a = allocate_budgets(&d, 100 * MB);
+        assert!(a[0] > a[1]);
+    }
+
+    #[test]
+    fn num_blocks_matches_formula() {
+        assert_eq!(num_blocks(170 * MB, 102 * MB), 4); // ceil(2*170/102)
+        assert_eq!(num_blocks(170 * MB, 136 * MB), 3); // ceil(2*170/136)
+        assert_eq!(num_blocks(100 * MB, 300 * MB), 1);
+    }
+
+    #[test]
+    fn schedule_resnet_into_paper_budget() {
+        // Paper self-driving: ResNet-101 (170 MB) at a 102 MB budget -> 4
+        // blocks; Fig 14 confirms 4 blocks in self-driving.
+        let m = families::resnet101();
+        let s = schedule_model(&m, 102 * MB, &dm(), &DeviceProfile::jetson_nx()).unwrap();
+        assert_eq!(s.n_blocks, 4, "{s:?}");
+        assert!(s.peak_bytes <= (102.0 * 0.964) as u64 * MB);
+        assert!(s.predicted_latency_s > 0.4 && s.predicted_latency_s < 1.0, "{s:?}");
+    }
+
+    #[test]
+    fn schedule_whole_model_when_budget_ample() {
+        let m = families::resnet101();
+        let s = schedule_model(&m, 400 * MB, &dm(), &DeviceProfile::jetson_nx()).unwrap();
+        assert_eq!(s.n_blocks, 1);
+        assert!(s.points.is_empty());
+    }
+
+    #[test]
+    fn schedule_fails_below_minimum() {
+        // Budget smaller than any adjacent pair of layers is infeasible —
+        // VGG's 411 MB fc1 cannot fit a 50 MB budget.
+        let m = families::vgg19();
+        assert!(schedule_model(&m, 50 * MB, &dm(), &DeviceProfile::jetson_nx()).is_err());
+    }
+
+    #[test]
+    fn fleet_schedule_self_driving() {
+        let models = vec![
+            families::vgg19(),
+            families::resnet101(),
+            families::yolov3(),
+            families::fcn(),
+        ];
+        let dmev = dm();
+        let prof = DeviceProfile::jetson_nx();
+        // Paper: 843 MB for the four DNNs. Our computed VGG-19 is 574 MB
+        // (paper quotes 548) with a 478 MB fc1+fc2 floor, so the fleet
+        // total scales up proportionally (1161 -> 1263 MB demand).
+        let total = 920 * MB;
+        let scheds = schedule_fleet(&models, total, &dmev, &prof, &[1.0; 4]).unwrap();
+        assert_eq!(scheds.len(), 4);
+        let peak_sum: u64 = scheds.iter().map(|s| s.peak_bytes).sum();
+        assert!(peak_sum <= total, "peaks {} > {}", peak_sum / MB, total / MB);
+        for s in &scheds {
+            assert!(s.n_blocks >= 1);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Micro-bench harness (criterion is not in the offline crate universe).
+//!
+//! Warm-up + timed iterations with mean/p50/p95 reporting; used both by
+//! the `benches/micro_*` binaries and the §Perf optimization pass.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            super::table::human_secs(self.mean_s),
+            super::table::human_secs(self.p50_s),
+            super::table::human_secs(self.p95_s),
+        )
+    }
+}
+
+/// Time `f` for ~`budget_ms` after a short warm-up; each call is one iter.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    // warm-up
+    let warm = Instant::now();
+    while warm.elapsed().as_millis() < (budget_ms / 5).max(5) as u128 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_millis() < budget_ms as u128 || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    let mean = crate::util::stats::mean(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: crate::util::stats::percentile(&samples, 50.0),
+        p95_s: crate::util::stats::percentile(&samples, 95.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 20, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.p50_s);
+    }
+}

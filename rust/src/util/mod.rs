@@ -1,0 +1,9 @@
+//! Self-contained utility substrates (the offline crate universe has no
+//! serde/rand/criterion — see Cargo.toml): JSON, PRNG, statistics, tables,
+//! and a micro bench harness used by the `benches/` binaries.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,185 @@
+//! Statistics helpers: summary stats, percentiles, CDFs, and the
+//! least-squares fits behind the paper's coefficient profiling (Fig 9).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile with linear interpolation; q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Empirical CDF evaluated at `points` (fraction of xs <= point).
+pub fn cdf_at(xs: &[f64], points: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points
+        .iter()
+        .map(|p| {
+            let k = v.partition_point(|x| x <= p);
+            k as f64 / v.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Ordinary least squares `y = a*x + c`; returns (a, c, r2).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let a = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let c = my - a * mx;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (a * x + c)).powi(2))
+        .sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    let _ = n;
+    (a, c, r2)
+}
+
+/// Two-variable least squares `y = a*x1 + b*x2 + c` via normal equations.
+/// Used to recover (alpha, beta) of t_in = alpha*s + beta*d jointly.
+pub fn linreg2(x1: &[f64], x2: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    let n = ys.len() as f64;
+    assert!(x1.len() == ys.len() && x2.len() == ys.len() && !ys.is_empty());
+    // Solve the 3x3 normal equations [X^T X] beta = X^T y with X = [x1 x2 1].
+    let s11: f64 = x1.iter().map(|v| v * v).sum();
+    let s22: f64 = x2.iter().map(|v| v * v).sum();
+    let s12: f64 = x1.iter().zip(x2).map(|(a, b)| a * b).sum();
+    let s1: f64 = x1.iter().sum();
+    let s2: f64 = x2.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let s1y: f64 = x1.iter().zip(ys).map(|(a, y)| a * y).sum();
+    let s2y: f64 = x2.iter().zip(ys).map(|(a, y)| a * y).sum();
+
+    let m = [
+        [s11, s12, s1],
+        [s12, s22, s2],
+        [s1, s2, n],
+    ];
+    let rhs = [s1y, s2y, sy];
+    let sol = solve3(m, rhs);
+    (sol[0], sol[1], sol[2])
+}
+
+/// Gaussian elimination for a 3x3 system (partial pivoting).
+fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
+    for col in 0..3 {
+        let piv = (col..3)
+            .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())
+            .unwrap();
+        m.swap(col, piv);
+        b.swap(col, piv);
+        let d = m[col][col];
+        assert!(d.abs() > 1e-12, "singular system");
+        for r in (col + 1)..3 {
+            let f = m[r][col] / d;
+            for c in col..3 {
+                m[r][c] -= f * m[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for r in (0..3).rev() {
+        let mut acc = b[r];
+        for c in (r + 1)..3 {
+            acc -= m[r][c] * x[c];
+        }
+        x[r] = acc / m[r][r];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs = [3.0, 1.0, 2.0, 2.0];
+        let c = cdf_at(&xs, &[0.5, 1.0, 2.0, 3.0]);
+        assert_eq!(c, vec![0.0, 0.25, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 2.0).collect();
+        let (a, c, r2) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((c - 2.0).abs() < 1e-7);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn linreg2_recovers_plane_with_noise() {
+        let mut rng = Rng::new(1);
+        let mut x1 = vec![];
+        let mut x2 = vec![];
+        let mut y = vec![];
+        for _ in 0..400 {
+            let a = rng.range(0.0, 100.0);
+            let b = rng.range(0.0, 10.0);
+            x1.push(a);
+            x2.push(b);
+            y.push(0.7 * a + 5.0 * b + 1.5 + rng.normal() * 0.1);
+        }
+        let (a, b, c) = linreg2(&x1, &x2, &y);
+        assert!((a - 0.7).abs() < 0.01, "a={a}");
+        assert!((b - 5.0).abs() < 0.05, "b={b}");
+        assert!((c - 1.5).abs() < 0.2, "c={c}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn linreg2_rejects_empty() {
+        linreg2(&[], &[], &[]);
+    }
+}

@@ -1,0 +1,86 @@
+//! ASCII table rendering for the bench harnesses — every paper table and
+//! figure is regenerated as rows printed in the paper's format.
+
+/// Render rows as an aligned ASCII table with a header rule.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        out.push('|');
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            out.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// `1234567` -> `"1.2 MB"` style human sizes.
+pub fn human_bytes(b: u64) -> String {
+    let bf = b as f64;
+    if bf >= 1e9 {
+        format!("{:.2} GB", bf / 1e9)
+    } else if bf >= 1e6 {
+        format!("{:.1} MB", bf / 1e6)
+    } else if bf >= 1e3 {
+        format!("{:.1} kB", bf / 1e3)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Seconds to a human latency string.
+pub fn human_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            &["name", "size"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["long-name".into(), "22".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(t.contains("long-name"));
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2_500_000), "2.5 MB");
+        assert_eq!(human_bytes(3_000_000_000), "3.00 GB");
+        assert_eq!(human_secs(0.0301), "30.1 ms");
+        assert_eq!(human_secs(2.5), "2.50 s");
+        assert_eq!(human_secs(52e-6), "52.0 us");
+    }
+}

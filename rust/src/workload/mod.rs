@@ -1,0 +1,220 @@
+//! Application scenarios (paper §8.1.1) and the non-DNN task trace
+//! (Table 1).
+//!
+//! Budgets scale with OUR computed model sizes: the paper's quoted fleet
+//! (VGG 548 + ResNet 170 + YOLO 236 + FCN 207 = 1161 MB) gets 843 MB in
+//! self-driving; our real-architecture tables total slightly higher, so
+//! each scenario budget is the paper budget x (our fleet / paper fleet) —
+//! preserving the paper's pressure ratio (models demand ~1.4x budget).
+
+pub mod traces;
+
+use crate::config::MB;
+use crate::model::{families, ModelInfo};
+
+/// One non-DNN task (Table 1 row).
+#[derive(Debug, Clone)]
+pub struct NonDnnTask {
+    pub name: String,
+    pub mem_bytes: u64,
+}
+
+/// A multi-DNN application scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub models: Vec<ModelInfo>,
+    pub urgency: Vec<f64>,
+    pub non_dnn: Vec<NonDnnTask>,
+    /// Memory budget handed to the DNN fleet (after non-DNN tasks and
+    /// headroom), already scaled to our model sizes.
+    pub dnn_budget: u64,
+    /// The paper's quoted budget for the same scenario (for reporting).
+    pub paper_budget: u64,
+    /// Explicit per-model budgets (paper quotes fixed per-model budgets
+    /// for UAV and raises VGG's in RSU); None = Eq. 1 allocation.
+    pub budget_override: Option<Vec<u64>>,
+}
+
+impl Scenario {
+    pub fn fleet_bytes(&self) -> u64 {
+        self.models.iter().map(|m| m.size_bytes()).sum()
+    }
+
+    /// Memory pressure ratio: fleet demand / budget (paper: 2.32x-5.81x
+    /// *per-model* demand-beyond-budget band across scenarios).
+    pub fn pressure(&self) -> f64 {
+        self.fleet_bytes() as f64 / self.dnn_budget as f64
+    }
+}
+
+/// Table 1: the RosMaster X3 non-DNN memory allocation on the 8 GB NX.
+pub fn table1_non_dnn() -> Vec<NonDnnTask> {
+    [
+        ("Operating System", 1038),
+        ("SLAM and Navigation", 1815),
+        ("Map Repository", 1229),
+        ("Video Capture and Encoding", 488),
+        ("CUDA Kernel", 1518),
+    ]
+    .into_iter()
+    .map(|(n, mb)| NonDnnTask { name: n.into(), mem_bytes: mb * MB })
+    .collect()
+}
+
+fn scale_budget(paper_budget_mb: u64, paper_fleet_mb: u64, our_fleet: u64) -> u64 {
+    (paper_budget_mb * MB) as u64 * our_fleet / (paper_fleet_mb * MB)
+}
+
+/// Self-driving (§8.1.1): YOLO (GPU), FCN (GPU), VGG (CPU), ResNet (CPU);
+/// paper gives the fleet 843 MB of the 2104 MB remaining after Table 1.
+pub fn self_driving() -> Scenario {
+    let models = vec![
+        families::vgg19(),
+        families::resnet101(),
+        families::yolov3(),
+        families::fcn(),
+    ];
+    let fleet: u64 = models.iter().map(|m| m.size_bytes()).sum();
+    Scenario {
+        name: "self-driving".into(),
+        urgency: vec![1.0; models.len()],
+        non_dnn: table1_non_dnn(),
+        dnn_budget: scale_budget(843, 1161, fleet),
+        paper_budget: 843 * MB,
+        budget_override: None,
+        models,
+    }
+}
+
+/// Road-side unit: 2x YOLO, 2x ResNet, 1x VGG; 1088 MB for 1360 MB.
+pub fn rsu() -> Scenario {
+    let mut y2 = families::yolov3();
+    y2.name = "yolov3#2".into();
+    let mut r2 = families::resnet101();
+    r2.name = "resnet101#2".into();
+    let models = vec![
+        families::yolov3(),
+        y2,
+        families::resnet101(),
+        r2,
+        families::vgg19(),
+    ];
+    let fleet: u64 = models.iter().map(|m| m.size_bytes()).sum();
+    Scenario {
+        name: "rsu".into(),
+        urgency: vec![1.0; models.len()],
+        non_dnn: vec![
+            NonDnnTask { name: "Operating System".into(), mem_bytes: 1038 * MB },
+            NonDnnTask { name: "Multi-Stream Video".into(), mem_bytes: 912 * MB },
+            NonDnnTask { name: "Networking".into(), mem_bytes: 410 * MB },
+            NonDnnTask { name: "CUDA Kernel".into(), mem_bytes: 1518 * MB },
+        ],
+        dnn_budget: scale_budget(1088, 1360, fleet),
+        paper_budget: 1088 * MB,
+        budget_override: None,
+        models,
+    }
+}
+
+/// UAV surveillance: YOLO (fire) + ResNet (animals); ample budgets
+/// (paper: 136 MB ResNet + 189 MB YOLO).
+pub fn uav() -> Scenario {
+    let models = vec![families::yolov3(), families::resnet101()];
+    let fleet: u64 = models.iter().map(|m| m.size_bytes()).sum();
+    Scenario {
+        name: "uav".into(),
+        urgency: vec![1.0; models.len()],
+        non_dnn: vec![
+            NonDnnTask { name: "Operating System".into(), mem_bytes: 1038 * MB },
+            NonDnnTask { name: "HD Video Capture".into(), mem_bytes: 720 * MB },
+            NonDnnTask { name: "CUDA Kernel".into(), mem_bytes: 1518 * MB },
+        ],
+        dnn_budget: scale_budget(325, 406, fleet),
+        paper_budget: 325 * MB,
+        // Paper fixes the UAV budgets: 189 MB YOLO, 136 MB ResNet (for
+        // the 236/170 MB models) -> scaled to our computed sizes.
+        budget_override: Some(vec![
+            189 * MB * models[0].size_bytes() / (236 * MB),
+            136 * MB * models[1].size_bytes() / (170 * MB),
+        ]),
+        models,
+    }
+}
+
+pub fn by_name(name: &str) -> Option<Scenario> {
+    match name {
+        "self-driving" | "self_driving" => Some(self_driving()),
+        "rsu" => Some(rsu()),
+        "uav" => Some(uav()),
+        _ => None,
+    }
+}
+
+/// A dynamic-budget event trace (Fig 18): (time s, new DNN budget).
+pub fn fig18_budget_trace() -> Vec<(f64, u64)> {
+    vec![
+        (0.0, 142 * MB),  // initial (paper: 136 MB for the 170 MB model)
+        (12.0, 128 * MB), // first workload dynamics
+        (26.0, 101 * MB), // second: forces 4 blocks
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GB;
+
+    #[test]
+    fn table1_sums_to_paper_remaining() {
+        let t = table1_non_dnn();
+        let used: u64 = t.iter().map(|x| x.mem_bytes).sum();
+        let remaining = 8 * GB + 192 * MB - used; // 8192 MB device
+        assert_eq!(remaining, 2104 * MB);
+        // Paper: only ~25.7% of 8 GB remains for DNN tasks.
+        let pct = remaining as f64 / (8192.0 * MB as f64);
+        assert!((pct - 0.257).abs() < 0.01, "{pct}");
+    }
+
+    #[test]
+    fn self_driving_pressure_beyond_budget() {
+        let s = self_driving();
+        assert_eq!(s.models.len(), 4);
+        // fleet demands ~1.4x its budget, like the paper (1161/843).
+        assert!((1.2..1.6).contains(&s.pressure()), "{}", s.pressure());
+        assert!(s.dnn_budget < s.fleet_bytes());
+    }
+
+    #[test]
+    fn rsu_has_replicas() {
+        let s = rsu();
+        assert_eq!(s.models.len(), 5);
+        assert!(s.models.iter().any(|m| m.name == "yolov3#2"));
+        assert!((1.1..1.5).contains(&s.pressure()), "{}", s.pressure());
+    }
+
+    #[test]
+    fn uav_still_pressured_but_lighter() {
+        let s = uav();
+        assert_eq!(s.models.len(), 2);
+        assert!(s.pressure() > 1.0);
+        assert!(s.pressure() < self_driving().pressure() + 0.2);
+    }
+
+    #[test]
+    fn fig18_trace_monotone_shrinking() {
+        let tr = fig18_budget_trace();
+        for w in tr.windows(2) {
+            assert!(w[1].0 > w[0].0);
+            assert!(w[1].1 < w[0].1);
+        }
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["self-driving", "rsu", "uav"] {
+            assert!(by_name(n).is_some());
+        }
+        assert!(by_name("warehouse").is_none());
+    }
+}

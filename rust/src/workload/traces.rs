@@ -1,0 +1,133 @@
+//! Request arrival traces for the serving path.
+//!
+//! The paper's applications are sensor-driven (camera frames, LiDAR
+//! sweeps) rather than uniformly random; these generators model the
+//! three arrival regimes the server has to survive: periodic sensor
+//! frames with jitter, Poisson background queries, and bursty event
+//! storms (e.g. every camera firing on a detection).
+
+use crate::util::rng::Rng;
+
+/// Arrival pattern for a request trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Poisson process at `rate_hz`.
+    Poisson { rate_hz: f64 },
+    /// Fixed-period sensor frames (e.g. 30 fps camera) with relative
+    /// timing jitter.
+    Periodic { rate_hz: f64, jitter: f64 },
+    /// Poisson background plus bursts of `burst_len` back-to-back
+    /// requests every ~`burst_every_s`.
+    Bursty {
+        rate_hz: f64,
+        burst_len: usize,
+        burst_every_s: f64,
+    },
+}
+
+/// Materialize `n` arrival timestamps (seconds, ascending).
+pub fn generate(pattern: ArrivalPattern, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    match pattern {
+        ArrivalPattern::Poisson { rate_hz } => {
+            let mut t = 0.0;
+            for _ in 0..n {
+                t += rng.exp(rate_hz);
+                out.push(t);
+            }
+        }
+        ArrivalPattern::Periodic { rate_hz, jitter } => {
+            let period = 1.0 / rate_hz;
+            for i in 0..n {
+                let base = (i + 1) as f64 * period;
+                out.push((base + jitter * period * rng.normal()).max(0.0));
+            }
+            out.sort_by(|a, b| a.total_cmp(b));
+        }
+        ArrivalPattern::Bursty { rate_hz, burst_len, burst_every_s } => {
+            let mut t = 0.0;
+            let mut next_burst = rng.exp(1.0 / burst_every_s);
+            while out.len() < n {
+                t += rng.exp(rate_hz);
+                if t >= next_burst {
+                    // a burst: back-to-back arrivals within ~1 ms
+                    for k in 0..burst_len.min(n - out.len()) {
+                        out.push(next_burst + k as f64 * 1e-3);
+                    }
+                    next_burst += rng.exp(1.0 / burst_every_s);
+                    continue;
+                }
+                out.push(t);
+            }
+            out.truncate(n);
+            out.sort_by(|a, b| a.total_cmp(b));
+        }
+    }
+    out
+}
+
+/// Coefficient of variation of inter-arrival times (burstiness measure:
+/// ~1 for Poisson, <1 periodic, >1 bursty).
+pub fn interarrival_cv(arrivals: &[f64]) -> f64 {
+    if arrivals.len() < 3 {
+        return 0.0;
+    }
+    let gaps: Vec<f64> = arrivals.windows(2).map(|w| w[1] - w[0]).collect();
+    let m = crate::util::stats::mean(&gaps);
+    if m == 0.0 {
+        return 0.0;
+    }
+    crate::util::stats::stddev(&gaps) / m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascending_and_sized() {
+        for p in [
+            ArrivalPattern::Poisson { rate_hz: 100.0 },
+            ArrivalPattern::Periodic { rate_hz: 30.0, jitter: 0.05 },
+            ArrivalPattern::Bursty { rate_hz: 50.0, burst_len: 8, burst_every_s: 0.5 },
+        ] {
+            let a = generate(p, 200, 1);
+            assert_eq!(a.len(), 200);
+            for w in a.windows(2) {
+                assert!(w[1] >= w[0], "{p:?} not sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_roughly_right() {
+        let a = generate(ArrivalPattern::Poisson { rate_hz: 200.0 }, 4000, 2);
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((150.0..260.0).contains(&rate), "{rate}");
+    }
+
+    #[test]
+    fn burstiness_ordering() {
+        let per = interarrival_cv(&generate(
+            ArrivalPattern::Periodic { rate_hz: 30.0, jitter: 0.02 },
+            1000,
+            3,
+        ));
+        let poi = interarrival_cv(&generate(ArrivalPattern::Poisson { rate_hz: 30.0 }, 1000, 3));
+        let bur = interarrival_cv(&generate(
+            ArrivalPattern::Bursty { rate_hz: 30.0, burst_len: 16, burst_every_s: 1.0 },
+            1000,
+            3,
+        ));
+        assert!(per < poi, "periodic {per} < poisson {poi}");
+        assert!(bur > poi, "bursty {bur} > poisson {poi}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate(ArrivalPattern::Poisson { rate_hz: 10.0 }, 50, 9);
+        let b = generate(ArrivalPattern::Poisson { rate_hz: 10.0 }, 50, 9);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,394 @@
+//! Property-based tests over the core invariants.
+//!
+//! proptest is not in the offline crate universe, so this file carries a
+//! small seeded-generator harness (`cases` runs a property over N random
+//! cases and reports the failing seed) — same spirit: random structured
+//! inputs, explicit invariants.
+
+use swapnet::config::{DeviceProfile, Processor};
+use swapnet::memsim::{MemSim, Space};
+use swapnet::model::{LayerInfo, ModelInfo};
+use swapnet::pipeline::{peak_resident_bytes, residual_objective, timeline, total_stall, BlockTimes};
+use swapnet::scheduler::{allocate_budgets, allocate_budgets_with_floors, ModelDemand};
+use swapnet::util::json::Json;
+use swapnet::util::rng::Rng;
+
+/// Run `prop` over `n` seeded cases; panic with the failing seed.
+fn cases<F: FnMut(&mut Rng)>(n: u64, mut prop: F) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xC0FFEE ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_times(rng: &mut Rng, max_n: usize) -> Vec<BlockTimes> {
+    let n = 1 + rng.below(max_n);
+    (0..n)
+        .map(|_| BlockTimes {
+            t_in: rng.range(0.0, 0.5),
+            t_ex: rng.range(0.0, 1.0),
+            t_out: rng.range(0.0, 0.2),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// pipeline timeline invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_timeline_lower_bounds() {
+    cases(300, |rng| {
+        let times = random_times(rng, 12);
+        let tl = timeline(&times);
+        let sum_ex: f64 = times.iter().map(|t| t.t_ex).sum();
+        let sum_in: f64 = times.iter().map(|t| t.t_in).sum();
+        // latency can never beat pure execution + first swap, nor the
+        // swap channel's serial capacity.
+        assert!(tl.latency() >= sum_ex - 1e-12);
+        assert!(tl.latency() >= times[0].t_in + sum_ex - 1e-9);
+        assert!(tl.latency() + 1e-9 >= sum_in, "channel capacity");
+        assert!(total_stall(&times) >= 0.0);
+    });
+}
+
+#[test]
+fn prop_timeline_monotone_in_costs() {
+    cases(200, |rng| {
+        let times = random_times(rng, 10);
+        let tl = timeline(&times).latency();
+        let mut worse = times.clone();
+        let i = rng.below(worse.len());
+        match rng.below(3) {
+            0 => worse[i].t_in += rng.range(0.0, 0.3),
+            1 => worse[i].t_ex += rng.range(0.0, 0.3),
+            _ => worse[i].t_out += rng.range(0.0, 0.3),
+        }
+        assert!(
+            timeline(&worse).latency() >= tl - 1e-12,
+            "increasing any component must not reduce latency"
+        );
+    });
+}
+
+#[test]
+fn prop_timeline_schedule_wellformed() {
+    cases(300, |rng| {
+        let times = random_times(rng, 12);
+        let tl = timeline(&times);
+        for i in 0..times.len() {
+            assert!(tl.swap_end[i] >= tl.swap_start[i]);
+            assert!(tl.exec_start[i] + 1e-12 >= tl.swap_end[i]);
+            assert!(tl.exec_end[i] >= tl.exec_start[i]);
+            if i > 0 {
+                assert!(tl.swap_start[i] + 1e-12 >= tl.swap_end[i - 1], "one swap channel");
+                assert!(tl.exec_start[i] + 1e-12 >= tl.exec_end[i - 1], "serial exec");
+            }
+            if i >= 2 {
+                assert!(
+                    tl.swap_start[i] + 1e-12 >= tl.exec_end[i - 2] + times[i - 2].t_out,
+                    "m=2 residency"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_residual_equals_timeline() {
+    cases(300, |rng| {
+        let times = random_times(rng, 12);
+        let a = residual_objective(&times);
+        let b = timeline(&times).latency();
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    });
+}
+
+#[test]
+fn prop_peak_residency_bounds() {
+    cases(300, |rng| {
+        let n = 1 + rng.below(10);
+        let sizes: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1_000_000).collect();
+        let peak = peak_resident_bytes(&sizes);
+        let max1 = *sizes.iter().max().unwrap();
+        let total: u64 = sizes.iter().sum();
+        assert!(peak >= max1);
+        assert!(peak <= total);
+        if n >= 2 {
+            // peak equals some adjacent pair
+            assert!(sizes.windows(2).any(|w| w[0] + w[1] == peak));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// model partitioning invariants
+// ---------------------------------------------------------------------
+
+fn random_model(rng: &mut Rng) -> ModelInfo {
+    let n = 3 + rng.below(40);
+    ModelInfo {
+        name: "rand".into(),
+        family: "rand".into(),
+        layers: (0..n)
+            .map(|i| LayerInfo {
+                name: format!("l{i}"),
+                kind: "conv".into(),
+                size_bytes: 1 + rng.next_u64() % 40_000_000,
+                depth: (rng.below(8)) as u32,
+                flops: rng.next_u64() % 2_000_000_000,
+                cut_after: rng.f64() < 0.8,
+            })
+            .collect(),
+        accuracy: 90.0,
+        processor: if rng.f64() < 0.5 { Processor::Cpu } else { Processor::Gpu },
+    }
+}
+
+#[test]
+fn prop_blocks_conserve_everything() {
+    cases(200, |rng| {
+        let m = random_model(rng);
+        let cuts = m.legal_cut_points();
+        if cuts.is_empty() {
+            return;
+        }
+        // random subset of legal cuts
+        let mut pts: Vec<usize> = cuts
+            .iter()
+            .copied()
+            .filter(|_| rng.f64() < 0.3)
+            .collect();
+        pts.sort_unstable();
+        pts.dedup();
+        let blocks = m.create_blocks(&pts).expect("legal cuts must work");
+        assert_eq!(blocks.len(), pts.len() + 1);
+        assert_eq!(blocks.iter().map(|b| b.size_bytes).sum::<u64>(), m.size_bytes());
+        assert_eq!(blocks.iter().map(|b| b.depth).sum::<u32>(), m.total_depth());
+        assert_eq!(blocks.iter().map(|b| b.flops).sum::<u64>(), m.total_flops());
+        assert_eq!(
+            blocks.iter().map(|b| b.num_layers()).sum::<usize>(),
+            m.layers.len()
+        );
+        // contiguity
+        for w in blocks.windows(2) {
+            assert_eq!(w[0].layer_hi, w[1].layer_lo);
+        }
+    });
+}
+
+#[test]
+fn prop_illegal_cuts_always_rejected() {
+    cases(200, |rng| {
+        let m = random_model(rng);
+        let illegal: Vec<usize> = (1..m.layers.len())
+            .filter(|&p| !m.layers[p - 1].cut_after)
+            .collect();
+        if illegal.is_empty() {
+            return;
+        }
+        let p = illegal[rng.below(illegal.len())];
+        assert!(m.create_blocks(&[p]).is_err());
+    });
+}
+
+// ---------------------------------------------------------------------
+// scheduler invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_budget_allocation_conserves_and_orders() {
+    cases(200, |rng| {
+        let n = 2 + rng.below(6);
+        let demands: Vec<ModelDemand> = (0..n)
+            .map(|i| ModelDemand {
+                name: format!("m{i}"),
+                mem_bytes: 10_000_000 + rng.next_u64() % 500_000_000,
+                latency_s: rng.range(0.05, 2.0),
+                urgency: rng.range(0.5, 3.0),
+            })
+            .collect();
+        let total_demand: u64 = demands.iter().map(|d| d.mem_bytes).sum();
+        let total = (total_demand as f64 * rng.range(0.3, 0.95)) as u64;
+        let alloc = allocate_budgets(&demands, total);
+        let sum: u64 = alloc.iter().sum();
+        assert!(sum <= total, "over-allocated {sum} > {total}");
+        assert!(sum as f64 > total as f64 * 0.98, "left too much on the table");
+        assert!(alloc.iter().all(|&a| a > 0));
+    });
+}
+
+#[test]
+fn prop_floors_always_respected_when_feasible() {
+    cases(200, |rng| {
+        let n = 2 + rng.below(5);
+        let demands: Vec<ModelDemand> = (0..n)
+            .map(|i| ModelDemand {
+                name: format!("m{i}"),
+                mem_bytes: 50_000_000 + rng.next_u64() % 400_000_000,
+                latency_s: rng.range(0.05, 2.0),
+                urgency: 1.0,
+            })
+            .collect();
+        let floors: Vec<u64> = demands
+            .iter()
+            .map(|d| (d.mem_bytes as f64 * rng.range(0.1, 0.5)) as u64)
+            .collect();
+        let floor_sum: u64 = floors.iter().sum();
+        let total = floor_sum + rng.next_u64() % 500_000_000;
+        let alloc = allocate_budgets_with_floors(&demands, &floors, total);
+        for (a, f) in alloc.iter().zip(&floors) {
+            assert!(a >= f, "floor violated: {a} < {f}");
+        }
+        assert!(alloc.iter().sum::<u64>() <= total + n as u64, "conservation");
+    });
+}
+
+// ---------------------------------------------------------------------
+// memory simulator invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_memsim_accounting_consistent() {
+    cases(150, |rng| {
+        let mut mem = MemSim::new(u64::MAX);
+        let mut live: Vec<(swapnet::memsim::AllocId, u64)> = Vec::new();
+        let mut expect_cur = 0u64;
+        let mut expect_peak = 0u64;
+        for _ in 0..200 {
+            if live.is_empty() || rng.f64() < 0.6 {
+                let sz = 1 + rng.next_u64() % 10_000_000;
+                let space = match rng.below(4) {
+                    0 => Space::Cpu,
+                    1 => Space::Gpu,
+                    2 => Space::Unified,
+                    _ => Space::PageCache,
+                };
+                let id = mem.alloc("t", space, sz);
+                live.push((id, sz));
+                expect_cur += sz;
+                expect_peak = expect_peak.max(expect_cur);
+            } else {
+                let i = rng.below(live.len());
+                let (id, sz) = live.swap_remove(i);
+                mem.free(id);
+                expect_cur -= sz;
+            }
+            assert_eq!(mem.current(), expect_cur);
+            assert_eq!(mem.peak(), expect_peak);
+        }
+        for (id, _) in live.drain(..) {
+            mem.free(id);
+        }
+        assert_eq!(mem.current(), 0);
+        assert_eq!(mem.live_allocs(), 0);
+    });
+}
+
+// ---------------------------------------------------------------------
+// JSON roundtrip
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.next_u64() % 1_000_000) as f64 / 8.0),
+            _ => Json::Str(format!("s{}", rng.next_u64() % 1000)),
+        };
+    }
+    match rng.below(6) {
+        0 => Json::Null,
+        1 => Json::Bool(true),
+        2 => Json::Num(-(rng.f64() * 1e6).round() / 16.0),
+        3 => Json::Str("αβ\"\\\n esc".into()),
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(5) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    cases(300, |rng| {
+        let v = random_json(rng, 4);
+        let s = v.to_string();
+        let v2 = Json::parse(&s).expect("serializer output must reparse");
+        assert_eq!(v, v2, "roundtrip mismatch for {s}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// swap-path invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_zero_copy_never_exceeds_block_size() {
+    use swapnet::model::BlockInfo;
+    use swapnet::storage::Storage;
+    use swapnet::swap::{SwapController, SwapMode};
+    cases(100, |rng| {
+        let prof = DeviceProfile::jetson_nx();
+        let mut st = Storage::new(256_000_000);
+        let mut mem = MemSim::new(u64::MAX);
+        let ctl = SwapController::new(SwapMode::ZeroCopy, "p");
+        let sz = 1_000_000 + rng.next_u64() % 200_000_000;
+        let b = BlockInfo {
+            index: 0,
+            layer_lo: 0,
+            layer_hi: 1,
+            size_bytes: sz,
+            depth: 1 + rng.below(100) as u32,
+            flops: 1,
+        };
+        let proc = if rng.f64() < 0.5 { Processor::Cpu } else { Processor::Gpu };
+        let rb = ctl.swap_in_sim(&b, rng.next_u64(), proc, &mut st, &mut mem, &prof);
+        assert_eq!(mem.current(), sz, "zero-copy = exactly one copy");
+        let rep = ctl.swap_out(rb, &mut mem, &prof);
+        assert_eq!(rep.freed_bytes, sz);
+        assert_eq!(mem.current(), 0);
+    });
+}
+
+#[test]
+fn prop_standard_path_at_least_doubles() {
+    use swapnet::model::BlockInfo;
+    use swapnet::storage::Storage;
+    use swapnet::swap::{SwapController, SwapMode};
+    cases(100, |rng| {
+        let prof = DeviceProfile::jetson_nx();
+        let mut st = Storage::new(1_000_000_000);
+        let mut mem = MemSim::new(u64::MAX);
+        let ctl = SwapController::new(SwapMode::Standard, "p");
+        let sz = 1_000_000 + rng.next_u64() % 100_000_000;
+        let b = BlockInfo {
+            index: 0,
+            layer_lo: 0,
+            layer_hi: 1,
+            size_bytes: sz,
+            depth: 4,
+            flops: 1,
+        };
+        let proc = if rng.f64() < 0.5 { Processor::Cpu } else { Processor::Gpu };
+        let factor = if proc == Processor::Gpu { 3 } else { 2 };
+        let _rb = ctl.swap_in_sim(&b, rng.next_u64(), proc, &mut st, &mut mem, &prof);
+        // page-cache copy is page-rounded; allow one page of slack.
+        assert!(
+            mem.current() + 4096 >= factor * sz,
+            "standard path must keep {factor} copies of {sz}, had {}",
+            mem.current()
+        );
+    });
+}
