@@ -1,11 +1,11 @@
 //! Micro-bench: assembly-by-reference vs dummy-model assembly (paper
 //! §5/§6.1 — one address reference costs 50-55 us on the Jetson; here we
 //! measure OUR real per-reference cost on the host plus the simulated
-//! device cost model, and the real PJRT literal-registration path).
+//! device cost model, via the engine's micro probes).
 
-use swapnet::assembly::{synthetic_skeleton, AssemblyController, AssemblyMode};
+use swapnet::assembly::{synthetic_skeleton, AssemblyMode};
 use swapnet::config::{DeviceProfile, MB};
-use swapnet::memsim::MemSim;
+use swapnet::engine::micro::assemble_once;
 use swapnet::model::BlockInfo;
 use swapnet::util::bench::bench;
 
@@ -27,15 +27,8 @@ fn main() {
     let sk = synthetic_skeleton(&b);
 
     // Simulated device costs (what the scheduler sees).
-    let mut mem = MemSim::new(u64::MAX);
-    let by_ref = AssemblyController::new(AssemblyMode::ByReference, "m")
-        .assemble(&b, &sk, b.size_bytes as usize, &mut mem, &prof)
-        .unwrap();
-    let mut mem2 = MemSim::new(u64::MAX);
-    let dummy_ctl = AssemblyController::new(AssemblyMode::DummyModel, "m");
-    let dummy = dummy_ctl
-        .assemble(&b, &sk, b.size_bytes as usize, &mut mem2, &prof)
-        .unwrap();
+    let by_ref = assemble_once(AssemblyMode::ByReference, &b, &sk, &prof).unwrap();
+    let dummy = assemble_once(AssemblyMode::DummyModel, &b, &sk, &prof).unwrap();
     println!(
         "device model: by-reference {:.2} ms vs dummy-model {:.1} ms ({}x) — paper: ~52 us/ref",
         by_ref.sim_latency_s * 1e3,
@@ -43,15 +36,13 @@ fn main() {
         (dummy.sim_latency_s / by_ref.sim_latency_s) as u64
     );
     assert!(dummy.sim_latency_s > 4.0 * by_ref.sim_latency_s);
+    assert_eq!(dummy.resident_bytes, 64 * MB, "dummy model = extra full copy");
+    assert_eq!(by_ref.resident_bytes, 0, "by-reference must not allocate");
 
     // Host-measured: the actual registration loop (offset bookkeeping).
     let r = bench("host: assemble 60-tensor skeleton by reference", 200, || {
-        let mut mem = MemSim::new(u64::MAX);
-        let ctl = AssemblyController::new(AssemblyMode::ByReference, "m");
-        let ab = ctl
-            .assemble(&b, &sk, b.size_bytes as usize, &mut mem, &prof)
-            .unwrap();
-        std::hint::black_box(ab.params.len());
+        let probe = assemble_once(AssemblyMode::ByReference, &b, &sk, &prof).unwrap();
+        std::hint::black_box(probe.params);
     });
     println!("{}", r.report());
     println!(

@@ -1,15 +1,15 @@
 //! Micro-bench: swap-in channels (paper §4). Compares the simulated
 //! standard path (page cache + CPU copy + GPU convert) against the
-//! zero-copy DMA path, and measures REAL file reads (buffered vs
-//! O_DIRECT) on this host's storage.
+//! zero-copy DMA path via the engine's micro probes, and measures REAL
+//! file reads (buffered vs O_DIRECT) on this host's storage.
 
 use std::io::Write;
 
 use swapnet::config::{DeviceProfile, Processor, MB};
-use swapnet::memsim::MemSim;
+use swapnet::engine::micro::swap_in_once;
 use swapnet::model::BlockInfo;
-use swapnet::storage::{direct_read, Storage};
-use swapnet::swap::{SwapController, SwapMode};
+use swapnet::storage::direct_read;
+use swapnet::swap::SwapMode;
 use swapnet::util::bench::bench;
 
 fn block(size_mb: u64) -> BlockInfo {
@@ -30,14 +30,11 @@ fn main() {
     // ---- simulated device costs --------------------------------------
     for proc in [Processor::Cpu, Processor::Gpu] {
         for (label, mode) in [("standard", SwapMode::Standard), ("zero-copy", SwapMode::ZeroCopy)] {
-            let mut st = Storage::new(512 * MB);
-            let mut mem = MemSim::new(8_000 * MB);
-            let ctl = SwapController::new(mode, "m");
-            let rb = ctl.swap_in_sim(&block(100), 1, proc, &mut st, &mut mem, &prof);
+            let probe = swap_in_once(mode, &block(100), proc, &prof);
             println!(
                 "device model: {proc} {label:<9} swap-in 100 MB: {:>7.1} ms, resident {:>4} MB",
-                rb.swap_in_s * 1e3,
-                mem.current() / MB
+                probe.swap_in_s * 1e3,
+                probe.resident_bytes / MB
             );
         }
     }

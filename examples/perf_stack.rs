@@ -2,17 +2,18 @@
 //! pass (EXPERIMENTS.md §Perf). Times each L3 hot path in isolation so
 //! before/after deltas are attributable:
 //!   1. partition lookup-table construction (registration/adaptation path)
-//!   2. run_snet_model (the per-inference simulated coordinator)
+//!   2. simulated inference through the Engine facade (per-request path)
 //!   3. real PJRT forward: literal creation vs execution split
 //!   4. serving throughput at overload (batcher + pipeline)
 //!
 //!     cargo run --release --example perf_stack
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use swapnet::config::{DeviceProfile, MB};
-use swapnet::coordinator::{run_snet_model, SnetConfig};
 use swapnet::delay::DelayModel;
+use swapnet::engine::Engine;
 use swapnet::model::artifacts::{artifacts_dir, ArtifactModel};
 use swapnet::model::families;
 use swapnet::runtime::{DirectRunner, Runtime};
@@ -39,12 +40,12 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", r.report());
 
-    println!("\n== 2. run_snet_model (simulated coordinator, per inference) ==");
+    println!("\n== 2. simulated inference via the Engine facade (per request) ==");
+    let engine = Engine::builder().device(prof.clone()).build();
     for m in [&resnet, &yolo] {
-        let r = bench(&format!("run_snet_model({})", m.name), 400, || {
-            std::hint::black_box(
-                run_snet_model(m, 140 * MB, &prof, &SnetConfig::default()).unwrap(),
-            );
+        let handle = engine.register_with_budget(m.clone(), 140 * MB).unwrap();
+        let r = bench(&format!("handle.infer_sim({})", m.name), 400, || {
+            std::hint::black_box(handle.infer_sim().unwrap());
         });
         println!("{}", r.report());
     }
@@ -56,7 +57,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== 3. real PJRT forward breakdown (tiny_cnn, batch 8) ==");
     let model = ArtifactModel::load(&artifacts_dir().join("tiny_cnn"))?;
-    let rt = Runtime::cpu()?;
+    let rt = Rc::new(Runtime::cpu()?);
     let runner = DirectRunner::new(&rt, model.clone(), 8);
     runner.warmup()?;
     let feat: usize = model.in_shape.iter().skip(1).product();
@@ -87,7 +88,7 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", r.report());
     if !model.units[0].hlo_ref_by_batch.is_empty() {
-        let resident = swapnet::runtime::ResidentModelRunner::new(&rt, model.clone(), 8)?;
+        let resident = swapnet::runtime::ResidentModelRunner::new(rt.clone(), model.clone(), 8)?;
         let r = bench("ResidentModelRunner::forward (device-resident)", 1500, || {
             std::hint::black_box(resident.forward(&x).unwrap());
         });
@@ -95,10 +96,11 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n== 4. serving throughput at overload ==");
+    let pjrt = Engine::builder().build_pjrt()?;
+    let handle = pjrt.register_artifact(model)?;
     let t0 = Instant::now();
     let rep = serve(
-        &rt,
-        &model,
+        &handle,
         &ServeConfig { rate_hz: 1e6, requests: 512, points: vec![2, 4], ..Default::default() },
     )?;
     println!(

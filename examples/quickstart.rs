@@ -1,33 +1,39 @@
-//! Quickstart: load the trained tiny_cnn artifact, run it whole, then run
-//! it as SwapNet blocks under a tight memory budget, and check that (a)
-//! the outputs agree bit-for-bit in structure and (b) the measured eval
-//! accuracy matches the training-time accuracy recorded by the AOT path.
+//! Quickstart: the `Engine` facade end to end.
+//!
+//! Build an engine over the real PJRT backend, register the trained
+//! tiny_cnn artifact (registration = the paper's offline phase: partition
+//! scheduling + executable compilation + skeleton setup), then:
+//!   (a) run whole-model inference through `handle.infer`,
+//!   (b) check measured eval accuracy against the AOT-recorded value,
+//!   (c) re-run as SwapNet blocks under a partition override and verify
+//!       the outputs agree bit-for-bit,
+//!   (d) read the unified simulated view of the same model.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Requires `make artifacts` to have run.
+//! Requires `make artifacts` to have run (and a real xla backend).
 
 use anyhow::{anyhow, Result};
+use swapnet::engine::Engine;
 use swapnet::model::artifacts::{artifacts_dir, ArtifactModel};
-use swapnet::pipeline::real::{run_partitioned, ExecStrategy};
-use swapnet::runtime::{DirectRunner, Runtime};
+use swapnet::util::table;
 
 fn main() -> Result<()> {
     let dir = artifacts_dir();
     let model = ArtifactModel::load(&dir.join("tiny_cnn"))?;
-    let rt = Runtime::cpu()?;
-    println!(
-        "loaded {} ({} units, {} params) on {}",
-        model.name,
-        model.units.len(),
-        swapnet::util::table::human_bytes(model.size_bytes),
-        rt.platform()
-    );
+    let recorded_acc = model.accuracy.unwrap_or(0.0);
 
-    // --- 1. whole-model inference (DInf-style) ------------------------
-    let runner = DirectRunner::new(&rt, model.clone(), 1);
-    let compile_s = runner.warmup()?;
-    println!("compiled {} unit executables in {:.2}s", model.units.len(), compile_s);
+    // --- 1. the facade: build, register, infer -------------------------
+    let engine = Engine::builder().build_pjrt()?;
+    let handle = engine.register_artifact(model)?;
+    println!(
+        "registered {} on the `{}` backend: {} block(s) at {:?} under a {} budget",
+        handle.name(),
+        engine.backend_name(),
+        handle.schedule().n_blocks,
+        handle.schedule().points,
+        table::human_bytes(handle.budget()),
+    );
 
     // --- 2. eval accuracy over the procedural test split ---------------
     let eval_x = std::fs::read(dir.join("eval/tiny_eval_x.bin"))?;
@@ -45,8 +51,10 @@ fn main() -> Result<()> {
 
     let mut hits = 0usize;
     let sample = 128.min(n);
+    let mut last_latency_s = 0.0;
     for i in 0..sample {
-        let out = runner.forward(&xs[i * feat..(i + 1) * feat])?;
+        let rep = handle.infer(&xs[i * feat..(i + 1) * feat])?;
+        let out = rep.output.ok_or_else(|| anyhow!("real backend must return output"))?;
         let pred = out
             .iter()
             .enumerate()
@@ -54,41 +62,53 @@ fn main() -> Result<()> {
             .map(|(k, _)| k as i32)
             .unwrap();
         hits += (pred == ys[i]) as usize;
+        last_latency_s = rep.latency_s;
     }
     let acc = hits as f64 / sample as f64;
     println!(
-        "eval accuracy over {sample} samples: {:.3} (AOT-recorded: {:.3})",
+        "eval accuracy over {sample} samples: {:.3} (AOT-recorded: {:.3}, last inference {})",
         acc,
-        model.accuracy.unwrap_or(0.0)
+        recorded_acc,
+        table::human_secs(last_latency_s)
     );
-    if (acc - model.accuracy.unwrap_or(0.0)).abs() > 0.08 {
+    if (acc - recorded_acc).abs() > 0.08 {
         return Err(anyhow!("accuracy mismatch vs training-time eval"));
     }
 
-    // --- 3. SwapNet blocks: partitioned + overlapped -------------------
+    // --- 3. SwapNet blocks: partition override, outputs must agree -----
     let x = &xs[0..feat];
-    let whole = runner.forward(x)?;
+    let whole = handle
+        .infer(x)?
+        .output
+        .ok_or_else(|| anyhow!("missing output"))?;
     for points in [vec![2, 4], vec![1, 2, 3, 4, 5]] {
-        let rep = run_partitioned(&rt, &model, 1, &points, ExecStrategy::Overlapped, x)?;
-        let max_diff = rep
-            .output
+        let rep = handle.infer_batch(x, 1, Some(&points))?;
+        let out = rep.output.as_deref().unwrap_or(&[]);
+        let max_diff = out
             .iter()
             .zip(&whole)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         println!(
-            "partition {:?}: {} blocks, latency {}, swap {} / exec {}, max |diff| = {:.2e}",
+            "partition {:?}: {} blocks, latency {}, max |diff| = {:.2e}",
             points,
-            rep.blocks.len(),
-            swapnet::util::table::human_secs(rep.latency_s),
-            swapnet::util::table::human_secs(rep.total_swap_s()),
-            swapnet::util::table::human_secs(rep.total_exec_s()),
+            rep.n_blocks,
+            table::human_secs(rep.latency_s),
             max_diff
         );
         if max_diff > 1e-4 {
             return Err(anyhow!("block-swapped output diverged from whole model"));
         }
     }
-    println!("quickstart OK: swapping is lossless and overlapped");
+
+    // --- 4. the unified report: simulated view of the same model -------
+    let sim = handle.infer_sim()?;
+    println!(
+        "simulated view ({} backend): latency {}, peak {}",
+        sim.backend,
+        table::human_secs(sim.latency_s),
+        table::human_bytes(sim.peak_bytes)
+    );
+    println!("quickstart OK: swapping is lossless behind one facade");
     Ok(())
 }

@@ -1,18 +1,19 @@
 //! Road-side unit scenario (paper Fig 12): five concurrent DNNs including
 //! model replicas (2x YOLOv3, 2x ResNet-101) for multi-camera streams —
 //! exercises Eq. 1 budget allocation with duplicated demands and the
-//! feasibility floor for VGG-19's unbalanced head.
+//! feasibility floor for VGG-19's unbalanced head, all via the `Engine`.
 //!
 //!     cargo run --release --example rsu_multi_dnn
 
 use swapnet::config::DeviceProfile;
-use swapnet::coordinator::{run_scenario, scenario_budgets, SnetConfig};
+use swapnet::engine::{scenario_budgets, Engine};
 use swapnet::util::table;
 use swapnet::workload;
 
 fn main() -> anyhow::Result<()> {
     let sc = workload::rsu();
     let prof = DeviceProfile::jetson_nx();
+    let engine = Engine::builder().device(prof.clone()).build();
 
     println!(
         "RSU fleet: {} models, {} total, budget {} (paper: 1360 MB into 1088 MB)",
@@ -34,9 +35,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     for method in ["DInf", "DCha", "TPrg", "SNet"] {
-        for r in run_scenario(&sc, method, &prof, &SnetConfig::default())
-            .map_err(anyhow::Error::msg)?
-        {
+        for r in engine.run_scenario(&sc, method)? {
             rows.push(r.row());
         }
     }

@@ -1,19 +1,19 @@
 //! Self-driving scenario (paper §8.2, Fig 11): four DNNs (VGG-19 +
 //! ResNet-101 on CPU, YOLOv3 + FCN on GPU) sharing the DNN budget left
 //! after the Table 1 non-DNN tasks, compared across DInf / DCha / TPrg /
-//! SNet on memory, latency and accuracy.
+//! SNet on memory, latency and accuracy — all through the `Engine` facade.
 //!
 //!     cargo run --release --example self_driving
 
 use swapnet::config::DeviceProfile;
-use swapnet::coordinator::{run_scenario, SnetConfig};
+use swapnet::engine::Engine;
 use swapnet::metrics::reduction_pct;
 use swapnet::util::table;
 use swapnet::workload;
 
 fn main() -> anyhow::Result<()> {
     let sc = workload::self_driving();
-    let prof = DeviceProfile::jetson_nx();
+    let engine = Engine::builder().device(DeviceProfile::jetson_nx()).build();
 
     println!("== Table 1: non-DNN memory allocation ==");
     for t in &sc.non_dnn {
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut reports = std::collections::HashMap::new();
     for m in methods {
-        let rs = run_scenario(&sc, m, &prof, &SnetConfig::default()).map_err(anyhow::Error::msg)?;
+        let rs = engine.run_scenario(&sc, m)?;
         for r in &rs {
             rows.push(r.row());
         }

@@ -1,19 +1,19 @@
 //! END-TO-END serving driver: the full three-layer stack on a real small
-//! workload.
+//! workload, driven through the `Engine` facade.
 //!
 //! Loads the tiny_cnn model that was REALLY trained at artifact-build
-//! time (loss curve in artifacts/train_log.json), serves a Poisson stream
-//! of batched requests through the SwapNet block pipeline on the PJRT CPU
-//! runtime (Pallas kernels inside the HLO), and reports throughput +
+//! time (loss curve in artifacts/train_log.json), registers it with a
+//! PJRT engine (offline compile), serves a Poisson stream of batched
+//! requests through the SwapNet block pipeline, and reports throughput +
 //! latency percentiles — plus the measured accuracy to prove the serving
 //! path is lossless. All layers compose: L1 Pallas kernels -> L2 jax
-//! units -> AOT HLO -> L3 rust swapping/batching/serving.
+//! units -> AOT HLO -> L3 rust engine/swapping/batching/serving.
 //!
 //!     cargo run --release --example serve_e2e
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use swapnet::engine::Engine;
 use swapnet::model::artifacts::{artifacts_dir, ArtifactModel};
-use swapnet::runtime::{DirectRunner, Runtime};
 use swapnet::server::{serve, ServeConfig};
 use swapnet::util::json::Json;
 use swapnet::util::table;
@@ -41,11 +41,10 @@ fn main() -> Result<()> {
     );
 
     let model = ArtifactModel::load(&dir.join("tiny_cnn"))?;
-    let rt = Runtime::cpu()?;
+    let engine = Engine::builder().build_pjrt()?;
+    let handle = engine.register_artifact(model)?;
 
     // ---- accuracy through the serving stack ---------------------------
-    let runner = DirectRunner::new(&rt, model.clone(), 1);
-    runner.warmup()?;
     let eval_x = std::fs::read(dir.join("eval/tiny_eval_x.bin"))?;
     let eval_y = std::fs::read(dir.join("eval/tiny_eval_y.bin"))?;
     let feat = 32 * 32 * 3;
@@ -60,7 +59,10 @@ fn main() -> Result<()> {
     let sample = 96usize;
     let mut hits = 0;
     for i in 0..sample {
-        let out = runner.forward(&xs[i * feat..(i + 1) * feat])?;
+        let out = handle
+            .infer(&xs[i * feat..(i + 1) * feat])?
+            .output
+            .ok_or_else(|| anyhow!("real backend must return output"))?;
         let pred = out.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0 as i32;
         hits += (pred == ys[i]) as usize;
     }
@@ -82,7 +84,7 @@ fn main() -> Result<()> {
             points,
             ..Default::default()
         };
-        let rep = serve(&rt, &model, &cfg)?;
+        let rep = serve(&handle, &cfg)?;
         println!(
             "  {label:<26} {:.0} req/s  batch {:.2}  p50 {:>9} p95 {:>9} p99 {:>9}",
             rep.throughput_rps,

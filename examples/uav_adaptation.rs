@@ -6,7 +6,7 @@
 //!     cargo run --release --example uav_adaptation
 
 use swapnet::config::DeviceProfile;
-use swapnet::coordinator::{run_scenario, run_snet_model, SnetConfig};
+use swapnet::engine::Engine;
 use swapnet::model::families;
 use swapnet::scheduler::adapt::AdaptiveScheduler;
 use swapnet::util::table;
@@ -14,6 +14,7 @@ use swapnet::workload;
 
 fn main() -> anyhow::Result<()> {
     let prof = DeviceProfile::jetson_nx();
+    let engine = Engine::builder().device(prof.clone()).build();
 
     // ---- Fig 13: UAV scenario --------------------------------------
     let sc = workload::uav();
@@ -24,9 +25,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut rows = Vec::new();
     for method in ["DInf", "DCha", "TPrg", "SNet"] {
-        for r in run_scenario(&sc, method, &prof, &SnetConfig::default())
-            .map_err(anyhow::Error::msg)?
-        {
+        for r in engine.run_scenario(&sc, method)? {
             rows.push(r.row());
         }
     }
@@ -38,9 +37,10 @@ fn main() -> anyhow::Result<()> {
     for (t, budget) in workload::fig18_budget_trace() {
         let s = ad.adapt(budget).map_err(anyhow::Error::msg)?;
         let (_, _, dt) = *ad.history.last().unwrap();
-        // Re-simulate the run under the new schedule to report latency.
-        let run = run_snet_model(&families::resnet101(), budget, &prof, &SnetConfig::default())
-            .map_err(anyhow::Error::msg)?;
+        // Re-simulate the run under the new budget to report latency.
+        let run = engine
+            .register_with_budget(families::resnet101(), budget)?
+            .infer_sim()?;
         println!(
             "  t={t:>5.1}s budget {:>8}: {} blocks {:?}  latency {}  (adaptation {:.1} ms, paper: 60-74 ms)",
             table::human_bytes(budget),

@@ -1,82 +1,22 @@
-//! Multi-DNN coordinator: runs a scenario's fleet under a chosen method
-//! and produces the Figs 11-13/15 report rows.
+//! Multi-DNN coordinator — the paper-experiment facade over the
+//! [`Engine`](crate::engine::Engine).
 //!
-//! Each DNN runs as an isolated worker (the paper pins each model's
-//! process to its own CPU cores, so models do not interfere); the
-//! coordinator allocates budgets (Eq. 1 + feasibility floors), schedules
-//! partitions, and drives the per-model simulated executions against
-//! fresh memory/storage simulators.
+//! Historically this module hand-wired its own `MemSim + Storage +
+//! SwapController + scheduler` stack per run; that wiring now lives in
+//! `engine/` (the [`SimBackend`](crate::engine::SimBackend) path), and
+//! the coordinator keeps the experiment-shaped entry points the figures
+//! and benches use: `run_scenario` (Figs 11-13/15), `run_snet_model`
+//! (one simulated SwapNet inference), and `sample_snet_latencies`
+//! (Fig 14 CDFs). Each DNN still runs against fresh, isolated simulators
+//! (the paper pins each model's process to its own CPU cores).
 
-use crate::assembly::{synthetic_skeleton, AssemblyController, AssemblyMode};
 use crate::config::DeviceProfile;
-use crate::delay::DelayModel;
-use crate::memsim::{MemSim, Space};
+use crate::engine::Engine;
 use crate::metrics::{LatencyRecorder, MethodReport};
 use crate::model::ModelInfo;
-use crate::pipeline::{timeline, BlockTimes, Timeline};
-use crate::scheduler::{self, Schedule};
-use crate::storage::Storage;
-use crate::swap::{SwapController, SwapMode};
-use crate::util::rng::Rng;
 use crate::workload::Scenario;
 
-/// Ablation / variant switches (Fig 15).
-#[derive(Debug, Clone, Copy)]
-pub struct SnetConfig {
-    /// false = w/o-uni-add: fall back to standard (copying) swap-in.
-    pub unified_addressing: bool,
-    /// false = w/o-mod-ske: fall back to dummy-model assembly.
-    pub skeleton_assembly: bool,
-    /// false = w/o-pat-sch: naive equal-memory partitioning.
-    pub partition_scheduling: bool,
-    /// Multiplicative run-to-run jitter std on I/O + exec (Fig 14 CDFs).
-    pub jitter: f64,
-    /// Execution slowdown from co-running non-DNN load (Fig 18: the
-    /// tasks that shrink the budget also steal CPU cycles).
-    pub cpu_load_factor: f64,
-    pub seed: u64,
-}
-
-impl Default for SnetConfig {
-    fn default() -> Self {
-        SnetConfig {
-            unified_addressing: true,
-            skeleton_assembly: true,
-            partition_scheduling: true,
-            jitter: 0.0,
-            cpu_load_factor: 1.0,
-            seed: 0,
-        }
-    }
-}
-
-/// Result of one simulated SwapNet model run.
-#[derive(Debug, Clone)]
-pub struct SnetRun {
-    pub schedule: Schedule,
-    pub peak_bytes: u64,
-    pub latency_s: f64,
-    pub timeline: Timeline,
-    pub block_times: Vec<BlockTimes>,
-}
-
-/// Naive equal-memory partition (the w/o-pat-sch ablation): walk layers
-/// accumulating ~s/n bytes per block, ignoring delay optimization.
-pub fn naive_equal_partition(model: &ModelInfo, n: usize) -> Vec<usize> {
-    let total = model.size_bytes();
-    let target = total / n as u64;
-    let cuts = model.legal_cut_points();
-    let mut points = Vec::new();
-    let mut acc = 0u64;
-    for (i, l) in model.layers.iter().enumerate() {
-        acc += l.size_bytes;
-        if points.len() + 1 < n && acc >= target && cuts.contains(&(i + 1)) {
-            points.push(i + 1);
-            acc = 0;
-        }
-    }
-    points
-}
+pub use crate::engine::{naive_equal_partition, scenario_budgets, SnetConfig, SnetRun};
 
 /// Simulate one SwapNet model execution (one inference pass over all
 /// blocks with the m=2 overlap), returning peak memory and latency.
@@ -86,102 +26,7 @@ pub fn run_snet_model(
     prof: &DeviceProfile,
     cfg: &SnetConfig,
 ) -> Result<SnetRun, String> {
-    let dm = DelayModel::from_profile(prof);
-    let schedule = if cfg.partition_scheduling {
-        scheduler::schedule_model(model, budget, &dm, prof)?
-    } else {
-        // w/o-pat-sch: equal split with the same block count
-        let base = scheduler::schedule_model(model, budget, &dm, prof)?;
-        let points = naive_equal_partition(model, base.n_blocks);
-        Schedule {
-            points,
-            ..base
-        }
-    };
-    let blocks = model
-        .create_blocks(&schedule.points)
-        .map_err(|e| format!("{}: {e}", model.name))?;
-
-    let swap_mode = if cfg.unified_addressing {
-        SwapMode::ZeroCopy
-    } else {
-        SwapMode::Standard
-    };
-    let asm_mode = if cfg.skeleton_assembly {
-        AssemblyMode::ByReference
-    } else {
-        AssemblyMode::DummyModel
-    };
-
-    let mut mem = MemSim::new(prof.mem_total);
-    // Page cache sized to the scenario headroom; the standard path will
-    // thrash it, the zero-copy path ignores it.
-    let mut storage = Storage::new(budget.max(64_000_000));
-    let swapper = SwapController::new(swap_mode, &model.name);
-    let assembler = AssemblyController::new(asm_mode, &model.name);
-    let mut rng = Rng::new(cfg.seed ^ model.name.len() as u64);
-
-    // Resident overhead (the delta reservation): all block skeletons +
-    // strategy tables + activations stay in memory for the whole run.
-    let skeletons: Vec<_> = blocks.iter().map(synthetic_skeleton).collect();
-    let sk_bytes: u64 = skeletons
-        .iter()
-        .map(|s| AssemblyController::skeleton_bytes(s))
-        .sum();
-    let tables_bytes = 600_000u64; // strategy table (paper §8.5: 0.5-3.4 MB)
-    let act_bytes = crate::baselines::activation_bytes(&model.family);
-    let _ovh = mem.alloc(&model.name, Space::Cpu, sk_bytes + tables_bytes + act_bytes);
-
-    let jit = |rng: &mut Rng, j: f64| 1.0 + j * rng.normal();
-
-    // Walk the m=2 schedule for memory accounting, collecting per-block
-    // times for the latency timeline.
-    let mut times = Vec::with_capacity(blocks.len());
-    let mut resident: std::collections::VecDeque<crate::swap::ResidentBlock> =
-        std::collections::VecDeque::new();
-    let mut assembled = Vec::new();
-    for (i, b) in blocks.iter().enumerate() {
-        let file = 0x5A00_0000 + i as u64;
-        let rb = swapper.swap_in_sim(b, file, model.processor, &mut storage, &mut mem, prof);
-        let ab = assembler
-            .assemble(b, &skeletons[i], b.size_bytes as usize, &mut mem, prof)
-            .map_err(|e| format!("{}: {e}", model.name))?;
-        let t_in = (rb.swap_in_s + ab.sim_latency_s) * jit(&mut rng, cfg.jitter);
-        let t_ex = dm.t_ex(b, model.processor) * cfg.cpu_load_factor * jit(&mut rng, cfg.jitter);
-        resident.push_back(rb);
-        assembled.push(Some(ab));
-        // m=2: once two blocks are resident, the oldest leaves before the
-        // next swap-in (its execution has finished in schedule order).
-        let mut t_out = dm.t_out(b);
-        if resident.len() > 1 {
-            let old = resident.pop_front().unwrap();
-            let idx = old.block.index;
-            let rep = swapper.swap_out(old, &mut mem, prof);
-            if let Some(ab_old) = assembled[idx].take() {
-                assembler.disassemble(ab_old, &mut mem);
-            }
-            t_out = rep.sim_latency_s;
-        }
-        times.push(BlockTimes { t_in, t_ex, t_out });
-    }
-    // drain the tail
-    while let Some(old) = resident.pop_front() {
-        let idx = old.block.index;
-        swapper.swap_out(old, &mut mem, prof);
-        if let Some(ab_old) = assembled[idx].take() {
-            assembler.disassemble(ab_old, &mut mem);
-        }
-    }
-
-    let tl = timeline(&times);
-    let peak = mem.tag_stat(&model.name).peak + mem.current_in(Space::PageCache);
-    Ok(SnetRun {
-        latency_s: tl.latency(),
-        timeline: tl,
-        peak_bytes: peak,
-        schedule,
-        block_times: times,
-    })
+    crate::engine::sim::simulate_model(model, budget, prof, cfg)
 }
 
 /// Run a full scenario under one method name ("DInf" | "TPrg" | "DCha" |
@@ -192,34 +37,8 @@ pub fn run_scenario(
     prof: &DeviceProfile,
     cfg: &SnetConfig,
 ) -> Result<Vec<MethodReport>, String> {
-    let budgets = scenario_budgets(scenario, prof);
-
-    scenario
-        .models
-        .iter()
-        .zip(&budgets)
-        .map(|(model, &budget)| -> Result<MethodReport, String> {
-            // Isolated simulators per model (CPU-affinity isolation).
-            let mut mem = MemSim::new(prof.mem_total);
-            let mut storage = Storage::new(2 * budget.max(64_000_000));
-            match method {
-                "DInf" => Ok(crate::baselines::dinf(model, prof, &mut storage, &mut mem)),
-                "TPrg" => Ok(crate::baselines::tprg(model, budget, prof, &mut storage, &mut mem)),
-                "DCha" => Ok(crate::baselines::dcha(model, prof, &mut storage, &mut mem, 2)),
-                "SNet" => {
-                    let run = run_snet_model(model, budget, prof, cfg)?;
-                    Ok(MethodReport {
-                        model: model.name.clone(),
-                        method: "SNet".into(),
-                        peak_bytes: run.peak_bytes,
-                        latency_s: run.latency_s,
-                        accuracy: model.accuracy,
-                    })
-                }
-                other => Err(format!("unknown method {other}")),
-            }
-        })
-        .collect()
+    let engine = Engine::builder().device(prof.clone()).config(*cfg).build();
+    engine.run_scenario(scenario, method).map_err(|e| format!("{e:#}"))
 }
 
 /// Sample SwapNet latency across jittered runs (Fig 14 CDFs).
@@ -231,39 +50,26 @@ pub fn sample_snet_latencies(
     jitter: f64,
     seed: u64,
 ) -> Result<LatencyRecorder, String> {
+    let cfg = SnetConfig { jitter, seed, ..Default::default() };
+    let engine = Engine::builder().device(prof.clone()).config(cfg).build();
+    let handle = engine
+        .register_with_budget(model.clone(), budget)
+        .map_err(|e| format!("{e:#}"))?;
     let mut rec = LatencyRecorder::new();
     for r in 0..runs {
-        let cfg = SnetConfig {
-            jitter,
-            seed: seed + r as u64,
-            ..Default::default()
-        };
-        rec.record(run_snet_model(model, budget, prof, &cfg)?.latency_s);
+        let rep = handle
+            .infer_sim_seeded(r as u64)
+            .map_err(|e| format!("{e:#}"))?;
+        rec.record(rep.latency_s);
     }
     Ok(rec)
-}
-
-/// Budget per model for a scenario: the explicit per-model override when
-/// the paper quotes one, otherwise Eq. 1 + feasibility floors.
-pub fn scenario_budgets(scenario: &Scenario, prof: &DeviceProfile) -> Vec<u64> {
-    if let Some(ov) = &scenario.budget_override {
-        return ov.clone();
-    }
-    let dm = DelayModel::from_profile(prof);
-    let demands: Vec<scheduler::ModelDemand> = scenario
-        .models
-        .iter()
-        .enumerate()
-        .map(|(i, m)| scheduler::ModelDemand::from_model(m, &dm, scenario.urgency[i]))
-        .collect();
-    let floors: Vec<u64> = scenario.models.iter().map(scheduler::minimal_budget).collect();
-    scheduler::allocate_budgets_with_floors(&demands, &floors, scenario.dnn_budget)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::MB;
+    use crate::delay::DelayModel;
     use crate::model::families;
     use crate::workload;
 
@@ -384,5 +190,22 @@ mod tests {
         let pts = naive_equal_partition(&m, 4);
         assert_eq!(pts.len(), 3);
         assert!(m.create_blocks(&pts).is_ok());
+    }
+
+    #[test]
+    fn facade_matches_engine_exactly() {
+        // The coordinator is a facade: its numbers must be bit-identical
+        // to driving the Engine directly.
+        let m = families::resnet101();
+        let p = prof();
+        let cfg = SnetConfig { jitter: 0.03, seed: 5, ..Default::default() };
+        let direct = run_snet_model(&m, 120 * MB, &p, &cfg).unwrap();
+        let engine = Engine::builder().device(p).config(cfg).build();
+        let rep = engine
+            .register_with_budget(m, 120 * MB)
+            .and_then(|h| h.infer_sim())
+            .unwrap();
+        assert_eq!(rep.latency_s, direct.latency_s);
+        assert_eq!(rep.peak_bytes, direct.peak_bytes);
     }
 }

@@ -1,0 +1,289 @@
+//! Execution backends behind the [`Engine`](super::Engine) facade.
+//!
+//! [`ExecBackend`] is the seam that makes simulated and real execution
+//! interchangeable for the first time: [`SimBackend`] drives the
+//! memsim/storage cost models (the coordinator's historical path) and
+//! [`PjrtBackend`] drives the PJRT runtime + `pipeline::real` (the
+//! serving path). Both return the same [`InferenceReport`], so schedulers,
+//! the server, and the metrics layer no longer care which world executed
+//! the request.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Error, Result};
+
+use crate::config::DeviceProfile;
+use crate::pipeline::real::{run_partitioned, ExecStrategy};
+use crate::pipeline::{peak_resident_bytes, timeline, BlockTimes, Timeline};
+use crate::runtime::{ResidentModelRunner, Runtime};
+use crate::scheduler::Schedule;
+
+use super::sim::{simulate_scheduled, SnetConfig};
+use super::RegisteredModel;
+
+/// One inference request as seen by a backend.
+#[derive(Debug, Clone, Copy)]
+pub struct InferRequest<'a> {
+    /// Host input activations (flattened batch). Simulated runs ignore
+    /// it; real runs require it.
+    pub input: Option<&'a [f32]>,
+    /// Request batch size (must be an AOT-compiled variant for real runs).
+    pub batch: usize,
+    /// Partition-point override; `None` uses the registered schedule.
+    pub points: Option<&'a [usize]>,
+    /// Added to the engine seed (jittered sampling, Fig 14).
+    pub seed_bump: u64,
+}
+
+impl Default for InferRequest<'_> {
+    fn default() -> Self {
+        InferRequest { input: None, batch: 1, points: None, seed_bump: 0 }
+    }
+}
+
+/// Unified outcome of one inference, simulated or real.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub model: String,
+    /// Which backend produced this report ("sim" | "pjrt").
+    pub backend: &'static str,
+    pub latency_s: f64,
+    /// Peak resident bytes (simulated accounting, or the parameter
+    /// residency bound of the real m=2 pipeline).
+    pub peak_bytes: u64,
+    /// m=2 pipeline timeline (simulated, or rebuilt from measured wall
+    /// times on the real path).
+    pub timeline: Timeline,
+    pub block_times: Vec<BlockTimes>,
+    pub n_blocks: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Output activations (real runs only).
+    pub output: Option<Vec<f32>>,
+}
+
+/// An execution substrate the [`Engine`](super::Engine) dispatches to.
+pub trait ExecBackend {
+    /// Backend name for reports ("sim" | "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Offline phase, called once at `Engine::register*` time: compile
+    /// executables, warm caches — the paper's registration step.
+    fn prepare(&mut self, id: usize, reg: &RegisteredModel) -> Result<()>;
+
+    /// Execute one inference request against a registered model.
+    fn run(
+        &mut self,
+        id: usize,
+        reg: &RegisteredModel,
+        prof: &DeviceProfile,
+        cfg: &SnetConfig,
+        req: &InferRequest<'_>,
+    ) -> Result<InferenceReport>;
+}
+
+/// Cost-model execution over the memsim/storage simulators. The delay
+/// model is per-inference and batch-agnostic, so `req.batch` does not
+/// change the simulated cost; `req.points` overrides the registered
+/// partition (and is validated against the model's legal cut points).
+#[derive(Debug, Default)]
+pub struct SimBackend;
+
+impl ExecBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn prepare(&mut self, _id: usize, _reg: &RegisteredModel) -> Result<()> {
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        _id: usize,
+        reg: &RegisteredModel,
+        prof: &DeviceProfile,
+        cfg: &SnetConfig,
+        req: &InferRequest<'_>,
+    ) -> Result<InferenceReport> {
+        match req.points {
+            None => sim_report(reg, prof, cfg, req.seed_bump),
+            Some(points) => {
+                // Honor the override: simulate under the caller's cuts
+                // (create_blocks rejects illegal ones downstream).
+                let schedule = Schedule {
+                    points: points.to_vec(),
+                    n_blocks: points.len() + 1,
+                    ..reg.schedule.clone()
+                };
+                let mut c = *cfg;
+                c.seed = cfg.seed.wrapping_add(req.seed_bump);
+                let run =
+                    simulate_scheduled(&reg.info, reg.budget, prof, &c, Some(&schedule))
+                        .map_err(Error::msg)?;
+                Ok(report_from_run(&reg.info.name, run))
+            }
+        }
+    }
+}
+
+/// Shared by [`SimBackend`] and `ModelHandle::infer_sim` (the simulated
+/// view stays available even on a PJRT engine).
+pub(crate) fn sim_report(
+    reg: &RegisteredModel,
+    prof: &DeviceProfile,
+    cfg: &SnetConfig,
+    seed_bump: u64,
+) -> Result<InferenceReport> {
+    let mut c = *cfg;
+    c.seed = cfg.seed.wrapping_add(seed_bump);
+    // Reuse the schedule fixed at registration (same cfg, so identical
+    // to re-planning — but without the per-request lookup-table search).
+    let run = simulate_scheduled(&reg.info, reg.budget, prof, &c, Some(&reg.schedule))
+        .map_err(Error::msg)?;
+    Ok(report_from_run(&reg.info.name, run))
+}
+
+fn report_from_run(model: &str, run: crate::engine::SnetRun) -> InferenceReport {
+    InferenceReport {
+        model: model.to_string(),
+        backend: "sim",
+        latency_s: run.latency_s,
+        peak_bytes: run.peak_bytes,
+        n_blocks: run.block_times.len(),
+        timeline: run.timeline,
+        block_times: run.block_times,
+        cache_hits: run.cache_hits,
+        cache_misses: run.cache_misses,
+        output: None,
+    }
+}
+
+/// Real execution over the PJRT runtime and the overlapped block pipeline.
+pub struct PjrtBackend {
+    rt: Rc<Runtime>,
+    /// Device-resident fast-path runners, keyed by (model id, batch) —
+    /// built lazily on first whole-model request, kept for the engine's
+    /// lifetime (weights stay uploaded between requests).
+    residents: HashMap<(usize, usize), ResidentModelRunner>,
+}
+
+impl PjrtBackend {
+    /// CPU PJRT client (the only real device in this environment).
+    pub fn cpu() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Rc::new(Runtime::cpu()?), residents: HashMap::new() })
+    }
+
+    pub fn runtime(&self) -> Rc<Runtime> {
+        self.rt.clone()
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Compile every (unit, batch) executable up front — model
+    /// registration is the paper's offline phase, requests never compile.
+    fn prepare(&mut self, id: usize, reg: &RegisteredModel) -> Result<()> {
+        let Some(art) = &reg.artifact else { return Ok(()) };
+        for &b in &art.batches {
+            for ui in 0..art.units.len() {
+                self.rt.load_hlo(&art.hlo_path(ui, b)?)?;
+            }
+        }
+        // When this model is scheduled for whole-model serving (no
+        // partition points) and the ref variants exist, also compile the
+        // ref executables and upload the weights now, so the first
+        // serving request hits a warm resident runner instead of paying
+        // a compile+upload stall on its critical path. Models scheduled
+        // for the swapped pipeline deliberately do NOT pin their weights
+        // on device — that is the whole point of the budget.
+        if reg.schedule.points.is_empty()
+            && !art.units.is_empty()
+            && !art.units[0].hlo_ref_by_batch.is_empty()
+        {
+            // Build all runners before publishing any: a half-failed
+            // registration must not leave stale runners behind under an
+            // id that the next successful registration would reuse.
+            let mut built = Vec::with_capacity(art.batches.len());
+            for &b in &art.batches {
+                built.push((b, ResidentModelRunner::new(self.rt.clone(), art.clone(), b)?));
+            }
+            for (b, runner) in built {
+                self.residents.insert((id, b), runner);
+            }
+        }
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        id: usize,
+        reg: &RegisteredModel,
+        _prof: &DeviceProfile,
+        _cfg: &SnetConfig,
+        req: &InferRequest<'_>,
+    ) -> Result<InferenceReport> {
+        let art = reg
+            .artifact
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: PJRT backend needs an artifact model", reg.info.name))?;
+        let input = req
+            .input
+            .ok_or_else(|| anyhow!("{}: real execution requires input activations", art.name))?;
+        let points = req.points.unwrap_or(&reg.schedule.points);
+
+        // Whole-model fast path: device-resident weights, on-device
+        // activation chaining (needs the non-tuple ref artifact variant).
+        let has_ref = art.units.first().is_some_and(|u| !u.hlo_ref_by_batch.is_empty());
+        if points.is_empty() && has_ref {
+            let key = (id, req.batch);
+            if !self.residents.contains_key(&key) {
+                let runner = ResidentModelRunner::new(self.rt.clone(), art.clone(), req.batch)?;
+                self.residents.insert(key, runner);
+            }
+            let runner = &self.residents[&key];
+            let t0 = Instant::now();
+            let output = runner.forward(input)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let times = vec![BlockTimes { t_in: 0.0, t_ex: dt, t_out: 0.0 }];
+            return Ok(InferenceReport {
+                model: art.name.clone(),
+                backend: "pjrt",
+                latency_s: dt,
+                peak_bytes: art.size_bytes,
+                timeline: timeline(&times),
+                block_times: times,
+                n_blocks: 1,
+                cache_hits: 0,
+                cache_misses: 0,
+                output: Some(output),
+            });
+        }
+
+        // Swapped path: the m=2 overlapped block pipeline, for real.
+        let rep = run_partitioned(&self.rt, art, req.batch, points, ExecStrategy::Overlapped, input)?;
+        let times: Vec<BlockTimes> = rep
+            .blocks
+            .iter()
+            .map(|b| BlockTimes { t_in: b.swap_s + b.assemble_s, t_ex: b.exec_s, t_out: 0.0 })
+            .collect();
+        let sizes: Vec<u64> = rep.blocks.iter().map(|b| b.bytes).collect();
+        Ok(InferenceReport {
+            model: art.name.clone(),
+            backend: "pjrt",
+            latency_s: rep.latency_s,
+            peak_bytes: peak_resident_bytes(&sizes),
+            timeline: timeline(&times),
+            n_blocks: times.len(),
+            block_times: times,
+            cache_hits: 0,
+            cache_misses: 0,
+            output: Some(rep.output),
+        })
+    }
+}

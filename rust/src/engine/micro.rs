@@ -1,0 +1,118 @@
+//! Micro-probe helpers for the swap/assembly substrates.
+//!
+//! The micro benches used to hand-wire `SwapController`/`MemSim` stacks;
+//! substrate construction is now an engine-internal detail, so they (and
+//! any other single-operation probe) go through these one-shot helpers,
+//! each of which runs against fresh, isolated simulators.
+
+use crate::assembly::{AssemblyController, AssemblyMode};
+use crate::config::{DeviceProfile, Processor, MB};
+use crate::model::artifacts::SkeletonEntry;
+use crate::model::BlockInfo;
+use crate::swap::{SwapController, SwapMode};
+
+use super::Substrate;
+
+/// Outcome of one simulated swap-in on fresh substrates.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapProbe {
+    pub swap_in_s: f64,
+    /// Total simulated bytes resident after the swap-in (all spaces —
+    /// page cache + CPU + GPU/unified copies).
+    pub resident_bytes: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Swap one block in through the chosen channel (paper §4) and report
+/// the cost-model latency and residency.
+pub fn swap_in_once(
+    mode: SwapMode,
+    block: &BlockInfo,
+    proc: Processor,
+    prof: &DeviceProfile,
+) -> SwapProbe {
+    let mut sub = Substrate::device(prof, 512 * MB);
+    let ctl = SwapController::new(mode, "micro");
+    let rb = ctl.swap_in_sim(block, 1, proc, &mut sub.storage, &mut sub.mem, prof);
+    SwapProbe {
+        swap_in_s: rb.swap_in_s,
+        resident_bytes: sub.mem.current(),
+        cache_hits: rb.cache_hits,
+        cache_misses: rb.cache_misses,
+    }
+}
+
+/// Outcome of one simulated block assembly on fresh substrates.
+#[derive(Debug, Clone, Copy)]
+pub struct AssemblyProbe {
+    pub sim_latency_s: f64,
+    /// Extra bytes the assembly itself left resident (the dummy-model
+    /// copy; 0 for assembly by reference).
+    pub resident_bytes: u64,
+    pub params: usize,
+}
+
+/// Assemble one block (paper §5) in the chosen mode and report the
+/// cost-model latency and any extra residency.
+pub fn assemble_once(
+    mode: AssemblyMode,
+    block: &BlockInfo,
+    skeleton: &[SkeletonEntry],
+    prof: &DeviceProfile,
+) -> Result<AssemblyProbe, String> {
+    let mut sub = Substrate::unbounded(0);
+    let ctl = AssemblyController::new(mode, "micro");
+    let ab = ctl.assemble(block, skeleton, block.size_bytes as usize, &mut sub.mem, prof)?;
+    Ok(AssemblyProbe {
+        sim_latency_s: ab.sim_latency_s,
+        resident_bytes: sub.mem.current(),
+        params: ab.params.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembly::synthetic_skeleton;
+
+    fn block(size_mb: u64, depth: u32) -> BlockInfo {
+        BlockInfo {
+            index: 0,
+            layer_lo: 0,
+            layer_hi: 4,
+            size_bytes: size_mb * MB,
+            depth,
+            flops: 0,
+        }
+    }
+
+    #[test]
+    fn zero_copy_probe_single_copy() {
+        let prof = DeviceProfile::jetson_nx();
+        let p = swap_in_once(SwapMode::ZeroCopy, &block(100, 16), Processor::Gpu, &prof);
+        assert_eq!(p.resident_bytes, 100 * MB);
+        assert_eq!(p.cache_misses, 0);
+    }
+
+    #[test]
+    fn standard_gpu_probe_triples() {
+        let prof = DeviceProfile::jetson_nx();
+        let p = swap_in_once(SwapMode::Standard, &block(100, 16), Processor::Gpu, &prof);
+        assert!(p.resident_bytes >= 3 * 100 * MB - MB, "{}", p.resident_bytes);
+        assert!(p.cache_misses > 0);
+    }
+
+    #[test]
+    fn assembly_probe_modes_differ() {
+        let prof = DeviceProfile::jetson_nx();
+        let b = block(64, 60);
+        let sk = synthetic_skeleton(&b);
+        let by_ref = assemble_once(AssemblyMode::ByReference, &b, &sk, &prof).unwrap();
+        let dummy = assemble_once(AssemblyMode::DummyModel, &b, &sk, &prof).unwrap();
+        assert_eq!(by_ref.resident_bytes, 0);
+        assert_eq!(dummy.resident_bytes, 64 * MB);
+        assert!(dummy.sim_latency_s > 4.0 * by_ref.sim_latency_s);
+        assert_eq!(by_ref.params, 60);
+    }
+}

@@ -1,0 +1,522 @@
+//! The `Engine` facade — SwapNet's public execution API.
+//!
+//! Every entry point (CLI, server, examples, benches) used to hand-wire
+//! its own `Storage + MemSim + DeviceProfile + SwapController + DelayModel
+//! + scheduler` stack, so the simulated path and the real PJRT path had
+//! diverged into parallel APIs. This module is the single middleware
+//! surface the paper presupposes: callers build an [`Engine`], register
+//! models against it (the offline phase: budget + partition scheduling +
+//! skeleton/executable setup), and fire requests at [`ModelHandle`]s.
+//!
+//! ```text
+//! Engine::builder()                 EngineBuilder: device profile,
+//!     .device(prof)                 memory budget, SnetConfig ablation
+//!     .memory_budget(bytes)         switches, seed
+//!     .build() / .build_pjrt()?     -> Engine (owns the substrates)
+//! engine.register(model)?          -> ModelHandle (schedules partitions)
+//! handle.infer(&input)? / handle.infer_sim()?
+//!                                   -> InferenceReport (latency, timeline,
+//!                                      peak bytes, cache stats)
+//! ```
+//!
+//! Under the facade, [`ExecBackend`] makes simulated and real execution
+//! interchangeable: [`SimBackend`] (memsim + delay model) and
+//! [`PjrtBackend`] (PJRT runtime + `pipeline::real`). Construction of the
+//! swap/memory substrates is an internal detail of this module — nothing
+//! outside `engine/` (and unit tests) builds a `SwapController` or
+//! `MemSim` directly anymore.
+
+pub mod baselines;
+pub mod micro;
+
+mod backend;
+pub(crate) mod sim;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Error, Result};
+
+pub use backend::{ExecBackend, InferRequest, InferenceReport, PjrtBackend, SimBackend};
+pub use sim::{naive_equal_partition, SnetConfig, SnetRun};
+
+use crate::config::{DeviceProfile, Processor};
+use crate::delay::DelayModel;
+use crate::memsim::MemSim;
+use crate::metrics::MethodReport;
+use crate::model::artifacts::ArtifactModel;
+use crate::model::ModelInfo;
+use crate::scheduler::{self, Schedule};
+use crate::storage::Storage;
+use crate::workload::Scenario;
+
+/// Fresh simulated substrates (memory accounting + block storage) for one
+/// isolated run. The engine is the only place these are constructed;
+/// lower layers (profiler, micro benches) obtain them through here.
+pub struct Substrate {
+    pub mem: MemSim,
+    pub storage: Storage,
+}
+
+impl Substrate {
+    /// Substrates sized to a device profile's physical memory.
+    pub fn device(prof: &DeviceProfile, cache_capacity: u64) -> Substrate {
+        Substrate { mem: MemSim::new(prof.mem_total), storage: Storage::new(cache_capacity) }
+    }
+
+    /// Unbounded memory (pure cost-model probes, no OOM accounting).
+    pub fn unbounded(cache_capacity: u64) -> Substrate {
+        Substrate { mem: MemSim::new(u64::MAX), storage: Storage::new(cache_capacity) }
+    }
+}
+
+/// A model registered with an [`Engine`]: its chain description, budget,
+/// partition schedule, and (for real execution) the AOT artifact.
+pub struct RegisteredModel {
+    pub info: ModelInfo,
+    pub budget: u64,
+    pub schedule: Schedule,
+    pub artifact: Option<ArtifactModel>,
+}
+
+struct EngineCore {
+    profile: DeviceProfile,
+    dm: DelayModel,
+    cfg: SnetConfig,
+    /// Default per-registration budget when none is given explicitly.
+    budget: Option<u64>,
+    backend: Box<dyn ExecBackend>,
+    models: Vec<RegisteredModel>,
+}
+
+/// Builder for [`Engine`]: device profile, memory budget, ablation
+/// switches ([`SnetConfig`]), seed, and the execution backend.
+pub struct EngineBuilder {
+    profile: DeviceProfile,
+    cfg: SnetConfig,
+    budget: Option<u64>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder {
+            profile: DeviceProfile::jetson_nx(),
+            cfg: SnetConfig::default(),
+            budget: None,
+        }
+    }
+
+    /// Target device profile (default: Jetson Xavier NX).
+    pub fn device(mut self, prof: DeviceProfile) -> EngineBuilder {
+        self.profile = prof;
+        self
+    }
+
+    /// Device profile by name ("nx" | "nano").
+    pub fn device_by_name(mut self, name: &str) -> Result<EngineBuilder> {
+        self.profile = DeviceProfile::by_name(name)
+            .ok_or_else(|| anyhow!("unknown device profile {name}"))?;
+        Ok(self)
+    }
+
+    /// Default memory budget (bytes) for models registered without an
+    /// explicit one. Unset = the device's physical memory.
+    pub fn memory_budget(mut self, bytes: u64) -> EngineBuilder {
+        self.budget = Some(bytes);
+        self
+    }
+
+    /// Ablation / variant switches (Fig 15) + jitter + seed.
+    pub fn config(mut self, cfg: SnetConfig) -> EngineBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Deterministic seed for jittered simulation.
+    pub fn seed(mut self, seed: u64) -> EngineBuilder {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Multiplicative run-to-run jitter std (Fig 14 CDFs).
+    pub fn jitter(mut self, jitter: f64) -> EngineBuilder {
+        self.cfg.jitter = jitter;
+        self
+    }
+
+    /// Build over the simulated backend (memsim + delay model).
+    pub fn build(self) -> Engine {
+        self.build_with(Box::new(SimBackend))
+    }
+
+    /// Build over the real PJRT backend (runtime + `pipeline::real`).
+    pub fn build_pjrt(self) -> Result<Engine> {
+        let backend = PjrtBackend::cpu()?;
+        Ok(self.build_with(Box::new(backend)))
+    }
+
+    /// Build over a caller-provided backend implementation.
+    pub fn build_with(self, backend: Box<dyn ExecBackend>) -> Engine {
+        let dm = DelayModel::from_profile(&self.profile);
+        Engine {
+            core: Rc::new(RefCell::new(EngineCore {
+                profile: self.profile,
+                dm,
+                cfg: self.cfg,
+                budget: self.budget,
+                backend,
+                models: Vec::new(),
+            })),
+        }
+    }
+}
+
+/// The unified execution facade. Owns the device profile, delay model,
+/// ablation config, backend, and every registered model.
+pub struct Engine {
+    core: Rc<RefCell<EngineCore>>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Register a model under the engine's default budget.
+    pub fn register(&self, model: ModelInfo) -> Result<ModelHandle> {
+        let budget = {
+            let core = self.core.borrow();
+            core.budget.unwrap_or(core.profile.mem_total)
+        };
+        self.register_with_budget(model, budget)
+    }
+
+    /// Register a model under an explicit memory budget (the offline
+    /// phase: partition scheduling + backend preparation happen here).
+    pub fn register_with_budget(&self, model: ModelInfo, budget: u64) -> Result<ModelHandle> {
+        self.register_inner(model, budget, None)
+    }
+
+    /// Register an AOT artifact model for real execution (its chain view
+    /// drives scheduling; executables are compiled now, not per request).
+    pub fn register_artifact(&self, artifact: ArtifactModel) -> Result<ModelHandle> {
+        let info = artifact.to_model_info(Processor::Cpu);
+        let budget = {
+            let core = self.core.borrow();
+            core.budget.unwrap_or(core.profile.mem_total)
+        };
+        self.register_inner(info, budget, Some(artifact))
+    }
+
+    /// Register a fleet under one total budget: Eq. 1 allocation with
+    /// feasibility floors, then per-model partition scheduling.
+    pub fn register_fleet(
+        &self,
+        models: &[ModelInfo],
+        urgency: &[f64],
+        total_budget: u64,
+    ) -> Result<Vec<ModelHandle>> {
+        let dm = self.core.borrow().dm.clone();
+        let budgets = fleet_budgets(models, urgency, &dm, total_budget);
+        models
+            .iter()
+            .zip(budgets)
+            .map(|(m, b)| self.register_with_budget(m.clone(), b))
+            .collect()
+    }
+
+    fn register_inner(
+        &self,
+        info: ModelInfo,
+        budget: u64,
+        artifact: Option<ArtifactModel>,
+    ) -> Result<ModelHandle> {
+        let core = &mut *self.core.borrow_mut();
+        let schedule = sim::plan(&info, budget, &core.dm, &core.profile, &core.cfg)
+            .map_err(Error::msg)?;
+        let id = core.models.len();
+        let reg = RegisteredModel { info, budget, schedule, artifact };
+        core.backend.prepare(id, &reg)?;
+        core.models.push(reg);
+        Ok(ModelHandle { core: self.core.clone(), id })
+    }
+
+    /// Run a whole scenario under one method name ("DInf" | "TPrg" |
+    /// "DCha" | "SNet"), one report row per model — Figs 11-13.
+    pub fn run_scenario(&self, scenario: &Scenario, method: &str) -> Result<Vec<MethodReport>> {
+        let prof = self.profile();
+        let budgets = scenario_budgets(scenario, &prof);
+        scenario
+            .models
+            .iter()
+            .zip(&budgets)
+            .map(|(model, &budget)| match method {
+                "SNet" => {
+                    // Throwaway simulation: scenario sweeps must not grow
+                    // the engine's registered-model state (or re-trigger
+                    // backend preparation) on every call.
+                    let cfg = self.config();
+                    let run = sim::simulate_model(model, budget, &prof, &cfg)
+                        .map_err(Error::msg)?;
+                    Ok(MethodReport {
+                        model: model.name.clone(),
+                        method: "SNet".into(),
+                        peak_bytes: run.peak_bytes,
+                        latency_s: run.latency_s,
+                        accuracy: model.accuracy,
+                    })
+                }
+                _ => self.run_baseline(model, budget, method),
+            })
+            .collect()
+    }
+
+    /// Run one comparison method (paper §8.2) against fresh, isolated
+    /// simulators — the per-model CPU-affinity isolation of the paper.
+    pub fn run_baseline(&self, model: &ModelInfo, budget: u64, method: &str) -> Result<MethodReport> {
+        let prof = self.profile();
+        let mut sub = Substrate::device(&prof, 2 * budget.max(64_000_000));
+        match method {
+            "DInf" => Ok(baselines::dinf(model, &prof, &mut sub.storage, &mut sub.mem)),
+            "TPrg" => Ok(baselines::tprg(model, budget, &prof, &mut sub.storage, &mut sub.mem)),
+            "DCha" => Ok(baselines::dcha(model, &prof, &mut sub.storage, &mut sub.mem, 2)),
+            other => Err(anyhow!("unknown method {other}")),
+        }
+    }
+
+    pub fn profile(&self) -> DeviceProfile {
+        self.core.borrow().profile.clone()
+    }
+
+    pub fn config(&self) -> SnetConfig {
+        self.core.borrow().cfg
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.core.borrow().backend.name()
+    }
+
+    /// Number of registered models.
+    pub fn registered(&self) -> usize {
+        self.core.borrow().models.len()
+    }
+}
+
+/// A registered model: the request-side handle of the facade.
+#[derive(Clone)]
+pub struct ModelHandle {
+    core: Rc<RefCell<EngineCore>>,
+    id: usize,
+}
+
+impl ModelHandle {
+    /// One inference with input activations at batch 1 on the engine's
+    /// backend (real output on PJRT; cost-model report on sim).
+    pub fn infer(&self, input: &[f32]) -> Result<InferenceReport> {
+        self.infer_request(&InferRequest { input: Some(input), ..Default::default() })
+    }
+
+    /// Batched inference with an optional partition-point override
+    /// (`None` = the registered schedule) — the server's entry point.
+    pub fn infer_batch(
+        &self,
+        input: &[f32],
+        batch: usize,
+        points: Option<&[usize]>,
+    ) -> Result<InferenceReport> {
+        self.infer_request(&InferRequest { input: Some(input), batch, points, seed_bump: 0 })
+    }
+
+    /// Simulated inference (always available, even on a PJRT engine):
+    /// the paper's cost-model view of this model under its budget.
+    pub fn infer_sim(&self) -> Result<InferenceReport> {
+        self.infer_sim_seeded(0)
+    }
+
+    /// Simulated inference with a seed offset (jittered sampling).
+    pub fn infer_sim_seeded(&self, seed_bump: u64) -> Result<InferenceReport> {
+        let core = self.core.borrow();
+        let reg = core
+            .models
+            .get(self.id)
+            .ok_or_else(|| anyhow!("stale model handle {}", self.id))?;
+        backend::sim_report(reg, &core.profile, &core.cfg, seed_bump)
+    }
+
+    /// Fully general request dispatch to the engine's backend.
+    pub fn infer_request(&self, req: &InferRequest<'_>) -> Result<InferenceReport> {
+        let core = &mut *self.core.borrow_mut();
+        let reg = core
+            .models
+            .get(self.id)
+            .ok_or_else(|| anyhow!("stale model handle {}", self.id))?;
+        core.backend.run(self.id, reg, &core.profile, &core.cfg, req)
+    }
+
+    pub fn name(&self) -> String {
+        self.core.borrow().models[self.id].info.name.clone()
+    }
+
+    /// The partition schedule fixed at registration time.
+    pub fn schedule(&self) -> Schedule {
+        self.core.borrow().models[self.id].schedule.clone()
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.core.borrow().models[self.id].budget
+    }
+
+    pub fn has_artifact(&self) -> bool {
+        self.core.borrow().models[self.id].artifact.is_some()
+    }
+
+    /// AOT-compiled batch variants (1 for purely simulated models).
+    pub fn batches(&self) -> Vec<usize> {
+        let core = self.core.borrow();
+        match &core.models[self.id].artifact {
+            Some(a) if !a.batches.is_empty() => a.batches.clone(),
+            _ => vec![1],
+        }
+    }
+
+    /// Flattened per-sample input feature count (0 for simulated models).
+    pub fn input_features(&self) -> usize {
+        let core = self.core.borrow();
+        match &core.models[self.id].artifact {
+            Some(a) => a.in_shape.iter().skip(1).product(),
+            None => 0,
+        }
+    }
+}
+
+/// Eq. 1 budget allocation with feasibility floors for a model fleet
+/// (missing urgencies default to 1).
+fn fleet_budgets(models: &[ModelInfo], urgency: &[f64], dm: &DelayModel, total: u64) -> Vec<u64> {
+    let demands: Vec<scheduler::ModelDemand> = models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            scheduler::ModelDemand::from_model(m, dm, urgency.get(i).copied().unwrap_or(1.0))
+        })
+        .collect();
+    let floors: Vec<u64> = models.iter().map(scheduler::minimal_budget).collect();
+    scheduler::allocate_budgets_with_floors(&demands, &floors, total)
+}
+
+/// Budget per model for a scenario: the explicit per-model override when
+/// the paper quotes one, otherwise Eq. 1 + feasibility floors.
+pub fn scenario_budgets(scenario: &Scenario, prof: &DeviceProfile) -> Vec<u64> {
+    if let Some(ov) = &scenario.budget_override {
+        return ov.clone();
+    }
+    let dm = DelayModel::from_profile(prof);
+    fleet_budgets(&scenario.models, &scenario.urgency, &dm, scenario.dnn_budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+    use crate::model::families;
+    use crate::workload;
+
+    #[test]
+    fn builder_defaults_to_nx_sim() {
+        let engine = Engine::builder().build();
+        assert_eq!(engine.profile().name, "jetson-nx");
+        assert_eq!(engine.backend_name(), "sim");
+        assert_eq!(engine.registered(), 0);
+    }
+
+    #[test]
+    fn register_schedules_and_infers_within_budget() {
+        let engine = Engine::builder().build();
+        let budget = 120 * MB;
+        let h = engine.register_with_budget(families::resnet101(), budget).unwrap();
+        assert!(h.schedule().n_blocks >= 3);
+        let rep = h.infer_sim().unwrap();
+        assert_eq!(rep.backend, "sim");
+        assert!(rep.peak_bytes <= budget, "{} > {budget}", rep.peak_bytes);
+        assert!(rep.latency_s > 0.0);
+        assert_eq!(rep.n_blocks, rep.block_times.len());
+        assert!(rep.output.is_none());
+    }
+
+    #[test]
+    fn default_budget_is_whole_device() {
+        let engine = Engine::builder().build();
+        let h = engine.register(families::resnet101()).unwrap();
+        assert_eq!(h.schedule().n_blocks, 1, "8 GB fits the whole model");
+        let h2 = Engine::builder()
+            .memory_budget(120 * MB)
+            .build()
+            .register(families::resnet101())
+            .unwrap();
+        assert!(h2.schedule().n_blocks > 1);
+    }
+
+    #[test]
+    fn infeasible_budget_is_a_clean_error() {
+        let engine = Engine::builder().build();
+        assert!(engine.register_with_budget(families::vgg19(), 50 * MB).is_err());
+    }
+
+    #[test]
+    fn fleet_registration_respects_total_budget() {
+        let engine = Engine::builder().build();
+        let models = vec![families::resnet101(), families::yolov3()];
+        let handles = engine.register_fleet(&models, &[1.0, 1.0], 500 * MB).unwrap();
+        assert_eq!(handles.len(), 2);
+        let peak_sum: u64 = handles.iter().map(|h| h.schedule().peak_bytes).sum();
+        assert!(peak_sum <= 500 * MB);
+    }
+
+    #[test]
+    fn scenario_methods_produce_rows() {
+        let engine = Engine::builder().build();
+        let sc = workload::uav();
+        for method in ["DInf", "TPrg", "DCha", "SNet"] {
+            let rows = engine.run_scenario(&sc, method).unwrap();
+            assert_eq!(rows.len(), sc.models.len(), "{method}");
+            for r in &rows {
+                assert!(r.peak_bytes > 0 && r.latency_s > 0.0, "{method} {r:?}");
+            }
+        }
+        assert!(engine.run_scenario(&sc, "NoSuch").is_err());
+    }
+
+    #[test]
+    fn seeded_sim_varies_with_jitter() {
+        let engine = Engine::builder().jitter(0.05).seed(7).build();
+        let h = engine.register_with_budget(families::resnet101(), 120 * MB).unwrap();
+        let a = h.infer_sim_seeded(0).unwrap().latency_s;
+        let b = h.infer_sim_seeded(1).unwrap().latency_s;
+        assert_ne!(a, b, "seed bump must change jittered latency");
+        let a2 = h.infer_sim_seeded(0).unwrap().latency_s;
+        assert_eq!(a, a2, "same seed must reproduce");
+    }
+
+    #[test]
+    fn sim_backend_ignores_input_and_reports() {
+        let engine = Engine::builder().memory_budget(120 * MB).build();
+        let h = engine.register(families::resnet101()).unwrap();
+        let rep = h.infer(&[]).unwrap();
+        assert!(rep.latency_s > 0.0);
+        assert_eq!(rep.model, "resnet101");
+    }
+
+    #[test]
+    fn substrate_factories() {
+        let prof = DeviceProfile::jetson_nx();
+        let sub = Substrate::device(&prof, 64 * MB);
+        assert_eq!(sub.mem.total(), prof.mem_total);
+        let unb = Substrate::unbounded(0);
+        assert_eq!(unb.mem.total(), u64::MAX);
+    }
+}

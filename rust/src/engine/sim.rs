@@ -1,0 +1,221 @@
+//! Simulated SwapNet execution — the cost-model path behind
+//! [`SimBackend`](crate::engine::SimBackend).
+//!
+//! This is the paper-faithful per-inference simulation (one pipelined
+//! pass over all blocks with the m=2 overlap) against fresh memory and
+//! storage simulators. It used to live in `coordinator::run_snet_model`;
+//! the coordinator now re-exports thin wrappers and the [`Engine`]
+//! (crate::engine::Engine) routes every simulated inference through here,
+//! so the sim and real backends share one scheduling/report surface.
+
+use crate::assembly::{synthetic_skeleton, AssemblyController, AssemblyMode};
+use crate::config::DeviceProfile;
+use crate::delay::DelayModel;
+use crate::memsim::{MemSim, Space};
+use crate::model::ModelInfo;
+use crate::pipeline::{timeline, BlockTimes, Timeline};
+use crate::scheduler::{self, Schedule};
+use crate::storage::Storage;
+use crate::swap::{SwapController, SwapMode};
+use crate::util::rng::Rng;
+
+/// Ablation / variant switches (Fig 15).
+#[derive(Debug, Clone, Copy)]
+pub struct SnetConfig {
+    /// false = w/o-uni-add: fall back to standard (copying) swap-in.
+    pub unified_addressing: bool,
+    /// false = w/o-mod-ske: fall back to dummy-model assembly.
+    pub skeleton_assembly: bool,
+    /// false = w/o-pat-sch: naive equal-memory partitioning.
+    pub partition_scheduling: bool,
+    /// Multiplicative run-to-run jitter std on I/O + exec (Fig 14 CDFs).
+    pub jitter: f64,
+    /// Execution slowdown from co-running non-DNN load (Fig 18: the
+    /// tasks that shrink the budget also steal CPU cycles).
+    pub cpu_load_factor: f64,
+    pub seed: u64,
+}
+
+impl Default for SnetConfig {
+    fn default() -> Self {
+        SnetConfig {
+            unified_addressing: true,
+            skeleton_assembly: true,
+            partition_scheduling: true,
+            jitter: 0.0,
+            cpu_load_factor: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of one simulated SwapNet model run.
+#[derive(Debug, Clone)]
+pub struct SnetRun {
+    pub schedule: Schedule,
+    pub peak_bytes: u64,
+    pub latency_s: f64,
+    pub timeline: Timeline,
+    pub block_times: Vec<BlockTimes>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Naive equal-memory partition (the w/o-pat-sch ablation): walk layers
+/// accumulating ~s/n bytes per block, ignoring delay optimization.
+pub fn naive_equal_partition(model: &ModelInfo, n: usize) -> Vec<usize> {
+    let total = model.size_bytes();
+    let target = total / n as u64;
+    let cuts = model.legal_cut_points();
+    let mut points = Vec::new();
+    let mut acc = 0u64;
+    for (i, l) in model.layers.iter().enumerate() {
+        acc += l.size_bytes;
+        if points.len() + 1 < n && acc >= target && cuts.contains(&(i + 1)) {
+            points.push(i + 1);
+            acc = 0;
+        }
+    }
+    points
+}
+
+/// Partition plan for one model under one budget, honoring the
+/// w/o-pat-sch ablation switch. Registration and simulation both go
+/// through this, so a handle's reported schedule always matches the run.
+pub(crate) fn plan(
+    model: &ModelInfo,
+    budget: u64,
+    dm: &DelayModel,
+    prof: &DeviceProfile,
+    cfg: &SnetConfig,
+) -> Result<Schedule, String> {
+    if cfg.partition_scheduling {
+        scheduler::schedule_model(model, budget, dm, prof)
+    } else {
+        // w/o-pat-sch: equal split with the same block count
+        let base = scheduler::schedule_model(model, budget, dm, prof)?;
+        let points = naive_equal_partition(model, base.n_blocks);
+        Ok(Schedule { points, ..base })
+    }
+}
+
+/// Simulate one SwapNet model execution (one inference pass over all
+/// blocks with the m=2 overlap), returning peak memory and latency.
+/// Plans the partition schedule from scratch — callers that already
+/// scheduled at registration time use [`simulate_scheduled`].
+pub(crate) fn simulate_model(
+    model: &ModelInfo,
+    budget: u64,
+    prof: &DeviceProfile,
+    cfg: &SnetConfig,
+) -> Result<SnetRun, String> {
+    simulate_scheduled(model, budget, prof, cfg, None)
+}
+
+/// Simulate with an optional pre-computed schedule (the engine passes
+/// the one fixed at registration, skipping a full lookup-table search
+/// per inference; `None` re-plans, which is what the coordinator's
+/// one-shot entry points do).
+pub(crate) fn simulate_scheduled(
+    model: &ModelInfo,
+    budget: u64,
+    prof: &DeviceProfile,
+    cfg: &SnetConfig,
+    schedule: Option<&Schedule>,
+) -> Result<SnetRun, String> {
+    let dm = DelayModel::from_profile(prof);
+    let schedule = match schedule {
+        Some(s) => s.clone(),
+        None => plan(model, budget, &dm, prof, cfg)?,
+    };
+    let blocks = model
+        .create_blocks(&schedule.points)
+        .map_err(|e| format!("{}: {e}", model.name))?;
+
+    let swap_mode = if cfg.unified_addressing {
+        SwapMode::ZeroCopy
+    } else {
+        SwapMode::Standard
+    };
+    let asm_mode = if cfg.skeleton_assembly {
+        AssemblyMode::ByReference
+    } else {
+        AssemblyMode::DummyModel
+    };
+
+    let mut mem = MemSim::new(prof.mem_total);
+    // Page cache sized to the scenario headroom; the standard path will
+    // thrash it, the zero-copy path ignores it.
+    let mut storage = Storage::new(budget.max(64_000_000));
+    let swapper = SwapController::new(swap_mode, &model.name);
+    let assembler = AssemblyController::new(asm_mode, &model.name);
+    let mut rng = Rng::new(cfg.seed ^ model.name.len() as u64);
+
+    // Resident overhead (the delta reservation): all block skeletons +
+    // strategy tables + activations stay in memory for the whole run.
+    let skeletons: Vec<_> = blocks.iter().map(synthetic_skeleton).collect();
+    let sk_bytes: u64 = skeletons
+        .iter()
+        .map(|s| AssemblyController::skeleton_bytes(s))
+        .sum();
+    let tables_bytes = 600_000u64; // strategy table (paper §8.5: 0.5-3.4 MB)
+    let act_bytes = crate::engine::baselines::activation_bytes(&model.family);
+    let _ovh = mem.alloc(&model.name, Space::Cpu, sk_bytes + tables_bytes + act_bytes);
+
+    let jit = |rng: &mut Rng, j: f64| 1.0 + j * rng.normal();
+
+    // Walk the m=2 schedule for memory accounting, collecting per-block
+    // times for the latency timeline.
+    let mut times = Vec::with_capacity(blocks.len());
+    let mut cache_hits = 0u64;
+    let mut cache_misses = 0u64;
+    let mut resident: std::collections::VecDeque<crate::swap::ResidentBlock> =
+        std::collections::VecDeque::new();
+    let mut assembled = Vec::new();
+    for (i, b) in blocks.iter().enumerate() {
+        let file = 0x5A00_0000 + i as u64;
+        let rb = swapper.swap_in_sim(b, file, model.processor, &mut storage, &mut mem, prof);
+        let ab = assembler
+            .assemble(b, &skeletons[i], b.size_bytes as usize, &mut mem, prof)
+            .map_err(|e| format!("{}: {e}", model.name))?;
+        let t_in = (rb.swap_in_s + ab.sim_latency_s) * jit(&mut rng, cfg.jitter);
+        let t_ex = dm.t_ex(b, model.processor) * cfg.cpu_load_factor * jit(&mut rng, cfg.jitter);
+        cache_hits += rb.cache_hits;
+        cache_misses += rb.cache_misses;
+        resident.push_back(rb);
+        assembled.push(Some(ab));
+        // m=2: once two blocks are resident, the oldest leaves before the
+        // next swap-in (its execution has finished in schedule order).
+        let mut t_out = dm.t_out(b);
+        if resident.len() > 1 {
+            let old = resident.pop_front().unwrap();
+            let idx = old.block.index;
+            let rep = swapper.swap_out(old, &mut mem, prof);
+            if let Some(ab_old) = assembled[idx].take() {
+                assembler.disassemble(ab_old, &mut mem);
+            }
+            t_out = rep.sim_latency_s;
+        }
+        times.push(BlockTimes { t_in, t_ex, t_out });
+    }
+    // drain the tail
+    while let Some(old) = resident.pop_front() {
+        let idx = old.block.index;
+        swapper.swap_out(old, &mut mem, prof);
+        if let Some(ab_old) = assembled[idx].take() {
+            assembler.disassemble(ab_old, &mut mem);
+        }
+    }
+
+    let tl = timeline(&times);
+    let peak = mem.tag_stat(&model.name).peak + mem.current_in(Space::PageCache);
+    Ok(SnetRun {
+        latency_s: tl.latency(),
+        timeline: tl,
+        peak_bytes: peak,
+        schedule,
+        block_times: times,
+        cache_hits,
+        cache_misses,
+    })
+}

@@ -4,12 +4,22 @@
 //! AI Devices Beyond the Memory Budget* (IEEE TMC 2024) as a three-layer
 //! Rust + JAX + Pallas stack. See DESIGN.md for the architecture and
 //! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! The public API is the [`engine`] facade: build an [`Engine`], register
+//! models, fire requests at [`ModelHandle`]s, and read the unified
+//! [`InferenceReport`] — the simulated and real PJRT execution paths are
+//! interchangeable [`engine::ExecBackend`] implementations behind it. The
+//! remaining modules are the substrates the engine composes (swap,
+//! memsim, storage, scheduler, pipeline, runtime, metrics) plus the
+//! paper-experiment surfaces (`coordinator`, `workload`, `power`).
+
+#![forbid(unsafe_code)]
 
 pub mod assembly;
-pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod delay;
+pub mod engine;
 pub mod memsim;
 pub mod metrics;
 pub mod model;
@@ -22,3 +32,7 @@ pub mod storage;
 pub mod swap;
 pub mod util;
 pub mod workload;
+
+// Back-compat path: the comparison methods moved under the engine.
+pub use engine::baselines;
+pub use engine::{Engine, EngineBuilder, InferenceReport, ModelHandle};

@@ -1,4 +1,4 @@
-//! SwapNet CLI — the L3 coordinator entrypoint.
+//! SwapNet CLI — the L3 entrypoint over the `Engine` facade.
 //!
 //! Subcommands map to the paper's experiments:
 //!   scenario   run a multi-DNN scenario under a method (Figs 11-13)
@@ -11,51 +11,263 @@
 //!   table1     non-DNN memory trace (Table 1)
 //!   table2     model info table (Table 2)
 //!
-//! (clap is not in the offline crate universe; a small hand-rolled parser
-//! covers the `--key value` grammar.)
+//! (clap is not in the offline crate universe; the hand-rolled parser
+//! covers the `--key value` grammar with per-subcommand specs, so unknown
+//! flags, missing values, and malformed numbers are hard errors and every
+//! subcommand answers `--help`.)
 
 use std::collections::HashMap;
+use std::fmt::Display;
+use std::str::FromStr;
 
 use anyhow::{anyhow, Result};
 
 use swapnet::config::{DeviceProfile, MB};
-use swapnet::coordinator::{run_scenario, run_snet_model, SnetConfig};
 use swapnet::delay::{profiler, DelayModel};
+use swapnet::engine::{scenario_budgets, Engine};
 use swapnet::model::{artifacts, families};
 use swapnet::scheduler::{self, adapt::AdaptiveScheduler, partition};
 use swapnet::util::table;
 use swapnet::workload;
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
+/// One `--flag` a subcommand accepts. `metavar == ""` marks a boolean
+/// switch (none exist today, but the grammar supports it).
+struct FlagSpec {
+    name: &'static str,
+    metavar: &'static str,
+    help: &'static str,
+}
+
+struct CmdSpec {
+    name: &'static str,
+    about: &'static str,
+    flags: &'static [FlagSpec],
+}
+
+const DEVICE_FLAG: FlagSpec = FlagSpec {
+    name: "device",
+    metavar: "NAME",
+    help: "device profile: nx | nano (default nx)",
+};
+
+const COMMANDS: &[CmdSpec] = &[
+    CmdSpec {
+        name: "scenario",
+        about: "run a multi-DNN scenario under one or all methods (Figs 11-13)",
+        flags: &[
+            FlagSpec {
+                name: "name",
+                metavar: "SCENARIO",
+                help: "self-driving | rsu | uav (default self-driving)",
+            },
+            FlagSpec {
+                name: "method",
+                metavar: "METHOD",
+                help: "DInf | DCha | TPrg | SNet (default: all four)",
+            },
+            DEVICE_FLAG,
+        ],
+    },
+    CmdSpec {
+        name: "ablation",
+        about: "intermediate system versions on the self-driving fleet (Fig 15)",
+        flags: &[DEVICE_FLAG],
+    },
+    CmdSpec {
+        name: "profile",
+        about: "recover delay coefficients by regression (Fig 9)",
+        flags: &[DEVICE_FLAG],
+    },
+    CmdSpec {
+        name: "partition",
+        about: "build + prune a partition lookup table (Table 3)",
+        flags: &[
+            FlagSpec {
+                name: "model",
+                metavar: "NAME",
+                help: "model family (default resnet101)",
+            },
+            FlagSpec {
+                name: "budget-mb",
+                metavar: "MB",
+                help: "memory budget in MB (default 102)",
+            },
+            FlagSpec { name: "blocks", metavar: "N", help: "block count n (default 3)" },
+            DEVICE_FLAG,
+        ],
+    },
+    CmdSpec {
+        name: "adapt",
+        about: "dynamic-budget adaptation trace for ResNet-101 (Fig 18)",
+        flags: &[DEVICE_FLAG],
+    },
+    CmdSpec {
+        name: "serve",
+        about: "serve Poisson requests against an AOT artifact over PJRT",
+        flags: &[
+            FlagSpec {
+                name: "model",
+                metavar: "NAME",
+                help: "artifact model directory (default tiny_cnn)",
+            },
+            FlagSpec {
+                name: "rate",
+                metavar: "HZ",
+                help: "mean request arrival rate (default 100)",
+            },
+            FlagSpec {
+                name: "requests",
+                metavar: "N",
+                help: "total requests to serve (default 200)",
+            },
+            FlagSpec {
+                name: "points",
+                metavar: "P1,P2,..",
+                help: "partition points override (default: registration schedule)",
+            },
+            FlagSpec {
+                name: "linger",
+                metavar: "S",
+                help: "batcher linger window in seconds (default 0.02)",
+            },
+        ],
+    },
+    CmdSpec {
+        name: "overhead",
+        about: "SwapNet memory + power overhead (Fig 19)",
+        flags: &[DEVICE_FLAG],
+    },
+    CmdSpec { name: "table1", about: "non-DNN memory allocation (Table 1)", flags: &[] },
+    CmdSpec {
+        name: "table2",
+        about: "layer table of one model family (Table 2)",
+        flags: &[FlagSpec {
+            name: "model",
+            metavar: "NAME",
+            help: "model family (default resnet101)",
+        }],
+    },
+];
+
+fn cmd_spec(name: &str) -> Option<&'static CmdSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+/// Parse `--key value` flags against a subcommand spec. Unknown flags,
+/// missing required values, and positional arguments are hard errors
+/// (no more silently storing "true" for a forgotten value).
+fn parse_flags(spec: &CmdSpec, args: &[String]) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                i += 1;
-                args[i].clone()
-            } else {
-                "true".to_string()
-            };
-            out.insert(key.to_string(), val);
+        let arg = &args[i];
+        let key = arg.strip_prefix("--").ok_or_else(|| {
+            anyhow!(
+                "unexpected argument `{arg}` (flags are --key value; \
+                 see `swapnet {} --help`)",
+                spec.name
+            )
+        })?;
+        if key == "help" {
+            out.insert("help".to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
+        let flag = spec.flags.iter().find(|f| f.name == key).ok_or_else(|| {
+            anyhow!("unknown flag --{key} for `{}` (see `swapnet {} --help`)", spec.name, spec.name)
+        })?;
+        if flag.metavar.is_empty() {
+            out.insert(key.to_string(), "true".to_string());
+        } else {
+            let val = args
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .ok_or_else(|| anyhow!("flag --{key} requires a value <{}>", flag.metavar))?;
+            out.insert(key.to_string(), val.clone());
+            i += 1;
         }
         i += 1;
     }
-    out
+    Ok(out)
 }
 
-fn device(flags: &HashMap<String, String>) -> DeviceProfile {
+/// Typed flag lookup: absent -> default, malformed -> error.
+fn parsed<T: FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
+where
+    T::Err: Display,
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(s) => s.parse::<T>().map_err(|e| anyhow!("--{key} `{s}`: {e}")),
+    }
+}
+
+fn parse_points(flags: &HashMap<String, String>) -> Result<Vec<usize>> {
+    match flags.get("points") {
+        None => Ok(vec![]),
+        Some(s) => s
+            .split(',')
+            .filter(|x| !x.trim().is_empty())
+            .map(|x| {
+                x.trim()
+                    .parse::<usize>()
+                    .map_err(|e| anyhow!("--points `{x}`: {e}"))
+            })
+            .collect(),
+    }
+}
+
+fn print_cmd_help(spec: &CmdSpec) {
+    println!("swapnet {} — {}", spec.name, spec.about);
+    println!("usage: swapnet {} [flags]", spec.name);
+    if spec.flags.is_empty() {
+        println!("  (no flags)");
+    } else {
+        println!("flags:");
+        for f in spec.flags {
+            let lhs = if f.metavar.is_empty() {
+                format!("--{}", f.name)
+            } else {
+                format!("--{} <{}>", f.name, f.metavar)
+            };
+            println!("  {lhs:<24} {}", f.help);
+        }
+    }
+    println!("  {:<24} show this help", "--help");
+}
+
+fn print_usage() {
+    println!("swapnet — DNN inference beyond the memory budget (TMC'24 reproduction)");
+    println!("usage: swapnet <subcommand> [--flags]\n");
+    println!("subcommands:");
+    for c in COMMANDS {
+        println!("  {:<10} {}", c.name, c.about);
+    }
+    println!("\n`swapnet <subcommand> --help` lists that subcommand's flags.");
+}
+
+fn device(flags: &HashMap<String, String>) -> Result<DeviceProfile> {
     let name = flags.get("device").map(String::as_str).unwrap_or("nx");
-    DeviceProfile::by_name(name).unwrap_or_else(|| {
-        eprintln!("unknown device {name}, using jetson-nx");
-        DeviceProfile::jetson_nx()
-    })
+    DeviceProfile::by_name(name)
+        .ok_or_else(|| anyhow!("unknown device `{name}` (expected nx | nano)"))
 }
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
-    let flags = parse_flags(&argv[argv.len().min(1)..]);
+    if matches!(cmd, "help" | "--help" | "-h") {
+        print_usage();
+        return Ok(());
+    }
+    let Some(spec) = cmd_spec(cmd) else {
+        print_usage();
+        return Err(anyhow!("unknown subcommand `{cmd}`"));
+    };
+    let flags = parse_flags(spec, &argv[1..])?;
+    if flags.contains_key("help") {
+        print_cmd_help(spec);
+        return Ok(());
+    }
 
     match cmd {
         "scenario" => cmd_scenario(&flags),
@@ -67,21 +279,14 @@ fn main() -> Result<()> {
         "overhead" => cmd_overhead(&flags),
         "table1" => cmd_table1(),
         "table2" => cmd_table2(&flags),
-        _ => {
-            println!(
-                "swapnet — DNN inference beyond the memory budget (TMC'24 reproduction)\n\
-                 usage: swapnet <scenario|ablation|profile|partition|adapt|serve|overhead|table1|table2> [--flags]\n\
-                 see README.md for examples"
-            );
-            Ok(())
-        }
+        _ => unreachable!("cmd_spec covered {cmd}"),
     }
 }
 
 fn cmd_scenario(flags: &HashMap<String, String>) -> Result<()> {
     let name = flags.get("name").map(String::as_str).unwrap_or("self-driving");
     let sc = workload::by_name(name).ok_or_else(|| anyhow!("unknown scenario {name}"))?;
-    let prof = device(flags);
+    let prof = device(flags)?;
     let methods: Vec<&str> = flags
         .get("method")
         .map(|m| vec![m.as_str()])
@@ -94,9 +299,10 @@ fn cmd_scenario(flags: &HashMap<String, String>) -> Result<()> {
         table::human_bytes(sc.dnn_budget),
         sc.pressure()
     );
+    let engine = Engine::builder().device(prof).build();
     let mut rows = Vec::new();
     for m in methods {
-        for r in run_scenario(&sc, m, &prof, &SnetConfig::default()).map_err(|e| anyhow!(e))? {
+        for r in engine.run_scenario(&sc, m)? {
             rows.push(r.row());
         }
     }
@@ -105,7 +311,8 @@ fn cmd_scenario(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_ablation(flags: &HashMap<String, String>) -> Result<()> {
-    let prof = device(flags);
+    use swapnet::engine::SnetConfig;
+    let prof = device(flags)?;
     let sc = workload::self_driving();
     let variants: [(&str, SnetConfig); 4] = [
         ("SNet (full)", SnetConfig::default()),
@@ -114,10 +321,11 @@ fn cmd_ablation(flags: &HashMap<String, String>) -> Result<()> {
         ("w/o-pat-sch", SnetConfig { partition_scheduling: false, ..Default::default() }),
     ];
     let mut rows = Vec::new();
-    let budgets = swapnet::coordinator::scenario_budgets(&sc, &prof);
+    let budgets = scenario_budgets(&sc, &prof);
     for (label, cfg) in variants {
+        let engine = Engine::builder().device(prof.clone()).config(cfg).build();
         for (model, &budget) in sc.models.iter().zip(&budgets) {
-            let run = run_snet_model(model, budget, &prof, &cfg).map_err(|e| anyhow!(e))?;
+            let run = engine.register_with_budget(model.clone(), budget)?.infer_sim()?;
             rows.push(vec![
                 label.to_string(),
                 model.name.clone(),
@@ -131,7 +339,7 @@ fn cmd_ablation(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
-    let prof = device(flags);
+    let prof = device(flags)?;
     let sweep = profiler::measure_sweep(&prof, 300, 0.03, 42);
     let fit = profiler::fit(&sweep);
     println!("device {}: fitted coefficients (Fig 9)", prof.name);
@@ -160,10 +368,10 @@ fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     let model_name = flags.get("model").map(String::as_str).unwrap_or("resnet101");
-    let budget_mb: u64 = flags.get("budget-mb").and_then(|s| s.parse().ok()).unwrap_or(102);
-    let n: usize = flags.get("blocks").and_then(|s| s.parse().ok()).unwrap_or(3);
+    let budget_mb: u64 = parsed(flags, "budget-mb", 102)?;
+    let n: usize = parsed(flags, "blocks", 3)?;
     let model = families::by_name(model_name).ok_or_else(|| anyhow!("unknown model"))?;
-    let prof = device(flags);
+    let prof = device(flags)?;
     let dm = DelayModel::from_profile(&prof);
     let t = partition::build_lookup_table(&model, n, &dm);
     println!(
@@ -217,7 +425,7 @@ fn row_of(r: &partition::Row, usable: u64) -> Vec<String> {
 }
 
 fn cmd_adapt(flags: &HashMap<String, String>) -> Result<()> {
-    let prof = device(flags);
+    let prof = device(flags)?;
     let mut ad = AdaptiveScheduler::register(families::resnet101(), &prof, 6);
     println!("Fig 18: runtime adaptation of ResNet-101 partitioning");
     for (t, budget) in workload::fig18_budget_trace() {
@@ -239,17 +447,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let dir = artifacts::artifacts_dir();
     let model_name = flags.get("model").map(String::as_str).unwrap_or("tiny_cnn");
     let model = artifacts::ArtifactModel::load(&dir.join(model_name))?;
-    let rt = swapnet::runtime::Runtime::cpu()?;
+    let engine = Engine::builder().build_pjrt()?;
+    let handle = engine.register_artifact(model)?;
     let cfg = swapnet::server::ServeConfig {
-        rate_hz: flags.get("rate").and_then(|s| s.parse().ok()).unwrap_or(100.0),
-        requests: flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(200),
-        points: flags
-            .get("points")
-            .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
-            .unwrap_or_default(),
+        rate_hz: parsed(flags, "rate", 100.0)?,
+        requests: parsed(flags, "requests", 200)?,
+        linger_s: parsed(flags, "linger", 0.02)?,
+        points: parse_points(flags)?,
         ..Default::default()
     };
-    let rep = swapnet::server::serve(&rt, &model, &cfg)?;
+    let rep = swapnet::server::serve(&handle, &cfg)?;
     println!(
         "served {} requests in {:.2}s wall: {:.1} req/s, batch avg {:.2}, latency p50 {} p95 {} p99 {}",
         rep.served,
@@ -264,7 +471,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_overhead(flags: &HashMap<String, String>) -> Result<()> {
-    let prof = device(flags);
+    let prof = device(flags)?;
     println!("Fig 19a: SwapNet memory overhead per model");
     let mut rows = Vec::new();
     for m in workload::self_driving().models {
@@ -297,7 +504,8 @@ fn cmd_overhead(flags: &HashMap<String, String>) -> Result<()> {
 
     println!("\nFig 19b: power (W) — SNet vs DInf on {}", prof.name);
     let m = families::resnet101();
-    let run = run_snet_model(&m, 120 * MB, &prof, &SnetConfig::default()).map_err(|e| anyhow!(e))?;
+    let engine = Engine::builder().device(prof.clone()).build();
+    let run = engine.register_with_budget(m.clone(), 120 * MB)?.infer_sim()?;
     let tr = swapnet::power::trace_for_timeline(&run.timeline, m.processor, &prof, 0.005, 0.2);
     let dinf_tl = swapnet::pipeline::timeline(&[swapnet::pipeline::BlockTimes {
         t_in: 0.0,

@@ -175,11 +175,14 @@ pub fn literal_f32(shape: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
         .map_err(|e| anyhow!("literal: {e:?}"))
 }
 
-/// f32 literal from a slice of values.
+/// f32 literal from a slice of values (safe little-endian serialization;
+/// the crate forbids `unsafe`, and XLA literals are LE on every target).
 pub fn literal_from_f32s(shape: &[usize], vals: &[f32]) -> Result<xla::Literal> {
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4) };
-    literal_f32(shape, bytes)
+    let mut bytes = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    literal_f32(shape, &bytes)
 }
 
 /// Read an f32 literal back into a Vec.
@@ -256,19 +259,21 @@ impl<'rt> DirectRunner<'rt> {
 /// Serving fast path (§Perf): parameters uploaded to device buffers ONCE
 /// (the swap-in cost), activations chained on-device between units (no
 /// host round trips), non-tuple ref artifacts. This is what a resident
-/// (non-swapped) model uses between swap events.
-pub struct ResidentModelRunner<'rt> {
-    pub rt: &'rt Runtime,
+/// (non-swapped) model uses between swap events. Owns a shared handle to
+/// the (thread-confined) runtime so the engine's PJRT backend can keep
+/// runners cached across requests.
+pub struct ResidentModelRunner {
+    pub rt: Rc<Runtime>,
     pub model: ArtifactModel,
     pub batch: usize,
     exes: Vec<Rc<xla::PjRtLoadedExecutable>>,
     param_bufs: Vec<Vec<xla::PjRtBuffer>>,
 }
 
-impl<'rt> ResidentModelRunner<'rt> {
+impl ResidentModelRunner {
     /// Compile all unit executables (ref variant preferred) and upload
     /// every unit's parameters to the device.
-    pub fn new(rt: &'rt Runtime, model: ArtifactModel, batch: usize) -> Result<Self> {
+    pub fn new(rt: Rc<Runtime>, model: ArtifactModel, batch: usize) -> Result<Self> {
         use crate::model::artifacts::KernelImpl;
         let mut exes = Vec::with_capacity(model.units.len());
         let mut param_bufs = Vec::with_capacity(model.units.len());
@@ -375,11 +380,11 @@ mod tests {
             eprintln!("skipping: artifacts lack ref variants (re-run make artifacts)");
             return;
         }
-        let rt = Runtime::cpu().unwrap();
+        let rt = Rc::new(Runtime::cpu().unwrap());
         let n: usize = model.in_shape.iter().skip(1).product();
         let x: Vec<f32> = (0..n).map(|i| (i % 89) as f32 / 89.0).collect();
         let direct = DirectRunner::new(&rt, model.clone(), 1).forward(&x).unwrap();
-        let resident = ResidentModelRunner::new(&rt, model, 1).unwrap();
+        let resident = ResidentModelRunner::new(rt.clone(), model, 1).unwrap();
         let fast = resident.forward(&x).unwrap();
         assert_eq!(fast.len(), direct.len());
         for (a, b) in fast.iter().zip(&direct) {

@@ -1,21 +1,21 @@
-//! Request serving over the real PJRT runtime (the end-to-end driver).
+//! Request serving over the [`Engine`](crate::engine::Engine) facade.
 //!
 //! A Poisson request stream hits a dynamic batcher (batch up to the
 //! largest AOT-compiled batch variant, with a short linger window); each
-//! batch runs through the SwapNet block pipeline on the artifact model.
-//! Because the PJRT handles are thread-confined, the server is a
+//! batch is dispatched through the model's [`ModelHandle`] — the same
+//! scheduling/metrics code serves the real PJRT backend (block pipeline
+//! or device-resident fast path) and the simulated backend (cost-model
+//! latencies on a virtual clock). Executable compilation happened at
+//! `Engine::register*` time, so requests never compile.
+//!
+//! Because the PJRT handles are thread-confined, serving is a
 //! single-threaded event loop over pre-materialized arrival times — the
 //! block swap I/O still overlaps execution inside `pipeline::real`.
 
-use std::collections::HashMap;
-use std::time::Instant;
-
 use anyhow::Result;
 
+use crate::engine::ModelHandle;
 use crate::metrics::LatencyRecorder;
-use crate::model::artifacts::ArtifactModel;
-use crate::pipeline::real::{run_partitioned, ExecStrategy};
-use crate::runtime::{ResidentModelRunner, Runtime};
 use crate::util::rng::Rng;
 
 /// Serving configuration.
@@ -27,7 +27,8 @@ pub struct ServeConfig {
     pub requests: usize,
     /// Batcher linger window (s): wait up to this long to fill a batch.
     pub linger_s: f64,
-    /// Block partition points (unit indices) for the pipeline.
+    /// Partition-point override for the block pipeline; empty = the
+    /// schedule fixed at registration time.
     pub points: Vec<usize>,
     pub seed: u64,
 }
@@ -56,8 +57,8 @@ pub struct ServeReport {
     pub mean_batch: f64,
 }
 
-/// Serve `cfg.requests` synthetic requests against an artifact model.
-pub fn serve(rt: &Runtime, model: &ArtifactModel, cfg: &ServeConfig) -> Result<ServeReport> {
+/// Serve `cfg.requests` synthetic requests against a registered model.
+pub fn serve(handle: &ModelHandle, cfg: &ServeConfig) -> Result<ServeReport> {
     let mut rng = Rng::new(cfg.seed);
     // Pre-materialize Poisson arrivals.
     let mut arrivals = Vec::with_capacity(cfg.requests);
@@ -66,26 +67,12 @@ pub fn serve(rt: &Runtime, model: &ArtifactModel, cfg: &ServeConfig) -> Result<S
         t += rng.exp(cfg.rate_hz);
         arrivals.push(t);
     }
-    let feat: usize = model.in_shape.iter().skip(1).product();
-    let mut batch_sizes: Vec<usize> = model.batches.clone();
+    let feat = handle.input_features();
+    let mut batch_sizes = handle.batches();
     batch_sizes.sort_unstable();
     let max_batch = batch_sizes.last().copied().unwrap_or(1);
-
-    // Warm the executable cache for every batch variant (registration).
-    for &b in &batch_sizes {
-        for ui in 0..model.units.len() {
-            rt.load_hlo(&model.hlo_path(ui, b)?)?;
-        }
-    }
-    // §Perf fast path for whole-model serving: resident runners keep the
-    // weights on-device and chain activations without host round trips
-    // (only possible when the ref artifact variants exist).
-    let mut residents: HashMap<usize, ResidentModelRunner> = HashMap::new();
-    if cfg.points.is_empty() && !model.units[0].hlo_ref_by_batch.is_empty() {
-        for &b in &batch_sizes {
-            residents.insert(b, ResidentModelRunner::new(rt, model.clone(), b)?);
-        }
-    }
+    let points_override =
+        if cfg.points.is_empty() { None } else { Some(cfg.points.as_slice()) };
 
     let mut latency = LatencyRecorder::new();
     let mut clock = 0.0f64; // virtual serving clock (s)
@@ -116,19 +103,13 @@ pub fn serve(rt: &Runtime, model: &ArtifactModel, cfg: &ServeConfig) -> Result<S
         let take = b.min(want);
         let batch_start = arrivals[next + take - 1].max(clock);
 
-        // Build the batch input (synthetic but deterministic features).
+        // Build the batch input (synthetic but deterministic features;
+        // empty for simulated models, which have no real activations).
         let mut input = vec![0.0f32; feat * b];
         for (k, slot) in input.iter_mut().enumerate() {
             *slot = ((k + next * 13) % 89) as f32 / 89.0;
         }
-        let exec_s = if let Some(rr) = residents.get(&b) {
-            let t = Instant::now();
-            rr.forward(&input)?;
-            t.elapsed().as_secs_f64()
-        } else {
-            run_partitioned(rt, model, b, &cfg.points, ExecStrategy::Overlapped, &input)?
-                .latency_s
-        };
+        let exec_s = handle.infer_batch(&input, b, points_override)?.latency_s;
         let done = batch_start + exec_s;
         for i in next..next + take {
             latency.record(done - arrivals[i]);
@@ -153,24 +134,41 @@ pub fn serve(rt: &Runtime, model: &ArtifactModel, cfg: &ServeConfig) -> Result<S
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::MB;
+    use crate::engine::Engine;
     use crate::model::artifacts::{artifacts_dir, ArtifactModel};
+    use crate::model::families;
 
-    fn tiny() -> Option<ArtifactModel> {
+    /// Engine + registered tiny_cnn, or None when artifacts / the real
+    /// PJRT backend are unavailable in this environment.
+    fn tiny_handle() -> Option<ModelHandle> {
         let dir = artifacts_dir().join("tiny_cnn");
-        if dir.join("meta.json").exists() {
-            Some(ArtifactModel::load(&dir).unwrap())
-        } else {
+        if !dir.join("meta.json").exists() {
             eprintln!("skipping: no artifacts");
-            None
+            return None;
+        }
+        let model = ArtifactModel::load(&dir).unwrap();
+        let engine = match Engine::builder().build_pjrt() {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skipping: {e:#}");
+                return None;
+            }
+        };
+        match engine.register_artifact(model) {
+            Ok(h) => Some(h),
+            Err(e) => {
+                eprintln!("skipping: {e:#}");
+                None
+            }
         }
     }
 
     #[test]
     fn serves_all_requests() {
-        let Some(model) = tiny() else { return };
-        let rt = Runtime::cpu().unwrap();
+        let Some(handle) = tiny_handle() else { return };
         let cfg = ServeConfig { requests: 40, rate_hz: 200.0, ..Default::default() };
-        let rep = serve(&rt, &model, &cfg).unwrap();
+        let rep = serve(&handle, &cfg).unwrap();
         assert_eq!(rep.served, 40);
         assert!(rep.throughput_rps > 0.0);
         assert_eq!(rep.latency.len(), 40);
@@ -179,26 +177,37 @@ mod tests {
 
     #[test]
     fn batching_kicks_in_under_load() {
-        let Some(model) = tiny() else { return };
-        let rt = Runtime::cpu().unwrap();
+        let Some(handle) = tiny_handle() else { return };
         // very high rate -> arrivals cluster -> mean batch > 1
         let cfg = ServeConfig { requests: 64, rate_hz: 5000.0, ..Default::default() };
-        let rep = serve(&rt, &model, &cfg).unwrap();
+        let rep = serve(&handle, &cfg).unwrap();
         assert!(rep.mean_batch > 1.5, "mean batch {}", rep.mean_batch);
         assert!(rep.batches < 64);
     }
 
     #[test]
     fn partitioned_serving_works() {
-        let Some(model) = tiny() else { return };
-        let rt = Runtime::cpu().unwrap();
+        let Some(handle) = tiny_handle() else { return };
         let cfg = ServeConfig {
             requests: 16,
             rate_hz: 100.0,
             points: vec![2, 4],
             ..Default::default()
         };
-        let rep = serve(&rt, &model, &cfg).unwrap();
+        let rep = serve(&handle, &cfg).unwrap();
         assert_eq!(rep.served, 16);
+    }
+
+    #[test]
+    fn simulated_models_serve_through_the_same_loop() {
+        // The unified facade serves cost-model latencies on the virtual
+        // clock — no artifacts or PJRT needed.
+        let engine = Engine::builder().memory_budget(120 * MB).build();
+        let handle = engine.register(families::resnet101()).unwrap();
+        let cfg = ServeConfig { requests: 12, rate_hz: 30.0, ..Default::default() };
+        let rep = serve(&handle, &cfg).unwrap();
+        assert_eq!(rep.served, 12);
+        assert_eq!(rep.batches, 12, "sim models compile batch=1 only");
+        assert!(rep.latency.p(50.0) > 0.3, "simulated ResNet latency on the clock");
     }
 }

@@ -145,11 +145,35 @@ impl Storage {
     }
 }
 
+/// Linux `O_DIRECT` open flag (kept local instead of pulling in `libc`
+/// for one constant). The value is per-architecture: 32-bit arm swaps it
+/// with O_DIRECTORY, while x86/x86_64/aarch64/riscv use asm-generic. On
+/// architectures whose ABI we have not verified (powerpc, mips, sparc
+/// use yet other values), pass no flag at all — `direct_read` then
+/// degrades to a plain buffered read, which is its fallback anyway.
+#[cfg(target_arch = "arm")]
+const O_DIRECT: i32 = 0o200000;
+#[cfg(any(
+    target_arch = "x86",
+    target_arch = "x86_64",
+    target_arch = "aarch64",
+    target_arch = "riscv64"
+))]
+const O_DIRECT: i32 = 0o40000;
+#[cfg(not(any(
+    target_arch = "arm",
+    target_arch = "x86",
+    target_arch = "x86_64",
+    target_arch = "aarch64",
+    target_arch = "riscv64"
+)))]
+const O_DIRECT: i32 = 0;
+
 /// O_DIRECT read with 4 KiB-aligned buffer; transparently falls back to a
 /// plain read on filesystems (e.g. tmpfs/overlayfs) that reject O_DIRECT.
 pub fn direct_read(path: &Path) -> std::io::Result<Vec<u8>> {
     use std::os::unix::fs::OpenOptionsExt;
-    let flags = libc::O_DIRECT;
+    let flags = O_DIRECT;
     match std::fs::OpenOptions::new().read(true).custom_flags(flags).open(path) {
         Ok(mut f) => {
             let len = f.metadata()?.len() as usize;

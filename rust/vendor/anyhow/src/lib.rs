@@ -1,0 +1,242 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline crate universe for this repository has no registry access,
+//! so the workspace vendors the small subset of `anyhow` the codebase
+//! actually uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`]
+//! macros, and the [`Context`] extension trait. Semantics mirror the real
+//! crate where it matters:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?` (the source chain is captured);
+//! * `{err}` prints the outermost message, `{err:#}` prints the whole
+//!   chain joined by `": "`, `{err:?}` prints the message plus a
+//!   "Caused by:" list;
+//! * [`Context`] wraps an error (or a `None`) with a higher-level message.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (message-only, no cause).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `self` as the cause of a new, higher-level error.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(s) = &cur.source {
+            cur = s;
+        }
+        cur
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+}
+
+/// Iterator over an error chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line, like real anyhow.
+            write!(f, "{}", self.msg)?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            let mut i = 0usize;
+            while let Some(e) = cur {
+                write!(f, "\n    {i}: {}", e.msg)?;
+                cur = e.source.as_deref();
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` — that
+// is what keeps this blanket `From` coherent (same trick as real anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Capture the source chain by Display before dropping `e`.
+        let mut msgs = Vec::new();
+        let mut cur: Option<&(dyn StdError + 'static)> = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut source = None;
+        for m in msgs.into_iter().rev() {
+            source = Some(Box::new(Error { msg: m, source }));
+        }
+        Error { msg: e.to_string(), source }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("reading meta.json");
+        assert_eq!(format!("{e}"), "reading meta.json");
+        assert_eq!(format!("{e:#}"), "reading meta.json: no such file");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let x = 7;
+        let a = anyhow!("plain");
+        let b = anyhow!("x = {x}");
+        let c = anyhow!("x = {}", x);
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(format!("{a}"), "plain");
+        assert_eq!(format!("{b}"), "x = 7");
+        assert_eq!(format!("{c}"), "x = 7");
+        assert_eq!(format!("{d}"), "owned");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::from(io_err()).context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by"), "{dbg}");
+    }
+}
