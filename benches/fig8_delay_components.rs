@@ -1,14 +1,22 @@
 //! Fig 8 reproduction: the three delay components (input / execution /
 //! output) of ResNet-101 blocks. Paper Fig 8(a) shows per-block bars with
 //! execution dominating and input/output in the tens of ms.
+//!
+//! `--json <path>` emits machine-readable metrics. The whole-model
+//! `dev_*_whole_s` aggregates are closed-form in the delay model and are
+//! gated in CI against `BENCH_baseline.json`; the partition-dependent
+//! totals ride along unguarded.
 
 use swapnet::config::{DeviceProfile, MB};
 use swapnet::delay::DelayModel;
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
 use swapnet::model::families;
 use swapnet::scheduler;
 use swapnet::util::table;
 
 fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("fig8_delay_components");
     println!("=== Fig 8: delay components of a ResNet-101 execution ===\n");
     let m = families::resnet101();
     let prof = DeviceProfile::jetson_nx();
@@ -52,4 +60,18 @@ fn main() {
         let o = dm.t_out(b);
         assert!((0.025..0.045).contains(&o), "t_out {o}");
     }
+
+    // Whole-model delay components: closed-form in (size, depth, FLOPs),
+    // independent of the partition search -> the CI-gated trajectory.
+    let whole = m.single_block();
+    emit.metric("dev_t_in_whole_s", dm.t_in(&whole));
+    emit.metric("dev_t_ex_whole_s", dm.t_ex(&whole, m.processor));
+    emit.metric("dev_t_out_whole_s", dm.t_out(&whole));
+    emit.metric("dev_model_bytes", m.size_bytes() as f64);
+    // Partition-dependent totals (emitted, not gated).
+    emit.metric("sched_t_in_total_s", tin);
+    emit.metric("sched_t_ex_total_s", tex);
+    emit.metric("sched_t_out_total_s", tout);
+    emit.metric("sched_n_blocks", blocks.len() as f64);
+    emit.finish(&args).expect("write bench json");
 }

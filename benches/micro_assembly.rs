@@ -6,6 +6,7 @@
 use swapnet::assembly::{synthetic_skeleton, AssemblyMode};
 use swapnet::config::{DeviceProfile, MB};
 use swapnet::engine::micro::assemble_once;
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
 use swapnet::model::BlockInfo;
 use swapnet::util::bench::bench;
 
@@ -21,6 +22,8 @@ fn block(size_mb: u64, depth: u32) -> BlockInfo {
 }
 
 fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("micro_assembly");
     println!("=== micro: block assembly (by-reference vs dummy-model) ===\n");
     let prof = DeviceProfile::jetson_nx();
     let b = block(64, 60);
@@ -38,9 +41,11 @@ fn main() {
     assert!(dummy.sim_latency_s > 4.0 * by_ref.sim_latency_s);
     assert_eq!(dummy.resident_bytes, 64 * MB, "dummy model = extra full copy");
     assert_eq!(by_ref.resident_bytes, 0, "by-reference must not allocate");
+    emit.metric("dev_assembly_by_ref_64mb_d60_s", by_ref.sim_latency_s);
+    emit.metric("dev_assembly_dummy_64mb_d60_s", dummy.sim_latency_s);
 
     // Host-measured: the actual registration loop (offset bookkeeping).
-    let r = bench("host: assemble 60-tensor skeleton by reference", 200, || {
+    let r = bench("host: assemble 60-tensor skeleton by reference", args.budget_ms(200), || {
         let probe = assemble_once(AssemblyMode::ByReference, &b, &sk, &prof).unwrap();
         std::hint::black_box(probe.params);
     });
@@ -52,7 +57,7 @@ fn main() {
 
     // Host-measured: dummy-model copy for the same block.
     let data = vec![0u8; b.size_bytes as usize];
-    let r2 = bench("host: dummy-model parameter memcpy (64 MB)", 300, || {
+    let r2 = bench("host: dummy-model parameter memcpy (64 MB)", args.budget_ms(300), || {
         let copy = data.clone();
         std::hint::black_box(copy.len());
     });
@@ -61,4 +66,7 @@ fn main() {
         "\nby-reference beats the dummy copy by {:.0}x on the host too",
         r2.mean_s / r.mean_s
     );
+    emit.metric("wall_assemble_by_ref_p50_s", r.p50_s);
+    emit.metric("wall_dummy_memcpy_64mb_p50_s", r2.p50_s);
+    emit.finish(&args).expect("write bench json");
 }

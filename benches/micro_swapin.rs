@@ -2,11 +2,16 @@
 //! standard path (page cache + CPU copy + GPU convert) against the
 //! zero-copy DMA path via the engine's micro probes, and measures REAL
 //! file reads (buffered vs O_DIRECT) on this host's storage.
+//!
+//! `--json <path>` emits machine-readable metrics (the `dev_*` ones are
+//! deterministic cost-model values and are gated in CI against
+//! `BENCH_baseline.json`); `--smoke` trims the wall-clock budgets.
 
 use std::io::Write;
 
 use swapnet::config::{DeviceProfile, Processor, MB};
 use swapnet::engine::micro::swap_in_once;
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
 use swapnet::model::BlockInfo;
 use swapnet::storage::direct_read;
 use swapnet::swap::SwapMode;
@@ -24,6 +29,8 @@ fn block(size_mb: u64) -> BlockInfo {
 }
 
 fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("micro_swapin");
     println!("=== micro: swap-in channels ===\n");
     let prof = DeviceProfile::jetson_nx();
 
@@ -35,6 +42,19 @@ fn main() {
                 "device model: {proc} {label:<9} swap-in 100 MB: {:>7.1} ms, resident {:>4} MB",
                 probe.swap_in_s * 1e3,
                 probe.resident_bytes / MB
+            );
+            let proc_key = match proc {
+                Processor::Cpu => "cpu",
+                Processor::Gpu => "gpu",
+            };
+            let mode_key = match mode {
+                SwapMode::Standard => "standard",
+                SwapMode::ZeroCopy => "zero_copy",
+            };
+            emit.metric(&format!("dev_swapin_{mode_key}_{proc_key}_100mb_s"), probe.swap_in_s);
+            emit.metric(
+                &format!("dev_resident_{mode_key}_{proc_key}_100mb_bytes"),
+                probe.resident_bytes as f64,
             );
         }
     }
@@ -50,13 +70,14 @@ fn main() {
             f.write_all(&chunk).unwrap();
         }
     }
+    let budget = args.budget_ms(600);
     println!("\nreal host reads of a 64 MB block file:");
-    let rb = bench("buffered read (page cache)", 600, || {
+    let rb = bench("buffered read (page cache)", budget, || {
         let v = std::fs::read(&path).unwrap();
         std::hint::black_box(v.len());
     });
     println!("{}", rb.report());
-    let rd = bench("direct read (O_DIRECT or fallback)", 600, || {
+    let rd = bench("direct read (O_DIRECT or fallback)", budget, || {
         let v = direct_read(&path).unwrap();
         std::hint::black_box(v.len());
     });
@@ -66,5 +87,9 @@ fn main() {
         rb.p95_s / rb.p50_s,
         rd.p95_s / rd.p50_s
     );
+    // Wall-clock metrics ride along in the artifact but are never gated.
+    emit.metric("wall_buffered_read_64mb_p50_s", rb.p50_s);
+    emit.metric("wall_direct_read_64mb_p50_s", rd.p50_s);
     std::fs::remove_dir_all(&dir).ok();
+    emit.finish(&args).expect("write bench json");
 }

@@ -1,19 +1,56 @@
-//! Road-side unit scenario (paper Fig 12): five concurrent DNNs including
-//! model replicas (2x YOLOv3, 2x ResNet-101) for multi-camera streams —
-//! exercises Eq. 1 budget allocation with duplicated demands and the
-//! feasibility floor for VGG-19's unbalanced head, all via the `Engine`.
+//! Road-side unit scenario (paper Fig 12) on the multi-tenant serving
+//! runtime: five concurrent DNNs including model replicas (2x YOLOv3,
+//! 2x ResNet-101) for multi-camera streams share one memory budget.
+//! The fleet registers against a `MultiTenantServer`, a mixed Poisson
+//! request stream is served under urgency-weighted admission control,
+//! and a model is then evicted at runtime to show the survivors
+//! re-expanding into the freed budget — Eq. 1 re-run on every
+//! register/evict, exactly the paper's multi-DNN scheduling applied
+//! online.
 //!
 //!     cargo run --release --example rsu_multi_dnn
 
 use swapnet::config::DeviceProfile;
-use swapnet::engine::{scenario_budgets, Engine};
+use swapnet::engine::Engine;
+use swapnet::server::multi::{poisson_stream, MultiTenantConfig, MultiTenantServer};
 use swapnet::util::table;
 use swapnet::workload;
+
+fn print_budgets(server: &MultiTenantServer) {
+    for (name, budget, blocks) in server.budgets() {
+        println!("  {name:<12} budget {:>9}  -> {blocks} blocks", table::human_bytes(budget));
+    }
+}
+
+fn print_outcome(rep: &swapnet::server::MultiServeReport) {
+    let mut rows = Vec::new();
+    for (name, st) in &rep.per_model {
+        rows.push(vec![
+            name.clone(),
+            st.served.to_string(),
+            (st.shed + st.rejected).to_string(),
+            format!("{:.2}", st.mean_batch()),
+            table::human_secs(st.latency.p(50.0)),
+            table::human_secs(st.latency.p(95.0)),
+        ]);
+    }
+    println!(
+        "{}",
+        table::render(&["model", "served", "dropped", "batch", "p50", "p95"], &rows)
+    );
+    println!(
+        "  peak {} of {} budget, {} OOM events -> {}",
+        table::human_bytes(rep.peak_bytes),
+        table::human_bytes(rep.total_budget),
+        rep.oom_events,
+        if rep.within_budget() { "zero budget violations" } else { "BUDGET VIOLATED" }
+    );
+    assert!(rep.within_budget(), "RSU fleet must stay within budget");
+}
 
 fn main() -> anyhow::Result<()> {
     let sc = workload::rsu();
     let prof = DeviceProfile::jetson_nx();
-    let engine = Engine::builder().device(prof.clone()).build();
 
     println!(
         "RSU fleet: {} models, {} total, budget {} (paper: 1360 MB into 1088 MB)",
@@ -22,24 +59,43 @@ fn main() -> anyhow::Result<()> {
         table::human_bytes(sc.dnn_budget)
     );
 
-    println!("\n== Eq. 1 budget allocation (with feasibility floors) ==");
-    let budgets = scenario_budgets(&sc, &prof);
-    for (m, b) in sc.models.iter().zip(&budgets) {
-        println!(
-            "  {:<12} demand {:>9}  ->  budget {:>9}",
-            m.name,
-            table::human_bytes(m.size_bytes()),
-            table::human_bytes(*b)
-        );
-    }
-
-    let mut rows = Vec::new();
-    for method in ["DInf", "DCha", "TPrg", "SNet"] {
-        for r in engine.run_scenario(&sc, method)? {
-            rows.push(r.row());
+    let engine = Engine::builder().device(prof).build();
+    let mut server = MultiTenantServer::new(engine, MultiTenantConfig::new(sc.dnn_budget));
+    let mut vgg_tenant = None;
+    for (i, m) in sc.models.iter().enumerate() {
+        let is_vgg = m.name.starts_with("vgg");
+        let id = server.register(m.clone(), sc.urgency.get(i).copied().unwrap_or(1.0))?;
+        if is_vgg {
+            vgg_tenant = Some(id);
         }
     }
-    println!("\n== Fig 12: per-model memory / latency / accuracy ==");
-    println!("{}", table::render(&["model", "method", "peak mem", "latency", "accuracy"], &rows));
+
+    println!("\n== Eq. 1 dynamic budget partition (with feasibility floors) ==");
+    print_budgets(&server);
+
+    println!("\n== mixed Poisson stream over the 5-model fleet ==");
+    let stream = poisson_stream(server.registered(), 150, 8.0, 12);
+    let rep = server.serve(&stream)?;
+    print_outcome(&rep);
+
+    // Runtime eviction: the VGG camera feed goes away; survivors
+    // re-expand into the freed budget (fewer blocks, less swapping).
+    let vgg = vgg_tenant.expect("rsu fleet contains vgg19");
+    let shed = server.evict(vgg)?;
+    println!("\n== after evicting vgg19 at runtime ({shed} queued requests shed) ==");
+    print_budgets(&server);
+
+    // Remap the stream onto the surviving tenant ids (eviction keeps
+    // tenant indices stable, so the live set may be non-contiguous).
+    let live: Vec<usize> = (0..sc.models.len()).filter(|&i| i != vgg).collect();
+    let stream: Vec<_> = poisson_stream(live.len(), 100, 8.0, 13)
+        .into_iter()
+        .map(|mut r| {
+            r.tenant = live[r.tenant];
+            r
+        })
+        .collect();
+    let rep = server.serve(&stream)?;
+    print_outcome(&rep);
     Ok(())
 }

@@ -60,6 +60,13 @@ pub struct InferenceReport {
     pub n_blocks: usize,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Aggregate swap-in I/O seconds across blocks (the `ServeTrace`
+    /// decomposition the multi-tenant server emits per request).
+    pub swap_s: f64,
+    /// Aggregate skeleton-assembly seconds across blocks.
+    pub assembly_s: f64,
+    /// Aggregate pure execution seconds across blocks.
+    pub compute_s: f64,
     /// Output activations (real runs only).
     pub output: Option<Vec<f32>>,
 }
@@ -82,6 +89,13 @@ pub trait ExecBackend {
         cfg: &SnetConfig,
         req: &InferRequest<'_>,
     ) -> Result<InferenceReport>;
+
+    /// Release per-model backend state at eviction / rebudget time
+    /// (resident runners, compiled executables). Default: stateless
+    /// backends have nothing to release.
+    fn release(&mut self, _id: usize) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Cost-model execution over the memsim/storage simulators. The delay
@@ -157,6 +171,9 @@ fn report_from_run(model: &str, run: crate::engine::SnetRun) -> InferenceReport 
         block_times: run.block_times,
         cache_hits: run.cache_hits,
         cache_misses: run.cache_misses,
+        swap_s: run.swap_s,
+        assembly_s: run.assembly_s,
+        compute_s: run.compute_s,
         output: None,
     }
 }
@@ -261,6 +278,9 @@ impl ExecBackend for PjrtBackend {
                 n_blocks: 1,
                 cache_hits: 0,
                 cache_misses: 0,
+                swap_s: 0.0,
+                assembly_s: 0.0,
+                compute_s: dt,
                 output: Some(output),
             });
         }
@@ -273,6 +293,9 @@ impl ExecBackend for PjrtBackend {
             .map(|b| BlockTimes { t_in: b.swap_s + b.assemble_s, t_ex: b.exec_s, t_out: 0.0 })
             .collect();
         let sizes: Vec<u64> = rep.blocks.iter().map(|b| b.bytes).collect();
+        let swap_s: f64 = rep.blocks.iter().map(|b| b.swap_s).sum();
+        let assembly_s: f64 = rep.blocks.iter().map(|b| b.assemble_s).sum();
+        let compute_s: f64 = rep.blocks.iter().map(|b| b.exec_s).sum();
         Ok(InferenceReport {
             model: art.name.clone(),
             backend: "pjrt",
@@ -283,7 +306,17 @@ impl ExecBackend for PjrtBackend {
             block_times: times,
             cache_hits: 0,
             cache_misses: 0,
+            swap_s,
+            assembly_s,
+            compute_s,
             output: Some(rep.output),
         })
+    }
+
+    /// Drop this model's device-resident runners; compiled HLO stays in
+    /// the runtime's executable cache (shared, content-addressed).
+    fn release(&mut self, id: usize) -> Result<()> {
+        self.residents.retain(|&(mid, _), _| mid != id);
+        Ok(())
     }
 }

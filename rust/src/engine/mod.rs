@@ -86,7 +86,19 @@ struct EngineCore {
     /// Default per-registration budget when none is given explicitly.
     budget: Option<u64>,
     backend: Box<dyn ExecBackend>,
-    models: Vec<RegisteredModel>,
+    /// Registered models by id; eviction tombstones the slot (`None`) so
+    /// ids stay stable and stale handles fail loudly instead of aliasing
+    /// a later registration.
+    models: Vec<Option<RegisteredModel>>,
+}
+
+impl EngineCore {
+    fn reg(&self, id: usize) -> Result<&RegisteredModel> {
+        self.models
+            .get(id)
+            .and_then(|m| m.as_ref())
+            .ok_or_else(|| anyhow!("model handle {id} is stale (evicted or never registered)"))
+    }
 }
 
 /// Builder for [`Engine`]: device profile, memory budget, ablation
@@ -223,7 +235,8 @@ impl Engine {
         total_budget: u64,
     ) -> Result<Vec<ModelHandle>> {
         let dm = self.core.borrow().dm.clone();
-        let budgets = fleet_budgets(models, urgency, &dm, total_budget);
+        let budgets = try_fleet_budgets(models, urgency, &dm, total_budget)
+            .map_err(|e| anyhow!("{e}"))?;
         models
             .iter()
             .zip(budgets)
@@ -243,7 +256,7 @@ impl Engine {
         let id = core.models.len();
         let reg = RegisteredModel { info, budget, schedule, artifact };
         core.backend.prepare(id, &reg)?;
-        core.models.push(reg);
+        core.models.push(Some(reg));
         Ok(ModelHandle { core: self.core.clone(), id })
     }
 
@@ -302,9 +315,9 @@ impl Engine {
         self.core.borrow().backend.name()
     }
 
-    /// Number of registered models.
+    /// Number of live (non-evicted) registered models.
     pub fn registered(&self) -> usize {
-        self.core.borrow().models.len()
+        self.core.borrow().models.iter().filter(|m| m.is_some()).count()
     }
 }
 
@@ -342,10 +355,7 @@ impl ModelHandle {
     /// Simulated inference with a seed offset (jittered sampling).
     pub fn infer_sim_seeded(&self, seed_bump: u64) -> Result<InferenceReport> {
         let core = self.core.borrow();
-        let reg = core
-            .models
-            .get(self.id)
-            .ok_or_else(|| anyhow!("stale model handle {}", self.id))?;
+        let reg = core.reg(self.id)?;
         backend::sim_report(reg, &core.profile, &core.cfg, seed_bump)
     }
 
@@ -355,49 +365,105 @@ impl ModelHandle {
         let reg = core
             .models
             .get(self.id)
+            .and_then(|m| m.as_ref())
             .ok_or_else(|| anyhow!("stale model handle {}", self.id))?;
         core.backend.run(self.id, reg, &core.profile, &core.cfg, req)
     }
 
-    pub fn name(&self) -> String {
-        self.core.borrow().models[self.id].info.name.clone()
+    /// Evict this model from the engine: release backend state (resident
+    /// runners, compiled executables) and tombstone the slot so every
+    /// later use of the handle is a clean error. The freed budget is the
+    /// caller's to re-allocate (see `MultiTenantServer`).
+    pub fn evict(&self) -> Result<()> {
+        let core = &mut *self.core.borrow_mut();
+        core.reg(self.id)?;
+        core.backend.release(self.id)?;
+        core.models[self.id] = None;
+        Ok(())
     }
 
-    /// The partition schedule fixed at registration time.
+    /// True once [`evict`](Self::evict) has run (on this or any clone).
+    pub fn is_evicted(&self) -> bool {
+        self.core.borrow().reg(self.id).is_err()
+    }
+
+    /// Re-plan this model under a new memory budget (the multi-DNN
+    /// re-partition step): the partition schedule is rebuilt and backend
+    /// state re-prepared. No-op when the budget is unchanged.
+    pub fn rebudget(&self, budget: u64) -> Result<Schedule> {
+        let core = &mut *self.core.borrow_mut();
+        let reg = core.reg(self.id)?;
+        if reg.budget == budget {
+            return Ok(reg.schedule.clone());
+        }
+        let info = reg.info.clone();
+        let schedule =
+            sim::plan(&info, budget, &core.dm, &core.profile, &core.cfg).map_err(Error::msg)?;
+        let reg = core.models[self.id].as_mut().expect("checked live above");
+        reg.budget = budget;
+        reg.schedule = schedule.clone();
+        core.backend.release(self.id)?;
+        let reg = core.models[self.id].as_ref().expect("checked live above");
+        core.backend.prepare(self.id, reg)?;
+        Ok(schedule)
+    }
+
+    /// Stable engine-side id of this registration.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    fn with_reg<R>(&self, f: impl FnOnce(&RegisteredModel) -> R) -> R {
+        let core = self.core.borrow();
+        match core.reg(self.id) {
+            Ok(reg) => f(reg),
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.with_reg(|reg| reg.info.name.clone())
+    }
+
+    /// The partition schedule fixed at registration (or last rebudget).
     pub fn schedule(&self) -> Schedule {
-        self.core.borrow().models[self.id].schedule.clone()
+        self.with_reg(|reg| reg.schedule.clone())
     }
 
     pub fn budget(&self) -> u64 {
-        self.core.borrow().models[self.id].budget
+        self.with_reg(|reg| reg.budget)
     }
 
     pub fn has_artifact(&self) -> bool {
-        self.core.borrow().models[self.id].artifact.is_some()
+        self.with_reg(|reg| reg.artifact.is_some())
     }
 
     /// AOT-compiled batch variants (1 for purely simulated models).
     pub fn batches(&self) -> Vec<usize> {
-        let core = self.core.borrow();
-        match &core.models[self.id].artifact {
+        self.with_reg(|reg| match &reg.artifact {
             Some(a) if !a.batches.is_empty() => a.batches.clone(),
             _ => vec![1],
-        }
+        })
     }
 
     /// Flattened per-sample input feature count (0 for simulated models).
     pub fn input_features(&self) -> usize {
-        let core = self.core.borrow();
-        match &core.models[self.id].artifact {
+        self.with_reg(|reg| match &reg.artifact {
             Some(a) => a.in_shape.iter().skip(1).product(),
             None => 0,
-        }
+        })
     }
 }
 
 /// Eq. 1 budget allocation with feasibility floors for a model fleet
-/// (missing urgencies default to 1).
-fn fleet_budgets(models: &[ModelInfo], urgency: &[f64], dm: &DelayModel, total: u64) -> Vec<u64> {
+/// (missing urgencies default to 1), surfacing degenerate fleets as
+/// typed [`scheduler::AllocError`]s.
+fn try_fleet_budgets(
+    models: &[ModelInfo],
+    urgency: &[f64],
+    dm: &DelayModel,
+    total: u64,
+) -> Result<Vec<u64>, scheduler::AllocError> {
     let demands: Vec<scheduler::ModelDemand> = models
         .iter()
         .enumerate()
@@ -406,17 +472,33 @@ fn fleet_budgets(models: &[ModelInfo], urgency: &[f64], dm: &DelayModel, total: 
         })
         .collect();
     let floors: Vec<u64> = models.iter().map(scheduler::minimal_budget).collect();
-    scheduler::allocate_budgets_with_floors(&demands, &floors, total)
+    scheduler::try_allocate_budgets_with_floors(&demands, &floors, total)
 }
 
 /// Budget per model for a scenario: the explicit per-model override when
-/// the paper quotes one, otherwise Eq. 1 + feasibility floors.
+/// the paper quotes one, otherwise Eq. 1 + feasibility floors. The
+/// legacy lifted allocation (see `allocate_budgets_with_floors`) covers
+/// ad-hoc scenarios whose fleets are degenerate — `schedule_model`
+/// reports any resulting infeasibility downstream.
 pub fn scenario_budgets(scenario: &Scenario, prof: &DeviceProfile) -> Vec<u64> {
     if let Some(ov) = &scenario.budget_override {
         return ov.clone();
     }
     let dm = DelayModel::from_profile(prof);
-    fleet_budgets(&scenario.models, &scenario.urgency, &dm, scenario.dnn_budget)
+    let demands: Vec<scheduler::ModelDemand> = scenario
+        .models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            scheduler::ModelDemand::from_model(
+                m,
+                &dm,
+                scenario.urgency.get(i).copied().unwrap_or(1.0),
+            )
+        })
+        .collect();
+    let floors: Vec<u64> = scenario.models.iter().map(scheduler::minimal_budget).collect();
+    scheduler::allocate_budgets_with_floors(&demands, &floors, scenario.dnn_budget)
 }
 
 #[cfg(test)]
@@ -509,6 +591,54 @@ mod tests {
         let rep = h.infer(&[]).unwrap();
         assert!(rep.latency_s > 0.0);
         assert_eq!(rep.model, "resnet101");
+    }
+
+    #[test]
+    fn evicted_handle_fails_loudly_and_frees_the_slot() {
+        let engine = Engine::builder().memory_budget(120 * MB).build();
+        let h = engine.register(families::resnet101()).unwrap();
+        let h2 = engine.register(families::yolov3()).unwrap();
+        assert_eq!(engine.registered(), 2);
+        h.evict().unwrap();
+        assert_eq!(engine.registered(), 1);
+        assert!(h.is_evicted());
+        assert!(!h2.is_evicted());
+        assert!(h.infer_sim().is_err(), "stale handle must error");
+        assert!(h.evict().is_err(), "double eviction must error");
+        // The survivor keeps working, and new registrations get fresh
+        // ids (no aliasing of the tombstoned slot).
+        assert!(h2.infer_sim().is_ok());
+        let h3 = engine.register(families::fcn()).unwrap();
+        assert_ne!(h3.id(), h.id());
+    }
+
+    #[test]
+    fn rebudget_replans_the_partition() {
+        let engine = Engine::builder().build();
+        let h = engine.register_with_budget(families::resnet101(), 300 * MB).unwrap();
+        let coarse = h.schedule();
+        let fine = h.rebudget(102 * MB).unwrap();
+        assert!(fine.n_blocks > coarse.n_blocks, "tighter budget -> more blocks");
+        assert_eq!(h.budget(), 102 * MB);
+        assert_eq!(h.schedule().points, fine.points);
+        // Re-expanding goes back to a coarser blocking.
+        let wide = h.rebudget(400 * MB).unwrap();
+        assert_eq!(wide.n_blocks, 1);
+        // Unchanged budget is a no-op returning the current schedule.
+        let same = h.rebudget(400 * MB).unwrap();
+        assert_eq!(same.points, wide.points);
+        // Infeasible rebudget errors and keeps the old schedule.
+        assert!(h.rebudget(10 * MB).is_err());
+        assert_eq!(h.budget(), 400 * MB);
+    }
+
+    #[test]
+    fn fleet_registration_rejects_degenerate_budget() {
+        let engine = Engine::builder().build();
+        let models = vec![families::vgg19()];
+        // VGG's feasibility floor (its fc pair) cannot fit 100 MB.
+        let err = engine.register_fleet(&models, &[1.0], 100 * MB).unwrap_err();
+        assert!(format!("{err:#}").contains("floor"), "{err:#}");
     }
 
     #[test]

@@ -59,6 +59,12 @@ pub struct SnetRun {
     pub block_times: Vec<BlockTimes>,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Aggregate swap-in I/O seconds across blocks (jitter applied).
+    pub swap_s: f64,
+    /// Aggregate skeleton-assembly seconds across blocks.
+    pub assembly_s: f64,
+    /// Aggregate pure execution seconds across blocks.
+    pub compute_s: f64,
 }
 
 /// Naive equal-memory partition (the w/o-pat-sch ablation): walk layers
@@ -169,6 +175,7 @@ pub(crate) fn simulate_scheduled(
     let mut times = Vec::with_capacity(blocks.len());
     let mut cache_hits = 0u64;
     let mut cache_misses = 0u64;
+    let (mut swap_s, mut assembly_s, mut compute_s) = (0.0f64, 0.0f64, 0.0f64);
     let mut resident: std::collections::VecDeque<crate::swap::ResidentBlock> =
         std::collections::VecDeque::new();
     let mut assembled = Vec::new();
@@ -178,8 +185,12 @@ pub(crate) fn simulate_scheduled(
         let ab = assembler
             .assemble(b, &skeletons[i], b.size_bytes as usize, &mut mem, prof)
             .map_err(|e| format!("{}: {e}", model.name))?;
-        let t_in = (rb.swap_in_s + ab.sim_latency_s) * jit(&mut rng, cfg.jitter);
+        let j_in = jit(&mut rng, cfg.jitter);
+        let t_in = (rb.swap_in_s + ab.sim_latency_s) * j_in;
         let t_ex = dm.t_ex(b, model.processor) * cfg.cpu_load_factor * jit(&mut rng, cfg.jitter);
+        swap_s += rb.swap_in_s * j_in;
+        assembly_s += ab.sim_latency_s * j_in;
+        compute_s += t_ex;
         cache_hits += rb.cache_hits;
         cache_misses += rb.cache_misses;
         resident.push_back(rb);
@@ -217,5 +228,8 @@ pub(crate) fn simulate_scheduled(
         block_times: times,
         cache_hits,
         cache_misses,
+        swap_s,
+        assembly_s,
+        compute_s,
     })
 }

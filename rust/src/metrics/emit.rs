@@ -1,0 +1,258 @@
+//! Machine-readable bench emission and the CI regression gate.
+//!
+//! The fig/table/micro benches print human tables; CI needs a perf
+//! trajectory instead. Every bench that opts in accepts `--json <path>`
+//! (write a `{"bench": .., "metrics": {..}}` file) and `--smoke` (trim
+//! wall-clock budgets for CI). The `bench_gate` binary merges those
+//! emissions into `BENCH_summary.json` and compares against the
+//! committed `BENCH_baseline.json`: any gated metric that grows beyond
+//! the tolerance band fails the pipeline. All gated metrics are
+//! lower-is-better (seconds or bytes); the baseline only lists
+//! *deterministic* cost-model metrics, so the band can stay tight —
+//! wall-clock metrics are emitted for the artifact but never gated.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Collects one bench's named scalar metrics for JSON emission.
+#[derive(Debug, Clone)]
+pub struct BenchEmitter {
+    bench: String,
+    metrics: BTreeMap<String, f64>,
+}
+
+impl BenchEmitter {
+    pub fn new(bench: &str) -> BenchEmitter {
+        BenchEmitter { bench: bench.to_string(), metrics: BTreeMap::new() }
+    }
+
+    /// Record one scalar metric (lower-is-better by convention).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.insert(name.to_string(), value);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        m.insert(
+            "metrics".to_string(),
+            Json::Obj(self.metrics.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Write the emission; creates parent directories as needed.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
+    /// Write to `args.json` when set (benches call this unconditionally).
+    pub fn finish(&self, args: &BenchArgs) -> std::io::Result<()> {
+        match &args.json {
+            Some(path) => self.write(path),
+            None => Ok(()),
+        }
+    }
+}
+
+/// The CLI switches shared by the reproduction benches: `--json <path>`
+/// enables machine-readable output and `--smoke` trims measurement
+/// budgets for CI. Unrelated arguments are ignored so the benches stay
+/// runnable under harnesses that inject their own flags.
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    pub json: Option<PathBuf>,
+    pub smoke: bool,
+}
+
+impl BenchArgs {
+    pub fn parse() -> BenchArgs {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter(args: impl IntoIterator<Item = String>) -> BenchArgs {
+        let mut out = BenchArgs::default();
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--json" => out.json = it.next().map(PathBuf::from),
+                "--smoke" => out.smoke = true,
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Wall-clock budget helper: the full budget normally, a fraction of
+    /// it (floored at 20 ms) in smoke mode.
+    pub fn budget_ms(&self, full: u64) -> u64 {
+        if self.smoke {
+            (full / 10).max(20)
+        } else {
+            full
+        }
+    }
+}
+
+/// Merge per-bench emissions into one summary document:
+/// `{"schema": 1, "benches": {name: {metric: value}}}`.
+pub fn merge(parts: &[Json]) -> Json {
+    let mut benches: BTreeMap<String, Json> = BTreeMap::new();
+    for p in parts {
+        let name = p.get("bench").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        let metrics = p
+            .get("metrics")
+            .cloned()
+            .unwrap_or_else(|| Json::Obj(BTreeMap::new()));
+        benches.insert(name, metrics);
+    }
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Num(1.0));
+    top.insert("benches".to_string(), Json::Obj(benches));
+    Json::Obj(top)
+}
+
+/// Outcome of gating a summary against a baseline.
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    /// Metrics compared (present in the baseline).
+    pub checked: usize,
+    /// Human-readable regression / missing-metric descriptions; empty
+    /// means the gate passes.
+    pub failures: Vec<String>,
+    /// Per-metric `(bench, metric, baseline, new)` rows for reporting.
+    pub rows: Vec<(String, String, f64, f64)>,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Compare `summary` against `baseline` with a relative tolerance band:
+/// a gated metric regresses when `new > base * (1 + tol)`. Metrics in
+/// the baseline but missing from the summary fail (a bench silently
+/// dropping a metric must not pass); summary metrics absent from the
+/// baseline are ignored (bootstrap-friendly: commit them when ready).
+/// An empty baseline `benches` object gates nothing and passes — the
+/// bootstrap run whose uploaded summary seeds the first real baseline.
+pub fn gate(baseline: &Json, summary: &Json, tol: f64) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    let Some(Json::Obj(base_benches)) = baseline.get("benches") else {
+        out.failures.push("baseline has no `benches` object".to_string());
+        return out;
+    };
+    for (bench, metrics) in base_benches {
+        let Json::Obj(metrics) = metrics else { continue };
+        for (metric, base_v) in metrics {
+            let Some(base) = base_v.as_f64() else { continue };
+            out.checked += 1;
+            let new = summary
+                .get("benches")
+                .and_then(|b| b.get(bench))
+                .and_then(|m| m.get(metric))
+                .and_then(Json::as_f64);
+            match new {
+                None => out.failures.push(format!(
+                    "{bench}/{metric}: present in baseline but missing from summary"
+                )),
+                Some(new) => {
+                    out.rows.push((bench.clone(), metric.clone(), base, new));
+                    if base > 0.0 && new > base * (1.0 + tol) {
+                        out.failures.push(format!(
+                            "{bench}/{metric}: {new:.6e} exceeds baseline {base:.6e} \
+                             by more than {:.0}%",
+                            tol * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline(json: &str) -> Json {
+        Json::parse(json).unwrap()
+    }
+
+    #[test]
+    fn emitter_roundtrips_through_json() {
+        let mut e = BenchEmitter::new("micro_x");
+        e.metric("a_s", 0.5);
+        e.metric("b_s", 2e-3);
+        let j = Json::parse(&e.to_json().to_string()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("micro_x"));
+        assert_eq!(j.path("metrics.a_s").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn args_parse_json_and_smoke() {
+        let a = BenchArgs::from_iter(
+            ["--smoke", "--json", "out/x.json", "ignored"].map(String::from),
+        );
+        assert!(a.smoke);
+        assert_eq!(a.json.as_deref(), Some(Path::new("out/x.json")));
+        assert_eq!(a.budget_ms(600), 60);
+        assert_eq!(BenchArgs::from_iter(Vec::<String>::new()).budget_ms(600), 600);
+    }
+
+    #[test]
+    fn merge_groups_by_bench_name() {
+        let p1 = baseline(r#"{"bench": "a", "metrics": {"x": 1}}"#);
+        let p2 = baseline(r#"{"bench": "b", "metrics": {"y": 2}}"#);
+        let m = merge(&[p1, p2]);
+        assert_eq!(m.path("benches.a.x").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.path("benches.b.y").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn gate_passes_within_band_and_fails_beyond() {
+        let base = baseline(r#"{"benches": {"a": {"x": 1.0, "y": 2.0}}}"#);
+        let ok = baseline(r#"{"benches": {"a": {"x": 1.05, "y": 1.0}}}"#);
+        let g = gate(&base, &ok, 0.10);
+        assert!(g.passed(), "{:?}", g.failures);
+        assert_eq!(g.checked, 2);
+        let bad = baseline(r#"{"benches": {"a": {"x": 1.2, "y": 1.0}}}"#);
+        let g = gate(&base, &bad, 0.10);
+        assert!(!g.passed());
+        assert!(g.failures[0].contains("a/x"), "{:?}", g.failures);
+    }
+
+    #[test]
+    fn gate_fails_on_missing_metric_and_ignores_extras() {
+        let base = baseline(r#"{"benches": {"a": {"x": 1.0}}}"#);
+        let s = baseline(r#"{"benches": {"a": {"z": 9.0}, "b": {"w": 1.0}}}"#);
+        let g = gate(&base, &s, 0.10);
+        assert!(!g.passed());
+        assert!(g.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn empty_baseline_bootstraps_green() {
+        let base = baseline(r#"{"benches": {}}"#);
+        let s = baseline(r#"{"benches": {"a": {"x": 1.0}}}"#);
+        let g = gate(&base, &s, 0.10);
+        assert!(g.passed());
+        assert_eq!(g.checked, 0);
+    }
+
+    #[test]
+    fn improvements_always_pass() {
+        let base = baseline(r#"{"benches": {"a": {"x": 1.0}}}"#);
+        let s = baseline(r#"{"benches": {"a": {"x": 0.2}}}"#);
+        assert!(gate(&base, &s, 0.0).passed());
+    }
+}

@@ -1,4 +1,7 @@
-//! Metrics: latency recorders, CDFs (Fig 14), and scenario report rows.
+//! Metrics: latency recorders, CDFs (Fig 14), scenario report rows, and
+//! the machine-readable bench emission / CI regression gate ([`emit`]).
+
+pub mod emit;
 
 use crate::util::stats;
 

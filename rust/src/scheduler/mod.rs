@@ -70,20 +70,75 @@ pub fn usable_budget(model: &ModelInfo, budget: u64) -> u64 {
     (budget.saturating_sub(overhead_bytes(model)) as f64 * 0.995) as u64
 }
 
-/// Eq. 1: allocate `total` bytes across models. If everything fits,
-/// each model gets its demand; otherwise (1 - 1/n) of the budget is
-/// split proportional to demand and the reserved 1/n proportional to
-/// normalized performance score. Allocations are then lifted to each
-/// model's feasibility floor (see [`minimal_budget`]), taking the deficit
-/// proportionally from models with surplus.
-pub fn allocate_budgets_with_floors(
+/// Typed failure of multi-DNN budget allocation (Eq. 1 + floors).
+///
+/// The untyped [`allocate_budgets`] wrappers used to misallocate silently
+/// on degenerate fleets (empty, zero demand, infeasible floors, rounding
+/// drift); the `try_*` entry points surface those as errors instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AllocError {
+    /// No models were passed to the allocator.
+    EmptyFleet,
+    /// Every model reported zero memory demand — Eq. 1's proportional
+    /// shares are undefined.
+    ZeroDemand,
+    /// One model's feasibility floor alone exceeds the total budget
+    /// (paper footnote 2: VGG's unbalanced head needs a raised budget).
+    FloorExceedsTotal { model: String, floor: u64, total: u64 },
+    /// The floors are individually feasible but cannot coexist under the
+    /// total budget.
+    FloorSumExceedsTotal { floor_sum: u64, total: u64 },
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::EmptyFleet => write!(f, "budget allocation over an empty fleet"),
+            AllocError::ZeroDemand => {
+                write!(f, "budget allocation over a fleet with zero total memory demand")
+            }
+            AllocError::FloorExceedsTotal { model, floor, total } => write!(
+                f,
+                "{model}: feasibility floor {floor} B exceeds the total budget {total} B"
+            ),
+            AllocError::FloorSumExceedsTotal { floor_sum, total } => write!(
+                f,
+                "fleet floors sum to {floor_sum} B, beyond the total budget {total} B"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// Eq. 1 with feasibility floors and a typed error contract: floors are
+/// always respected, the allocation never exceeds `total`, and under
+/// memory pressure the shares sum to *exactly* `total` (no rounding
+/// drift). See [`AllocError`] for the rejected degenerate inputs.
+pub fn try_allocate_budgets_with_floors(
     demands: &[ModelDemand],
     floors: &[u64],
     total: u64,
-) -> Vec<u64> {
-    let mut alloc = allocate_budgets(demands, total);
-    for _ in 0..4 {
-        // lift below-floor models
+) -> Result<Vec<u64>, AllocError> {
+    assert_eq!(demands.len(), floors.len(), "one floor per demand");
+    for (d, &f) in demands.iter().zip(floors) {
+        if f > total {
+            return Err(AllocError::FloorExceedsTotal {
+                model: d.name.clone(),
+                floor: f,
+                total,
+            });
+        }
+    }
+    let floor_sum: u64 = floors.iter().sum();
+    if floor_sum > total {
+        return Err(AllocError::FloorSumExceedsTotal { floor_sum, total });
+    }
+    let mut alloc = try_allocate_budgets(demands, total)?;
+    // Lift below-floor models, taking the deficit from surplus models
+    // proportionally. floor_sum <= total guarantees a feasible fixed
+    // point; the iteration cap only bounds the proportional passes.
+    for _ in 0..demands.len() + 2 {
         let mut deficit: i64 = 0;
         for (a, &f) in alloc.iter_mut().zip(floors) {
             if *a < f {
@@ -94,14 +149,13 @@ pub fn allocate_budgets_with_floors(
         if deficit == 0 {
             break;
         }
-        // take the deficit from surplus models proportionally
         let surplus: i64 = alloc
             .iter()
             .zip(floors)
             .map(|(&a, &f)| (a as i64 - f as i64).max(0))
             .sum();
         if surplus <= 0 {
-            break; // infeasible overall; schedule_model will report it
+            break; // floors exactly consume the budget; shave pass below
         }
         for (a, &f) in alloc.iter_mut().zip(floors) {
             let sur = (*a as i64 - f as i64).max(0);
@@ -109,23 +163,47 @@ pub fn allocate_budgets_with_floors(
             *a = (*a as i64 - cut).max(f as i64) as u64;
         }
     }
-    alloc
+    // Exact conservation: integer division above can leave the sum a few
+    // bytes over `total`; shave the remainder from surplus models.
+    let sum: u64 = alloc.iter().sum();
+    if sum > total {
+        let mut over = sum - total;
+        let mut order: Vec<usize> = (0..alloc.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(alloc[i].saturating_sub(floors[i])));
+        for i in order {
+            let cut = over.min(alloc[i].saturating_sub(floors[i]));
+            alloc[i] -= cut;
+            over -= cut;
+            if over == 0 {
+                break;
+            }
+        }
+        debug_assert!(alloc.iter().sum::<u64>() <= total, "shave pass must conserve");
+    }
+    Ok(alloc)
 }
 
-/// Eq. 1 without floors (the raw paper formula).
-pub fn allocate_budgets(demands: &[ModelDemand], total: u64) -> Vec<u64> {
+/// Eq. 1 without floors, with the typed error contract: if everything
+/// fits each model gets its demand; otherwise (1 - 1/n) of the budget is
+/// split proportional to demand and the reserved 1/n proportional to
+/// normalized performance score, with the integer remainder handed out
+/// by largest fractional share so the allocation sums to exactly `total`.
+pub fn try_allocate_budgets(demands: &[ModelDemand], total: u64) -> Result<Vec<u64>, AllocError> {
     let n = demands.len();
     if n == 0 {
-        return vec![];
+        return Err(AllocError::EmptyFleet);
     }
     let sum_m: u64 = demands.iter().map(|d| d.mem_bytes).sum();
+    if sum_m == 0 {
+        return Err(AllocError::ZeroDemand);
+    }
     if sum_m <= total {
-        return demands.iter().map(|d| d.mem_bytes).collect();
+        return Ok(demands.iter().map(|d| d.mem_bytes).collect());
     }
     let nf = n as f64;
     let totalf = total as f64;
     let sum_ps: f64 = demands.iter().map(|d| d.performance_score()).sum();
-    demands
+    let raw: Vec<f64> = demands
         .iter()
         .map(|d| {
             let share_m = d.mem_bytes as f64 / sum_m as f64;
@@ -134,10 +212,67 @@ pub fn allocate_budgets(demands: &[ModelDemand], total: u64) -> Vec<u64> {
             } else {
                 1.0 / nf
             };
-            let a = share_m * (1.0 - 1.0 / nf) * totalf + share_ps * (1.0 / nf) * totalf;
-            a as u64
+            share_m * (1.0 - 1.0 / nf) * totalf + share_ps * (1.0 / nf) * totalf
         })
-        .collect()
+        .collect();
+    let mut alloc: Vec<u64> = raw.iter().map(|a| a.max(0.0).floor() as u64).collect();
+    let mut sum: u64 = alloc.iter().sum();
+    // Float error can land a hair over `total`; pull back first.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| (raw[b] - raw[b].floor()).total_cmp(&(raw[a] - raw[a].floor())));
+    while sum > total {
+        for &i in order.iter().rev() {
+            if alloc[i] > 0 && sum > total {
+                alloc[i] -= 1;
+                sum -= 1;
+            }
+        }
+    }
+    // Distribute the flooring remainder by largest fractional share.
+    let mut rem = total - sum;
+    let mut i = 0usize;
+    while rem > 0 {
+        alloc[order[i % n]] += 1;
+        rem -= 1;
+        i += 1;
+        if i >= 8 * n {
+            // Pathological float undershoot: dump the tail on the model
+            // with the largest share rather than looping byte-by-byte.
+            alloc[order[0]] += rem;
+            break;
+        }
+    }
+    Ok(alloc)
+}
+
+/// Eq. 1 with floors — legacy untyped wrapper. Degenerate fleets fall
+/// back to the historical behavior (floors lifted even when the total is
+/// infeasible; `schedule_model` reports the infeasibility downstream).
+/// New code should call [`try_allocate_budgets_with_floors`].
+pub fn allocate_budgets_with_floors(
+    demands: &[ModelDemand],
+    floors: &[u64],
+    total: u64,
+) -> Vec<u64> {
+    match try_allocate_budgets_with_floors(demands, floors, total) {
+        Ok(alloc) => alloc,
+        Err(_) => {
+            let mut alloc = allocate_budgets(demands, total);
+            for (a, &f) in alloc.iter_mut().zip(floors) {
+                if *a < f {
+                    *a = f;
+                }
+            }
+            alloc
+        }
+    }
+}
+
+/// Eq. 1 without floors — legacy untyped wrapper over
+/// [`try_allocate_budgets`]; degenerate fleets pass demands through.
+pub fn allocate_budgets(demands: &[ModelDemand], total: u64) -> Vec<u64> {
+    try_allocate_budgets(demands, total)
+        .unwrap_or_else(|_| demands.iter().map(|d| d.mem_bytes).collect())
 }
 
 /// Paper §6.2.2: number of blocks n = ceil(m * s / b) for parallelism m.
@@ -217,17 +352,44 @@ pub fn schedule_fleet(
     prof: &DeviceProfile,
     urgency: &[f64],
 ) -> Result<Vec<Schedule>, String> {
+    schedule_fleet_incremental(models, total_budget, dm, prof, urgency, &[])
+}
+
+/// Incremental fleet re-partition for dynamic registration/eviction
+/// (paper §6.2 applied online): re-run Eq. 1 + floors over the surviving
+/// fleet, but a model whose allocated budget did not move keeps its
+/// `previous` schedule untouched — only models whose share changed pay
+/// the lookup-table search and get re-blocked. `previous` is positional
+/// (entries beyond its length, or `None` entries, always re-plan).
+///
+/// This is the offline/standalone form of the reuse rule; for models
+/// registered with an `Engine`, `ModelHandle::rebudget` applies the
+/// same budget-unchanged short-circuit against engine-owned schedules
+/// (the multi-tenant server's path).
+pub fn schedule_fleet_incremental(
+    models: &[ModelInfo],
+    total_budget: u64,
+    dm: &DelayModel,
+    prof: &DeviceProfile,
+    urgency: &[f64],
+    previous: &[Option<&Schedule>],
+) -> Result<Vec<Schedule>, String> {
     let demands: Vec<ModelDemand> = models
         .iter()
         .enumerate()
         .map(|(i, m)| ModelDemand::from_model(m, dm, urgency.get(i).copied().unwrap_or(1.0)))
         .collect();
     let floors: Vec<u64> = models.iter().map(minimal_budget).collect();
-    let budgets = allocate_budgets_with_floors(&demands, &floors, total_budget);
+    let budgets = try_allocate_budgets_with_floors(&demands, &floors, total_budget)
+        .map_err(|e| e.to_string())?;
     models
         .iter()
+        .enumerate()
         .zip(budgets)
-        .map(|(m, b)| schedule_model(m, b, dm, prof))
+        .map(|((i, m), b)| match previous.get(i).copied().flatten() {
+            Some(prev) if prev.budget_bytes == b => Ok(prev.clone()),
+            _ => schedule_model(m, b, dm, prof),
+        })
         .collect()
 }
 
@@ -324,6 +486,95 @@ mod tests {
         // VGG's 411 MB fc1 cannot fit a 50 MB budget.
         let m = families::vgg19();
         assert!(schedule_model(&m, 50 * MB, &dm(), &DeviceProfile::jetson_nx()).is_err());
+    }
+
+    #[test]
+    fn typed_allocation_rejects_empty_fleet() {
+        assert_eq!(try_allocate_budgets(&[], 1000), Err(AllocError::EmptyFleet));
+    }
+
+    #[test]
+    fn typed_allocation_rejects_zero_demand() {
+        let d = vec![
+            ModelDemand { name: "a".into(), mem_bytes: 0, latency_s: 1.0, urgency: 1.0 },
+            ModelDemand { name: "b".into(), mem_bytes: 0, latency_s: 1.0, urgency: 1.0 },
+        ];
+        assert_eq!(try_allocate_budgets(&d, 1000), Err(AllocError::ZeroDemand));
+    }
+
+    #[test]
+    fn typed_allocation_rejects_oversized_floor() {
+        // A single model whose minimal budget exceeds the whole fleet
+        // budget must be a typed error, not a silent misallocation.
+        let d = vec![ModelDemand {
+            name: "vgg".into(),
+            mem_bytes: 548 * MB,
+            latency_s: 1.1,
+            urgency: 1.0,
+        }];
+        let err = try_allocate_budgets_with_floors(&d, &[500 * MB], 400 * MB).unwrap_err();
+        assert_eq!(
+            err,
+            AllocError::FloorExceedsTotal { model: "vgg".into(), floor: 500 * MB, total: 400 * MB }
+        );
+        assert!(err.to_string().contains("vgg"));
+    }
+
+    #[test]
+    fn typed_allocation_rejects_infeasible_floor_sum() {
+        let d = vec![
+            ModelDemand { name: "a".into(), mem_bytes: 300 * MB, latency_s: 1.0, urgency: 1.0 },
+            ModelDemand { name: "b".into(), mem_bytes: 300 * MB, latency_s: 1.0, urgency: 1.0 },
+        ];
+        let err = try_allocate_budgets_with_floors(&d, &[250 * MB, 250 * MB], 400 * MB)
+            .unwrap_err();
+        assert!(matches!(err, AllocError::FloorSumExceedsTotal { .. }));
+    }
+
+    #[test]
+    fn typed_allocation_sums_exactly_under_pressure() {
+        // The untyped path used to drift by a few bytes from flooring;
+        // the typed path conserves the total exactly.
+        let d = vec![
+            ModelDemand { name: "vgg".into(), mem_bytes: 548 * MB, latency_s: 1.1, urgency: 1.0 },
+            ModelDemand { name: "resnet".into(), mem_bytes: 170 * MB, latency_s: 0.45, urgency: 1.0 },
+            ModelDemand { name: "yolo".into(), mem_bytes: 236 * MB, latency_s: 0.19, urgency: 1.0 },
+        ];
+        let total = 701 * MB + 77; // deliberately non-round
+        let a = try_allocate_budgets(&d, total).unwrap();
+        assert_eq!(a.iter().sum::<u64>(), total);
+        let floors = vec![100 * MB, 80 * MB, 90 * MB];
+        let af = try_allocate_budgets_with_floors(&d, &floors, total).unwrap();
+        assert!(af.iter().sum::<u64>() <= total);
+        for (x, f) in af.iter().zip(&floors) {
+            assert!(x >= f);
+        }
+    }
+
+    #[test]
+    fn incremental_fleet_reuses_unchanged_schedules() {
+        let models = vec![families::resnet101(), families::yolov3()];
+        let dmev = dm();
+        let prof = DeviceProfile::jetson_nx();
+        let total = 350 * MB;
+        let first = schedule_fleet(&models, total, &dmev, &prof, &[1.0, 1.0]).unwrap();
+        // Same fleet, same total -> identical budgets -> both reused.
+        let prev: Vec<Option<&Schedule>> = first.iter().map(Some).collect();
+        let again =
+            schedule_fleet_incremental(&models, total, &dmev, &prof, &[1.0, 1.0], &prev).unwrap();
+        for (a, b) in first.iter().zip(&again) {
+            assert_eq!(a.points, b.points);
+            assert_eq!(a.budget_bytes, b.budget_bytes);
+        }
+        // A different total moves the shares -> schedules re-planned
+        // under the new budgets (floors still respected).
+        let moved =
+            schedule_fleet_incremental(&models, 500 * MB, &dmev, &prof, &[1.0, 1.0], &prev)
+                .unwrap();
+        for s in &moved {
+            assert!(s.peak_bytes <= s.budget_bytes);
+        }
+        assert_ne!(moved[0].budget_bytes, first[0].budget_bytes);
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Admission control for the multi-tenant server.
+//!
+//! Every tenant gets a bounded request queue; a global bound caps the
+//! backlog across the fleet. When the system is overloaded, the policy
+//! decides who pays: FIFO refuses the newcomer, the urgency-weighted
+//! policy sheds queued work from the model with the lowest performance
+//! score PS = u * latency / memory (paper §6.2.2 — the same score that
+//! skews Eq. 1's reserved budget share), and the deadline-aware policy
+//! additionally refuses requests whose deadline is already impossible.
+//! Shedding load at admission is what keeps overload from growing queues
+//! without bound — the budget itself is protected by the residency
+//! ledger, so overload degrades into dropped requests, never OOM.
+
+/// Which admission policy arbitrates overload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// First-come-first-served: a full system refuses newcomers.
+    Fifo,
+    /// Shed queued work from the lowest-performance-score tenant to
+    /// admit work for a higher-score one.
+    Urgency,
+    /// Like `Urgency`, but requests whose deadline cannot be met are
+    /// refused outright (even under light load).
+    Deadline,
+}
+
+impl AdmissionPolicy {
+    pub fn by_name(name: &str) -> Option<AdmissionPolicy> {
+        match name {
+            "fifo" => Some(AdmissionPolicy::Fifo),
+            "urgency" => Some(AdmissionPolicy::Urgency),
+            "deadline" => Some(AdmissionPolicy::Deadline),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fifo => "fifo",
+            AdmissionPolicy::Urgency => "urgency",
+            AdmissionPolicy::Deadline => "deadline",
+        }
+    }
+}
+
+/// What the admission controller decided for one incoming request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Enqueue on the model's queue.
+    Admit,
+    /// Admit, after shedding one queued request from tenant `victim`
+    /// (the oldest queued entry — it has waited longest and is the most
+    /// likely to be stale by the time the low-score model frees up).
+    AdmitShedding { victim: usize },
+    /// Refuse the request.
+    Reject,
+}
+
+/// One tenant's queue as the admission controller sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantQueue {
+    pub len: usize,
+    /// `ModelDemand::performance_score` of the tenant.
+    pub score: f64,
+}
+
+/// Bounded-queue admission controller.
+#[derive(Debug, Clone, Copy)]
+pub struct Admission {
+    pub policy: AdmissionPolicy,
+    /// Per-tenant queue bound.
+    pub per_model: usize,
+    /// Global backlog bound across all queues.
+    pub global: usize,
+}
+
+impl Admission {
+    /// Decide one request for tenant `incoming`. `deadline_ok` is the
+    /// caller's feasibility estimate (predicted completion <= deadline);
+    /// non-deadline policies ignore it.
+    pub fn decide(&self, incoming: usize, deadline_ok: bool, queues: &[TenantQueue]) -> Verdict {
+        if self.policy == AdmissionPolicy::Deadline && !deadline_ok {
+            return Verdict::Reject;
+        }
+        if queues[incoming].len >= self.per_model {
+            return Verdict::Reject;
+        }
+        let backlog: usize = queues.iter().map(|q| q.len).sum();
+        if backlog < self.global {
+            return Verdict::Admit;
+        }
+        match self.policy {
+            AdmissionPolicy::Fifo => Verdict::Reject,
+            AdmissionPolicy::Urgency | AdmissionPolicy::Deadline => {
+                // Shed from the lowest-score backlogged tenant, but only
+                // if it scores strictly below the incoming model —
+                // otherwise refusing the newcomer is the cheaper loss.
+                let victim = queues
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| q.len > 0)
+                    .min_by(|a, b| a.1.score.total_cmp(&b.1.score))
+                    .map(|(i, _)| i);
+                match victim {
+                    Some(v) if queues[v].score < queues[incoming].score => {
+                        Verdict::AdmitShedding { victim: v }
+                    }
+                    _ => Verdict::Reject,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queues(lens: &[usize], scores: &[f64]) -> Vec<TenantQueue> {
+        lens.iter()
+            .zip(scores)
+            .map(|(&len, &score)| TenantQueue { len, score })
+            .collect()
+    }
+
+    fn adm(policy: AdmissionPolicy) -> Admission {
+        Admission { policy, per_model: 4, global: 6 }
+    }
+
+    #[test]
+    fn admits_when_under_both_bounds() {
+        let q = queues(&[1, 1, 1], &[1.0, 2.0, 3.0]);
+        for p in [AdmissionPolicy::Fifo, AdmissionPolicy::Urgency, AdmissionPolicy::Deadline] {
+            assert_eq!(adm(p).decide(0, true, &q), Verdict::Admit, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn per_model_bound_rejects_regardless_of_policy() {
+        let q = queues(&[4, 0, 0], &[5.0, 1.0, 1.0]);
+        for p in [AdmissionPolicy::Fifo, AdmissionPolicy::Urgency, AdmissionPolicy::Deadline] {
+            assert_eq!(adm(p).decide(0, true, &q), Verdict::Reject, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn fifo_overload_refuses_the_newcomer() {
+        let q = queues(&[2, 2, 2], &[1.0, 2.0, 3.0]);
+        assert_eq!(adm(AdmissionPolicy::Fifo).decide(2, true, &q), Verdict::Reject);
+    }
+
+    #[test]
+    fn urgency_overload_sheds_lowest_score_model_first() {
+        // Tenant 0 has the lowest PS — a high-score arrival displaces
+        // its queued work, not tenant 1's.
+        let q = queues(&[2, 2, 2], &[0.5, 1.5, 3.0]);
+        assert_eq!(
+            adm(AdmissionPolicy::Urgency).decide(2, true, &q),
+            Verdict::AdmitShedding { victim: 0 }
+        );
+        // An arrival for the lowest-score model itself cannot displace
+        // anyone (no strictly lower victim exists) -> reject.
+        assert_eq!(adm(AdmissionPolicy::Urgency).decide(0, true, &q), Verdict::Reject);
+    }
+
+    #[test]
+    fn urgency_skips_empty_queues_when_picking_victims() {
+        // The lowest-score tenant has nothing queued; the next-lowest
+        // backlogged tenant pays instead.
+        let q = queues(&[0, 3, 3], &[0.1, 0.5, 3.0]);
+        assert_eq!(
+            adm(AdmissionPolicy::Urgency).decide(2, true, &q),
+            Verdict::AdmitShedding { victim: 1 }
+        );
+    }
+
+    #[test]
+    fn deadline_rejects_infeasible_even_when_idle() {
+        let q = queues(&[0, 0, 0], &[1.0, 1.0, 1.0]);
+        assert_eq!(adm(AdmissionPolicy::Deadline).decide(0, false, &q), Verdict::Reject);
+        assert_eq!(adm(AdmissionPolicy::Deadline).decide(0, true, &q), Verdict::Admit);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [AdmissionPolicy::Fifo, AdmissionPolicy::Urgency, AdmissionPolicy::Deadline] {
+            assert_eq!(AdmissionPolicy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::by_name("nope"), None);
+    }
+}

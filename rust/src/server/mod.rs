@@ -11,6 +11,21 @@
 //! Because the PJRT handles are thread-confined, serving is a
 //! single-threaded event loop over pre-materialized arrival times — the
 //! block swap I/O still overlaps execution inside `pipeline::real`.
+//!
+//! Multi-model serving lives in [`multi`]: a [`MultiTenantServer`] owns
+//! an [`Engine`](crate::engine::Engine), re-runs the paper's Eq. 1
+//! budget partition on every register/evict, applies admission control
+//! ([`admission`]) over bounded per-model queues, batches requests
+//! inside a model's resident window, and emits per-request
+//! [`ServeTrace`]s ([`trace`]).
+
+pub mod admission;
+pub mod multi;
+pub mod trace;
+
+pub use admission::{Admission, AdmissionPolicy, Verdict};
+pub use multi::{MultiTenantConfig, MultiTenantServer, Request};
+pub use trace::{ModelServeStats, MultiServeReport, ServeTrace};
 
 use anyhow::Result;
 

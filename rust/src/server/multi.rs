@@ -1,0 +1,839 @@
+//! Multi-tenant serving runtime over the [`Engine`] facade.
+//!
+//! This is the paper's multi-DNN scheduling scheme (§V / §6.2) made
+//! operational: a [`MultiTenantServer`] owns an `Engine`, accepts model
+//! registrations at runtime, and routes a stream of per-model inference
+//! requests through the fleet while the combined model footprint exceeds
+//! the memory budget.
+//!
+//! * **Dynamic budget partition** — every `register`/`evict` re-runs
+//!   Eq. 1 with feasibility floors over the surviving fleet
+//!   ([`scheduler::try_allocate_budgets_with_floors`]) and re-blocks
+//!   exactly the models whose share moved (`ModelHandle::rebudget` is a
+//!   no-op for unchanged budgets — the incremental re-partition).
+//! * **Admission control** — bounded per-model queues plus a global
+//!   backlog bound, arbitrated by a pluggable [`AdmissionPolicy`]
+//!   (FIFO / urgency-weighted via `ModelDemand::performance_score` /
+//!   deadline-aware), so overload sheds load instead of blowing the
+//!   budget.
+//! * **Resident-window batching** — requests that pile up while a model
+//!   is busy are served as one batch: the batch pays the block swap-in
+//!   pipeline once and each extra request only re-executes the resident
+//!   blocks, amortizing swap-in cost (`latency + (k-1) * compute`).
+//! * **Budget enforcement** — a shared [`MemSim`] ledger sized to the
+//!   fleet budget; a batch acquires its model's scheduled peak (plus
+//!   delta overhead) for its resident window via the swap controller,
+//!   so `peak() <= budget && oom_events == 0` is a *checked* claim.
+//! * **Traces** — every request yields a [`ServeTrace`] (queueing, swap,
+//!   assembly, compute) aggregated into a [`MultiServeReport`].
+//!
+//! Two drive modes share all of the above state machinery:
+//! [`serve`](MultiTenantServer::serve) replays a pre-materialized
+//! arrival stream on a deterministic virtual clock (CLI, benches), and
+//! [`serve_concurrent`](MultiTenantServer::serve_concurrent) accepts
+//! live submissions from [`MultiClient`]s on other threads and executes
+//! batches in per-tenant worker threads (`std::thread` + channels; the
+//! `Engine` itself is thread-confined, so workers run the same
+//! `engine::sim` cost model over `Send` schedule snapshots while
+//! planning stays on the server thread).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::DeviceProfile;
+use crate::delay::DelayModel;
+use crate::engine::sim::{simulate_scheduled, SnetConfig};
+use crate::engine::{Engine, ModelHandle};
+use crate::memsim::{AllocId, MemSim};
+use crate::model::ModelInfo;
+use crate::scheduler::{self, ModelDemand, Schedule};
+use crate::storage::Storage;
+use crate::swap::{SwapController, SwapMode};
+use crate::util::rng::Rng;
+
+use super::admission::{Admission, AdmissionPolicy, TenantQueue, Verdict};
+use super::trace::{MultiServeReport, ServeTrace};
+
+/// Multi-tenant serving configuration.
+#[derive(Debug, Clone)]
+pub struct MultiTenantConfig {
+    /// Fleet memory budget (bytes) shared by all registered models.
+    pub total_budget: u64,
+    pub policy: AdmissionPolicy,
+    /// Per-model queue bound.
+    pub queue_cap: usize,
+    /// Global backlog bound across all queues.
+    pub global_cap: usize,
+    /// Largest batch served inside one resident window.
+    pub max_batch: usize,
+    pub seed: u64,
+    /// Concurrent mode only: wall seconds slept per simulated second,
+    /// compressing the virtual timescale so batch execution windows
+    /// really overlap across worker threads without slowing tests.
+    pub time_scale: f64,
+}
+
+impl MultiTenantConfig {
+    pub fn new(total_budget: u64) -> MultiTenantConfig {
+        MultiTenantConfig {
+            total_budget,
+            policy: AdmissionPolicy::Urgency,
+            queue_cap: 16,
+            global_cap: 32,
+            max_batch: 8,
+            seed: 1,
+            time_scale: 0.0,
+        }
+    }
+}
+
+/// One inference request routed to a registered tenant.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub tenant: usize,
+    /// Arrival time on the serving clock (virtual seconds in
+    /// [`MultiTenantServer::serve`], wall seconds since run start in
+    /// concurrent mode).
+    pub arrival_s: f64,
+    /// Absolute completion deadline on the same clock.
+    pub deadline_s: Option<f64>,
+}
+
+/// Synthetic mixed request stream: Poisson arrivals at `rate_hz`
+/// uniformly spread over `tenants` models, sorted by arrival.
+pub fn poisson_stream(tenants: usize, requests: usize, rate_hz: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..requests)
+        .map(|_| {
+            t += rng.exp(rate_hz);
+            Request { tenant: rng.below(tenants.max(1)), arrival_s: t, deadline_s: None }
+        })
+        .collect()
+}
+
+struct Tenant {
+    name: String,
+    handle: ModelHandle,
+    model: ModelInfo,
+    urgency: f64,
+    /// `ModelDemand::performance_score` — the admission policy's rank.
+    score: f64,
+    queue: VecDeque<Request>,
+    /// Virtual clock at which the current batch's resident window ends.
+    free_at: f64,
+    batches: u64,
+    evicted: bool,
+    swapper: SwapController,
+}
+
+/// A batch in its resident window (virtual-clock mode).
+struct Inflight {
+    tenant: usize,
+    t_dispatch: f64,
+    t_done: f64,
+    reqs: Vec<Request>,
+    swap_s: f64,
+    assembly_s: f64,
+    compute_s: f64,
+    alloc: AllocId,
+}
+
+/// Messages feeding the concurrent serve loop: live client submissions
+/// and worker completions share one channel so the single-consumer
+/// server thread needs no select.
+enum ServerMsg {
+    Submit { tenant: usize, deadline_rel_s: Option<f64> },
+    Done { tenant: usize, outcome: Result<WorkerDone, String> },
+}
+
+struct WorkerDone {
+    latency_s: f64,
+    swap_s: f64,
+    assembly_s: f64,
+    compute_s: f64,
+}
+
+/// A batch job shipped to a tenant's worker thread (all `Send` data —
+/// the schedule snapshot taken at dispatch keeps workers correct across
+/// rebudgets).
+struct Job {
+    batch: usize,
+    seed_bump: u64,
+    budget: u64,
+    resident_bytes: u64,
+    schedule: Schedule,
+}
+
+/// Handle for submitting requests to a running
+/// [`MultiTenantServer::serve_concurrent`] loop from any thread.
+#[derive(Clone)]
+pub struct MultiClient {
+    tx: Sender<ServerMsg>,
+}
+
+impl MultiClient {
+    /// Submit one request; returns false once the server is gone.
+    pub fn submit(&self, tenant: usize) -> bool {
+        self.tx.send(ServerMsg::Submit { tenant, deadline_rel_s: None }).is_ok()
+    }
+
+    /// Submit with a deadline `deadline_rel_s` seconds after arrival.
+    pub fn submit_with_deadline(&self, tenant: usize, deadline_rel_s: f64) -> bool {
+        self.tx
+            .send(ServerMsg::Submit { tenant, deadline_rel_s: Some(deadline_rel_s) })
+            .is_ok()
+    }
+}
+
+/// The concurrent multi-tenant serving runtime (see module docs).
+pub struct MultiTenantServer {
+    engine: Engine,
+    cfg: MultiTenantConfig,
+    admission: Admission,
+    tenants: Vec<Tenant>,
+    /// Shared residency ledger sized to the fleet budget.
+    mem: Arc<Mutex<MemSim>>,
+    /// Long-lived block store (page-cache hygiene across evictions).
+    storage: Storage,
+    tx: Sender<ServerMsg>,
+    rx: Receiver<ServerMsg>,
+}
+
+impl MultiTenantServer {
+    /// Wrap an engine (usually a fresh sim engine) in the serving
+    /// runtime. The engine's device profile stays authoritative for
+    /// scheduling; `cfg.total_budget` is the fleet's shared budget.
+    pub fn new(engine: Engine, cfg: MultiTenantConfig) -> MultiTenantServer {
+        let admission = Admission {
+            policy: cfg.policy,
+            per_model: cfg.queue_cap,
+            global: cfg.global_cap,
+        };
+        let (tx, rx) = channel();
+        MultiTenantServer {
+            admission,
+            mem: Arc::new(Mutex::new(MemSim::new(cfg.total_budget))),
+            storage: Storage::new(cfg.total_budget.max(64_000_000)),
+            tenants: Vec::new(),
+            engine,
+            cfg,
+            tx,
+            rx,
+        }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn config(&self) -> &MultiTenantConfig {
+        &self.cfg
+    }
+
+    /// Live (non-evicted) tenant indices.
+    fn live_indices(&self) -> Vec<usize> {
+        (0..self.tenants.len()).filter(|&i| !self.tenants[i].evicted).collect()
+    }
+
+    /// Number of live tenants.
+    pub fn registered(&self) -> usize {
+        self.live_indices().len()
+    }
+
+    /// Current (name, budget, n_blocks) of every live tenant.
+    pub fn budgets(&self) -> Vec<(String, u64, usize)> {
+        self.live_indices()
+            .into_iter()
+            .map(|i| {
+                let t = &self.tenants[i];
+                (t.name.clone(), t.handle.budget(), t.handle.schedule().n_blocks)
+            })
+            .collect()
+    }
+
+    /// Combined footprint of the live fleet (bytes).
+    pub fn fleet_bytes(&self) -> u64 {
+        self.live_indices()
+            .into_iter()
+            .map(|i| self.tenants[i].model.size_bytes())
+            .sum()
+    }
+
+    /// Eq. 1 + floors over the live fleet, optionally including a
+    /// not-yet-registered newcomer at the end of the budget vector.
+    fn partition_with(
+        &self,
+        extra: Option<(&ModelInfo, f64)>,
+    ) -> Result<(Vec<usize>, Vec<u64>)> {
+        let live = self.live_indices();
+        let dm = DelayModel::from_profile(&self.engine.profile());
+        let mut demands: Vec<ModelDemand> = Vec::with_capacity(live.len() + 1);
+        let mut floors: Vec<u64> = Vec::with_capacity(live.len() + 1);
+        for &i in &live {
+            let t = &self.tenants[i];
+            demands.push(ModelDemand::from_model(&t.model, &dm, t.urgency));
+            floors.push(scheduler::minimal_budget(&t.model));
+        }
+        if let Some((m, u)) = extra {
+            demands.push(ModelDemand::from_model(m, &dm, u));
+            floors.push(scheduler::minimal_budget(m));
+        }
+        let budgets =
+            scheduler::try_allocate_budgets_with_floors(&demands, &floors, self.cfg.total_budget)
+                .map_err(|e| anyhow!("fleet budget partition: {e}"))?;
+        Ok((live, budgets))
+    }
+
+    /// Re-block every live tenant whose budget share moved (unchanged
+    /// shares keep their partition — `rebudget` short-circuits).
+    fn apply_budgets(&mut self, live: &[usize], budgets: &[u64]) -> Result<()> {
+        for (&i, &b) in live.iter().zip(budgets) {
+            self.tenants[i].handle.rebudget(b)?;
+        }
+        Ok(())
+    }
+
+    /// Register a model at runtime: the fleet budget is re-partitioned
+    /// (Eq. 1 + floors) across the grown fleet, affected survivors are
+    /// re-blocked, and the newcomer is registered under its share.
+    /// Returns the tenant id used in [`Request::tenant`].
+    pub fn register(&mut self, model: ModelInfo, urgency: f64) -> Result<usize> {
+        let (live, budgets) = self.partition_with(Some((&model, urgency)))?;
+        let newcomer_budget = *budgets.last().expect("partition includes the newcomer");
+        let handle = self.engine.register_with_budget(model.clone(), newcomer_budget)?;
+        self.apply_budgets(&live, &budgets[..budgets.len() - 1])?;
+        let dm = DelayModel::from_profile(&self.engine.profile());
+        let score = ModelDemand::from_model(&model, &dm, urgency).performance_score();
+        let swapper = SwapController::new(SwapMode::ZeroCopy, &model.name);
+        self.tenants.push(Tenant {
+            name: model.name.clone(),
+            handle,
+            model,
+            urgency,
+            score,
+            queue: VecDeque::new(),
+            free_at: 0.0,
+            batches: 0,
+            evicted: false,
+            swapper,
+        });
+        Ok(self.tenants.len() - 1)
+    }
+
+    /// Evict a tenant at runtime: queued requests are dropped, engine
+    /// backend state is released, the model's cached block pages are
+    /// evicted from the shared store, and the survivors re-expand into
+    /// the freed budget. Returns the number of shed requests.
+    pub fn evict(&mut self, tenant: usize) -> Result<usize> {
+        let count = self.tenants.len();
+        let t = self
+            .tenants
+            .get_mut(tenant)
+            .ok_or_else(|| anyhow!("no tenant {tenant} (have {count})"))?;
+        if t.evicted {
+            bail!("tenant {} ({}) already evicted", tenant, t.name);
+        }
+        let shed = t.queue.len();
+        t.queue.clear();
+        let n_blocks = t.handle.schedule().n_blocks;
+        t.handle.evict()?;
+        t.evicted = true;
+        // Swap hygiene: drop whatever the departed model left in the
+        // shared block store. Zero-copy serving leaves no page-cache
+        // residue by design (the DMA channel bypasses it), so this pass
+        // only finds pages when a tenant ran the standard buffered path
+        // (w/o-uni-add ablation config, artifact file reads); blocks
+        // reacquire lazily if the model ever returns.
+        let files: Vec<u64> = (0..n_blocks).map(|b| block_file(tenant, b)).collect();
+        {
+            let mut mem = self.mem.lock().expect("ledger poisoned");
+            let t = &self.tenants[tenant];
+            t.swapper.evict_files(files, &mut self.storage, &mut mem);
+        }
+        // Survivors re-expand into the freed budget.
+        if self.registered() > 0 {
+            let (live, budgets) = self.partition_with(None)?;
+            self.apply_budgets(&live, &budgets)
+                .map_err(|e| e.context("re-expanding survivors after eviction"))?;
+        }
+        Ok(shed)
+    }
+
+    // ---------------------------------------------------------------
+    // shared state machinery
+    // ---------------------------------------------------------------
+
+    /// Apply the admission decision for `req`; returns true if queued.
+    fn admit(&mut self, req: Request, deadline_ok: bool, rep: &mut MultiServeReport) -> bool {
+        let ti = req.tenant;
+        if ti >= self.tenants.len() || self.tenants[ti].evicted {
+            rep.record_rejected(
+                self.tenants.get(ti).map(|t| t.name.as_str()).unwrap_or("unknown"),
+            );
+            return false;
+        }
+        let queues: Vec<TenantQueue> = self
+            .tenants
+            .iter()
+            .map(|t| TenantQueue { len: if t.evicted { 0 } else { t.queue.len() }, score: t.score })
+            .collect();
+        match self.admission.decide(ti, deadline_ok, &queues) {
+            Verdict::Admit => {
+                self.tenants[ti].queue.push_back(req);
+                true
+            }
+            Verdict::AdmitShedding { victim } => {
+                if self.tenants[victim].queue.pop_front().is_some() {
+                    let vname = self.tenants[victim].name.clone();
+                    rep.record_shed(&vname);
+                }
+                self.tenants[ti].queue.push_back(req);
+                true
+            }
+            Verdict::Reject => {
+                let name = self.tenants[ti].name.clone();
+                rep.record_rejected(&name);
+                false
+            }
+        }
+    }
+
+    /// Deadline feasibility estimate at admission time (virtual mode):
+    /// the batch starts no earlier than the model frees up.
+    fn deadline_ok(&self, req: &Request, now: f64) -> bool {
+        let Some(d) = req.deadline_s else { return true };
+        let ti = req.tenant;
+        if ti >= self.tenants.len() || self.tenants[ti].evicted {
+            return true; // rejection happens in admit()
+        }
+        let t = &self.tenants[ti];
+        let start = t.free_at.max(now);
+        start + t.handle.schedule().predicted_latency_s <= d
+    }
+
+    /// Drop queued requests whose deadline already passed (deadline
+    /// policy only).
+    fn expire_deadlines(&mut self, ti: usize, now: f64, rep: &mut MultiServeReport) {
+        if self.cfg.policy != AdmissionPolicy::Deadline {
+            return;
+        }
+        let name = self.tenants[ti].name.clone();
+        let before = self.tenants[ti].queue.len();
+        self.tenants[ti].queue.retain(|r| match r.deadline_s {
+            Some(d) => d >= now,
+            None => true,
+        });
+        for _ in 0..before - self.tenants[ti].queue.len() {
+            rep.record_shed(&name);
+        }
+    }
+
+    /// Dispatch the next batch for `ti` if it is idle and has work
+    /// (virtual-clock mode).
+    fn try_dispatch(
+        &mut self,
+        ti: usize,
+        now: f64,
+        rep: &mut MultiServeReport,
+    ) -> Result<Option<Inflight>> {
+        if ti >= self.tenants.len() || self.tenants[ti].evicted {
+            return Ok(None);
+        }
+        if self.tenants[ti].free_at > now + 1e-12 {
+            return Ok(None); // resident window still busy
+        }
+        self.expire_deadlines(ti, now, rep);
+        let k = self.tenants[ti].queue.len().min(self.cfg.max_batch);
+        if k == 0 {
+            return Ok(None);
+        }
+        let t = &mut self.tenants[ti];
+        let reqs: Vec<Request> = t.queue.drain(..k).collect();
+        let seed_bump = t.batches;
+        t.batches += 1;
+        let report = t.handle.infer_sim_seeded(seed_bump)?;
+        // Resident-window batching: the swap pipeline runs once, extra
+        // requests re-execute the resident blocks.
+        let batch_latency = report.latency_s + (k - 1) as f64 * report.compute_s;
+        let resident = t.handle.schedule().peak_bytes + scheduler::overhead_bytes(&t.model);
+        let alloc = {
+            let mut mem = self.mem.lock().expect("ledger poisoned");
+            t.swapper.acquire_residency(&mut mem, resident)
+        };
+        let t_done = now + batch_latency;
+        t.free_at = t_done;
+        Ok(Some(Inflight {
+            tenant: ti,
+            t_dispatch: now,
+            t_done,
+            reqs,
+            swap_s: report.swap_s,
+            assembly_s: report.assembly_s,
+            compute_s: report.compute_s,
+            alloc,
+        }))
+    }
+
+    /// Finish a batch: release its residency, emit traces, and dispatch
+    /// the tenant's next batch if one is queued.
+    fn complete(
+        &mut self,
+        ev: Inflight,
+        rep: &mut MultiServeReport,
+        inflight: &mut Vec<Inflight>,
+    ) -> Result<()> {
+        {
+            let mut mem = self.mem.lock().expect("ledger poisoned");
+            self.tenants[ev.tenant].swapper.release_residency(&mut mem, ev.alloc);
+        }
+        let name = self.tenants[ev.tenant].name.clone();
+        let k = ev.reqs.len().max(1);
+        for r in &ev.reqs {
+            rep.record(ServeTrace {
+                model: name.clone(),
+                queue_s: ev.t_dispatch - r.arrival_s,
+                swap_s: ev.swap_s / k as f64,
+                assembly_s: ev.assembly_s / k as f64,
+                compute_s: ev.compute_s,
+                e2e_s: ev.t_done - r.arrival_s,
+                batch: k,
+            });
+        }
+        rep.record_batch(&name);
+        if let Some(next) = self.try_dispatch(ev.tenant, ev.t_done, rep)? {
+            inflight.push(next);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // virtual-clock serving
+    // ---------------------------------------------------------------
+
+    /// Serve a pre-materialized request stream on a deterministic
+    /// virtual clock. Per-tenant resident windows overlap in virtual
+    /// time; the shared ledger accounts their concurrent residency in
+    /// event order, so the report's `peak_bytes`/`oom_events` bound the
+    /// fleet's true concurrent footprint.
+    pub fn serve(&mut self, stream: &[Request]) -> Result<MultiServeReport> {
+        let wall0 = Instant::now();
+        {
+            let mut mem = self.mem.lock().expect("ledger poisoned");
+            mem.reset_peaks();
+            mem.oom_events = 0;
+        }
+        // Each run starts a fresh serving clock: rewind every tenant's
+        // resident-window marker (queues are already drained — a
+        // completed run never leaves admitted work behind).
+        for t in &mut self.tenants {
+            t.free_at = 0.0;
+        }
+        let mut rep = MultiServeReport::new(self.cfg.total_budget);
+        let mut inflight: Vec<Inflight> = Vec::new();
+        let mut clock = 0.0f64;
+        for req in stream {
+            if req.arrival_s + 1e-9 < clock {
+                bail!("request stream must be sorted by arrival time");
+            }
+            // Retire every batch due before this arrival (each may chain
+            // a follow-up dispatch, re-scanned by next_due).
+            while let Some(pos) = next_due(&inflight, req.arrival_s) {
+                let ev = inflight.swap_remove(pos);
+                clock = ev.t_done;
+                self.complete(ev, &mut rep, &mut inflight)?;
+            }
+            clock = req.arrival_s;
+            let deadline_ok = self.deadline_ok(req, clock);
+            if self.admit(*req, deadline_ok, &mut rep) {
+                if let Some(ev) = self.try_dispatch(req.tenant, clock, &mut rep)? {
+                    inflight.push(ev);
+                }
+            }
+        }
+        // Drain the tail.
+        while let Some(pos) = next_due(&inflight, f64::INFINITY) {
+            let ev = inflight.swap_remove(pos);
+            clock = ev.t_done;
+            self.complete(ev, &mut rep, &mut inflight)?;
+        }
+        let (peak, oom) = {
+            let mem = self.mem.lock().expect("ledger poisoned");
+            (mem.peak(), mem.oom_events)
+        };
+        rep.peak_bytes = peak;
+        rep.oom_events = oom;
+        rep.makespan_s = clock;
+        rep.wall_s = wall0.elapsed().as_secs_f64();
+        Ok(rep)
+    }
+
+    // ---------------------------------------------------------------
+    // concurrent serving
+    // ---------------------------------------------------------------
+
+    /// A cloneable submission handle for client threads feeding
+    /// [`serve_concurrent`](Self::serve_concurrent).
+    pub fn client(&self) -> MultiClient {
+        MultiClient { tx: self.tx.clone() }
+    }
+
+    /// Serve `expected` live submissions from [`MultiClient`]s. Batches
+    /// execute in one worker thread per tenant (the paper's per-model
+    /// CPU-affinity isolation), overlapping for real; each worker
+    /// acquires its model's scheduled peak in the shared ledger for the
+    /// duration of its (time-compressed) resident window, so the
+    /// returned report proves the fleet never exceeded the budget.
+    /// Returns once every submission is resolved (served/shed/rejected).
+    pub fn serve_concurrent(&mut self, expected: usize) -> Result<MultiServeReport> {
+        let wall0 = Instant::now();
+        {
+            let mut mem = self.mem.lock().expect("ledger poisoned");
+            mem.reset_peaks();
+            mem.oom_events = 0;
+        }
+        let mut rep = MultiServeReport::new(self.cfg.total_budget);
+
+        // One worker per live tenant.
+        let mut job_tx: HashMap<usize, Sender<Job>> = HashMap::new();
+        let mut workers = Vec::new();
+        for ti in self.live_indices() {
+            let (jtx, jrx) = channel::<Job>();
+            job_tx.insert(ti, jtx);
+            let done_tx = self.tx.clone();
+            let mem = Arc::clone(&self.mem);
+            let model = self.tenants[ti].model.clone();
+            let tag = self.tenants[ti].name.clone();
+            let prof = self.engine.profile();
+            let base_cfg = self.engine.config();
+            let time_scale = self.cfg.time_scale;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(ti, jrx, done_tx, mem, model, tag, prof, base_cfg, time_scale)
+            }));
+        }
+
+        // (dispatch wall time, batch requests) for the one inflight
+        // batch a tenant may have.
+        let mut inflight: HashMap<usize, (f64, Vec<Request>)> = HashMap::new();
+        let mut fatal: Option<anyhow::Error> = None;
+        while rep.resolved() < expected {
+            let msg = match self.rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => {
+                    fatal = Some(anyhow!(
+                        "serve_concurrent stalled: {} of {expected} requests resolved",
+                        rep.resolved()
+                    ));
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    fatal = Some(anyhow!("server channel disconnected"));
+                    break;
+                }
+            };
+            match msg {
+                ServerMsg::Submit { tenant, deadline_rel_s } => {
+                    let now = wall0.elapsed().as_secs_f64();
+                    let req = Request {
+                        tenant,
+                        arrival_s: now,
+                        deadline_s: deadline_rel_s.map(|d| now + d),
+                    };
+                    // Deadline feasibility against the queued backlog
+                    // (wall-clock mode has no virtual free_at).
+                    let deadline_ok = match deadline_rel_s {
+                        None => true,
+                        Some(d) => {
+                            let backlog = self
+                                .tenants
+                                .get(tenant)
+                                .map(|t| t.queue.len() + usize::from(inflight.contains_key(&tenant)))
+                                .unwrap_or(0);
+                            let predicted = self
+                                .tenants
+                                .get(tenant)
+                                .filter(|t| !t.evicted)
+                                .map(|t| t.handle.schedule().predicted_latency_s)
+                                .unwrap_or(0.0);
+                            (backlog + 1) as f64 * predicted * self.cfg.time_scale.max(1e-9) <= d
+                                || self.cfg.time_scale == 0.0
+                        }
+                    };
+                    if self.admit(req, deadline_ok, &mut rep)
+                        && !inflight.contains_key(&tenant)
+                    {
+                        self.dispatch_concurrent(tenant, &job_tx, &mut inflight, wall0, &mut rep)?;
+                    }
+                }
+                ServerMsg::Done { tenant, outcome } => {
+                    let Some((t_dispatch, reqs)) = inflight.remove(&tenant) else {
+                        continue; // worker completion for a dropped batch
+                    };
+                    match outcome {
+                        Err(e) => {
+                            fatal = Some(anyhow!("tenant {tenant} worker: {e}"));
+                            break;
+                        }
+                        Ok(done) => {
+                            let now = wall0.elapsed().as_secs_f64();
+                            let name = self.tenants[tenant].name.clone();
+                            let k = reqs.len().max(1);
+                            for r in &reqs {
+                                // Wall clock end to end (arrival and
+                                // completion are both wall-measured); the
+                                // swap/assembly/compute components stay on
+                                // the cost-model clock as a decomposition.
+                                rep.record(ServeTrace {
+                                    model: name.clone(),
+                                    queue_s: t_dispatch - r.arrival_s,
+                                    swap_s: done.swap_s / k as f64,
+                                    assembly_s: done.assembly_s / k as f64,
+                                    compute_s: done.compute_s,
+                                    e2e_s: now - r.arrival_s,
+                                    batch: k,
+                                });
+                            }
+                            rep.record_batch(&name);
+                            rep.makespan_s = rep.makespan_s.max(now);
+                            if !self.tenants[tenant].queue.is_empty() {
+                                self.dispatch_concurrent(
+                                    tenant,
+                                    &job_tx,
+                                    &mut inflight,
+                                    wall0,
+                                    &mut rep,
+                                )?;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Retire the workers: closing the job channels ends their loops.
+        drop(job_tx);
+        for w in workers {
+            let _ = w.join();
+        }
+        if let Some(e) = fatal {
+            return Err(e);
+        }
+        let (peak, oom) = {
+            let mem = self.mem.lock().expect("ledger poisoned");
+            (mem.peak(), mem.oom_events)
+        };
+        rep.peak_bytes = peak;
+        rep.oom_events = oom;
+        rep.wall_s = wall0.elapsed().as_secs_f64();
+        Ok(rep)
+    }
+
+    /// Drain up to `max_batch` queued requests for `ti` into a worker
+    /// job (concurrent mode).
+    fn dispatch_concurrent(
+        &mut self,
+        ti: usize,
+        job_tx: &HashMap<usize, Sender<Job>>,
+        inflight: &mut HashMap<usize, (f64, Vec<Request>)>,
+        wall0: Instant,
+        rep: &mut MultiServeReport,
+    ) -> Result<()> {
+        let Some(jtx) = job_tx.get(&ti) else {
+            bail!("tenant {ti} registered after serve_concurrent started");
+        };
+        // Same dispatch-time hygiene as the virtual path: deadline-policy
+        // queues drop entries whose (wall) deadline already lapsed.
+        self.expire_deadlines(ti, wall0.elapsed().as_secs_f64(), rep);
+        let t = &mut self.tenants[ti];
+        let k = t.queue.len().min(self.cfg.max_batch);
+        if k == 0 {
+            return Ok(());
+        }
+        let reqs: Vec<Request> = t.queue.drain(..k).collect();
+        let seed_bump = t.batches;
+        t.batches += 1;
+        let job = Job {
+            batch: k,
+            seed_bump,
+            budget: t.handle.budget(),
+            resident_bytes: t.handle.schedule().peak_bytes + scheduler::overhead_bytes(&t.model),
+            schedule: t.handle.schedule(),
+        };
+        jtx.send(job).map_err(|_| anyhow!("tenant {ti} worker is gone"))?;
+        inflight.insert(ti, (wall0.elapsed().as_secs_f64(), reqs));
+        Ok(())
+    }
+}
+
+/// Index of the inflight batch with the earliest `t_done <= limit`.
+fn next_due(inflight: &[Inflight], limit: f64) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, ev) in inflight.iter().enumerate() {
+        if ev.t_done <= limit {
+            match best {
+                Some(b) if inflight[b].t_done <= ev.t_done => {}
+                _ => best = Some(i),
+            }
+        }
+    }
+    best
+}
+
+/// Deterministic synthetic block-file id for (tenant, block).
+fn block_file(tenant: usize, block: usize) -> u64 {
+    0x6000_0000 + ((tenant as u64) << 12) + block as u64
+}
+
+/// Per-tenant worker: runs the same `engine::sim` cost model the engine
+/// itself dispatches, against a `Send` snapshot of the tenant's
+/// schedule, holding the model's residency in the shared ledger for the
+/// (time-compressed) duration of the batch window.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    tenant: usize,
+    jobs: Receiver<Job>,
+    done: Sender<ServerMsg>,
+    mem: Arc<Mutex<MemSim>>,
+    model: ModelInfo,
+    tag: String,
+    prof: DeviceProfile,
+    base_cfg: SnetConfig,
+    time_scale: f64,
+) {
+    let swapper = SwapController::new(SwapMode::ZeroCopy, &tag);
+    while let Ok(job) = jobs.recv() {
+        let alloc = {
+            let mut mem = mem.lock().expect("ledger poisoned");
+            swapper.acquire_residency(&mut mem, job.resident_bytes)
+        };
+        let mut cfg = base_cfg;
+        cfg.seed = base_cfg.seed.wrapping_add(job.seed_bump);
+        let outcome = simulate_scheduled(&model, job.budget, &prof, &cfg, Some(&job.schedule))
+            .map(|run| {
+                let latency_s = run.latency_s + (job.batch - 1) as f64 * run.compute_s;
+                WorkerDone {
+                    latency_s,
+                    swap_s: run.swap_s,
+                    assembly_s: run.assembly_s,
+                    compute_s: run.compute_s,
+                }
+            });
+        if let (Ok(d), true) = (&outcome, time_scale > 0.0) {
+            // Hold the resident window for real so tenant windows
+            // genuinely overlap across threads.
+            std::thread::sleep(Duration::from_secs_f64(
+                (d.latency_s * time_scale).min(0.25),
+            ));
+        }
+        {
+            let mut mem = mem.lock().expect("ledger poisoned");
+            swapper.release_residency(&mut mem, alloc);
+        }
+        if done.send(ServerMsg::Done { tenant, outcome }).is_err() {
+            break; // server loop ended
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Per-request serving traces and their fleet-level aggregation.
+//!
+//! Every request served by the multi-tenant runtime yields a
+//! [`ServeTrace`]: where its latency went (queueing, swap I/O, skeleton
+//! assembly, execution), at what batch size, against which model. The
+//! per-model and fleet aggregates ([`MultiServeReport`]) are what the
+//! `serve-multi` CLI prints and what the tests assert budget safety on.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::LatencyRecorder;
+
+/// One request's delay decomposition.
+///
+/// `swap_s` and `assembly_s` are the request's amortized share of its
+/// batch's swap-in/assembly work (paid once per resident window);
+/// `compute_s` is the full execution pass. Because the m=2 pipeline
+/// overlaps swap with execution, the components deliberately do NOT sum
+/// to `e2e_s` — the decomposition explains the latency, the recorded
+/// `e2e_s` is the truth.
+#[derive(Debug, Clone)]
+pub struct ServeTrace {
+    pub model: String,
+    /// Admission-to-dispatch wait.
+    pub queue_s: f64,
+    /// Amortized swap-in I/O share of this request's batch.
+    pub swap_s: f64,
+    /// Amortized skeleton-assembly share.
+    pub assembly_s: f64,
+    /// Execution seconds of the request's own pass.
+    pub compute_s: f64,
+    /// End-to-end latency (arrival to completion).
+    pub e2e_s: f64,
+    /// Batch size the request was served in.
+    pub batch: usize,
+}
+
+/// Per-model serving aggregates.
+#[derive(Debug, Default, Clone)]
+pub struct ModelServeStats {
+    pub served: usize,
+    /// Requests dropped from the queue (policy shedding, passed
+    /// deadlines, eviction) after having been admitted.
+    pub shed: usize,
+    /// Requests refused at admission.
+    pub rejected: usize,
+    pub batches: usize,
+    /// End-to-end latency per served request.
+    pub latency: LatencyRecorder,
+    /// Queueing delay per served request.
+    pub queue: LatencyRecorder,
+    pub swap_s: f64,
+    pub assembly_s: f64,
+    pub compute_s: f64,
+}
+
+impl ModelServeStats {
+    pub fn mean_batch(&self) -> f64 {
+        self.served as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// Aggregated outcome of one multi-tenant serving run.
+#[derive(Debug)]
+pub struct MultiServeReport {
+    /// The fleet budget the run was accounted against.
+    pub total_budget: u64,
+    pub served: usize,
+    pub shed: usize,
+    pub rejected: usize,
+    pub batches: usize,
+    /// Host wall time of the run.
+    pub wall_s: f64,
+    /// Serving-clock time at which the last batch completed.
+    pub makespan_s: f64,
+    /// Peak bytes observed in the shared residency ledger.
+    pub peak_bytes: u64,
+    /// Ledger overcommit events — 0 means zero budget violations.
+    pub oom_events: u64,
+    pub per_model: BTreeMap<String, ModelServeStats>,
+    pub traces: Vec<ServeTrace>,
+}
+
+impl MultiServeReport {
+    pub fn new(total_budget: u64) -> MultiServeReport {
+        MultiServeReport {
+            total_budget,
+            served: 0,
+            shed: 0,
+            rejected: 0,
+            batches: 0,
+            wall_s: 0.0,
+            makespan_s: 0.0,
+            peak_bytes: 0,
+            oom_events: 0,
+            per_model: BTreeMap::new(),
+            traces: Vec::new(),
+        }
+    }
+
+    /// Record one served request's trace.
+    pub fn record(&mut self, tr: ServeTrace) {
+        self.served += 1;
+        let m = self.per_model.entry(tr.model.clone()).or_default();
+        m.served += 1;
+        m.latency.record(tr.e2e_s);
+        m.queue.record(tr.queue_s);
+        m.swap_s += tr.swap_s;
+        m.assembly_s += tr.assembly_s;
+        m.compute_s += tr.compute_s;
+        self.traces.push(tr);
+    }
+
+    /// Record one completed batch for a model.
+    pub fn record_batch(&mut self, model: &str) {
+        self.batches += 1;
+        self.per_model.entry(model.to_string()).or_default().batches += 1;
+    }
+
+    /// Record a queued request dropped before dispatch.
+    pub fn record_shed(&mut self, model: &str) {
+        self.shed += 1;
+        self.per_model.entry(model.to_string()).or_default().shed += 1;
+    }
+
+    /// Record a request refused at admission.
+    pub fn record_rejected(&mut self, model: &str) {
+        self.rejected += 1;
+        self.per_model.entry(model.to_string()).or_default().rejected += 1;
+    }
+
+    /// Requests resolved one way or another.
+    pub fn resolved(&self) -> usize {
+        self.served + self.shed + self.rejected
+    }
+
+    /// True when the run never exceeded the fleet budget.
+    pub fn within_budget(&self) -> bool {
+        self.oom_events == 0 && self.peak_bytes <= self.total_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(model: &str, e2e: f64) -> ServeTrace {
+        ServeTrace {
+            model: model.into(),
+            queue_s: 0.1,
+            swap_s: 0.02,
+            assembly_s: 0.001,
+            compute_s: 0.4,
+            e2e_s: e2e,
+            batch: 2,
+        }
+    }
+
+    #[test]
+    fn report_aggregates_per_model() {
+        let mut rep = MultiServeReport::new(1000);
+        rep.record(trace("a", 0.5));
+        rep.record(trace("a", 0.7));
+        rep.record(trace("b", 1.0));
+        rep.record_batch("a");
+        rep.record_shed("b");
+        rep.record_rejected("a");
+        assert_eq!(rep.served, 3);
+        assert_eq!(rep.resolved(), 5);
+        let a = &rep.per_model["a"];
+        assert_eq!(a.served, 2);
+        assert_eq!(a.batches, 1);
+        assert_eq!(a.rejected, 1);
+        assert!((a.latency.mean() - 0.6).abs() < 1e-9);
+        assert!((a.mean_batch() - 2.0).abs() < 1e-9);
+        assert_eq!(rep.per_model["b"].shed, 1);
+    }
+
+    #[test]
+    fn budget_verdict() {
+        let mut rep = MultiServeReport::new(1000);
+        rep.peak_bytes = 900;
+        assert!(rep.within_budget());
+        rep.oom_events = 1;
+        assert!(!rep.within_budget());
+        rep.oom_events = 0;
+        rep.peak_bytes = 1001;
+        assert!(!rep.within_budget());
+    }
+}

@@ -143,6 +143,12 @@ impl Storage {
             self.cache.drop_file(id, mem);
         }
     }
+
+    /// Drop a synthetic file id's cached pages (eviction hygiene for the
+    /// multi-tenant server, which keys block files by id, not path).
+    pub fn evict_file_id(&mut self, file: u64, mem: &mut MemSim) {
+        self.cache.drop_file(file, mem);
+    }
 }
 
 /// Linux `O_DIRECT` open flag (kept local instead of pulling in `libc`

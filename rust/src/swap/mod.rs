@@ -171,6 +171,38 @@ impl SwapController {
         )
     }
 
+    /// Reserve `bytes` of block residency for this controller's model in
+    /// the shared budget ledger — the multi-tenant server acquires a
+    /// model's scheduled peak (plus delta overhead) for the duration of a
+    /// batch's resident window and releases it at completion, so the
+    /// ledger's peak/OOM counters prove the fleet never exceeds the
+    /// total budget.
+    pub fn acquire_residency(&self, mem: &mut MemSim, bytes: u64) -> AllocId {
+        mem.alloc(&self.tag, Space::Unified, bytes)
+    }
+
+    /// Release a residency reservation; returns the bytes freed.
+    pub fn release_residency(&self, mem: &mut MemSim, id: AllocId) -> u64 {
+        let freed = mem.size_of(id).unwrap_or(0);
+        mem.free(id);
+        freed
+    }
+
+    /// Eviction hygiene: drop every cached page of the model's block
+    /// files (the posix_fadvise(DONTNEED) pass a real eviction issues so
+    /// a departed tenant leaves no page-cache residue behind). The model
+    /// reacquires its pages lazily on the next swap-in.
+    pub fn evict_files(
+        &self,
+        files: impl IntoIterator<Item = u64>,
+        storage: &mut Storage,
+        mem: &mut MemSim,
+    ) {
+        for f in files {
+            storage.evict_file_id(f, mem);
+        }
+    }
+
     /// Swap-out: free the block's allocations (write-back-free); latency
     /// is skeleton pointer reset (eta * depth) + the GC pass.
     pub fn swap_out(
@@ -300,6 +332,43 @@ mod tests {
         let rb = ctl.swap_in_sim(&block(64), 1, Processor::Cpu, &mut st, &mut mem, &prof);
         ctl.swap_out(rb, &mut mem, &prof);
         assert!(mem.current_in(Space::PageCache) > 0);
+    }
+
+    #[test]
+    fn residency_ledger_acquire_release_roundtrip() {
+        let (_st, mut mem, _prof) = setup();
+        let ctl = SwapController::new(SwapMode::ZeroCopy, "resnet");
+        let a = ctl.acquire_residency(&mut mem, 120 * MB);
+        let b = ctl.acquire_residency(&mut mem, 40 * MB);
+        assert_eq!(mem.current(), 160 * MB);
+        assert_eq!(mem.tag_stat("resnet").cur, 160 * MB);
+        assert_eq!(ctl.release_residency(&mut mem, a), 120 * MB);
+        assert_eq!(ctl.release_residency(&mut mem, b), 40 * MB);
+        assert_eq!(mem.current(), 0);
+        // Releasing twice is harmless (MemSim::free is idempotent).
+        assert_eq!(ctl.release_residency(&mut mem, a), 0);
+    }
+
+    #[test]
+    fn eviction_drops_the_models_cached_pages_only() {
+        // Standard swap-ins of two models leave page-cache residue; the
+        // eviction pass must drop exactly the departing model's pages.
+        let (mut st, mut mem, prof) = setup();
+        let ctl_a = SwapController::new(SwapMode::Standard, "a");
+        let ctl_b = SwapController::new(SwapMode::Standard, "b");
+        let ra = ctl_a.swap_in_sim(&block(32), 100, Processor::Cpu, &mut st, &mut mem, &prof);
+        let rb = ctl_b.swap_in_sim(&block(32), 200, Processor::Cpu, &mut st, &mut mem, &prof);
+        ctl_a.swap_out(ra, &mut mem, &prof);
+        ctl_b.swap_out(rb, &mut mem, &prof);
+        let cached = mem.current_in(Space::PageCache);
+        assert!(cached >= 2 * 30 * MB, "both models' pages cached: {cached}");
+        ctl_a.evict_files([100u64], &mut st, &mut mem);
+        let after = mem.current_in(Space::PageCache);
+        assert!(after < cached, "eviction must drop pages");
+        assert!(after >= 30 * MB, "the survivor's pages stay cached: {after}");
+        // Reacquire is lazy: the next swap-in re-reads (cold misses).
+        let again = ctl_a.swap_in_sim(&block(32), 100, Processor::Cpu, &mut st, &mut mem, &prof);
+        assert!(again.cache_misses > 0, "evicted file must re-read cold");
     }
 
     #[test]

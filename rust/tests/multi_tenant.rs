@@ -1,0 +1,271 @@
+//! Multi-tenant serving runtime integration tests: dynamic Eq. 1
+//! re-partition on register/evict, admission control under overload,
+//! resident-window batching, per-request traces, and — the headline
+//! claim — a fleet whose combined footprint is well beyond the memory
+//! budget serving a mixed stream with zero budget violations, asserted
+//! via the shared MemSim residency ledger (virtual-clock mode) and via
+//! real worker threads against live client threads (concurrent mode).
+
+use swapnet::config::{DeviceProfile, MB};
+use swapnet::delay::DelayModel;
+use swapnet::engine::Engine;
+use swapnet::model::families;
+use swapnet::scheduler::ModelDemand;
+use swapnet::server::multi::{poisson_stream, MultiTenantConfig, MultiTenantServer, Request};
+use swapnet::server::AdmissionPolicy;
+
+fn trio() -> Vec<swapnet::model::ModelInfo> {
+    vec![families::resnet101(), families::yolov3(), families::fcn()]
+}
+
+fn server_300mb(policy: AdmissionPolicy) -> MultiTenantServer {
+    let mut cfg = MultiTenantConfig::new(300 * MB);
+    cfg.policy = policy;
+    cfg.queue_cap = 32;
+    cfg.global_cap = 96;
+    MultiTenantServer::new(Engine::builder().build(), cfg)
+}
+
+#[test]
+fn mixed_stream_beyond_budget_serves_with_zero_violations() {
+    // The acceptance demo: 3 models whose combined footprint is >=2x the
+    // budget serve a mixed stream with zero budget violations.
+    let mut server = server_300mb(AdmissionPolicy::Urgency);
+    for m in trio() {
+        server.register(m, 1.0).unwrap();
+    }
+    assert!(
+        server.fleet_bytes() >= 2 * 300 * MB,
+        "fleet {} must be >=2x the 300 MB budget",
+        server.fleet_bytes()
+    );
+    let stream = poisson_stream(3, 60, 30.0, 7);
+    let rep = server.serve(&stream).unwrap();
+    assert_eq!(rep.resolved(), 60);
+    assert_eq!(rep.served, 60, "caps sized to admit the whole stream");
+    assert!(rep.within_budget(), "peak {} vs {}", rep.peak_bytes, rep.total_budget);
+    assert!(rep.peak_bytes > 0);
+    assert_eq!(rep.oom_events, 0);
+    // 30 Hz arrivals against ~0.5 s model latencies force batching.
+    assert!(rep.batches < rep.served, "{} batches", rep.batches);
+    assert!(rep.per_model.values().any(|s| s.mean_batch() > 1.0));
+    // Traces decompose every request.
+    assert_eq!(rep.traces.len(), rep.served);
+    for tr in &rep.traces {
+        assert!(tr.e2e_s > 0.0, "{tr:?}");
+        assert!(tr.compute_s > 0.0);
+        assert!(tr.swap_s > 0.0, "every block pass swaps in: {tr:?}");
+        assert!(tr.queue_s >= -1e-9);
+        assert!(tr.batch >= 1);
+        assert!(tr.e2e_s + 1e-9 >= tr.queue_s + tr.compute_s, "overlap bound: {tr:?}");
+    }
+    let per_model_served: usize = rep.per_model.values().map(|s| s.served).sum();
+    assert_eq!(per_model_served, rep.served);
+
+    // A second run on the same server starts a fresh serving clock —
+    // tenants must not inherit the previous run's busy windows.
+    let rep2 = server.serve(&poisson_stream(3, 20, 30.0, 8)).unwrap();
+    assert_eq!(rep2.served, 20, "repeat serve must dispatch again");
+    assert!(rep2.within_budget());
+}
+
+#[test]
+fn register_and_evict_repartition_the_fleet_budget() {
+    let mut server = server_300mb(AdmissionPolicy::Urgency);
+    let _r = server.register(families::resnet101(), 1.0).unwrap();
+    let solo = server.budgets();
+    assert_eq!(solo.len(), 1);
+    assert_eq!(solo[0].1, families::resnet101().size_bytes(), "alone and fitting -> full demand");
+
+    let y = server.register(families::yolov3(), 1.0).unwrap();
+    server.register(families::fcn(), 1.0).unwrap();
+    let three: Vec<u64> = server.budgets().iter().map(|(_, b, _)| *b).collect();
+    assert_eq!(three.len(), 3);
+    assert!(three.iter().sum::<u64>() <= 300 * MB, "Eq. 1 conserves the fleet budget");
+    assert!(three[0] < solo[0].1, "new tenants shrink the incumbent's share");
+
+    // Evict one model at runtime: survivors re-expand into the freed
+    // budget and re-block under their larger shares.
+    let shed = server.evict(y).unwrap();
+    assert_eq!(shed, 0, "idle eviction sheds nothing");
+    assert_eq!(server.registered(), 2);
+    let after = server.budgets();
+    assert_eq!(after.len(), 2);
+    let resnet_after = after.iter().find(|(n, _, _)| n == "resnet101").unwrap().1;
+    assert!(resnet_after > three[0], "{resnet_after} vs {}", three[0]);
+    for (name, budget, _) in &after {
+        assert!(*budget > 0, "{name}");
+    }
+
+    // The reshuffled fleet still serves (tenant ids stay stable).
+    let stream = vec![
+        Request { tenant: 0, arrival_s: 0.0, deadline_s: None },
+        Request { tenant: 2, arrival_s: 0.1, deadline_s: None },
+    ];
+    let rep = server.serve(&stream).unwrap();
+    assert_eq!(rep.served, 2);
+
+    // Requests to the evicted tenant are cleanly rejected.
+    let stream = vec![Request { tenant: y, arrival_s: 0.0, deadline_s: None }];
+    let rep = server.serve(&stream).unwrap();
+    assert_eq!(rep.rejected, 1);
+    assert_eq!(rep.served, 0);
+
+    // Double eviction is a clean error.
+    assert!(server.evict(y).is_err());
+}
+
+#[test]
+fn urgency_overload_sheds_lowest_score_model_first() {
+    // Identify the lowest-performance-score family (paper §6.2.2: PS =
+    // u * latency / memory) — the policy's designated overload victim.
+    let dm = DelayModel::from_profile(&DeviceProfile::jetson_nx());
+    let fams = trio();
+    let min_name = fams
+        .iter()
+        .min_by(|a, b| {
+            ModelDemand::from_model(a, &dm, 1.0)
+                .performance_score()
+                .total_cmp(&ModelDemand::from_model(b, &dm, 1.0).performance_score())
+        })
+        .unwrap()
+        .name
+        .clone();
+
+    let mut cfg = MultiTenantConfig::new(300 * MB);
+    cfg.policy = AdmissionPolicy::Urgency;
+    cfg.queue_cap = 4;
+    cfg.global_cap = 6;
+    let mut server = MultiTenantServer::new(Engine::builder().build(), cfg);
+    for m in fams {
+        server.register(m, 1.0).unwrap();
+    }
+    // A near-instant round-robin burst overwhelms the bounded queues.
+    let stream: Vec<Request> = (0..40)
+        .map(|i| Request { tenant: i % 3, arrival_s: 1e-4 * i as f64, deadline_s: None })
+        .collect();
+    let rep = server.serve(&stream).unwrap();
+    assert_eq!(rep.resolved(), 40);
+    assert!(rep.shed > 0, "overload must shed");
+    assert!(rep.rejected > 0, "the lowest-score model's own arrivals get refused");
+    let min_shed = rep.per_model.get(&min_name).map(|s| s.shed).unwrap_or(0);
+    assert!(min_shed > 0, "lowest-score model {min_name} must shed first");
+    for (name, st) in &rep.per_model {
+        if name != &min_name {
+            assert!(
+                min_shed >= st.shed,
+                "{min_name} shed {min_shed} < {name} shed {}",
+                st.shed
+            );
+        }
+    }
+    assert!(rep.within_budget(), "shedding protects the budget");
+}
+
+#[test]
+fn fifo_overload_rejects_newcomers_instead_of_shedding() {
+    let mut cfg = MultiTenantConfig::new(300 * MB);
+    cfg.policy = AdmissionPolicy::Fifo;
+    cfg.queue_cap = 4;
+    cfg.global_cap = 6;
+    let mut server = MultiTenantServer::new(Engine::builder().build(), cfg);
+    for m in trio() {
+        server.register(m, 1.0).unwrap();
+    }
+    let stream: Vec<Request> = (0..40)
+        .map(|i| Request { tenant: i % 3, arrival_s: 1e-4 * i as f64, deadline_s: None })
+        .collect();
+    let rep = server.serve(&stream).unwrap();
+    assert_eq!(rep.resolved(), 40);
+    assert_eq!(rep.shed, 0, "FIFO never displaces queued work");
+    assert!(rep.rejected > 0, "FIFO refuses the overflow");
+    assert!(rep.within_budget());
+}
+
+#[test]
+fn deadline_policy_rejects_infeasible_and_serves_the_rest() {
+    let mut cfg = MultiTenantConfig::new(300 * MB);
+    cfg.policy = AdmissionPolicy::Deadline;
+    let mut server = MultiTenantServer::new(Engine::builder().build(), cfg);
+    let t = server.register(families::resnet101(), 1.0).unwrap();
+    let stream = vec![
+        // Impossible: the model's predicted latency alone blows this.
+        Request { tenant: t, arrival_s: 0.0, deadline_s: Some(1e-6) },
+        Request { tenant: t, arrival_s: 0.1, deadline_s: Some(1e9) },
+        Request { tenant: t, arrival_s: 0.2, deadline_s: None },
+    ];
+    let rep = server.serve(&stream).unwrap();
+    assert_eq!(rep.rejected, 1);
+    assert_eq!(rep.served, 2);
+}
+
+#[test]
+fn concurrent_clients_never_exceed_the_budget() {
+    // N client threads against 3 registered models, executing in real
+    // worker threads whose resident windows overlap — the shared MemSim
+    // ledger must never record more than the configured budget.
+    let mut cfg = MultiTenantConfig::new(300 * MB);
+    cfg.queue_cap = 64;
+    cfg.global_cap = 256;
+    cfg.time_scale = 0.02; // hold windows ~10-20 ms so they overlap
+    let mut server = MultiTenantServer::new(Engine::builder().build(), cfg);
+    let ids = [
+        server.register(families::resnet101(), 1.0).unwrap(),
+        server.register(families::yolov3(), 1.0).unwrap(),
+        server.register(families::fcn(), 1.0).unwrap(),
+    ];
+    assert!(server.fleet_bytes() >= 2 * 300 * MB);
+
+    let n_clients = 4;
+    let per_client = 12;
+    let mut joins = Vec::new();
+    for ci in 0..n_clients {
+        let client = server.client();
+        joins.push(std::thread::spawn(move || {
+            for k in 0..per_client {
+                assert!(client.submit(ids[(ci + k) % ids.len()]));
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }));
+    }
+    let rep = server.serve_concurrent(n_clients * per_client).unwrap();
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(rep.resolved(), n_clients * per_client);
+    assert_eq!(rep.served, n_clients * per_client, "caps sized to admit everything");
+    assert!(rep.within_budget(), "peak {} vs {}", rep.peak_bytes, rep.total_budget);
+    assert!(rep.peak_bytes > 0);
+    assert!(rep.batches >= 3, "each tenant ran at least one batch");
+    for tr in &rep.traces {
+        assert!(tr.e2e_s > 0.0 && tr.compute_s > 0.0);
+    }
+}
+
+#[test]
+fn trace_components_amortize_swap_across_the_batch() {
+    // Force heavy batching on one tenant; the amortized per-request swap
+    // share in a batch of k must be ~1/k of a solo request's.
+    let mut cfg = MultiTenantConfig::new(120 * MB);
+    cfg.max_batch = 8;
+    cfg.queue_cap = 32;
+    cfg.global_cap = 64;
+    let mut server = MultiTenantServer::new(Engine::builder().build(), cfg);
+    let t = server.register(families::resnet101(), 1.0).unwrap();
+    // First request dispatches solo; the burst behind it batches.
+    let mut stream = vec![Request { tenant: t, arrival_s: 0.0, deadline_s: None }];
+    for i in 0..8 {
+        stream.push(Request { tenant: t, arrival_s: 0.01 + 1e-4 * i as f64, deadline_s: None });
+    }
+    let rep = server.serve(&stream).unwrap();
+    assert_eq!(rep.served, 9);
+    let solo = rep.traces.iter().find(|tr| tr.batch == 1).expect("first request solo");
+    let batched = rep.traces.iter().find(|tr| tr.batch == 8).expect("burst batch of 8");
+    assert!(
+        batched.swap_s < solo.swap_s / 4.0,
+        "amortized swap {} vs solo {}",
+        batched.swap_s,
+        solo.swap_s
+    );
+    assert!(rep.within_budget());
+}

@@ -9,7 +9,10 @@ use swapnet::config::{DeviceProfile, Processor};
 use swapnet::memsim::{MemSim, Space};
 use swapnet::model::{LayerInfo, ModelInfo};
 use swapnet::pipeline::{peak_resident_bytes, residual_objective, timeline, total_stall, BlockTimes};
-use swapnet::scheduler::{allocate_budgets, allocate_budgets_with_floors, ModelDemand};
+use swapnet::scheduler::{
+    allocate_budgets, allocate_budgets_with_floors, try_allocate_budgets,
+    try_allocate_budgets_with_floors, AllocError, ModelDemand,
+};
 use swapnet::util::json::Json;
 use swapnet::util::rng::Rng;
 
@@ -247,6 +250,101 @@ fn prop_floors_always_respected_when_feasible() {
             assert!(a >= f, "floor violated: {a} < {f}");
         }
         assert!(alloc.iter().sum::<u64>() <= total + n as u64, "conservation");
+    });
+}
+
+#[test]
+fn prop_typed_allocation_exact_conservation() {
+    // The typed allocator's contract: no rounding drift — under memory
+    // pressure the shares sum to exactly the total.
+    cases(200, |rng| {
+        let n = 2 + rng.below(6);
+        let demands: Vec<ModelDemand> = (0..n)
+            .map(|i| ModelDemand {
+                name: format!("m{i}"),
+                mem_bytes: 10_000_000 + rng.next_u64() % 500_000_000,
+                latency_s: rng.range(0.05, 2.0),
+                urgency: rng.range(0.5, 3.0),
+            })
+            .collect();
+        let total_demand: u64 = demands.iter().map(|d| d.mem_bytes).sum();
+        let total = (total_demand as f64 * rng.range(0.3, 0.95)) as u64;
+        let alloc = try_allocate_budgets(&demands, total).unwrap();
+        assert_eq!(alloc.iter().sum::<u64>(), total, "exact conservation under pressure");
+        assert!(alloc.iter().all(|&a| a > 0));
+    });
+}
+
+#[test]
+fn prop_repartitioned_budgets_respect_floors_and_total() {
+    // The multi-tenant server's rebalance path: allocate, evict a random
+    // model, re-allocate over the survivors. Both partitions must
+    // respect every floor and never exceed the total.
+    cases(200, |rng| {
+        let n = 3 + rng.below(4);
+        let mut demands: Vec<ModelDemand> = (0..n)
+            .map(|i| ModelDemand {
+                name: format!("m{i}"),
+                mem_bytes: 50_000_000 + rng.next_u64() % 400_000_000,
+                latency_s: rng.range(0.05, 2.0),
+                urgency: rng.range(0.5, 3.0),
+            })
+            .collect();
+        let mut floors: Vec<u64> = demands
+            .iter()
+            .map(|d| (d.mem_bytes as f64 * rng.range(0.1, 0.5)) as u64)
+            .collect();
+        let floor_sum: u64 = floors.iter().sum();
+        let total = floor_sum + rng.next_u64() % 500_000_000;
+        let check = |alloc: &[u64], floors: &[u64], demands: &[ModelDemand]| {
+            for (a, f) in alloc.iter().zip(floors) {
+                assert!(a >= f, "floor violated: {a} < {f}");
+            }
+            let sum: u64 = alloc.iter().sum();
+            assert!(sum <= total, "over-allocated {sum} > {total}");
+            let demand_sum: u64 = demands.iter().map(|d| d.mem_bytes).sum();
+            if demand_sum > total {
+                assert_eq!(sum, total, "pressure must consume the whole budget");
+            }
+        };
+        let before = try_allocate_budgets_with_floors(&demands, &floors, total).unwrap();
+        check(&before, &floors, &demands);
+        // Evict one model; the survivors re-partition.
+        let kill = rng.below(n);
+        demands.remove(kill);
+        floors.remove(kill);
+        let after = try_allocate_budgets_with_floors(&demands, &floors, total).unwrap();
+        check(&after, &floors, &demands);
+    });
+}
+
+#[test]
+fn prop_typed_allocation_degenerate_fleets_are_errors() {
+    cases(100, |rng| {
+        // Zero-demand fleets are typed errors, never silent zeros.
+        let n = 1 + rng.below(4);
+        let demands: Vec<ModelDemand> = (0..n)
+            .map(|i| ModelDemand {
+                name: format!("m{i}"),
+                mem_bytes: 0,
+                latency_s: rng.range(0.0, 1.0),
+                urgency: 1.0,
+            })
+            .collect();
+        assert_eq!(
+            try_allocate_budgets(&demands, 1 + rng.next_u64() % 1_000_000),
+            Err(AllocError::ZeroDemand)
+        );
+        // A floor beyond the total is a typed error naming the model.
+        let d = vec![ModelDemand {
+            name: "big".into(),
+            mem_bytes: 100 + rng.next_u64() % 1_000_000,
+            latency_s: 1.0,
+            urgency: 1.0,
+        }];
+        let total = 1000 + rng.next_u64() % 1_000_000;
+        let err = try_allocate_budgets_with_floors(&d, &[total + 1], total).unwrap_err();
+        assert!(matches!(err, AllocError::FloorExceedsTotal { .. }), "{err}");
     });
 }
 

@@ -1,0 +1,116 @@
+//! CI bench gate: merge per-bench `--json` emissions into one
+//! `BENCH_summary.json` and fail (exit 1) on any regression beyond the
+//! tolerance band versus the committed `BENCH_baseline.json`.
+//!
+//! ```text
+//! bench_gate --baseline BENCH_baseline.json --out BENCH_summary.json \
+//!            [--tol 0.10] part1.json part2.json ...
+//! ```
+//!
+//! The tolerance defaults to the baseline's own `tolerance` field (then
+//! 0.10). The comparison logic lives in `swapnet::metrics::emit` (unit
+//! tested); this binary is the thin CLI over it.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use swapnet::metrics::emit::{gate, merge};
+use swapnet::util::json::Json;
+
+struct Args {
+    baseline: PathBuf,
+    out: PathBuf,
+    tol: Option<f64>,
+    parts: Vec<PathBuf>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut baseline = None;
+    let mut out = None;
+    let mut tol = None;
+    let mut parts = Vec::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--baseline" => baseline = Some(PathBuf::from(it.next().ok_or("--baseline needs a path")?)),
+            "--out" => out = Some(PathBuf::from(it.next().ok_or("--out needs a path")?)),
+            "--tol" => {
+                let v = it.next().ok_or("--tol needs a value")?;
+                tol = Some(v.parse::<f64>().map_err(|e| format!("--tol `{v}`: {e}"))?);
+            }
+            "--help" | "-h" => {
+                return Err("usage: bench_gate --baseline B.json --out S.json [--tol 0.1] parts..."
+                    .to_string())
+            }
+            flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}")),
+            path => parts.push(PathBuf::from(path)),
+        }
+    }
+    Ok(Args {
+        baseline: baseline.ok_or("--baseline is required")?,
+        out: out.ok_or("--out is required")?,
+        tol,
+        parts,
+    })
+}
+
+fn read_json(path: &PathBuf) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+}
+
+fn run() -> Result<bool, String> {
+    let args = parse_args()?;
+    if args.parts.is_empty() {
+        return Err("no bench emission files given".to_string());
+    }
+    let baseline = read_json(&args.baseline)?;
+    let parts: Vec<Json> = args.parts.iter().map(read_json).collect::<Result<_, _>>()?;
+    let summary = merge(&parts);
+    std::fs::write(&args.out, format!("{summary}\n"))
+        .map_err(|e| format!("write {}: {e}", args.out.display()))?;
+    let tol = args
+        .tol
+        .or_else(|| baseline.get("tolerance").and_then(Json::as_f64))
+        .unwrap_or(0.10);
+
+    let outcome = gate(&baseline, &summary, tol);
+    println!(
+        "bench gate: {} metrics checked against {} (tolerance {:.0}%)",
+        outcome.checked,
+        args.baseline.display(),
+        tol * 100.0
+    );
+    for (bench, metric, base, new) in &outcome.rows {
+        let delta = if *base > 0.0 { 100.0 * (new - base) / base } else { 0.0 };
+        println!("  {bench}/{metric}: baseline {base:.6e} -> {new:.6e} ({delta:+.1}%)");
+    }
+    if outcome.checked == 0 {
+        println!(
+            "  baseline gates nothing yet — bootstrap run; promote {} to seed it",
+            args.out.display()
+        );
+    }
+    for f in &outcome.failures {
+        eprintln!("REGRESSION: {f}");
+    }
+    Ok(outcome.passed())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => {
+            println!("bench gate PASSED");
+            ExitCode::SUCCESS
+        }
+        Ok(false) => {
+            eprintln!("bench gate FAILED");
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
