@@ -19,7 +19,9 @@ use crate::workload::Scenario;
 pub use crate::engine::{naive_equal_partition, scenario_budgets, SnetConfig, SnetRun};
 
 /// Simulate one SwapNet model execution (one inference pass over all
-/// blocks with the m=2 overlap), returning peak memory and latency.
+/// blocks with the configured residency-m overlap; `SnetConfig`'s
+/// default pipeline is the paper's m=2), returning peak memory and
+/// latency.
 pub fn run_snet_model(
     model: &ModelInfo,
     budget: u64,

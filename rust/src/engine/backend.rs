@@ -15,8 +15,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Error, Result};
 
 use crate::config::DeviceProfile;
-use crate::pipeline::real::{run_partitioned, ExecStrategy};
-use crate::pipeline::{peak_resident_bytes, timeline, BlockTimes, Timeline};
+use crate::pipeline::real::{run_partitioned_spec, ExecStrategy};
+use crate::pipeline::{peak_resident_bytes_m, timeline, timeline_spec, BlockTimes, Timeline};
 use crate::runtime::{ResidentModelRunner, Runtime};
 use crate::scheduler::Schedule;
 
@@ -51,10 +51,10 @@ pub struct InferenceReport {
     pub backend: &'static str,
     pub latency_s: f64,
     /// Peak resident bytes (simulated accounting, or the parameter
-    /// residency bound of the real m=2 pipeline).
+    /// residency bound of the real residency-m pipeline).
     pub peak_bytes: u64,
-    /// m=2 pipeline timeline (simulated, or rebuilt from measured wall
-    /// times on the real path).
+    /// Pipeline timeline under the engine's `PipelineSpec` (simulated,
+    /// or rebuilt from measured wall times on the real path).
     pub timeline: Timeline,
     pub block_times: Vec<BlockTimes>,
     pub n_blocks: usize,
@@ -242,7 +242,7 @@ impl ExecBackend for PjrtBackend {
         id: usize,
         reg: &RegisteredModel,
         _prof: &DeviceProfile,
-        _cfg: &SnetConfig,
+        cfg: &SnetConfig,
         req: &InferRequest<'_>,
     ) -> Result<InferenceReport> {
         let art = reg
@@ -285,8 +285,25 @@ impl ExecBackend for PjrtBackend {
             });
         }
 
-        // Swapped path: the m=2 overlapped block pipeline, for real.
-        let rep = run_partitioned(&self.rt, art, req.batch, points, ExecStrategy::Overlapped, input)?;
+        // Swapped path: the overlapped block pipeline (residency m from
+        // the engine's pipeline spec), for real. The executor has ONE
+        // loader thread, so the report timeline is rebuilt under a
+        // single swap channel regardless of the simulated spec —
+        // otherwise a channels>1 spec would describe a schedule the
+        // hardware path never ran.
+        let real_spec = crate::pipeline::PipelineSpec {
+            swap_channels: 1,
+            ..cfg.pipeline
+        };
+        let rep = run_partitioned_spec(
+            &self.rt,
+            art,
+            req.batch,
+            points,
+            ExecStrategy::Overlapped,
+            input,
+            &real_spec,
+        )?;
         let times: Vec<BlockTimes> = rep
             .blocks
             .iter()
@@ -300,8 +317,8 @@ impl ExecBackend for PjrtBackend {
             model: art.name.clone(),
             backend: "pjrt",
             latency_s: rep.latency_s,
-            peak_bytes: peak_resident_bytes(&sizes),
-            timeline: timeline(&times),
+            peak_bytes: peak_resident_bytes_m(&sizes, real_spec.residency_m),
+            timeline: timeline_spec(&times, &real_spec),
             n_blocks: times.len(),
             block_times: times,
             cache_hits: 0,

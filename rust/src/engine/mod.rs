@@ -40,6 +40,8 @@ use anyhow::{anyhow, Error, Result};
 pub use backend::{ExecBackend, InferRequest, InferenceReport, PjrtBackend, SimBackend};
 pub use sim::{naive_equal_partition, SnetConfig, SnetRun};
 
+pub use crate::pipeline::PipelineSpec;
+
 use crate::config::{DeviceProfile, Processor};
 use crate::delay::DelayModel;
 use crate::memsim::MemSim;
@@ -162,6 +164,21 @@ impl EngineBuilder {
         self
     }
 
+    /// Pipeline shape: block residency m + swap-channel count (default
+    /// m=2, one channel — the paper's fixed Fig 10 overlap). Higher m
+    /// trades resident memory for stall time; the scheduler, simulator,
+    /// and real executor all honor it.
+    pub fn pipeline(mut self, spec: PipelineSpec) -> EngineBuilder {
+        self.cfg.pipeline = spec;
+        self
+    }
+
+    /// Shorthand: residency m with the default single swap channel.
+    pub fn pipeline_m(mut self, m: usize) -> EngineBuilder {
+        self.cfg.pipeline.residency_m = m;
+        self
+    }
+
     /// Build over the simulated backend (memsim + delay model).
     pub fn build(self) -> Engine {
         self.build_with(Box::new(SimBackend))
@@ -234,8 +251,11 @@ impl Engine {
         urgency: &[f64],
         total_budget: u64,
     ) -> Result<Vec<ModelHandle>> {
-        let dm = self.core.borrow().dm.clone();
-        let budgets = try_fleet_budgets(models, urgency, &dm, total_budget)
+        let (dm, spec) = {
+            let core = self.core.borrow();
+            (core.dm.clone(), core.cfg.pipeline)
+        };
+        let budgets = try_fleet_budgets(models, urgency, &dm, total_budget, &spec)
             .map_err(|e| anyhow!("{e}"))?;
         models
             .iter()
@@ -264,7 +284,7 @@ impl Engine {
     /// "DCha" | "SNet"), one report row per model — Figs 11-13.
     pub fn run_scenario(&self, scenario: &Scenario, method: &str) -> Result<Vec<MethodReport>> {
         let prof = self.profile();
-        let budgets = scenario_budgets(scenario, &prof);
+        let budgets = scenario_budgets_spec(scenario, &prof, &self.config().pipeline);
         scenario
             .models
             .iter()
@@ -463,6 +483,7 @@ fn try_fleet_budgets(
     urgency: &[f64],
     dm: &DelayModel,
     total: u64,
+    spec: &PipelineSpec,
 ) -> Result<Vec<u64>, scheduler::AllocError> {
     let demands: Vec<scheduler::ModelDemand> = models
         .iter()
@@ -471,7 +492,10 @@ fn try_fleet_budgets(
             scheduler::ModelDemand::from_model(m, dm, urgency.get(i).copied().unwrap_or(1.0))
         })
         .collect();
-    let floors: Vec<u64> = models.iter().map(scheduler::minimal_budget).collect();
+    let floors: Vec<u64> = models
+        .iter()
+        .map(|m| scheduler::minimal_budget_spec(m, spec))
+        .collect();
     scheduler::try_allocate_budgets_with_floors(&demands, &floors, total)
 }
 
@@ -481,6 +505,17 @@ fn try_fleet_budgets(
 /// ad-hoc scenarios whose fleets are degenerate — `schedule_model`
 /// reports any resulting infeasibility downstream.
 pub fn scenario_budgets(scenario: &Scenario, prof: &DeviceProfile) -> Vec<u64> {
+    scenario_budgets_spec(scenario, prof, &PipelineSpec::default())
+}
+
+/// [`scenario_budgets`] with the feasibility floors raised to an
+/// explicit pipeline spec (higher residency m keeps more consecutive
+/// blocks live, so each model's minimal budget grows).
+pub fn scenario_budgets_spec(
+    scenario: &Scenario,
+    prof: &DeviceProfile,
+    spec: &PipelineSpec,
+) -> Vec<u64> {
     if let Some(ov) = &scenario.budget_override {
         return ov.clone();
     }
@@ -497,7 +532,11 @@ pub fn scenario_budgets(scenario: &Scenario, prof: &DeviceProfile) -> Vec<u64> {
             )
         })
         .collect();
-    let floors: Vec<u64> = scenario.models.iter().map(scheduler::minimal_budget).collect();
+    let floors: Vec<u64> = scenario
+        .models
+        .iter()
+        .map(|m| scheduler::minimal_budget_spec(m, spec))
+        .collect();
     scheduler::allocate_budgets_with_floors(&demands, &floors, scenario.dnn_budget)
 }
 
@@ -630,6 +669,29 @@ mod tests {
         // Infeasible rebudget errors and keeps the old schedule.
         assert!(h.rebudget(10 * MB).is_err());
         assert_eq!(h.budget(), 400 * MB);
+    }
+
+    #[test]
+    fn pipeline_spec_flows_through_registration() {
+        let budget = 150 * MB;
+        let h2 = Engine::builder()
+            .build()
+            .register_with_budget(families::resnet101(), budget)
+            .unwrap();
+        let h3 = Engine::builder()
+            .pipeline_m(3)
+            .build()
+            .register_with_budget(families::resnet101(), budget)
+            .unwrap();
+        assert!(
+            h3.schedule().n_blocks > h2.schedule().n_blocks,
+            "m=3 must cut finer: {} vs {}",
+            h3.schedule().n_blocks,
+            h2.schedule().n_blocks
+        );
+        let rep = h3.infer_sim().unwrap();
+        assert!(rep.peak_bytes <= budget, "{} > {budget}", rep.peak_bytes);
+        assert_eq!(rep.n_blocks, h3.schedule().n_blocks);
     }
 
     #[test]

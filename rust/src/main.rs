@@ -26,6 +26,7 @@ use swapnet::config::{DeviceProfile, MB};
 use swapnet::delay::{profiler, DelayModel};
 use swapnet::engine::{scenario_budgets, Engine};
 use swapnet::model::{artifacts, families};
+use swapnet::pipeline::PipelineSpec;
 use swapnet::scheduler::{self, adapt::AdaptiveScheduler, partition};
 use swapnet::util::table;
 use swapnet::workload;
@@ -50,6 +51,12 @@ const DEVICE_FLAG: FlagSpec = FlagSpec {
     help: "device profile: nx | nano (default nx)",
 };
 
+const PIPELINE_M_FLAG: FlagSpec = FlagSpec {
+    name: "pipeline-m",
+    metavar: "M",
+    help: "block residency m / swap parallelism (default 2, the paper's overlap)",
+};
+
 const COMMANDS: &[CmdSpec] = &[
     CmdSpec {
         name: "scenario",
@@ -65,6 +72,7 @@ const COMMANDS: &[CmdSpec] = &[
                 metavar: "METHOD",
                 help: "DInf | DCha | TPrg | SNet (default: all four)",
             },
+            PIPELINE_M_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -93,6 +101,7 @@ const COMMANDS: &[CmdSpec] = &[
                 help: "memory budget in MB (default 102)",
             },
             FlagSpec { name: "blocks", metavar: "N", help: "block count n (default 3)" },
+            PIPELINE_M_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -172,6 +181,7 @@ const COMMANDS: &[CmdSpec] = &[
                 help: "largest batch per resident window (default 8)",
             },
             FlagSpec { name: "seed", metavar: "S", help: "stream seed (default 1)" },
+            PIPELINE_M_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -295,6 +305,15 @@ fn device(flags: &HashMap<String, String>) -> Result<DeviceProfile> {
         .ok_or_else(|| anyhow!("unknown device `{name}` (expected nx | nano)"))
 }
 
+/// `--pipeline-m` flag: block residency m (>= 1), default the paper's 2.
+fn pipeline_m(flags: &HashMap<String, String>) -> Result<usize> {
+    let m: usize = parsed(flags, "pipeline-m", 2)?;
+    if m == 0 {
+        return Err(anyhow!("--pipeline-m must be at least 1"));
+    }
+    Ok(m)
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
@@ -343,7 +362,7 @@ fn cmd_scenario(flags: &HashMap<String, String>) -> Result<()> {
         table::human_bytes(sc.dnn_budget),
         sc.pressure()
     );
-    let engine = Engine::builder().device(prof).build();
+    let engine = Engine::builder().device(prof).pipeline_m(pipeline_m(flags)?).build();
     let mut rows = Vec::new();
     for m in methods {
         for r in engine.run_scenario(&sc, m)? {
@@ -416,12 +435,14 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     let n: usize = parsed(flags, "blocks", 3)?;
     let model = families::by_name(model_name).ok_or_else(|| anyhow!("unknown model"))?;
     let prof = device(flags)?;
+    let spec = PipelineSpec::with_residency(pipeline_m(flags)?);
     let dm = DelayModel::from_profile(&prof);
-    let t = partition::build_lookup_table(&model, n, &dm);
+    let t = partition::build_lookup_table_spec(&model, n, &dm, &spec);
     println!(
-        "{} into {} blocks: {} candidate partitions ({} table)",
+        "{} into {} blocks (residency m={}): {} candidate partitions ({} table)",
         model.name,
         n,
+        spec.residency_m,
         t.rows.len(),
         table::human_bytes(t.approx_bytes())
     );
@@ -541,7 +562,10 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
     cfg.max_batch = parsed(flags, "max-batch", 8)?;
     cfg.seed = seed;
 
-    let engine = Engine::builder().device(device(flags)?).build();
+    let engine = Engine::builder()
+        .device(device(flags)?)
+        .pipeline_m(pipeline_m(flags)?)
+        .build();
     let mut server = MultiTenantServer::new(engine, cfg);
     for m in models {
         server.register(m, 1.0)?;

@@ -61,6 +61,7 @@ pub struct MemSim {
     next: u64,
     per_tag: HashMap<String, TagStat>,
     per_space: HashMap<Space, u64>,
+    per_space_peak: HashMap<Space, u64>,
     /// Number of alloc calls that exceeded `total` (OOM events — the
     /// paper's DInf handles these by killing non-DNN tasks).
     pub oom_events: u64,
@@ -83,6 +84,7 @@ impl MemSim {
             next: 1,
             per_tag: HashMap::new(),
             per_space: HashMap::new(),
+            per_space_peak: HashMap::new(),
             oom_events: 0,
             alloc_mode: AllocMode::Malloc,
         }
@@ -102,7 +104,11 @@ impl MemSim {
         let t = self.per_tag.entry(tag.to_string()).or_default();
         t.cur += bytes;
         t.peak = t.peak.max(t.cur);
-        *self.per_space.entry(space).or_insert(0) += bytes;
+        let sp = self.per_space.entry(space).or_insert(0);
+        *sp += bytes;
+        let cur_space = *sp;
+        let pk = self.per_space_peak.entry(space).or_insert(0);
+        *pk = (*pk).max(cur_space);
         self.allocs.insert(id, Allocation { space, bytes, tag: tag.to_string() });
         id
     }
@@ -135,16 +141,25 @@ impl MemSim {
         self.per_space.get(&space).copied().unwrap_or(0)
     }
 
+    /// Sticky per-space peak (the transient maximum, not the current
+    /// level — e.g. page-cache churn that drained before a reader looked).
+    pub fn peak_in(&self, space: Space) -> u64 {
+        self.per_space_peak.get(&space).copied().unwrap_or(0)
+    }
+
     pub fn tag_stat(&self, tag: &str) -> TagStat {
         self.per_tag.get(tag).cloned().unwrap_or_default()
     }
 
-    /// Reset peaks (global + per tag) to current levels — used between
-    /// experiment phases.
+    /// Reset peaks (global + per tag + per space) to current levels —
+    /// used between experiment phases.
     pub fn reset_peaks(&mut self) {
         self.peak = self.cur;
         for t in self.per_tag.values_mut() {
             t.peak = t.cur;
+        }
+        for (space, pk) in self.per_space_peak.iter_mut() {
+            *pk = self.per_space.get(space).copied().unwrap_or(0);
         }
     }
 
@@ -215,5 +230,23 @@ mod tests {
         assert_eq!(m.peak(), 500);
         m.reset_peaks();
         assert_eq!(m.peak(), 0);
+    }
+
+    #[test]
+    fn per_space_peaks_track_transients() {
+        // The per-space peak must capture churn that drained before the
+        // end of a run (the page-cache undercounting bug).
+        let mut m = MemSim::new(u64::MAX);
+        let a = m.alloc("t", Space::PageCache, 700);
+        let _b = m.alloc("t", Space::Cpu, 100);
+        m.free(a);
+        let _c = m.alloc("t", Space::PageCache, 50);
+        assert_eq!(m.current_in(Space::PageCache), 50);
+        assert_eq!(m.peak_in(Space::PageCache), 700, "transient peak is sticky");
+        assert_eq!(m.peak_in(Space::Cpu), 100);
+        assert_eq!(m.peak_in(Space::Gpu), 0);
+        m.reset_peaks();
+        assert_eq!(m.peak_in(Space::PageCache), 50);
+        assert_eq!(m.peak_in(Space::Cpu), 100);
     }
 }

@@ -1,16 +1,61 @@
-//! Pipelined block execution (paper Fig 10, Eq. 4).
+//! Pipelined block execution (paper Fig 10, Eq. 4), generalized to a
+//! configurable [`PipelineSpec`].
 //!
-//! With parallelism m = 2, block i executes while block i+1 swaps in; a
-//! third block may not occupy memory until block i-1 has been swapped
-//! out. [`timeline`] computes the exact schedule; [`residual_objective`]
-//! is the paper's Eq. 4 overlap-residual form — the two agree (see the
-//! property tests), which validates the scheduler's lookup-table entries.
+//! The paper fixes parallelism m = 2: block i executes while block i+1
+//! swaps in, and a third block may not occupy memory until block i-1 has
+//! been swapped out. [`timeline`] computes that exact schedule;
+//! [`residual_objective`] is the paper's Eq. 4 overlap-residual form —
+//! the two agree (see the property tests), which validates the
+//! scheduler's lookup-table entries.
+//!
+//! [`timeline_spec`] is the general, event-driven form: each swap-in
+//! waits for (a) a free swap channel and (b) every block up to i - m
+//! having completed its swap-out (the residency gate). With the default
+//! spec (m = 2, one channel) it reproduces the historical index
+//! arithmetic bit-for-bit — property-tested against a frozen reference
+//! implementation — while higher m or extra swap channels trade resident
+//! memory for stall time (the memory-vs-latency knob).
 //!
 //! [`real`] runs the same schedule for real against artifact models: a
 //! loader thread prefetches parameter files while the executor thread
-//! runs PJRT — the thread boundary IS the paper's swap/execute overlap.
+//! runs PJRT — the thread boundary IS the paper's swap/execute overlap,
+//! and a slot-token ring bounds it to the same residency m.
 
 pub mod real;
+
+/// Pipeline shape: how many blocks may be memory-resident at once and
+/// how many swap channels feed them.
+///
+/// `residency_m` is the paper's parallelism m (§6.2.2): block i may not
+/// enter memory before every block up to i - m has completed its
+/// swap-out, so at most m blocks' parameters coexist. `swap_channels`
+/// models independent DMA queues serving swap-ins in block order. The
+/// default (m = 2, one channel) is the paper's fixed Fig 10 overlap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineSpec {
+    /// Parallel block residency m (>= 1; m = 1 disables overlap).
+    pub residency_m: usize,
+    /// Independent swap channels (>= 1; 1 = the paper's serial channel).
+    pub swap_channels: usize,
+}
+
+impl Default for PipelineSpec {
+    fn default() -> PipelineSpec {
+        PipelineSpec { residency_m: 2, swap_channels: 1 }
+    }
+}
+
+impl PipelineSpec {
+    /// Residency m with the default single swap channel.
+    pub fn with_residency(m: usize) -> PipelineSpec {
+        PipelineSpec { residency_m: m, ..PipelineSpec::default() }
+    }
+
+    /// Clamped view: degenerate zeros behave as 1.
+    fn normalized(&self) -> (usize, usize) {
+        (self.residency_m.max(1), self.swap_channels.max(1))
+    }
+}
 
 /// Per-block delay triple (from the delay model or real measurement).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -20,7 +65,7 @@ pub struct BlockTimes {
     pub t_out: f64,
 }
 
-/// Exact m=2 schedule of n blocks: per-block swap/exec intervals.
+/// Exact pipeline schedule of n blocks: per-block swap/exec intervals.
 #[derive(Debug, Clone)]
 pub struct Timeline {
     pub swap_start: Vec<f64>,
@@ -54,33 +99,58 @@ impl Timeline {
     }
 }
 
-/// Compute the m=2 pipeline timeline.
+/// Compute the default (m = 2, one channel) pipeline timeline — the
+/// paper's Fig 10 schedule.
+pub fn timeline(times: &[BlockTimes]) -> Timeline {
+    timeline_spec(times, &PipelineSpec::default())
+}
+
+/// Event-driven pipeline timeline under an explicit [`PipelineSpec`].
 ///
 /// Constraints:
-///  * one swap channel: swap i starts after swap i-1 ends;
-///  * residency 2: swap i (for i >= 2) also waits until block i-2 has
-///    been swapped out (exec_end[i-2] + t_out[i-2]);
+///  * swap channels: swap i starts once one of the `swap_channels`
+///    channels frees up (swaps issue in block order, greedy
+///    earliest-free channel);
+///  * residency m: swap i (for i >= m) also waits until every block up
+///    to i - m has completed swap-out (exec_end + t_out, tracked as a
+///    running prefix maximum — swap-outs can complete out of order when
+///    t_out varies);
 ///  * execution is serial: exec i starts at max(exec_end[i-1], swap_end[i]).
-pub fn timeline(times: &[BlockTimes]) -> Timeline {
+pub fn timeline_spec(times: &[BlockTimes], spec: &PipelineSpec) -> Timeline {
     let n = times.len();
+    let (m, channels) = spec.normalized();
     let mut tl = Timeline {
         swap_start: vec![0.0; n],
         swap_end: vec![0.0; n],
         exec_start: vec![0.0; n],
         exec_end: vec![0.0; n],
     };
+    // Swap-out completion per block (exec_end + t_out).
+    let mut out_done = vec![0.0f64; n];
+    // Running max of out_done over blocks 0..=i-m (the residency gate).
+    let mut out_done_max = 0.0f64;
+    // Next free time per swap channel.
+    let mut chan_free = vec![0.0f64; channels];
     for i in 0..n {
-        let chan_free = if i == 0 { 0.0 } else { tl.swap_end[i - 1] };
-        let mem_free = if i >= 2 {
-            tl.exec_end[i - 2] + times[i - 2].t_out
+        let mut ci = 0;
+        for c in 1..channels {
+            if chan_free[c] < chan_free[ci] {
+                ci = c;
+            }
+        }
+        let mem_free = if i >= m {
+            out_done_max = out_done_max.max(out_done[i - m]);
+            out_done_max
         } else {
             0.0
         };
-        tl.swap_start[i] = chan_free.max(mem_free);
+        tl.swap_start[i] = chan_free[ci].max(mem_free);
         tl.swap_end[i] = tl.swap_start[i] + times[i].t_in;
+        chan_free[ci] = tl.swap_end[i];
         let prev_exec = if i == 0 { 0.0 } else { tl.exec_end[i - 1] };
         tl.exec_start[i] = prev_exec.max(tl.swap_end[i]);
         tl.exec_end[i] = tl.exec_start[i] + times[i].t_ex;
+        out_done[i] = tl.exec_end[i] + times[i].t_out;
     }
     tl
 }
@@ -88,20 +158,31 @@ pub fn timeline(times: &[BlockTimes]) -> Timeline {
 /// Paper Eq. 4 view: latency = (t_in[0] + sum t_ex) + total exposed
 /// residual. Agrees with the timeline by construction (property-tested).
 pub fn residual_objective(times: &[BlockTimes]) -> f64 {
+    residual_objective_spec(times, &PipelineSpec::default())
+}
+
+/// Eq. 4 view under an explicit pipeline spec.
+pub fn residual_objective_spec(times: &[BlockTimes], spec: &PipelineSpec) -> f64 {
     if times.is_empty() {
         return 0.0;
     }
     let hidden_base = times[0].t_in + times.iter().map(|t| t.t_ex).sum::<f64>();
-    hidden_base + total_stall(times)
+    hidden_base + total_stall_spec(times, spec)
 }
 
 /// Sum of exposed (non-hidden) swap residuals — the quantity Eq. 4
-/// minimizes (0 when every swap hides behind execution).
+/// minimizes (0 when every swap hides behind execution) — under the
+/// default m = 2 spec.
 pub fn total_stall(times: &[BlockTimes]) -> f64 {
+    total_stall_spec(times, &PipelineSpec::default())
+}
+
+/// Exposed stall under an explicit pipeline spec.
+pub fn total_stall_spec(times: &[BlockTimes], spec: &PipelineSpec) -> f64 {
     if times.is_empty() {
         return 0.0;
     }
-    let tl = timeline(times);
+    let tl = timeline_spec(times, spec);
     let ideal = times[0].t_in + times.iter().map(|t| t.t_ex).sum::<f64>();
     (tl.latency() - ideal).max(0.0)
 }
@@ -109,11 +190,21 @@ pub fn total_stall(times: &[BlockTimes]) -> f64 {
 /// Peak simultaneous parameter residency (bytes) under the m=2 schedule:
 /// adjacent blocks coexist.
 pub fn peak_resident_bytes(sizes: &[u64]) -> u64 {
-    match sizes.len() {
-        0 => 0,
-        1 => sizes[0],
-        _ => sizes.windows(2).map(|w| w[0] + w[1]).max().unwrap(),
+    peak_resident_bytes_m(sizes, 2)
+}
+
+/// Peak simultaneous parameter residency for residency m: the maximum
+/// over any m consecutive blocks (at most m coexist under the schedule).
+pub fn peak_resident_bytes_m(sizes: &[u64], m: usize) -> u64 {
+    if sizes.is_empty() {
+        return 0;
     }
+    let w = m.max(1).min(sizes.len());
+    sizes
+        .windows(w)
+        .map(|win| win.iter().sum::<u64>())
+        .max()
+        .unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -177,5 +268,100 @@ mod tests {
         assert_eq!(peak_resident_bytes(&[10, 20, 5, 30]), 35);
         assert_eq!(peak_resident_bytes(&[100]), 100);
         assert_eq!(peak_resident_bytes(&[]), 0);
+    }
+
+    #[test]
+    fn peak_residency_generalizes_to_m_windows() {
+        assert_eq!(peak_resident_bytes_m(&[10, 20, 5, 30], 3), 55);
+        assert_eq!(peak_resident_bytes_m(&[10, 20, 5, 30], 1), 30);
+        // m beyond the block count: everything coexists.
+        assert_eq!(peak_resident_bytes_m(&[10, 20], 5), 30);
+        assert_eq!(peak_resident_bytes_m(&[], 3), 0);
+        // m=0 is clamped to 1 rather than panicking.
+        assert_eq!(peak_resident_bytes_m(&[10, 20], 0), 20);
+    }
+
+    #[test]
+    fn higher_residency_relieves_the_memory_gate() {
+        // Same shape as memory_release_gates_third_swap: under m=3 block
+        // 2 no longer waits for block 0's swap-out, only for the channel.
+        let times = vec![bt(0.1, 10.0, 5.0), bt(0.1, 0.1, 0.1), bt(0.1, 0.1, 0.1)];
+        let m2 = timeline_spec(&times, &PipelineSpec::default());
+        let m3 = timeline_spec(&times, &PipelineSpec::with_residency(3));
+        assert!((m3.swap_start[2] - 0.2).abs() < 1e-9, "{}", m3.swap_start[2]);
+        assert!(m3.latency() <= m2.latency() + 1e-12);
+    }
+
+    #[test]
+    fn residency_one_serializes_swaps_behind_swap_outs() {
+        // m=1: block i may not even start swapping until block i-1 has
+        // fully left memory.
+        let times = vec![bt(0.1, 0.2, 0.3); 3];
+        let tl = timeline_spec(&times, &PipelineSpec::with_residency(1));
+        for i in 1..3 {
+            let out_done = tl.exec_end[i - 1] + times[i - 1].t_out;
+            assert!(
+                tl.swap_start[i] >= out_done - 1e-12,
+                "swap {i} started at {} before {out_done}",
+                tl.swap_start[i]
+            );
+        }
+    }
+
+    #[test]
+    fn extra_swap_channels_overlap_swaps() {
+        // IO-bound chain with negligible swap-outs: a second channel
+        // halves the serial swap bottleneck.
+        let times = vec![bt(1.0, 0.01, 0.0); 4];
+        let one = timeline_spec(
+            &times,
+            &PipelineSpec { residency_m: 4, swap_channels: 1 },
+        );
+        let two = timeline_spec(
+            &times,
+            &PipelineSpec { residency_m: 4, swap_channels: 2 },
+        );
+        assert!(two.latency() < one.latency() - 0.5, "{} vs {}", two.latency(), one.latency());
+        // With two channels, swaps 0 and 1 start together.
+        assert_eq!(two.swap_start[1], 0.0);
+    }
+
+    #[test]
+    fn residency_gate_uses_prefix_max_of_swap_outs() {
+        // Block 0 has a huge swap-out; with two channels and m=2, block
+        // 3's swap must still wait for block 0 (not just block 1) to
+        // finish swapping out, even though block 1 finishes earlier.
+        let times = vec![
+            bt(0.1, 0.1, 10.0),
+            bt(0.1, 0.1, 0.0),
+            bt(0.1, 0.1, 0.0),
+            bt(0.1, 0.1, 0.0),
+        ];
+        let tl = timeline_spec(
+            &times,
+            &PipelineSpec { residency_m: 2, swap_channels: 2 },
+        );
+        let block0_out = tl.exec_end[0] + times[0].t_out;
+        assert!(
+            tl.swap_start[3] >= block0_out - 1e-12,
+            "swap 3 at {} must wait for block 0's swap-out at {block0_out}",
+            tl.swap_start[3]
+        );
+    }
+
+    #[test]
+    fn spec_default_matches_legacy_timeline_exactly() {
+        let times = vec![
+            bt(0.3, 0.2, 0.1),
+            bt(0.2, 0.5, 0.05),
+            bt(0.4, 0.1, 0.02),
+            bt(0.05, 0.3, 0.2),
+        ];
+        let a = timeline(&times);
+        let b = timeline_spec(&times, &PipelineSpec::default());
+        assert_eq!(a.swap_start, b.swap_start);
+        assert_eq!(a.swap_end, b.swap_end);
+        assert_eq!(a.exec_start, b.exec_start);
+        assert_eq!(a.exec_end, b.exec_end);
     }
 }

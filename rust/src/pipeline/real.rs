@@ -1,17 +1,28 @@
 //! Real overlapped block execution over artifact models.
 //!
-//! The m=2 schedule, for real: a loader thread prefetches block i+1's
-//! parameter files (direct or buffered reads) while the executor thread
-//! assembles block i by reference (slice views -> literals) and runs its
-//! units on PJRT. The xla handles are thread-confined to the executor, so
-//! the thread boundary sits exactly at the paper's swap/execute overlap.
+//! The residency-m schedule, for real: a loader thread prefetches the
+//! next blocks' parameter files (direct or buffered reads) while the
+//! executor thread assembles the current block by reference (slice views
+//! -> literals) and runs its units on PJRT. The xla handles are
+//! thread-confined to the executor, so the thread boundary sits exactly
+//! at the paper's swap/execute overlap.
+//!
+//! Residency is enforced by a slot-token ring (`bounded_overlap`): the
+//! loader takes a token before reading a block and the executor returns
+//! it only after the block's buffers are dropped, so at most
+//! `PipelineSpec::residency_m` parameter buffers coexist. (The seed
+//! implementation gated the loader on a `sync_channel(1)` alone, which
+//! let a third buffer go live — block i executing, block i+1 queued,
+//! block i+2 being read — overshooting the claimed m=2.)
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::model::artifacts::ArtifactModel;
+use crate::pipeline::PipelineSpec;
 use crate::runtime::{literal_f32, literal_from_f32s, literal_to_vec, Runtime};
 use crate::storage::direct_read;
 
@@ -21,7 +32,7 @@ pub enum ExecStrategy {
     /// Sequential: swap-in block i, execute it, then swap-in i+1 (the
     /// no-overlap ablation).
     Sequential,
-    /// Overlapped m=2 prefetch (SwapNet).
+    /// Overlapped residency-m prefetch (SwapNet; m=2 by default).
     Overlapped,
 }
 
@@ -42,6 +53,10 @@ pub struct RunReport {
     pub latency_s: f64,
     pub blocks: Vec<BlockReport>,
     pub output: Vec<f32>,
+    /// Largest number of parameter-buffer bytes simultaneously alive
+    /// (being read + queued + executing) — the byte-count probe for the
+    /// residency bound. At most the max m-window of block sizes.
+    pub peak_buffer_bytes: u64,
 }
 
 impl RunReport {
@@ -53,8 +68,54 @@ impl RunReport {
     }
 }
 
-/// Run `model` partitioned at `points` (unit indices) with the given
-/// strategy. `input` is the flattened batch input.
+/// Bounded-prefetch pipeline: a loader thread runs `produce(i)` for
+/// i in 0..n in order while the caller consumes the results in order,
+/// with at most `residency` items alive (being produced, queued, or
+/// consumed) at any instant.
+///
+/// The bound holds by construction, not by channel capacity: the loader
+/// takes a slot token before producing and the consumer returns it only
+/// after `consume` (which owns and drops the item) returns. Channels are
+/// created inside the thread scope, so an error on either side tears the
+/// other down through disconnection instead of deadlocking.
+fn bounded_overlap<T: Send>(
+    n: usize,
+    residency: usize,
+    produce: impl Fn(usize) -> Result<T> + Send,
+    mut consume: impl FnMut(usize, T) -> Result<()>,
+) -> Result<()> {
+    let residency = residency.max(1);
+    std::thread::scope(|s| {
+        let (data_tx, data_rx) = mpsc::sync_channel::<(usize, Result<T>)>(residency - 1);
+        let (slot_tx, slot_rx) = mpsc::channel::<()>();
+        for _ in 0..residency {
+            slot_tx.send(()).expect("slot receiver alive");
+        }
+        s.spawn(move || {
+            for i in 0..n {
+                // Free-slot token: wait until the consumer has dropped
+                // block i-residency (or the run aborted).
+                if slot_rx.recv().is_err() {
+                    return;
+                }
+                let item = produce(i);
+                let failed = item.is_err();
+                if data_tx.send((i, item)).is_err() || failed {
+                    return;
+                }
+            }
+        });
+        for i in 0..n {
+            let (ri, item) = data_rx.recv().map_err(|_| anyhow!("loader thread died"))?;
+            debug_assert_eq!(ri, i);
+            consume(i, item?)?;
+            let _ = slot_tx.send(());
+        }
+        Ok(())
+    })
+}
+
+/// Run `model` partitioned at `points` under the default m=2 pipeline.
 pub fn run_partitioned(
     rt: &Runtime,
     model: &ArtifactModel,
@@ -62,6 +123,20 @@ pub fn run_partitioned(
     points: &[usize],
     strategy: ExecStrategy,
     input: &[f32],
+) -> Result<RunReport> {
+    run_partitioned_spec(rt, model, batch, points, strategy, input, &PipelineSpec::default())
+}
+
+/// Run `model` partitioned at `points` (unit indices) with the given
+/// strategy and pipeline spec. `input` is the flattened batch input.
+pub fn run_partitioned_spec(
+    rt: &Runtime,
+    model: &ArtifactModel,
+    batch: usize,
+    points: &[usize],
+    strategy: ExecStrategy,
+    input: &[f32],
+    spec: &PipelineSpec,
 ) -> Result<RunReport> {
     let n_units = model.units.len();
     let mut bounds = vec![0usize];
@@ -87,10 +162,12 @@ pub fn run_partitioned(
             let t0 = Instant::now();
             let mut act = literal_from_f32s(&shape, input)?;
             let mut reports = Vec::new();
+            let mut peak_buf = 0u64;
             for (bi, &(lo, hi)) in blocks.iter().enumerate() {
                 let ts = Instant::now();
                 let bufs = read_block(model, lo, hi)?;
                 let swap_s = ts.elapsed().as_secs_f64();
+                peak_buf = peak_buf.max(bufs.iter().map(|b| b.len() as u64).sum());
                 let (a2, rep) = exec_block(rt, model, batch, bi, lo, hi, &bufs, act, swap_s)?;
                 act = a2;
                 reports.push(rep);
@@ -99,45 +176,49 @@ pub fn run_partitioned(
                 latency_s: t0.elapsed().as_secs_f64(),
                 blocks: reports,
                 output: literal_to_vec(&act)?,
+                peak_buffer_bytes: peak_buf,
             })
         }
         ExecStrategy::Overlapped => {
-            let (tx, rx) = mpsc::sync_channel::<(usize, Result<Vec<Vec<u8>>>, f64)>(1);
+            let residency = spec.residency_m;
+            let live = AtomicU64::new(0);
+            let peak = AtomicU64::new(0);
             let t0 = Instant::now();
-            let out = std::thread::scope(|s| -> Result<RunReport> {
-                let loader_blocks = blocks.clone();
-                let model_ref = &*model;
-                s.spawn(move || {
-                    for (bi, &(lo, hi)) in loader_blocks.iter().enumerate() {
-                        let ts = Instant::now();
-                        let r = read_block(model_ref, lo, hi);
-                        let dt = ts.elapsed().as_secs_f64();
-                        // sync_channel(1) gives m=2 residency: at most one
-                        // prefetched block waits while one executes.
-                        if tx.send((bi, r, dt)).is_err() {
-                            return;
-                        }
-                    }
-                });
-
-                let mut act = literal_from_f32s(&shape, input)?;
-                let mut reports = Vec::new();
-                for (bi, &(lo, hi)) in blocks.iter().enumerate() {
-                    let (rbi, bufs, swap_s) =
-                        rx.recv().map_err(|_| anyhow!("loader thread died"))?;
-                    debug_assert_eq!(rbi, bi);
-                    let bufs = bufs?;
-                    let (a2, rep) = exec_block(rt, model, batch, bi, lo, hi, &bufs, act, swap_s)?;
-                    act = a2;
+            let mut act = Some(literal_from_f32s(&shape, input)?);
+            let mut reports = Vec::new();
+            bounded_overlap(
+                blocks.len(),
+                residency,
+                |bi| {
+                    let (lo, hi) = blocks[bi];
+                    let ts = Instant::now();
+                    let bufs = read_block(model, lo, hi)?;
+                    let dt = ts.elapsed().as_secs_f64();
+                    let bytes: u64 = bufs.iter().map(|b| b.len() as u64).sum();
+                    let now = live.fetch_add(bytes, Ordering::SeqCst) + bytes;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    Ok((bufs, dt))
+                },
+                |bi, (bufs, swap_s): (Vec<Vec<u8>>, f64)| {
+                    let (lo, hi) = blocks[bi];
+                    let cur = act.take().expect("activation chain is linear");
+                    let (a2, rep) =
+                        exec_block(rt, model, batch, bi, lo, hi, &bufs, cur, swap_s)?;
+                    act = Some(a2);
                     reports.push(rep);
-                }
-                Ok(RunReport {
-                    latency_s: 0.0,
-                    blocks: reports,
-                    output: literal_to_vec(&act)?,
-                })
-            })?;
-            Ok(RunReport { latency_s: t0.elapsed().as_secs_f64(), ..out })
+                    let bytes: u64 = bufs.iter().map(|b| b.len() as u64).sum();
+                    drop(bufs);
+                    live.fetch_sub(bytes, Ordering::SeqCst);
+                    Ok(())
+                },
+            )?;
+            let out = act.take().expect("all blocks consumed");
+            Ok(RunReport {
+                latency_s: t0.elapsed().as_secs_f64(),
+                blocks: reports,
+                output: literal_to_vec(&out)?,
+                peak_buffer_bytes: peak.load(Ordering::SeqCst),
+            })
         }
     }
 }
@@ -206,6 +287,7 @@ fn exec_block(
 mod tests {
     use super::*;
     use crate::model::artifacts::{artifacts_dir, ArtifactModel};
+    use crate::pipeline::peak_resident_bytes_m;
     use crate::runtime::DirectRunner;
 
     fn tiny() -> Option<ArtifactModel> {
@@ -221,6 +303,74 @@ mod tests {
     fn input(model: &ArtifactModel, batch: usize) -> Vec<f32> {
         let n: usize = model.in_shape.iter().skip(1).product();
         (0..n * batch).map(|i| (i % 97) as f32 / 97.0).collect()
+    }
+
+    #[test]
+    fn bounded_overlap_respects_residency() {
+        // Byte-count probe without artifacts: live bytes (slots acquired
+        // by the loader minus buffers dropped by the consumer) must never
+        // exceed residency * buffer size.
+        for residency in [1usize, 2, 3] {
+            let live = AtomicU64::new(0);
+            let peak = AtomicU64::new(0);
+            let bytes = 1000u64;
+            bounded_overlap(
+                12,
+                residency,
+                |i| {
+                    let now = live.fetch_add(bytes, Ordering::SeqCst) + bytes;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    Ok(vec![i as u8; bytes as usize])
+                },
+                |_i, buf| {
+                    assert_eq!(buf.len(), bytes as usize);
+                    drop(buf);
+                    live.fetch_sub(bytes, Ordering::SeqCst);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert!(
+                peak.load(Ordering::SeqCst) <= residency as u64 * bytes,
+                "m={residency}: peak {} bytes",
+                peak.load(Ordering::SeqCst)
+            );
+            assert_eq!(live.load(Ordering::SeqCst), 0);
+        }
+    }
+
+    #[test]
+    fn bounded_overlap_delivers_in_order() {
+        let mut seen = Vec::new();
+        bounded_overlap(8, 3, |i| Ok(i * 10), |i, v| {
+            assert_eq!(v, i * 10);
+            seen.push(i);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_overlap_propagates_errors_without_deadlock() {
+        // Loader-side failure surfaces to the caller...
+        let r = bounded_overlap(
+            5,
+            2,
+            |i| if i == 3 { Err(anyhow!("read failed")) } else { Ok(i) },
+            |_i, _v| Ok(()),
+        );
+        assert!(r.is_err());
+        // ...and a consumer-side failure tears the loader down through
+        // channel disconnection instead of leaving it blocked.
+        let r = bounded_overlap(
+            64,
+            2,
+            |i| Ok(vec![0u8; 16 + i]),
+            |i, _v| if i == 1 { Err(anyhow!("exec failed")) } else { Ok(()) },
+        );
+        assert!(r.is_err());
     }
 
     #[test]
@@ -250,6 +400,36 @@ mod tests {
             assert!((a - b).abs() < 1e-5);
         }
         assert_eq!(ovl.blocks.len(), 3);
+    }
+
+    #[test]
+    fn overlapped_residency_bounded_by_spec() {
+        // Byte-count probe on the real path: the loader may hold at most
+        // the max m-window of block bytes.
+        let Some(model) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let x = input(&model, 1);
+        for m in [1usize, 2, 3] {
+            let spec = PipelineSpec::with_residency(m);
+            let rep = run_partitioned_spec(
+                &rt,
+                &model,
+                1,
+                &[1, 2, 3, 4],
+                ExecStrategy::Overlapped,
+                &x,
+                &spec,
+            )
+            .unwrap();
+            let sizes: Vec<u64> = rep.blocks.iter().map(|b| b.bytes).collect();
+            let bound = peak_resident_bytes_m(&sizes, m);
+            assert!(
+                rep.peak_buffer_bytes <= bound,
+                "m={m}: {} buffer bytes live, bound {bound}",
+                rep.peak_buffer_bytes
+            );
+            assert!(rep.peak_buffer_bytes > 0);
+        }
     }
 
     #[test]

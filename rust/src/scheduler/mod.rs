@@ -9,6 +9,7 @@ pub mod partition;
 use crate::config::{DeviceProfile, Processor, PARALLELISM_M};
 use crate::delay::DelayModel;
 use crate::model::ModelInfo;
+use crate::pipeline::PipelineSpec;
 
 /// One model's demand as seen by the budget allocator.
 #[derive(Debug, Clone)]
@@ -41,19 +42,27 @@ impl ModelDemand {
     }
 }
 
-/// Minimal feasible budget for a model: even the finest legal partition
-/// keeps two adjacent atomic segments resident (m=2), so the floor is the
-/// largest adjacent-segment pair divided by (1 - delta). This is how the
-/// paper's footnote 2 manifests ("VGG's largest layer takes 392 MB, so a
-/// relatively large budget is required" — its budget is raised to fit).
+/// Minimal feasible budget for a model under the default m=2 pipeline:
+/// even the finest legal partition keeps two adjacent atomic segments
+/// resident, so the floor is the largest adjacent-segment pair divided
+/// by (1 - delta). This is how the paper's footnote 2 manifests ("VGG's
+/// largest layer takes 392 MB, so a relatively large budget is
+/// required" — its budget is raised to fit).
 pub fn minimal_budget(model: &ModelInfo) -> u64 {
+    minimal_budget_spec(model, &PipelineSpec::default())
+}
+
+/// Minimal feasible budget under an explicit pipeline spec: the finest
+/// legal partition keeps `residency_m` consecutive atomic segments
+/// resident.
+pub fn minimal_budget_spec(model: &ModelInfo, spec: &PipelineSpec) -> u64 {
     // Atomic segments: split at EVERY legal cut point.
     let cuts = model.legal_cut_points();
     let segs = model
         .create_blocks(&cuts)
         .expect("all-legal cuts must be valid");
     let sizes: Vec<u64> = segs.iter().map(|b| b.size_bytes).collect();
-    let peak = crate::pipeline::peak_resident_bytes(&sizes);
+    let peak = crate::pipeline::peak_resident_bytes_m(&sizes, spec.residency_m);
     (peak as f64 / 0.995).ceil() as u64 + overhead_bytes(model) + 1
 }
 
@@ -275,12 +284,18 @@ pub fn allocate_budgets(demands: &[ModelDemand], total: u64) -> Vec<u64> {
         .unwrap_or_else(|_| demands.iter().map(|d| d.mem_bytes).collect())
 }
 
-/// Paper §6.2.2: number of blocks n = ceil(m * s / b) for parallelism m.
+/// Paper §6.2.2: number of blocks n = ceil(m * s / b) for the default
+/// parallelism m = 2.
 pub fn num_blocks(model_bytes: u64, budget_bytes: u64) -> usize {
+    num_blocks_m(model_bytes, budget_bytes, PARALLELISM_M)
+}
+
+/// Number of blocks n = ceil(m * s / b) for an explicit parallelism m.
+pub fn num_blocks_m(model_bytes: u64, budget_bytes: u64, m: usize) -> usize {
     if budget_bytes == 0 {
         return usize::MAX;
     }
-    let n = (PARALLELISM_M as u64 * model_bytes).div_ceil(budget_bytes) as usize;
+    let n = (m.max(1) as u64 * model_bytes).div_ceil(budget_bytes) as usize;
     n.max(1)
 }
 
@@ -295,13 +310,28 @@ pub struct Schedule {
     pub peak_bytes: u64,
 }
 
-/// Schedule one model into its budget: pick n = ceil(m*s/b), search the
-/// partition lookup table, fall back to increasing n if infeasible.
+/// Schedule one model into its budget under the default m=2 pipeline:
+/// pick n = ceil(m*s/b), search the partition lookup table, fall back to
+/// increasing n if infeasible.
 pub fn schedule_model(
     model: &ModelInfo,
     budget: u64,
     dm: &DelayModel,
     prof: &DeviceProfile,
+) -> Result<Schedule, String> {
+    schedule_model_spec(model, budget, dm, prof, &PipelineSpec::default())
+}
+
+/// Schedule one model under an explicit pipeline spec: the lookup table
+/// rows carry the max-over-any-m-consecutive-blocks residency peak and
+/// the spec's pipeline latency, so the pruned best row is the best
+/// (points, m) pair that fits the budget.
+pub fn schedule_model_spec(
+    model: &ModelInfo,
+    budget: u64,
+    dm: &DelayModel,
+    prof: &DeviceProfile,
+    spec: &PipelineSpec,
 ) -> Result<Schedule, String> {
     let _ = prof;
     let usable = usable_budget(model, budget);
@@ -322,9 +352,9 @@ pub fn schedule_model(
         return Err(format!("{}: budget {} infeasible", model.name, budget));
     }
     let max_n = model.legal_cut_points().len() + 1;
-    let mut n = num_blocks(s, usable).clamp(2, max_n + 1);
+    let mut n = num_blocks_m(s, usable, spec.residency_m).clamp(2, max_n + 1);
     while n <= max_n {
-        let table = partition::build_lookup_table(model, n, dm);
+        let table = partition::build_lookup_table_spec(model, n, dm, spec);
         if let Some(row) = table.best_within(usable) {
             return Ok(Schedule {
                 model: model.name.clone(),
@@ -486,6 +516,32 @@ mod tests {
         // VGG's 411 MB fc1 cannot fit a 50 MB budget.
         let m = families::vgg19();
         assert!(schedule_model(&m, 50 * MB, &dm(), &DeviceProfile::jetson_nx()).is_err());
+    }
+
+    #[test]
+    fn schedule_model_spec_m3_uses_triple_windows() {
+        // Higher residency keeps 3 consecutive blocks resident: the
+        // scheduler starts from n = ceil(3s/b) and its reported peak is
+        // the max 3-window, still within the usable budget.
+        let m = families::resnet101();
+        let p = DeviceProfile::jetson_nx();
+        let spec = PipelineSpec::with_residency(3);
+        let s3 = schedule_model_spec(&m, 150 * MB, &dm(), &p, &spec).unwrap();
+        let s2 = schedule_model(&m, 150 * MB, &dm(), &p).unwrap();
+        assert!(s3.n_blocks > s2.n_blocks, "{} vs {}", s3.n_blocks, s2.n_blocks);
+        assert!(s3.peak_bytes <= usable_budget(&m, 150 * MB));
+        let blocks = m.create_blocks(&s3.points).unwrap();
+        let sizes: Vec<u64> = blocks.iter().map(|b| b.size_bytes).collect();
+        assert_eq!(s3.peak_bytes, crate::pipeline::peak_resident_bytes_m(&sizes, 3));
+    }
+
+    #[test]
+    fn minimal_budget_grows_with_residency() {
+        let m = families::resnet101();
+        let m2 = minimal_budget(&m);
+        let m3 = minimal_budget_spec(&m, &PipelineSpec::with_residency(3));
+        assert_eq!(m2, minimal_budget_spec(&m, &PipelineSpec::default()));
+        assert!(m3 > m2, "{m3} vs {m2}");
     }
 
     #[test]

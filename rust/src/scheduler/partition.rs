@@ -1,9 +1,10 @@
 //! Partition search + run-time lookup table (paper §6.2.2, Table 3).
 //!
 //! A partition p = {p_1..p_{n-1}} splits the layer chain into n blocks.
-//! Feasibility (Eq. 3): adjacent blocks coexist under m=2, so
-//! s_i + s_{i+1} <= b(1 - delta). The objective (Eq. 2/4) is the m=2
-//! pipeline latency from `pipeline::timeline`.
+//! Feasibility (Eq. 3): m consecutive blocks coexist under residency m,
+//! so the max m-window byte sum must fit b(1 - delta) — the paper's
+//! s_i + s_{i+1} <= b(1 - delta) is the m=2 instance. The objective
+//! (Eq. 2/4) is the pipeline latency from `pipeline::timeline_spec`.
 //!
 //! Like the paper we precompute a lookup table of candidate partitions
 //! with their peak memory and predicted latency (prepared offline per
@@ -15,7 +16,7 @@
 
 use crate::delay::DelayModel;
 use crate::model::ModelInfo;
-use crate::pipeline::{peak_resident_bytes, timeline, BlockTimes};
+use crate::pipeline::{peak_resident_bytes_m, timeline_spec, BlockTimes, PipelineSpec};
 
 /// One lookup-table row (paper Table 3: partition points, max memory,
 /// predicted latency).
@@ -51,11 +52,23 @@ impl LookupTable {
     }
 }
 
-/// Evaluate one candidate partition: (peak adjacent-pair bytes, latency).
+/// Evaluate one candidate partition under the default m=2 spec:
+/// (peak adjacent-pair bytes, latency).
 pub fn evaluate(model: &ModelInfo, points: &[usize], dm: &DelayModel) -> Option<(u64, f64)> {
+    evaluate_spec(model, points, dm, &PipelineSpec::default())
+}
+
+/// Evaluate one candidate partition under an explicit pipeline spec:
+/// (max m-window bytes, pipeline latency).
+pub fn evaluate_spec(
+    model: &ModelInfo,
+    points: &[usize],
+    dm: &DelayModel,
+    spec: &PipelineSpec,
+) -> Option<(u64, f64)> {
     let blocks = model.create_blocks(points).ok()?;
     let sizes: Vec<u64> = blocks.iter().map(|b| b.size_bytes).collect();
-    let peak = peak_resident_bytes(&sizes);
+    let peak = peak_resident_bytes_m(&sizes, spec.residency_m);
     let times: Vec<BlockTimes> = blocks
         .iter()
         .map(|b| BlockTimes {
@@ -64,14 +77,25 @@ pub fn evaluate(model: &ModelInfo, points: &[usize], dm: &DelayModel) -> Option<
             t_out: dm.t_out(b),
         })
         .collect();
-    Some((peak, timeline(&times).latency()))
+    Some((peak, timeline_spec(&times, spec).latency()))
 }
 
-/// Build the lookup table for n blocks. Exhaustive for n <= 3; beam
-/// search beyond (the paper's run-time pruning only needs the frontier).
+/// Build the lookup table for n blocks under the default m=2 spec.
 pub fn build_lookup_table(model: &ModelInfo, n: usize, dm: &DelayModel) -> LookupTable {
+    build_lookup_table_spec(model, n, dm, &PipelineSpec::default())
+}
+
+/// Build the lookup table for n blocks under an explicit pipeline spec.
+/// Exhaustive for n <= 3; beam search beyond (the paper's run-time
+/// pruning only needs the frontier).
+pub fn build_lookup_table_spec(
+    model: &ModelInfo,
+    n: usize,
+    dm: &DelayModel,
+    spec: &PipelineSpec,
+) -> LookupTable {
     let rows = if n <= 1 {
-        match evaluate(model, &[], dm) {
+        match evaluate_spec(model, &[], dm, spec) {
             Some((mem, lat)) => vec![Row {
                 points: vec![],
                 max_mem_bytes: mem,
@@ -80,9 +104,9 @@ pub fn build_lookup_table(model: &ModelInfo, n: usize, dm: &DelayModel) -> Looku
             None => vec![],
         }
     } else if n <= 3 {
-        enumerate_rows(model, n, dm)
+        enumerate_rows(model, n, dm, spec)
     } else {
-        heuristic_rows(model, n, dm)
+        heuristic_rows(model, n, dm, spec)
     };
     LookupTable {
         model: model.name.clone(),
@@ -92,7 +116,7 @@ pub fn build_lookup_table(model: &ModelInfo, n: usize, dm: &DelayModel) -> Looku
 }
 
 /// Exhaustive enumeration of all C(cuts, n-1) partitions.
-fn enumerate_rows(model: &ModelInfo, n: usize, dm: &DelayModel) -> Vec<Row> {
+fn enumerate_rows(model: &ModelInfo, n: usize, dm: &DelayModel, spec: &PipelineSpec) -> Vec<Row> {
     let cuts = model.legal_cut_points();
     let k = n - 1;
     let mut rows = Vec::new();
@@ -102,7 +126,7 @@ fn enumerate_rows(model: &ModelInfo, n: usize, dm: &DelayModel) -> Vec<Row> {
     }
     loop {
         let points: Vec<usize> = idx.iter().map(|&i| cuts[i]).collect();
-        if let Some((mem, lat)) = evaluate(model, &points, dm) {
+        if let Some((mem, lat)) = evaluate_spec(model, &points, dm, spec) {
             rows.push(Row {
                 points,
                 max_mem_bytes: mem,
@@ -133,7 +157,7 @@ fn enumerate_rows(model: &ModelInfo, n: usize, dm: &DelayModel) -> Vec<Row> {
 /// hill-climbing under two objectives (min peak, then min latency).
 /// Every exactly-evaluated candidate goes into the table, so the pruned
 /// lookup keeps a (memory, latency) frontier like the exhaustive case.
-fn heuristic_rows(model: &ModelInfo, n: usize, dm: &DelayModel) -> Vec<Row> {
+fn heuristic_rows(model: &ModelInfo, n: usize, dm: &DelayModel, spec: &PipelineSpec) -> Vec<Row> {
     use std::collections::BTreeMap;
     let cuts = model.legal_cut_points();
     let k = n - 1;
@@ -145,7 +169,7 @@ fn heuristic_rows(model: &ModelInfo, n: usize, dm: &DelayModel) -> Vec<Row> {
         if let Some(&v) = seen.get(pts) {
             return Some(v);
         }
-        let v = evaluate(model, pts, dm)?;
+        let v = evaluate_spec(model, pts, dm, spec)?;
         seen.insert(pts.to_vec(), v);
         Some(v)
     };
@@ -319,8 +343,9 @@ mod tests {
     #[test]
     fn beam_matches_exhaustive_on_small_model() {
         let m = uniform_model(8, 12);
-        let exact = enumerate_rows(&m, 4, &dm());
-        let beam = heuristic_rows(&m, 4, &dm());
+        let spec = PipelineSpec::default();
+        let exact = enumerate_rows(&m, 4, &dm(), &spec);
+        let beam = heuristic_rows(&m, 4, &dm(), &spec);
         let best_exact = exact
             .iter()
             .min_by(|a, b| a.predicted_latency_s.total_cmp(&b.predicted_latency_s))
@@ -361,6 +386,25 @@ mod tests {
         assert!(b2 > 0.0 && b5 > 0.0);
         // more blocks -> at least as much overhead for this CPU-bound model
         assert!(b5 >= b2 - 1e-6, "b5 {b5} b2 {b2}");
+    }
+
+    #[test]
+    fn residency_three_needs_triple_windows() {
+        // Under m=3 three consecutive blocks coexist, so the balanced
+        // 2+2+2 split of a 60 MB model needs the whole 60 MB resident.
+        let m = uniform_model(6, 10);
+        let spec = PipelineSpec::with_residency(3);
+        let t = build_lookup_table_spec(&m, 3, &dm(), &spec);
+        let best = t.best_within(60 * MB).unwrap();
+        assert_eq!(best.max_mem_bytes, 60 * MB);
+        assert!(t.best_within(41 * MB).is_none(), "no 3-split of 60 MB fits 41 MB at m=3");
+        // The m=3 peak of any row dominates its m=2 peak.
+        let t2 = build_lookup_table(&m, 3, &dm());
+        for (r3, r2) in t.rows.iter().zip(&t2.rows) {
+            assert_eq!(r3.points, r2.points);
+            assert!(r3.max_mem_bytes >= r2.max_mem_bytes);
+            assert!(r3.predicted_latency_s <= r2.predicted_latency_s + 1e-12);
+        }
     }
 
     #[test]

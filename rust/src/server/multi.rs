@@ -265,23 +265,27 @@ impl MultiTenantServer {
     }
 
     /// Eq. 1 + floors over the live fleet, optionally including a
-    /// not-yet-registered newcomer at the end of the budget vector.
+    /// not-yet-registered newcomer at the end of the budget vector. The
+    /// feasibility floors honor the engine's pipeline spec: a higher
+    /// residency m keeps more consecutive blocks live, raising every
+    /// tenant's minimal budget (and its resident window below).
     fn partition_with(
         &self,
         extra: Option<(&ModelInfo, f64)>,
     ) -> Result<(Vec<usize>, Vec<u64>)> {
         let live = self.live_indices();
         let dm = DelayModel::from_profile(&self.engine.profile());
+        let spec = self.engine.config().pipeline;
         let mut demands: Vec<ModelDemand> = Vec::with_capacity(live.len() + 1);
         let mut floors: Vec<u64> = Vec::with_capacity(live.len() + 1);
         for &i in &live {
             let t = &self.tenants[i];
             demands.push(ModelDemand::from_model(&t.model, &dm, t.urgency));
-            floors.push(scheduler::minimal_budget(&t.model));
+            floors.push(scheduler::minimal_budget_spec(&t.model, &spec));
         }
         if let Some((m, u)) = extra {
             demands.push(ModelDemand::from_model(m, &dm, u));
-            floors.push(scheduler::minimal_budget(m));
+            floors.push(scheduler::minimal_budget_spec(m, &spec));
         }
         let budgets =
             scheduler::try_allocate_budgets_with_floors(&demands, &floors, self.cfg.total_budget)

@@ -70,6 +70,31 @@ fn mixed_stream_beyond_budget_serves_with_zero_violations() {
 }
 
 #[test]
+fn residency_three_serving_stays_within_budget() {
+    // The memory-vs-latency knob, end to end: an m=3 engine keeps three
+    // consecutive blocks resident per tenant, so floors, Eq. 1 shares,
+    // schedules, and resident windows all shift — and the shared ledger
+    // must still prove the fleet never exceeds the budget.
+    let mut cfg = MultiTenantConfig::new(300 * MB);
+    cfg.policy = AdmissionPolicy::Urgency;
+    cfg.queue_cap = 32;
+    cfg.global_cap = 96;
+    let mut server = MultiTenantServer::new(Engine::builder().pipeline_m(3).build(), cfg);
+    for m in trio() {
+        server.register(m, 1.0).unwrap();
+    }
+    let budget_sum: u64 = server.budgets().iter().map(|(_, b, _)| *b).sum();
+    assert!(budget_sum <= 300 * MB, "Eq. 1 shares must fit: {budget_sum}");
+    for (name, _, blocks) in server.budgets() {
+        assert!(blocks >= 2, "{name}: beyond-budget tenant must swap ({blocks} blocks)");
+    }
+    let rep = server.serve(&poisson_stream(3, 30, 20.0, 11)).unwrap();
+    assert_eq!(rep.resolved(), 30);
+    assert!(rep.within_budget(), "peak {} vs {}", rep.peak_bytes, rep.total_budget);
+    assert_eq!(rep.oom_events, 0);
+}
+
+#[test]
 fn register_and_evict_repartition_the_fleet_budget() {
     let mut server = server_300mb(AdmissionPolicy::Urgency);
     let _r = server.register(families::resnet101(), 1.0).unwrap();

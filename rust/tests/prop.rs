@@ -8,7 +8,10 @@
 use swapnet::config::{DeviceProfile, Processor};
 use swapnet::memsim::{MemSim, Space};
 use swapnet::model::{LayerInfo, ModelInfo};
-use swapnet::pipeline::{peak_resident_bytes, residual_objective, timeline, total_stall, BlockTimes};
+use swapnet::pipeline::{
+    peak_resident_bytes, peak_resident_bytes_m, residual_objective, residual_objective_spec,
+    timeline, timeline_spec, total_stall, total_stall_spec, BlockTimes, PipelineSpec,
+};
 use swapnet::scheduler::{
     allocate_budgets, allocate_budgets_with_floors, try_allocate_budgets,
     try_allocate_budgets_with_floors, AllocError, ModelDemand,
@@ -110,6 +113,128 @@ fn prop_residual_equals_timeline() {
         let a = residual_objective(&times);
         let b = timeline(&times).latency();
         assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    });
+}
+
+/// The seed-era index-arithmetic m=2 schedule, frozen as a reference:
+/// the event-driven simulator must reproduce it bit-for-bit.
+fn timeline_m2_reference(times: &[BlockTimes]) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let n = times.len();
+    let (mut ss, mut se) = (vec![0.0; n], vec![0.0; n]);
+    let (mut es, mut ee) = (vec![0.0; n], vec![0.0; n]);
+    for i in 0..n {
+        let chan_free = if i == 0 { 0.0 } else { se[i - 1] };
+        let mem_free = if i >= 2 { ee[i - 2] + times[i - 2].t_out } else { 0.0 };
+        ss[i] = chan_free.max(mem_free);
+        se[i] = ss[i] + times[i].t_in;
+        let prev_exec = if i == 0 { 0.0 } else { ee[i - 1] };
+        es[i] = prev_exec.max(se[i]);
+        ee[i] = es[i] + times[i].t_ex;
+    }
+    (ss, se, es, ee)
+}
+
+#[test]
+fn prop_event_driven_default_matches_m2_reference_bitwise() {
+    // The m=2 parity acceptance: with PipelineSpec::default() the
+    // event-driven timeline reproduces the historical schedule exactly
+    // (no tolerance) on the random corpus.
+    cases(300, |rng| {
+        let times = random_times(rng, 12);
+        let tl = timeline_spec(&times, &PipelineSpec::default());
+        let (ss, se, es, ee) = timeline_m2_reference(&times);
+        assert_eq!(tl.swap_start, ss, "swap_start must be bit-identical");
+        assert_eq!(tl.swap_end, se);
+        assert_eq!(tl.exec_start, es);
+        assert_eq!(tl.exec_end, ee);
+    });
+}
+
+#[test]
+fn prop_latency_non_increasing_in_residency_m() {
+    // More residency can only relax the memory gate: latency is
+    // non-increasing in m (single swap channel). IO-bound workloads
+    // (t_in dominating) are covered by the same corpus.
+    cases(200, |rng| {
+        let times = random_times(rng, 12);
+        let mut prev = f64::INFINITY;
+        for m in 1..=6 {
+            let lat = timeline_spec(&times, &PipelineSpec::with_residency(m)).latency();
+            assert!(
+                lat <= prev + 1e-12,
+                "latency grew with residency: m={m} gives {lat} after {prev}"
+            );
+            prev = lat;
+        }
+    });
+}
+
+#[test]
+fn prop_residual_equals_timeline_for_general_m() {
+    cases(200, |rng| {
+        let times = random_times(rng, 12);
+        let m = 1 + rng.below(5);
+        let channels = 1 + rng.below(3);
+        let spec = PipelineSpec { residency_m: m, swap_channels: channels };
+        let a = residual_objective_spec(&times, &spec);
+        let b = timeline_spec(&times, &spec).latency();
+        assert!((a - b).abs() < 1e-9, "m={m} c={channels}: {a} vs {b}");
+        assert!(total_stall_spec(&times, &spec) >= 0.0);
+        // The m=2 wrappers agree with their spec forms.
+        let d = PipelineSpec::default();
+        assert_eq!(total_stall(&times), total_stall_spec(&times, &d));
+        assert_eq!(residual_objective(&times), residual_objective_spec(&times, &d));
+    });
+}
+
+#[test]
+fn prop_timeline_spec_wellformed_for_general_m() {
+    cases(200, |rng| {
+        let times = random_times(rng, 12);
+        let m = 1 + rng.below(5);
+        let channels = 1 + rng.below(3);
+        let spec = PipelineSpec { residency_m: m, swap_channels: channels };
+        let tl = timeline_spec(&times, &spec);
+        for i in 0..times.len() {
+            assert!(tl.swap_end[i] >= tl.swap_start[i]);
+            assert!(tl.exec_start[i] + 1e-12 >= tl.swap_end[i]);
+            assert!(tl.exec_end[i] >= tl.exec_start[i]);
+            if i > 0 {
+                assert!(tl.exec_start[i] + 1e-12 >= tl.exec_end[i - 1], "serial exec");
+            }
+            if i >= m {
+                // Residency m: every block up to i-m has fully left
+                // memory before swap i starts.
+                for j in 0..=i - m {
+                    assert!(
+                        tl.swap_start[i] + 1e-12 >= tl.exec_end[j] + times[j].t_out,
+                        "residency m={m}: swap {i} began before block {j} left"
+                    );
+                }
+            }
+        }
+        // Channel capacity: total swap time over `channels` channels.
+        let sum_in: f64 = times.iter().map(|t| t.t_in).sum();
+        assert!(tl.latency() + 1e-9 >= sum_in / channels as f64, "channel capacity");
+    });
+}
+
+#[test]
+fn prop_peak_residency_m_windows() {
+    cases(200, |rng| {
+        let n = 1 + rng.below(10);
+        let sizes: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1_000_000).collect();
+        let total: u64 = sizes.iter().sum();
+        let mut prev = peak_resident_bytes_m(&sizes, 1);
+        assert_eq!(prev, *sizes.iter().max().unwrap());
+        for m in 2..=n + 2 {
+            let peak = peak_resident_bytes_m(&sizes, m);
+            assert!(peak >= prev, "peak must grow with m");
+            assert!(peak <= total);
+            prev = peak;
+        }
+        assert_eq!(peak_resident_bytes_m(&sizes, n), total);
+        assert_eq!(peak_resident_bytes(&sizes), peak_resident_bytes_m(&sizes, 2));
     });
 }
 
