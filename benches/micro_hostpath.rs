@@ -1,0 +1,174 @@
+//! Micro-bench: the zero-copy host data path (pooled vs unpooled
+//! swap-in). Replays a steady-state swap loop over synthetic block
+//! parameter files and counts, deterministically, the heap allocations
+//! and avoidable payload copies each path performs per swap-in:
+//!
+//! * **unpooled** — the seed implementation's read: aligned
+//!   over-allocation + tail `.to_vec()` = 2 allocations and a full
+//!   payload copy per swap-in, every swap-in;
+//! * **pooled** — `hostmem::BufferPool` slots recycled across blocks:
+//!   0 allocations and 0 copies once warm, with byte-identical payloads.
+//!
+//! The bench *asserts* the pooled invariants (steady-state allocations
+//! = 0, ≥2x fewer copied bytes, byte-identical payloads) and exits
+//! non-zero on violation; the `dev_*` metrics are structure-determined
+//! (never host-dependent) and gated in `BENCH_baseline.json`.
+//! `--json <path>` emits metrics; `--smoke` trims wall budgets.
+
+use std::path::{Path, PathBuf};
+
+use swapnet::config::MB;
+use swapnet::hostmem::{BlockBuffer, BufferPool};
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
+use swapnet::pipeline::PipelineSpec;
+use swapnet::storage::read_file_into;
+use swapnet::util::bench::bench;
+
+/// Deterministic synthetic block files: 6 blocks, 24 MB total (mean
+/// payload exactly 4 MB — the gated per-swap-in copy metric).
+const BLOCK_MB: [u64; 6] = [4, 2, 6, 3, 5, 4];
+
+fn write_blocks(dir: &Path) -> Vec<PathBuf> {
+    std::fs::create_dir_all(dir).unwrap();
+    BLOCK_MB
+        .iter()
+        .enumerate()
+        .map(|(i, &mb)| {
+            let path = dir.join(format!("block{i}.bin"));
+            let data: Vec<u8> = (0..mb * MB).map(|b| ((b * 31 + i as u64 * 7) % 251) as u8).collect();
+            std::fs::write(&path, &data).unwrap();
+            path
+        })
+        .collect()
+}
+
+/// The seed implementation's swap-in read: land the file in an aligned
+/// scratch allocation, then `.to_vec()` the payload out of it — two
+/// heap allocations and one full payload copy per swap-in.
+fn unpooled_read(path: &Path) -> (Vec<u8>, u64, u64) {
+    let len = std::fs::metadata(path).unwrap().len() as usize;
+    let mut scratch = BlockBuffer::with_capacity(len); // alloc #1 (aligned scratch)
+    read_file_into(path, true, &mut scratch).unwrap();
+    let payload = scratch.as_slice().to_vec(); // alloc #2 + full copy
+    (payload, 2, len as u64)
+}
+
+fn fail(msg: &str) -> ! {
+    eprintln!("micro_hostpath FAILED: {msg}");
+    std::process::exit(1);
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("micro_hostpath");
+    println!("=== micro: host data path (pooled vs unpooled swap-in) ===\n");
+
+    let dir = std::env::temp_dir().join(format!("swapnet-hostpath-{}", std::process::id()));
+    let blocks = write_blocks(&dir);
+    let total_bytes: u64 = BLOCK_MB.iter().sum::<u64>() * MB;
+    let mean_payload = total_bytes as f64 / blocks.len() as f64;
+
+    // ---- unpooled baseline (the seed path) ---------------------------
+    let mut unpooled_allocs = 0u64;
+    let mut unpooled_copied = 0u64;
+    let mut payloads = Vec::new();
+    for p in &blocks {
+        let (payload, allocs, copied) = unpooled_read(p);
+        unpooled_allocs += allocs;
+        unpooled_copied += copied;
+        payloads.push(payload);
+    }
+    let unpooled_allocs_per = unpooled_allocs as f64 / blocks.len() as f64;
+    let unpooled_copied_per = unpooled_copied as f64 / blocks.len() as f64;
+
+    // ---- pooled path: warmup round, then a steady-state swap loop ----
+    let spec = PipelineSpec::default(); // m=2, one channel
+    let slot = (*BLOCK_MB.iter().max().unwrap() * MB) as usize;
+    let pool = BufferPool::for_pipeline(slot, &spec);
+    let mut fallbacks = 0u64;
+    for (p, expect) in blocks.iter().zip(&payloads) {
+        let mut s = pool.checkout();
+        let o = read_file_into(p, true, &mut s).unwrap();
+        fallbacks += u64::from(o.fallback);
+        if s.as_slice() != &expect[..] {
+            fail("pooled payload differs from unpooled payload");
+        }
+    }
+    let warm = pool.stats();
+
+    let rounds = if args.smoke { 3u64 } else { 8 };
+    for _ in 0..rounds {
+        for (p, expect) in blocks.iter().zip(&payloads) {
+            let mut s = pool.checkout();
+            let o = read_file_into(p, true, &mut s).unwrap();
+            if o.grew {
+                fail("steady-state read grew its slot");
+            }
+            if s.as_slice() != &expect[..] {
+                fail("steady-state pooled payload differs");
+            }
+        }
+    }
+    let steady = pool.stats();
+    let swapins = rounds * blocks.len() as u64;
+    let steady_allocs = steady.alloc_events - warm.alloc_events;
+    let steady_allocs_per = steady_allocs as f64 / swapins as f64;
+    let pooled_copied_per = (steady.bytes_copied - warm.bytes_copied) as f64 / swapins as f64;
+
+    println!("blocks: {} files, {} MB total, mean payload {:.1} MB", blocks.len(), total_bytes / MB, mean_payload / MB as f64);
+    println!("unpooled (seed path): {unpooled_allocs_per:.0} allocs, {:.1} MB copied per swap-in", unpooled_copied_per / MB as f64);
+    println!(
+        "pooled:               {steady_allocs_per:.0} allocs, {:.1} MB copied per swap-in (steady state, {} slots, {} reuses)",
+        pooled_copied_per / MB as f64,
+        steady.slots,
+        steady.reuses
+    );
+    println!("O_DIRECT fallbacks during warmup: {fallbacks}/{} (host filesystem dependent)", blocks.len());
+
+    // ---- the acceptance invariants (hard failures, not just metrics) -
+    if steady_allocs != 0 {
+        fail(&format!("steady-state swap loop performed {steady_allocs} heap allocations"));
+    }
+    if steady.slots > pool.slot_limit() {
+        fail(&format!("{} slots exceed the m x channels bound {}", steady.slots, pool.slot_limit()));
+    }
+    if pooled_copied_per * 2.0 > unpooled_copied_per {
+        fail("pooled path must copy at least 2x fewer bytes per swap-in");
+    }
+
+    // ---- wall-clock comparison (emitted, never gated) ----------------
+    let budget = args.budget_ms(400);
+    let ru = bench("unpooled swap-in round (seed path)", budget, || {
+        for p in &blocks {
+            let (payload, _, _) = unpooled_read(p);
+            std::hint::black_box(payload.len());
+        }
+    });
+    println!("\n{}", ru.report());
+    let rp = bench("pooled swap-in round (recycled slots)", budget, || {
+        for p in &blocks {
+            let mut s = pool.checkout();
+            read_file_into(p, true, &mut s).unwrap();
+            std::hint::black_box(s.len());
+        }
+    });
+    println!("{}", rp.report());
+
+    // Structure-determined metrics (gated): +1 forms keep a meaningful
+    // relative band around the zero targets.
+    emit.metric("dev_hostpath_pooled_steady_allocs_per_swapin_plus1", 1.0 + steady_allocs_per);
+    emit.metric(
+        "dev_hostpath_pooled_copied_per_swapin_bytes_plus1",
+        1.0 + pooled_copied_per,
+    );
+    emit.metric("dev_hostpath_unpooled_allocs_per_swapin", unpooled_allocs_per);
+    emit.metric("dev_hostpath_unpooled_copied_per_swapin_bytes", unpooled_copied_per);
+    // Host-dependent observations ride along unguarded.
+    emit.metric("wall_unpooled_round_p50_s", ru.p50_s);
+    emit.metric("wall_pooled_round_p50_s", rp.p50_s);
+    emit.metric("wall_direct_fallback_reads", fallbacks as f64);
+
+    std::fs::remove_dir_all(&dir).ok();
+    emit.finish(&args).expect("write bench json");
+    println!("\nmicro_hostpath PASSED: 0 steady-state allocations, byte-identical payloads");
+}

@@ -62,9 +62,16 @@ impl AssemblyController {
     }
 
     /// Size of the resident skeleton for a block (pointers only — paper:
-    /// "no more than a few KB"). 32 bytes per slot (shape + offset + ptr).
+    /// "no more than a few KB"), accounted per entry: data pointer +
+    /// byte offset + byte length (24 B), plus 8 B per shape dimension
+    /// and the tensor's name bytes. The historical flat 32 B/slot
+    /// estimate undercounted deep tensors (rank-4 conv kernels with
+    /// long qualified names cost ~3x that).
     pub fn skeleton_bytes(skeleton: &[SkeletonEntry]) -> u64 {
-        skeleton.len() as u64 * 32
+        skeleton
+            .iter()
+            .map(|e| 24 + 8 * e.shape.len() as u64 + e.name.len() as u64)
+            .sum()
     }
 
     /// Assemble a block whose flat parameter buffer is resident.
@@ -144,7 +151,10 @@ impl AssemblyController {
 }
 
 /// View a registered parameter inside the block's flat buffer — this IS
-/// the zero-copy access path the runtime uses to build literals.
+/// the zero-copy access path the runtime uses to build literals. Pooled
+/// callers pass `BlockBuffer::as_slice()`; the real pipeline's
+/// `exec_block` applies the same offset arithmetic (region offset +
+/// skeleton offset) bounds-checked via `runtime::slice_checked`.
 pub fn param_slice<'a>(buf: &'a [u8], p: &ParamRef) -> &'a [u8] {
     &buf[p.offset..p.offset + p.len]
 }
@@ -263,5 +273,44 @@ mod tests {
         let sk = synthetic_skeleton(&b);
         let sk_bytes = AssemblyController::skeleton_bytes(&sk);
         assert!(sk_bytes < 64_000, "skeleton {} B", sk_bytes);
+    }
+
+    #[test]
+    fn skeleton_bytes_accounts_rank_and_name() {
+        use crate::model::artifacts::SkeletonEntry;
+        let shallow = vec![SkeletonEntry {
+            name: "w".into(),
+            shape: vec![256],
+            offset_bytes: 0,
+            size_bytes: 1024,
+        }];
+        let deep = vec![SkeletonEntry {
+            name: "features.stage3.block2.conv.weight".into(),
+            shape: vec![3, 3, 128, 256],
+            offset_bytes: 0,
+            size_bytes: 1024,
+        }];
+        let s = AssemblyController::skeleton_bytes(&shallow);
+        let d = AssemblyController::skeleton_bytes(&deep);
+        assert_eq!(s, 24 + 8 + 1);
+        assert_eq!(d, 24 + 8 * 4 + deep[0].name.len() as u64);
+        assert!(d > s, "rank-4 named tensors must cost more than flat slots");
+    }
+
+    #[test]
+    fn param_slice_views_pooled_buffer_payload() {
+        use crate::hostmem::BlockBuffer;
+        let b = block(1, 4);
+        let sk = synthetic_skeleton(&b);
+        let bytes: Vec<u8> = (0..b.size_bytes).map(|i| (i % 251) as u8).collect();
+        let mut buf = BlockBuffer::with_capacity(bytes.len());
+        buf.copy_from(&bytes);
+        let p = ParamRef {
+            name: sk[2].name.clone(),
+            shape: sk[2].shape.clone(),
+            offset: sk[2].offset_bytes,
+            len: sk[2].size_bytes,
+        };
+        assert_eq!(param_slice(buf.as_slice(), &p), param_slice(&bytes, &p));
     }
 }

@@ -15,7 +15,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Error, Result};
 
 use crate::config::DeviceProfile;
-use crate::pipeline::real::{run_partitioned_spec, ExecStrategy};
+use crate::hostmem::{BufferPool, PoolStats};
+use crate::pipeline::real::{pool_slot_bytes, run_partitioned_pooled, ExecStrategy};
 use crate::pipeline::{peak_resident_bytes_m, timeline, timeline_spec, BlockTimes, Timeline};
 use crate::runtime::{ResidentModelRunner, Runtime};
 use crate::scheduler::Schedule;
@@ -69,6 +70,10 @@ pub struct InferenceReport {
     pub compute_s: f64,
     /// Output activations (real runs only).
     pub output: Option<Vec<f32>>,
+    /// Host buffer-pool counters (real backends only): recycled-slot
+    /// checkouts, heap allocations, copied bytes — the zero-copy host
+    /// path's proof obligations. `None` on purely simulated runs.
+    pub pool: Option<PoolStats>,
 }
 
 /// An execution substrate the [`Engine`](super::Engine) dispatches to.
@@ -95,6 +100,13 @@ pub trait ExecBackend {
     /// backends have nothing to release.
     fn release(&mut self, _id: usize) -> Result<()> {
         Ok(())
+    }
+
+    /// Counters of the backend's host buffer pool, when it has one
+    /// (real backends recycle swap buffers across blocks/requests/
+    /// tenants; the sim backend has no host data path).
+    fn pool_stats(&self) -> Option<PoolStats> {
+        None
     }
 }
 
@@ -175,6 +187,7 @@ fn report_from_run(model: &str, run: crate::engine::SnetRun) -> InferenceReport 
         assembly_s: run.assembly_s,
         compute_s: run.compute_s,
         output: None,
+        pool: None,
     }
 }
 
@@ -185,16 +198,36 @@ pub struct PjrtBackend {
     /// built lazily on first whole-model request, kept for the engine's
     /// lifetime (weights stay uploaded between requests).
     residents: HashMap<(usize, usize), ResidentModelRunner>,
+    /// Engine-owned host buffer pool, shared by every swapped model the
+    /// backend serves (slots re-size up at registration; recycled
+    /// across blocks, requests, and tenants).
+    pool: BufferPool,
+    /// Per-model slot-capacity requirement (largest block footprint),
+    /// so eviction can shrink the pool back to the surviving fleet's
+    /// need instead of pinning memory sized to a departed tenant.
+    slot_needs: HashMap<usize, usize>,
 }
 
 impl PjrtBackend {
     /// CPU PJRT client (the only real device in this environment).
     pub fn cpu() -> Result<PjrtBackend> {
-        Ok(PjrtBackend { rt: Rc::new(Runtime::cpu()?), residents: HashMap::new() })
+        Ok(PjrtBackend {
+            rt: Rc::new(Runtime::cpu()?),
+            residents: HashMap::new(),
+            // Slot capacity grows at registration; the default pipeline
+            // bound (m=2, one channel) is informational until then.
+            pool: BufferPool::for_pipeline(0, &crate::pipeline::PipelineSpec::default()),
+            slot_needs: HashMap::new(),
+        })
     }
 
     pub fn runtime(&self) -> Rc<Runtime> {
         self.rt.clone()
+    }
+
+    /// The backend's shared host buffer pool.
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
     }
 }
 
@@ -211,6 +244,14 @@ impl ExecBackend for PjrtBackend {
             for ui in 0..art.units.len() {
                 self.rt.load_hlo(&art.hlo_path(ui, b)?)?;
             }
+        }
+        // Models scheduled for the swapped pipeline pre-size the shared
+        // buffer pool now, so the first request's swap-ins recycle warm
+        // slots instead of allocating on the critical path.
+        if !reg.schedule.points.is_empty() {
+            let need = pool_slot_bytes(art, &reg.schedule.points)?;
+            self.slot_needs.insert(id, need);
+            self.pool.ensure_slot_bytes(need);
         }
         // When this model is scheduled for whole-model serving (no
         // partition points) and the ref variants exist, also compile the
@@ -282,6 +323,7 @@ impl ExecBackend for PjrtBackend {
                 assembly_s: 0.0,
                 compute_s: dt,
                 output: Some(output),
+                pool: Some(self.pool.stats()),
             });
         }
 
@@ -295,7 +337,14 @@ impl ExecBackend for PjrtBackend {
             swap_channels: 1,
             ..cfg.pipeline
         };
-        let rep = run_partitioned_spec(
+        // Point overrides may cut coarser blocks than the registered
+        // schedule; keep the shared pool's slots large enough (and the
+        // model's recorded need, so eviction shrinks correctly).
+        let need = pool_slot_bytes(art, points)?;
+        let entry = self.slot_needs.entry(id).or_insert(0);
+        *entry = (*entry).max(need);
+        self.pool.ensure_slot_bytes(need);
+        let rep = run_partitioned_pooled(
             &self.rt,
             art,
             req.batch,
@@ -303,6 +352,7 @@ impl ExecBackend for PjrtBackend {
             ExecStrategy::Overlapped,
             input,
             &real_spec,
+            &self.pool,
         )?;
         let times: Vec<BlockTimes> = rep
             .blocks
@@ -327,13 +377,24 @@ impl ExecBackend for PjrtBackend {
             assembly_s,
             compute_s,
             output: Some(rep.output),
+            pool: Some(rep.pool),
         })
     }
 
     /// Drop this model's device-resident runners; compiled HLO stays in
-    /// the runtime's executable cache (shared, content-addressed).
+    /// the runtime's executable cache (shared, content-addressed). The
+    /// buffer pool keeps its slots (model-agnostic capacity) but
+    /// shrinks the per-slot byte size to the surviving fleet's largest
+    /// need — host memory must not stay sized to a departed tenant.
     fn release(&mut self, id: usize) -> Result<()> {
         self.residents.retain(|&(mid, _), _| mid != id);
+        self.slot_needs.remove(&id);
+        let remaining = self.slot_needs.values().copied().max().unwrap_or(0);
+        self.pool.set_slot_bytes(remaining);
         Ok(())
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.pool.stats())
     }
 }

@@ -335,6 +335,13 @@ impl Engine {
         self.core.borrow().backend.name()
     }
 
+    /// Counters of the backend's shared host buffer pool (`None` on the
+    /// sim backend, which has no real host data path). The pool is
+    /// per-engine and shared across every registered model/tenant.
+    pub fn pool_stats(&self) -> Option<crate::hostmem::PoolStats> {
+        self.core.borrow().backend.pool_stats()
+    }
+
     /// Number of live (non-evicted) registered models.
     pub fn registered(&self) -> usize {
         self.core.borrow().models.iter().filter(|m| m.is_some()).count()
@@ -553,6 +560,7 @@ mod tests {
         assert_eq!(engine.profile().name, "jetson-nx");
         assert_eq!(engine.backend_name(), "sim");
         assert_eq!(engine.registered(), 0);
+        assert!(engine.pool_stats().is_none(), "sim backend has no host pool");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! [`InferenceReport`] — the simulated and real PJRT execution paths are
 //! interchangeable [`engine::ExecBackend`] implementations behind it. The
 //! remaining modules are the substrates the engine composes (swap,
-//! memsim, storage, scheduler, pipeline, runtime, metrics) plus the
+//! hostmem, memsim, storage, scheduler, pipeline, runtime, metrics) plus the
 //! paper-experiment surfaces (`coordinator`, `workload`, `power`).
 
 #![forbid(unsafe_code)]
@@ -20,6 +20,7 @@ pub mod config;
 pub mod coordinator;
 pub mod delay;
 pub mod engine;
+pub mod hostmem;
 pub mod memsim;
 pub mod metrics;
 pub mod model;

@@ -628,6 +628,17 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
         ));
     }
     println!("zero budget violations (asserted via the shared MemSim ledger)");
+    if let Some(pool) = rep.pool {
+        println!(
+            "host buffer pool: {} slots ({} each), {} checkouts ({} recycled), {} allocations, {} copied bytes",
+            pool.slots,
+            table::human_bytes(pool.slot_bytes),
+            pool.checkouts,
+            pool.reuses,
+            pool.alloc_events,
+            pool.bytes_copied,
+        );
+    }
     Ok(())
 }
 

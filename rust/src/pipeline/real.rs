@@ -14,6 +14,14 @@
 //! implementation gated the loader on a `sync_channel(1)` alone, which
 //! let a third buffer go live — block i executing, block i+1 queued,
 //! block i+2 being read — overshooting the claimed m=2.)
+//!
+//! Host memory comes from a [`BufferPool`]: the loader checks ONE
+//! recycled page-aligned slot out per block and lands every unit's
+//! parameter file in an aligned region of it (`storage::read_into_slice`
+//! — `O_DIRECT` when the filesystem allows), the executor views skeleton
+//! slices straight out of the slot, and dropping the block returns the
+//! slot for the next block. Steady state performs zero heap allocations
+//! per swap-in ([`RunReport::pool`] carries the counters that prove it).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -21,10 +29,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::hostmem::{aligned_len, BlockBuffer, BufferPool, PooledBuf, PoolStats};
 use crate::model::artifacts::ArtifactModel;
 use crate::pipeline::PipelineSpec;
 use crate::runtime::{literal_f32, literal_from_f32s, literal_to_vec, Runtime};
-use crate::storage::direct_read;
+use crate::storage::read_into_slice;
 
 /// Real-execution strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,10 +62,15 @@ pub struct RunReport {
     pub latency_s: f64,
     pub blocks: Vec<BlockReport>,
     pub output: Vec<f32>,
-    /// Largest number of parameter-buffer bytes simultaneously alive
+    /// Largest number of parameter-payload bytes simultaneously alive
     /// (being read + queued + executing) — the byte-count probe for the
-    /// residency bound. At most the max m-window of block sizes.
+    /// residency bound. At most the max m-window of block sizes. With
+    /// the pool this is also a structural invariant: at most
+    /// `residency_m` slots are ever checked out (`pool.peak_checked_out`).
     pub peak_buffer_bytes: u64,
+    /// Host buffer-pool counters at run end (checkouts, reuses, heap
+    /// allocations, copied bytes) — the zero-copy proof obligations.
+    pub pool: PoolStats,
 }
 
 impl RunReport {
@@ -115,6 +129,79 @@ fn bounded_overlap<T: Send>(
     })
 }
 
+/// Validated block bounds for a partition of `n_units` at `points`.
+fn block_bounds(n_units: usize, points: &[usize]) -> Result<Vec<(usize, usize)>> {
+    let mut bounds = vec![0usize];
+    bounds.extend_from_slice(points);
+    bounds.push(n_units);
+    for w in bounds.windows(2) {
+        if w[0] >= w[1] {
+            return Err(anyhow!("invalid partition {points:?}"));
+        }
+    }
+    Ok(bounds.windows(2).map(|w| (w[0], w[1])).collect())
+}
+
+/// Per-unit aligned regions of one block inside a pool slot: each
+/// unit's payload starts on its own page boundary (so every region can
+/// take an `O_DIRECT` read), and the total is the slot footprint.
+fn unit_regions(model: &ArtifactModel, lo: usize, hi: usize) -> (Vec<(usize, usize)>, usize) {
+    let mut regions = Vec::with_capacity(hi - lo);
+    let mut off = 0usize;
+    for ui in lo..hi {
+        let len = model.units[ui].size_bytes as usize;
+        regions.push((off, len));
+        off += aligned_len(len);
+    }
+    (regions, off)
+}
+
+/// Pool slot capacity a partition of `model` at `points` needs: the
+/// largest block's aligned footprint. The engine pre-sizes its shared
+/// pool with this at registration time.
+pub fn pool_slot_bytes(model: &ArtifactModel, points: &[usize]) -> Result<usize> {
+    let blocks = block_bounds(model.units.len(), points)?;
+    Ok(blocks
+        .iter()
+        .map(|&(lo, hi)| unit_regions(model, lo, hi).1)
+        .max()
+        .unwrap_or(0))
+}
+
+/// Check a slot out of `pool` and land every unit parameter file of
+/// block `[lo, hi)` in its aligned region — the single real-read path
+/// (shared with `SwapController::swap_in_file*` via `storage`), zero
+/// heap allocations once the pool is warm.
+fn load_block(
+    model: &ArtifactModel,
+    lo: usize,
+    hi: usize,
+    pool: &BufferPool,
+) -> Result<(PooledBuf, Vec<(usize, usize)>)> {
+    let (regions, total) = unit_regions(model, lo, hi);
+    // Keep the pool's slot capacity authoritative (a caller-owned pool
+    // may be sized for smaller blocks); checkout then hands back a slot
+    // that already fits, and any growth is counted by the pool.
+    pool.ensure_slot_bytes(total);
+    let mut slot = pool.checkout();
+    let mut payload_end = 0usize;
+    for (k, ui) in (lo..hi).enumerate() {
+        let (off, len) = regions[k];
+        let dst = slot.region_mut(off, aligned_len(len));
+        let outcome = read_into_slice(&model.params_path(ui), true, dst)
+            .with_context(|| format!("params of unit {ui}"))?;
+        if outcome.bytes != len {
+            return Err(anyhow!(
+                "unit {ui}: params file holds {} bytes, meta declares {len}",
+                outcome.bytes
+            ));
+        }
+        payload_end = off + len;
+    }
+    slot.set_len(payload_end);
+    Ok((slot, regions))
+}
+
 /// Run `model` partitioned at `points` under the default m=2 pipeline.
 pub fn run_partitioned(
     rt: &Runtime,
@@ -128,7 +215,9 @@ pub fn run_partitioned(
 }
 
 /// Run `model` partitioned at `points` (unit indices) with the given
-/// strategy and pipeline spec. `input` is the flattened batch input.
+/// strategy and pipeline spec, over a fresh one-shot buffer pool.
+/// `input` is the flattened batch input. Callers holding a long-lived
+/// pool (the engine) use [`run_partitioned_pooled`].
 pub fn run_partitioned_spec(
     rt: &Runtime,
     model: &ArtifactModel,
@@ -138,16 +227,25 @@ pub fn run_partitioned_spec(
     input: &[f32],
     spec: &PipelineSpec,
 ) -> Result<RunReport> {
+    let pool = BufferPool::for_pipeline(pool_slot_bytes(model, points)?, spec);
+    run_partitioned_pooled(rt, model, batch, points, strategy, input, spec, &pool)
+}
+
+/// [`run_partitioned_spec`] over a caller-owned [`BufferPool`] — slots
+/// recycle across blocks, requests, and tenants sharing the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn run_partitioned_pooled(
+    rt: &Runtime,
+    model: &ArtifactModel,
+    batch: usize,
+    points: &[usize],
+    strategy: ExecStrategy,
+    input: &[f32],
+    spec: &PipelineSpec,
+    pool: &BufferPool,
+) -> Result<RunReport> {
     let n_units = model.units.len();
-    let mut bounds = vec![0usize];
-    bounds.extend_from_slice(points);
-    bounds.push(n_units);
-    for w in bounds.windows(2) {
-        if w[0] >= w[1] {
-            return Err(anyhow!("invalid partition {points:?}"));
-        }
-    }
-    let blocks: Vec<(usize, usize)> = bounds.windows(2).map(|w| (w[0], w[1])).collect();
+    let blocks = block_bounds(n_units, points)?;
 
     // Pre-compile every unit (model registration time, not request time).
     for ui in 0..n_units {
@@ -165,18 +263,22 @@ pub fn run_partitioned_spec(
             let mut peak_buf = 0u64;
             for (bi, &(lo, hi)) in blocks.iter().enumerate() {
                 let ts = Instant::now();
-                let bufs = read_block(model, lo, hi)?;
+                let (slot, regions) = load_block(model, lo, hi, pool)?;
                 let swap_s = ts.elapsed().as_secs_f64();
-                peak_buf = peak_buf.max(bufs.iter().map(|b| b.len() as u64).sum());
-                let (a2, rep) = exec_block(rt, model, batch, bi, lo, hi, &bufs, act, swap_s)?;
+                let payload: u64 = (lo..hi).map(|ui| model.units[ui].size_bytes).sum();
+                peak_buf = peak_buf.max(payload);
+                let (a2, rep) =
+                    exec_block(rt, model, batch, bi, lo, hi, &slot, &regions, act, swap_s)?;
                 act = a2;
                 reports.push(rep);
+                // `slot` drops here, recycling into the pool for block bi+1.
             }
             Ok(RunReport {
                 latency_s: t0.elapsed().as_secs_f64(),
                 blocks: reports,
                 output: literal_to_vec(&act)?,
                 peak_buffer_bytes: peak_buf,
+                pool: pool.stats(),
             })
         }
         ExecStrategy::Overlapped => {
@@ -192,22 +294,21 @@ pub fn run_partitioned_spec(
                 |bi| {
                     let (lo, hi) = blocks[bi];
                     let ts = Instant::now();
-                    let bufs = read_block(model, lo, hi)?;
+                    let (slot, regions) = load_block(model, lo, hi, pool)?;
                     let dt = ts.elapsed().as_secs_f64();
-                    let bytes: u64 = bufs.iter().map(|b| b.len() as u64).sum();
+                    let bytes: u64 = (lo..hi).map(|ui| model.units[ui].size_bytes).sum();
                     let now = live.fetch_add(bytes, Ordering::SeqCst) + bytes;
                     peak.fetch_max(now, Ordering::SeqCst);
-                    Ok((bufs, dt))
+                    Ok((slot, regions, dt, bytes))
                 },
-                |bi, (bufs, swap_s): (Vec<Vec<u8>>, f64)| {
+                |bi, (slot, regions, swap_s, bytes): (PooledBuf, Vec<(usize, usize)>, f64, u64)| {
                     let (lo, hi) = blocks[bi];
                     let cur = act.take().expect("activation chain is linear");
                     let (a2, rep) =
-                        exec_block(rt, model, batch, bi, lo, hi, &bufs, cur, swap_s)?;
+                        exec_block(rt, model, batch, bi, lo, hi, &slot, &regions, cur, swap_s)?;
                     act = Some(a2);
                     reports.push(rep);
-                    let bytes: u64 = bufs.iter().map(|b| b.len() as u64).sum();
-                    drop(bufs);
+                    drop(slot); // slot returns to the pool before the token
                     live.fetch_sub(bytes, Ordering::SeqCst);
                     Ok(())
                 },
@@ -218,20 +319,16 @@ pub fn run_partitioned_spec(
                 blocks: reports,
                 output: literal_to_vec(&out)?,
                 peak_buffer_bytes: peak.load(Ordering::SeqCst),
+                pool: pool.stats(),
             })
         }
     }
 }
 
-fn read_block(model: &ArtifactModel, lo: usize, hi: usize) -> Result<Vec<Vec<u8>>> {
-    (lo..hi)
-        .map(|ui| {
-            direct_read(&model.params_path(ui))
-                .with_context(|| format!("params of unit {ui}"))
-        })
-        .collect()
-}
-
+/// Assemble and execute one block whose parameters are resident in a
+/// pool slot: skeleton literals view `(region offset + skeleton offset,
+/// len)` slices directly out of the pooled buffer — no intermediate
+/// per-unit `Vec`s.
 #[allow(clippy::too_many_arguments)]
 fn exec_block(
     rt: &Runtime,
@@ -240,22 +337,24 @@ fn exec_block(
     bi: usize,
     lo: usize,
     hi: usize,
-    bufs: &[Vec<u8>],
+    buf: &BlockBuffer,
+    regions: &[(usize, usize)],
     mut act: xla::Literal,
     swap_s: f64,
 ) -> Result<(xla::Literal, BlockReport)> {
     let ta = Instant::now();
-    // Assembly by reference: literals view (offset, len) slices of the
-    // flat parameter buffers.
+    let flat = buf.as_slice();
     let mut unit_params = Vec::with_capacity(hi - lo);
     for (k, ui) in (lo..hi).enumerate() {
         let unit = &model.units[ui];
-        let buf = &bufs[k];
+        let (off, len) = regions[k];
+        let ubuf = crate::runtime::slice_checked(flat, off, len, &unit.name)?;
         let params: Vec<xla::Literal> = unit
             .skeleton
             .iter()
             .map(|e| {
-                let s = crate::runtime::slice_checked(buf, e.offset_bytes, e.size_bytes, &unit.name)?;
+                let s =
+                    crate::runtime::slice_checked(ubuf, e.offset_bytes, e.size_bytes, &unit.name)?;
                 literal_f32(&e.shape, s)
             })
             .collect::<Result<_>>()?;

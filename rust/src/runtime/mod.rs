@@ -107,7 +107,14 @@ impl Runtime {
             .map_err(|e| anyhow!("upload: {e:?}"))
     }
 
-    /// Upload raw little-endian f32 bytes as a device buffer.
+    /// Upload raw little-endian f32 bytes as a device buffer in a
+    /// single pass. XLA literals are little-endian on every target, so
+    /// on LE hosts with a 4-byte-aligned source the bytes already ARE
+    /// the device layout and go straight to the backend (one copy, no
+    /// element-wise conversion — the seed implementation converted
+    /// bytes -> `Vec<f32>` -> device, two full passes with an extra
+    /// allocation per upload). Misaligned or big-endian sources take
+    /// the one-pass conversion route.
     pub fn upload_f32_bytes(&self, bytes: &[u8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         let expected: usize = dims.iter().product::<usize>() * 4;
         if bytes.len() != expected {
@@ -118,8 +125,13 @@ impl Runtime {
                 expected
             ));
         }
-        // f32 from LE bytes; on this (little-endian) target the cast view
-        // is the bytes themselves, but go through a properly aligned copy.
+        let aligned = bytes.as_ptr().align_offset(std::mem::align_of::<f32>()) == 0;
+        if cfg!(target_endian = "little") && aligned {
+            return self
+                .client
+                .buffer_from_host_f32_bytes(bytes, dims)
+                .map_err(|e| anyhow!("upload bytes: {e:?}"));
+        }
         let vals: Vec<f32> = bytes
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -347,6 +359,31 @@ mod tests {
     #[test]
     fn literal_shape_mismatch_rejected() {
         assert!(literal_f32(&[4], &[0u8; 12]).is_err());
+    }
+
+    #[test]
+    fn upload_bytes_single_pass_matches_value_path() {
+        let rt = Runtime::cpu().unwrap();
+        let vals = vec![1.5f32, -2.25, 0.0, 3.75];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let a = rt.upload_f32(&vals, &[2, 2]).unwrap().to_literal_sync().unwrap();
+        let b = rt.upload_f32_bytes(&bytes, &[2, 2]).unwrap().to_literal_sync().unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        // A deliberately misaligned source takes the conversion path and
+        // still lands identical values.
+        let mut padded = vec![0u8];
+        padded.extend_from_slice(&bytes);
+        let c = rt
+            .upload_f32_bytes(&padded[1..], &[2, 2])
+            .unwrap()
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(c.to_vec::<f32>().unwrap(), vals);
+        // Length validation stays strict.
+        assert!(rt.upload_f32_bytes(&bytes[..8], &[2, 2]).is_err());
     }
 
     #[test]

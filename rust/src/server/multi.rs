@@ -231,6 +231,13 @@ impl MultiTenantServer {
         &self.engine
     }
 
+    /// Counters of the engine's shared host buffer pool (`None` on sim
+    /// engines). One pool serves every tenant, so steady-state serving
+    /// must show reuses growing while allocations stay flat.
+    pub fn pool_stats(&self) -> Option<crate::hostmem::PoolStats> {
+        self.engine.pool_stats()
+    }
+
     pub fn config(&self) -> &MultiTenantConfig {
         &self.cfg
     }
@@ -573,6 +580,7 @@ impl MultiTenantServer {
         rep.oom_events = oom;
         rep.makespan_s = clock;
         rep.wall_s = wall0.elapsed().as_secs_f64();
+        rep.pool = self.pool_stats();
         Ok(rep)
     }
 
@@ -732,6 +740,7 @@ impl MultiTenantServer {
         rep.peak_bytes = peak;
         rep.oom_events = oom;
         rep.wall_s = wall0.elapsed().as_secs_f64();
+        rep.pool = self.pool_stats();
         Ok(rep)
     }
 

@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::hostmem::PoolStats;
 use crate::metrics::LatencyRecorder;
 
 /// One request's delay decomposition.
@@ -77,6 +78,12 @@ pub struct MultiServeReport {
     pub peak_bytes: u64,
     /// Ledger overcommit events — 0 means zero budget violations.
     pub oom_events: u64,
+    /// Engine host buffer-pool counters at run end (`None` when the
+    /// engine runs the sim backend — no real host data path). The pool
+    /// is shared across tenants, so these are fleet-level aggregates:
+    /// reuse/allocation counts prove swap buffers recycled across the
+    /// whole serving run.
+    pub pool: Option<PoolStats>,
     pub per_model: BTreeMap<String, ModelServeStats>,
     pub traces: Vec<ServeTrace>,
 }
@@ -93,6 +100,7 @@ impl MultiServeReport {
             makespan_s: 0.0,
             peak_bytes: 0,
             oom_events: 0,
+            pool: None,
             per_model: BTreeMap::new(),
             traces: Vec::new(),
         }

@@ -17,6 +17,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::config::DeviceProfile;
+use crate::hostmem::{aligned_len, BlockBuffer, ALIGN};
 use crate::memsim::page_cache::{PageCache, PAGE};
 use crate::memsim::MemSim;
 
@@ -37,6 +38,12 @@ pub struct ReadReport {
     pub sim_latency_s: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// True when a [`Channel::DirectDma`] request degraded to a plain
+    /// buffered read (filesystem rejected `O_DIRECT`, or a short direct
+    /// read forced a buffered retry). Telemetry uses this to tell true
+    /// DMA-channel reads from silently degraded ones; always false on
+    /// the buffered channel and on cost-model-only reads.
+    pub direct_fallback: bool,
 }
 
 /// Block store: file-id registry + the page cache + channel cost model.
@@ -105,6 +112,7 @@ impl Storage {
                     sim_latency_s: lat,
                     cache_hits: hits,
                     cache_misses: misses,
+                    direct_fallback: false,
                 }
             }
             Channel::DirectDma => ReadReport {
@@ -112,13 +120,15 @@ impl Storage {
                 sim_latency_s: self.dma_setup_s + bytes as f64 * prof.alpha_s_per_byte,
                 cache_hits: 0,
                 cache_misses: 0,
+                direct_fallback: false,
             },
         }
     }
 
     /// Real read of `path` through the chosen channel. Returns the bytes
     /// plus the simulated-cost report (real wall time is measured by the
-    /// caller when relevant).
+    /// caller when relevant). Allocates a fresh buffer per call — the
+    /// recycled path is [`read_into`](Self::read_into).
     pub fn read(
         &mut self,
         path: &Path,
@@ -126,15 +136,30 @@ impl Storage {
         mem: &mut MemSim,
         prof: &DeviceProfile,
     ) -> Result<(Vec<u8>, ReadReport)> {
-        let data = match channel {
-            Channel::Buffered => std::fs::read(path)
-                .with_context(|| format!("buffered read {}", path.display()))?,
-            Channel::DirectDma => direct_read(path)
-                .with_context(|| format!("direct read {}", path.display()))?,
-        };
+        let mut buf = BlockBuffer::empty();
+        let report = self.read_into(path, channel, &mut buf, mem, prof)?;
+        Ok((buf.into_vec(), report))
+    }
+
+    /// Real read of `path` landing the bytes directly in `buf` (a pool
+    /// slot or any [`BlockBuffer`]) — no intermediate allocation, no
+    /// tail copy. This is THE real read primitive: both the swap
+    /// controller's file swap-ins and the real pipeline's block loader
+    /// go through it, collapsing the two historical read paths into one.
+    pub fn read_into(
+        &mut self,
+        path: &Path,
+        channel: Channel,
+        buf: &mut BlockBuffer,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+    ) -> Result<ReadReport> {
+        let outcome = read_file_into(path, channel == Channel::DirectDma, buf)
+            .with_context(|| format!("{channel:?} read {}", path.display()))?;
         let id = self.file_id(path);
-        let report = self.read_sim(id, data.len() as u64, channel, mem, prof);
-        Ok((data, report))
+        let mut report = self.read_sim(id, outcome.bytes as u64, channel, mem, prof);
+        report.direct_fallback = outcome.fallback;
+        Ok(report)
     }
 
     /// Drop a file's cached pages (swap-out hygiene for baselines).
@@ -175,22 +200,59 @@ const O_DIRECT: i32 = 0o40000;
 )))]
 const O_DIRECT: i32 = 0;
 
-/// O_DIRECT read with 4 KiB-aligned buffer; transparently falls back to a
-/// plain read on filesystems (e.g. tmpfs/overlayfs) that reject O_DIRECT.
-pub fn direct_read(path: &Path) -> std::io::Result<Vec<u8>> {
+/// Outcome of one real read into caller-owned memory.
+#[derive(Debug, Clone, Copy)]
+pub struct ReadIntoOutcome {
+    /// Payload bytes landed.
+    pub bytes: usize,
+    /// A direct read degraded to the buffered path (unsupported flag,
+    /// unaligned destination, or a short `O_DIRECT` read).
+    pub fallback: bool,
+    /// The destination buffer had to grow (a heap allocation — pooled
+    /// callers report it to their pool's counters).
+    pub grew: bool,
+}
+
+/// Read the whole file at `path` into `dst`, attempting `O_DIRECT` when
+/// `direct` is set and `dst` honors the alignment contract (page-aligned
+/// start and room for the page-rounded length); otherwise — and on any
+/// direct-path degradation — a plain buffered read lands in the same
+/// memory, so no path ever allocates or copies a second time.
+///
+/// `dst` must hold at least the file's length; the payload occupies
+/// `dst[..outcome.bytes]`.
+pub fn read_into_slice(path: &Path, direct: bool, dst: &mut [u8]) -> std::io::Result<ReadIntoOutcome> {
+    let len = std::fs::metadata(path)?.len() as usize;
+    read_into_slice_len(path, direct, dst, len)
+}
+
+/// [`read_into_slice`] with the file length already known (callers that
+/// just stat'ed the file to size their buffer skip the second stat).
+fn read_into_slice_len(
+    path: &Path,
+    direct: bool,
+    dst: &mut [u8],
+    len: usize,
+) -> std::io::Result<ReadIntoOutcome> {
     use std::os::unix::fs::OpenOptionsExt;
-    let flags = O_DIRECT;
-    match std::fs::OpenOptions::new().read(true).custom_flags(flags).open(path) {
-        Ok(mut f) => {
-            let len = f.metadata()?.len() as usize;
-            let cap = len.div_ceil(PAGE as usize) * PAGE as usize;
-            // O_DIRECT requires an aligned buffer; over-allocate a page to
-            // find an aligned window.
-            let mut raw = vec![0u8; cap + PAGE as usize];
-            let off = raw.as_ptr().align_offset(PAGE as usize);
+    if dst.len() < len {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("destination {} B cannot hold {} B file {}", dst.len(), len, path.display()),
+        ));
+    }
+    let cap = aligned_len(len);
+    let aligned = dst.as_ptr().align_offset(ALIGN) == 0 && dst.len() >= cap;
+    // O_DIRECT == 0 means this architecture's flag value is unverified
+    // (storage passes no flag at all): the open would silently run a
+    // plain buffered read, so treat it as the fallback it really is.
+    if direct && aligned && O_DIRECT != 0 {
+        if let Ok(mut f) =
+            std::fs::OpenOptions::new().read(true).custom_flags(O_DIRECT).open(path)
+        {
             let mut read_total = 0usize;
             loop {
-                match f.read(&mut raw[off + read_total..off + cap]) {
+                match f.read(&mut dst[read_total..cap]) {
                     Ok(0) => break,
                     Ok(n) => read_total += n,
                     Err(e) => return Err(e),
@@ -199,15 +261,49 @@ pub fn direct_read(path: &Path) -> std::io::Result<Vec<u8>> {
                     break;
                 }
             }
-            if read_total < len {
-                // short read through O_DIRECT; fall back
-                return std::fs::read(path);
+            if read_total >= len {
+                return Ok(ReadIntoOutcome { bytes: len, fallback: false, grew: false });
             }
-            Ok(raw[off..off + len].to_vec())
+            // Short read through O_DIRECT; re-read buffered below.
         }
-        // EINVAL/ENOTSUP -> no O_DIRECT on this fs; plain read.
-        Err(_) => std::fs::read(path),
+        // EINVAL/ENOTSUP -> no O_DIRECT on this fs; buffered below.
     }
+    let mut f = std::fs::File::open(path)?;
+    let mut read_total = 0usize;
+    while read_total < len {
+        match f.read(&mut dst[read_total..len]) {
+            Ok(0) => break,
+            Ok(n) => read_total += n,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadIntoOutcome { bytes: read_total, fallback: direct, grew: false })
+}
+
+/// [`read_into_slice`] against a [`BlockBuffer`]: grows the buffer to
+/// the file length when needed (reported in the outcome), lands the
+/// bytes in its aligned window, and sets the payload length.
+pub fn read_file_into(path: &Path, direct: bool, buf: &mut BlockBuffer) -> std::io::Result<ReadIntoOutcome> {
+    let len = std::fs::metadata(path)?.len() as usize;
+    let grew = buf.ensure_capacity(len);
+    let mut outcome = {
+        let dst = buf.region_mut(0, aligned_len(len));
+        read_into_slice_len(path, direct, dst, len)?
+    };
+    outcome.grew = grew;
+    buf.set_len(outcome.bytes);
+    Ok(outcome)
+}
+
+/// O_DIRECT read with 4 KiB-aligned buffer; transparently falls back to a
+/// plain read on filesystems (e.g. tmpfs/overlayfs) that reject O_DIRECT.
+/// One allocation, no tail copy: the payload is shifted in place out of
+/// the aligned window (the seed implementation `.to_vec()`ed the payload
+/// — a full extra allocation + copy per unit, every swap-in).
+pub fn direct_read(path: &Path) -> std::io::Result<Vec<u8>> {
+    let mut buf = BlockBuffer::empty();
+    read_file_into(path, true, &mut buf)?;
+    Ok(buf.into_vec())
 }
 
 #[cfg(test)]
@@ -293,5 +389,60 @@ mod tests {
         assert!(st
             .read(Path::new("/no/such/file"), Channel::Buffered, &mut mem, &prof())
             .is_err());
+    }
+
+    #[test]
+    fn read_into_lands_bytes_in_place_on_both_channels() {
+        let dir = std::env::temp_dir().join(format!("swapnet-readinto-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let data: Vec<u8> = (0..70_001u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let mut st = Storage::new(64 * MB);
+        let mut mem = MemSim::new(u64::MAX);
+        let p = prof();
+        let mut buf = BlockBuffer::with_capacity(data.len());
+        for channel in [Channel::Buffered, Channel::DirectDma] {
+            let rep = st.read_into(&path, channel, &mut buf, &mut mem, &p).unwrap();
+            assert_eq!(buf.as_slice(), &data[..], "{channel:?}");
+            assert_eq!(rep.bytes, data.len() as u64);
+            if channel == Channel::Buffered {
+                assert!(!rep.direct_fallback, "buffered reads never degrade");
+            }
+        }
+        // Pre-sized buffer: neither read allocated.
+        let o = read_file_into(&path, true, &mut buf).unwrap();
+        assert!(!o.grew, "pre-sized buffer must be reused in place");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_into_slice_rejects_short_destination() {
+        let dir = std::env::temp_dir().join(format!("swapnet-short-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        std::fs::write(&path, vec![1u8; 1000]).unwrap();
+        let mut dst = [0u8; 10];
+        assert!(read_into_slice(&path, false, &mut dst).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unaligned_destination_degrades_to_buffered() {
+        // An unaligned destination cannot take O_DIRECT; the read must
+        // still land the right bytes and flag the fallback.
+        let dir = std::env::temp_dir().join(format!("swapnet-unaligned-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let data: Vec<u8> = (0..5000u32).map(|i| (i % 241) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let mut buf = BlockBuffer::with_capacity(data.len() + 1);
+        // Odd sub-window of the aligned buffer: force misalignment.
+        let dst = &mut buf.spare_mut()[1..1 + data.len()];
+        let o = read_into_slice(&path, true, dst).unwrap();
+        assert!(o.fallback, "misaligned direct request must report degradation");
+        assert_eq!(o.bytes, data.len());
+        assert_eq!(&dst[..data.len()], &data[..]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -23,6 +23,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::config::{DeviceProfile, Processor};
+use crate::hostmem::{BlockBuffer, BufferPool, PooledBuf};
 use crate::memsim::{AllocId, MemSim, Space};
 use crate::model::BlockInfo;
 use crate::storage::{Channel, ReadReport, Storage};
@@ -37,11 +38,19 @@ pub enum SwapMode {
 }
 
 /// A block resident in (simulated) memory.
+///
+/// `data` is ONE residency type for both worlds: real file swap-ins
+/// land their bytes in it (a recycled pool slot on the pooled path, a
+/// detached buffer otherwise), while cost-model-only swap-ins carry the
+/// empty detached buffer. Dropping a pooled `ResidentBlock` returns its
+/// slot to the engine's [`BufferPool`].
 #[derive(Debug)]
 pub struct ResidentBlock {
     pub block: BlockInfo,
-    /// Real parameter bytes when swapped in from a real file.
-    pub data: Option<Vec<u8>>,
+    /// Parameter bytes (empty for cost-model-only swap-ins).
+    pub data: PooledBuf,
+    /// True when a direct-channel read degraded to buffered I/O.
+    pub direct_fallback: bool,
     /// Live simulator allocations backing this block (freed at swap-out).
     allocs: Vec<AllocId>,
     /// Simulated swap-in latency.
@@ -90,7 +99,8 @@ impl SwapController {
         let (report, allocs) = self.dispatch_and_copy(block, proc, mem, prof, io);
         ResidentBlock {
             block: block.clone(),
-            data: None,
+            data: PooledBuf::detached(BlockBuffer::empty()),
+            direct_fallback: false,
             allocs,
             swap_in_s: report.sim_latency_s,
             cache_hits: report.cache_hits,
@@ -99,7 +109,8 @@ impl SwapController {
     }
 
     /// Swap a block in from a real parameter file (artifact execution):
-    /// really reads the bytes, and applies the same cost model.
+    /// really reads the bytes into a fresh detached buffer, and applies
+    /// the same cost model.
     pub fn swap_in_file(
         &self,
         block: &BlockInfo,
@@ -109,11 +120,46 @@ impl SwapController {
         mem: &mut MemSim,
         prof: &DeviceProfile,
     ) -> Result<ResidentBlock> {
-        let (data, io) = storage.read(path, self.channel(), mem, prof)?;
+        let buf = PooledBuf::detached(BlockBuffer::empty());
+        self.swap_in_file_buf(block, path, proc, storage, mem, prof, buf)
+    }
+
+    /// [`swap_in_file`](Self::swap_in_file) landing the bytes in a slot
+    /// checked out of `pool` — the recycled, allocation-free steady
+    /// state. The slot returns to the pool when the `ResidentBlock` is
+    /// dropped (swap-out).
+    #[allow(clippy::too_many_arguments)]
+    pub fn swap_in_file_pooled(
+        &self,
+        block: &BlockInfo,
+        path: &Path,
+        proc: Processor,
+        storage: &mut Storage,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+        pool: &BufferPool,
+    ) -> Result<ResidentBlock> {
+        self.swap_in_file_buf(block, path, proc, storage, mem, prof, pool.checkout())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn swap_in_file_buf(
+        &self,
+        block: &BlockInfo,
+        path: &Path,
+        proc: Processor,
+        storage: &mut Storage,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+        mut buf: PooledBuf,
+    ) -> Result<ResidentBlock> {
+        let io = storage.read_into(path, self.channel(), &mut buf, mem, prof)?;
+        let fallback = io.direct_fallback;
         let (report, allocs) = self.dispatch_and_copy(block, proc, mem, prof, io);
         Ok(ResidentBlock {
             block: block.clone(),
-            data: Some(data),
+            data: buf,
+            direct_fallback: fallback,
             allocs,
             swap_in_s: report.sim_latency_s,
             cache_hits: report.cache_hits,
@@ -166,6 +212,7 @@ impl SwapController {
                 sim_latency_s: lat,
                 cache_hits: io.cache_hits,
                 cache_misses: io.cache_misses,
+                direct_fallback: io.direct_fallback,
             },
             allocs,
         )
@@ -385,7 +432,37 @@ mod tests {
         let rb = ctl
             .swap_in_file(&b, &path, Processor::Cpu, &mut st, &mut mem, &prof)
             .unwrap();
-        assert_eq!(rb.data.as_ref().unwrap(), &bytes);
+        assert_eq!(rb.data.as_slice(), &bytes[..]);
+        assert!(!rb.data.is_pooled(), "unpooled swap-in carries a detached buffer");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pooled_swap_in_recycles_one_slot() {
+        let dir = std::env::temp_dir().join(format!("swapnet-swap-pool-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let bytes: Vec<u8> = (0u8..=255).cycle().take(1 << 18).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let (mut st, mut mem, prof) = setup();
+        let ctl = SwapController::new(SwapMode::ZeroCopy, "m");
+        let mut b = block(1);
+        b.size_bytes = bytes.len() as u64;
+        let pool = BufferPool::new(bytes.len(), 1);
+        for _ in 0..5 {
+            let rb = ctl
+                .swap_in_file_pooled(&b, &path, Processor::Cpu, &mut st, &mut mem, &prof, &pool)
+                .unwrap();
+            assert!(rb.data.is_pooled());
+            assert_eq!(rb.data.as_slice(), &bytes[..]);
+            let out = ctl.swap_out(rb, &mut mem, &prof);
+            assert!(out.freed_bytes > 0);
+        }
+        let s = pool.stats();
+        assert_eq!(s.slots, 1, "one slot serves the whole loop");
+        assert_eq!(s.alloc_events, 1, "only the warmup allocation");
+        assert_eq!(s.reuses, 4);
+        assert_eq!(s.checked_out, 0, "swap-out returned the slot");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

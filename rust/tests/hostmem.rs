@@ -1,0 +1,260 @@
+//! Host data path integration tests: pooled reads land byte-identical
+//! payloads, pool reuse invariants hold under the pipeline's residency
+//! bound (slot count, zero steady-state allocations), checkout/return
+//! survives concurrent stress, and — when the reference artifact exists
+//! — the pooled swapped execution produces byte-identical model outputs
+//! to the direct (unpooled) oracle in both Sequential and Overlapped
+//! modes.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use swapnet::hostmem::{aligned_len, BlockBuffer, BufferPool, ALIGN};
+use swapnet::pipeline::PipelineSpec;
+use swapnet::storage::{read_file_into, read_into_slice};
+
+/// Write `n` deterministic synthetic "unit parameter" files.
+fn synthetic_files(tag: &str, sizes: &[usize]) -> (PathBuf, Vec<PathBuf>) {
+    let dir = std::env::temp_dir().join(format!("swapnet-hostmem-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut paths = Vec::new();
+    for (i, &sz) in sizes.iter().enumerate() {
+        let path = dir.join(format!("unit{i}.bin"));
+        let data: Vec<u8> = (0..sz).map(|b| ((b * 31 + i * 7) % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        paths.push(path);
+    }
+    (dir, paths)
+}
+
+#[test]
+fn pooled_reads_are_byte_identical_to_buffered_reads() {
+    let sizes = [10_000usize, ALIGN, 1, 3 * ALIGN + 17];
+    let (dir, paths) = synthetic_files("ident", &sizes);
+    let pool = BufferPool::new(*sizes.iter().max().unwrap(), 1);
+    for p in &paths {
+        let mut slot = pool.checkout();
+        let o = read_file_into(p, true, &mut slot).unwrap();
+        let expect = std::fs::read(p).unwrap();
+        assert_eq!(o.bytes, expect.len());
+        assert_eq!(slot.as_slice(), &expect[..], "{}", p.display());
+    }
+    assert_eq!(pool.stats().bytes_copied, 0, "pooled reads land in place");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn slot_count_respects_residency_times_channels() {
+    // Emulate the pipeline's residency-m window over 8 blocks x many
+    // rounds: at most m slots live at once, so the pool must never grow
+    // beyond the m x channels pre-size.
+    let sizes = vec![20_000usize; 8];
+    let (dir, paths) = synthetic_files("window", &sizes);
+    for (m, channels) in [(1usize, 1usize), (2, 1), (3, 2)] {
+        let spec = PipelineSpec { residency_m: m, swap_channels: channels };
+        let pool = BufferPool::for_pipeline(20_000, &spec);
+        for _round in 0..6 {
+            let mut live = VecDeque::new();
+            for p in &paths {
+                if live.len() == m {
+                    live.pop_front(); // block i-m swapped out
+                }
+                let mut slot = pool.checkout();
+                read_file_into(p, true, &mut slot).unwrap();
+                live.push_back(slot);
+            }
+        }
+        let s = pool.stats();
+        assert!(
+            s.slots <= (m * channels) as u64,
+            "m={m} c={channels}: {} slots exceed the pipeline bound",
+            s.slots
+        );
+        assert!(s.peak_checked_out <= (m * channels) as u64);
+        assert_eq!(s.checked_out, 0, "every slot returned");
+        assert_eq!(s.checkouts, 48);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn steady_state_swap_loop_allocates_nothing() {
+    let sizes = vec![30_000usize, 50_000, 12_345, 70_000];
+    let (dir, paths) = synthetic_files("steady", &sizes);
+    let pool = BufferPool::for_pipeline(*sizes.iter().max().unwrap(), &PipelineSpec::default());
+    // Warmup round: the pool creates its slots.
+    for p in &paths {
+        let mut slot = pool.checkout();
+        read_file_into(p, true, &mut slot).unwrap();
+    }
+    let warm = pool.stats();
+    assert!(warm.alloc_events >= 1);
+    // Steady state: 50 more rounds, zero further allocations.
+    for _ in 0..50 {
+        for p in &paths {
+            let mut slot = pool.checkout();
+            let o = read_file_into(p, true, &mut slot).unwrap();
+            assert!(!o.grew, "steady-state read must not grow its slot");
+        }
+    }
+    let s = pool.stats();
+    assert_eq!(
+        s.alloc_events, warm.alloc_events,
+        "steady-state swap loop performed heap allocations"
+    );
+    assert_eq!(s.bytes_copied, 0);
+    assert_eq!(s.reuses, s.checkouts - s.slots);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_checkout_return_stress() {
+    // Overlapped-mode shape: loader and executor threads checking slots
+    // out and returning them concurrently. The pool must stay
+    // consistent: everything returned, peak bounded by the thread
+    // count, payloads uncorrupted.
+    let threads = 4usize;
+    let iters = 200usize;
+    let pool = BufferPool::new(4096, threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let pool = pool.clone();
+            s.spawn(move || {
+                for i in 0..iters {
+                    let mut slot = pool.checkout();
+                    let fill = ((t * 131 + i) % 251) as u8;
+                    let n = 1 + (i % 4096);
+                    slot.spare_mut()[..n].fill(fill);
+                    slot.set_len(n);
+                    assert!(slot.as_slice().iter().all(|&b| b == fill));
+                    // slot drops -> returns to the pool
+                }
+            });
+        }
+    });
+    let s = pool.stats();
+    assert_eq!(s.checked_out, 0);
+    assert_eq!(s.checkouts, (threads * iters) as u64);
+    assert!(s.peak_checked_out <= threads as u64);
+    assert!(s.slots <= threads as u64);
+    assert_eq!(s.alloc_events, s.slots, "allocations only at slot creation");
+    assert!(s.reuses > 0);
+}
+
+#[test]
+fn aligned_len_contract() {
+    assert_eq!(aligned_len(0), 0);
+    assert_eq!(aligned_len(1), ALIGN);
+    assert_eq!(aligned_len(ALIGN), ALIGN);
+    assert_eq!(aligned_len(ALIGN + 1), 2 * ALIGN);
+}
+
+#[test]
+fn misaligned_region_reads_still_correct_via_fallback() {
+    let (dir, paths) = synthetic_files("fallback", &[9_000]);
+    let expect = std::fs::read(&paths[0]).unwrap();
+    let mut buf = BlockBuffer::with_capacity(16_000);
+    // A deliberately short destination window (payload-sized, not
+    // page-rounded) denies O_DIRECT; the buffered fallback must land
+    // identical bytes and report the degradation.
+    let o = {
+        let dst = &mut buf.spare_mut()[..9_000];
+        read_into_slice(&paths[0], true, dst).unwrap()
+    };
+    assert!(o.fallback);
+    assert_eq!(o.bytes, expect.len());
+    buf.set_len(o.bytes);
+    assert_eq!(buf.as_slice(), &expect[..]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// artifact-gated: byte-identical model outputs through the pooled path
+// ---------------------------------------------------------------------
+
+fn tiny() -> Option<swapnet::model::artifacts::ArtifactModel> {
+    let dir = swapnet::model::artifacts::artifacts_dir().join("tiny_cnn");
+    if dir.join("meta.json").exists() {
+        Some(swapnet::model::artifacts::ArtifactModel::load(&dir).unwrap())
+    } else {
+        eprintln!("skipping: no artifacts");
+        None
+    }
+}
+
+#[test]
+fn pooled_execution_matches_direct_oracle_bytes() {
+    use swapnet::pipeline::real::{run_partitioned_spec, ExecStrategy};
+    use swapnet::runtime::{DirectRunner, Runtime};
+    let Some(model) = tiny() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let n: usize = model.in_shape.iter().skip(1).product();
+    let x: Vec<f32> = (0..n).map(|i| ((i * 13) % 97) as f32 / 97.0).collect();
+    // The pre-pool oracle: plain fs::read per unit, no pooling.
+    let oracle = DirectRunner::new(&rt, model.clone(), 1).forward(&x).unwrap();
+    for strat in [ExecStrategy::Sequential, ExecStrategy::Overlapped] {
+        let rep = run_partitioned_spec(
+            &rt,
+            &model,
+            1,
+            &[2, 4],
+            strat,
+            &x,
+            &PipelineSpec::default(),
+        )
+        .unwrap();
+        assert_eq!(rep.output.len(), oracle.len(), "{strat:?}");
+        // Byte-identical: the pooled path must not perturb a single
+        // f32 bit pattern relative to the unpooled oracle.
+        for (a, b) in rep.output.iter().zip(&oracle) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{strat:?}: {a} vs {b}");
+        }
+        assert_eq!(rep.pool.bytes_copied, 0, "{strat:?}");
+        assert!(rep.pool.reuses > 0, "{strat:?}: slots must recycle");
+    }
+}
+
+#[test]
+fn pooled_overlapped_pool_invariants_on_real_model() {
+    use swapnet::pipeline::real::{run_partitioned_pooled, ExecStrategy};
+    use swapnet::runtime::Runtime;
+    let Some(model) = tiny() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let n: usize = model.in_shape.iter().skip(1).product();
+    let x: Vec<f32> = (0..n).map(|i| (i % 89) as f32 / 89.0).collect();
+    for m in [1usize, 2, 3] {
+        let spec = PipelineSpec::with_residency(m);
+        let slot = swapnet::pipeline::real::pool_slot_bytes(&model, &[1, 2, 3, 4]).unwrap();
+        let pool = BufferPool::for_pipeline(slot, &spec);
+        // Several requests against ONE pool: warm after the first.
+        let mut baseline = None;
+        for req in 0..3 {
+            let rep = run_partitioned_pooled(
+                &rt,
+                &model,
+                1,
+                &[1, 2, 3, 4],
+                ExecStrategy::Overlapped,
+                &x,
+                &spec,
+                &pool,
+            )
+            .unwrap();
+            let s = rep.pool;
+            assert!(
+                s.slots <= pool.slot_limit(),
+                "m={m}: {} slots exceed {}",
+                s.slots,
+                pool.slot_limit()
+            );
+            assert!(s.peak_checked_out <= m as u64);
+            match baseline {
+                None => baseline = Some(s.alloc_events),
+                Some(warm) => assert_eq!(
+                    s.alloc_events, warm,
+                    "m={m} request {req}: steady state allocated"
+                ),
+            }
+        }
+    }
+}

@@ -199,6 +199,17 @@ impl PjRtClient {
             lit: Literal::create_from_shape_and_untyped_data(T::TY, dims, &bytes)?,
         })
     }
+
+    /// Upload pre-serialized little-endian F32 bytes in a single pass —
+    /// the bytes already ARE the literal's storage layout, so this is
+    /// one validated copy with no element-wise conversion. (On a native
+    /// backend this corresponds to handing the raw host pointer to the
+    /// device DMA engine.)
+    pub fn buffer_from_host_f32_bytes(&self, bytes: &[u8], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer {
+            lit: Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?,
+        })
+    }
 }
 
 /// Compiled executable. Never constructed by the stub (compile errors),
