@@ -66,6 +66,14 @@ pub struct DeviceProfile {
     pub eta_s_per_depth: f64,
     /// Garbage-collection latency per swap-out (paper: ~30 ms).
     pub gc_s: f64,
+    /// Fixed DMA transfer setup per swap-in, folded into t_in. Owned by
+    /// the profile (it is a device property, not a scheduler constant).
+    pub dma_setup_s: f64,
+    /// Per-block serial dispatch cost on the execution critical path:
+    /// thread wake-up/switch + kernel dispatch between blocks — the
+    /// overhead behind the paper's m = 2 cap and Fig 16's latency growth
+    /// with block count.
+    pub dispatch_s_per_block: f64,
 
     // ---- standard-path costs SwapNet bypasses ------------------------
     /// Buffered (page-cache) read bandwidth on a cache miss.
@@ -105,6 +113,10 @@ impl DeviceProfile {
             gamma_gpu_s_per_flop: 2.9e-12,
             eta_s_per_depth: 20e-6,
             gc_s: 30e-3,
+            // NVMe DMA engine setup per transfer.
+            dma_setup_s: 150e-6,
+            // Carmel thread wake-up + dispatch between blocks.
+            dispatch_s_per_block: 3.5e-3,
             // Buffered reads land around 2.2 GB/s and leave a cache copy.
             cached_read_s_per_byte: 1.0 / 2.2e9,
             cache_hit_s_per_byte: 1.0 / 10e9,
@@ -136,6 +148,10 @@ impl DeviceProfile {
             beta_s_per_depth: 62e-6,
             eta_s_per_depth: 25e-6,
             gc_s: 34e-3,
+            // Slower DMA setup and thread dispatch on the Nano's A57s
+            // (scaled like the other coefficients, ~1.2x the NX).
+            dma_setup_s: 180e-6,
+            dispatch_s_per_block: 4.2e-3,
             cache_mgmt_s: 1.6e-3,
             dummy_instantiate_s_per_depth: 410e-6,
             power: PowerProfile {

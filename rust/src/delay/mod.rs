@@ -42,8 +42,29 @@ impl DelayModel {
             gamma_gpu_s_per_flop: p.gamma_gpu_s_per_flop,
             eta_s_per_depth: p.eta_s_per_depth,
             gc_s: p.gc_s,
-            dma_setup_s: 150e-6,
-            dispatch_s_per_block: 3.5e-3,
+            dma_setup_s: p.dma_setup_s,
+            dispatch_s_per_block: p.dispatch_s_per_block,
+        }
+    }
+
+    /// Build a delay model from a Fig 9 regression [`profiler::Fit`]:
+    /// the four fitted coefficients drive the delay laws, the GPU gamma
+    /// is scaled by the profile's CPU/GPU ratio (the paper profiles per
+    /// processor), and the fixed DMA-setup / per-block dispatch costs
+    /// come from the device profile (they are device properties the
+    /// sweep does not separate out). This is the path that makes the
+    /// profiler's measured costs actually reach the planner.
+    pub fn from_fit(fit: &profiler::Fit, p: &DeviceProfile) -> Self {
+        let ratio = p.gamma_gpu_s_per_flop / p.gamma_cpu_s_per_flop;
+        DelayModel {
+            alpha_s_per_byte: fit.alpha_s_per_byte,
+            beta_s_per_depth: fit.beta_s_per_depth,
+            gamma_cpu_s_per_flop: fit.gamma_s_per_flop,
+            gamma_gpu_s_per_flop: fit.gamma_s_per_flop * ratio,
+            eta_s_per_depth: fit.eta_s_per_depth,
+            gc_s: fit.gc_s,
+            dma_setup_s: p.dma_setup_s,
+            dispatch_s_per_block: p.dispatch_s_per_block,
         }
     }
 
@@ -73,6 +94,28 @@ impl DelayModel {
 mod tests {
     use super::*;
     use crate::config::MB;
+
+    #[test]
+    fn from_fit_uses_profile_owned_constants() {
+        // The fixed DMA-setup / dispatch costs are DeviceProfile fields
+        // now (satellite: jetson_nx/jetson_nano own them), so a fitted
+        // model inherits them from the profile it was fitted on.
+        let nx = DeviceProfile::jetson_nx();
+        let nano = DeviceProfile::jetson_nano();
+        let sweep = profiler::measure_sweep(&nx, 100, 0.0, 1);
+        let fit = profiler::fit(&sweep);
+        let dm_nx = DelayModel::from_fit(&fit, &nx);
+        let dm_nano = DelayModel::from_fit(&fit, &nano);
+        assert_eq!(dm_nx.dma_setup_s, nx.dma_setup_s);
+        assert_eq!(dm_nx.dispatch_s_per_block, nx.dispatch_s_per_block);
+        assert_eq!(dm_nano.dma_setup_s, nano.dma_setup_s);
+        assert_eq!(dm_nano.dispatch_s_per_block, nano.dispatch_s_per_block);
+        assert!(nano.dispatch_s_per_block > nx.dispatch_s_per_block);
+        // A noiseless fit reproduces the analytic swap-in law.
+        let b = block(100, 40, 10.0);
+        let analytic = DelayModel::from_profile(&nx);
+        assert!((dm_nx.t_in(&b) - analytic.t_in(&b)).abs() / analytic.t_in(&b) < 1e-6);
+    }
 
     fn block(size_mb: u64, depth: u32, gflops: f64) -> BlockInfo {
         BlockInfo {

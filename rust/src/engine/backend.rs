@@ -16,6 +16,7 @@ use anyhow::{anyhow, Error, Result};
 
 use crate::config::DeviceProfile;
 use crate::hostmem::{BufferPool, PoolStats};
+use crate::planner::PlanStats;
 use crate::pipeline::real::{pool_slot_bytes, run_partitioned_pooled, ExecStrategy};
 use crate::pipeline::{peak_resident_bytes_m, timeline, timeline_spec, BlockTimes, Timeline};
 use crate::runtime::{ResidentModelRunner, Runtime};
@@ -74,6 +75,11 @@ pub struct InferenceReport {
     /// checkouts, heap allocations, copied bytes — the zero-copy host
     /// path's proof obligations. `None` on purely simulated runs.
     pub pool: Option<PoolStats>,
+    /// Snapshot of the engine planner's counters (plan-cache hits and
+    /// misses, DP effort, cost source + fingerprint) at report time.
+    /// Attached by the engine (`ModelHandle` entry points); `None` only
+    /// for reports built outside an engine.
+    pub plan: Option<PlanStats>,
 }
 
 /// An execution substrate the [`Engine`](super::Engine) dispatches to.
@@ -188,6 +194,7 @@ fn report_from_run(model: &str, run: crate::engine::SnetRun) -> InferenceReport 
         compute_s: run.compute_s,
         output: None,
         pool: None,
+        plan: None,
     }
 }
 
@@ -324,6 +331,7 @@ impl ExecBackend for PjrtBackend {
                 compute_s: dt,
                 output: Some(output),
                 pool: Some(self.pool.stats()),
+                plan: None,
             });
         }
 
@@ -378,6 +386,7 @@ impl ExecBackend for PjrtBackend {
             compute_s,
             output: Some(rep.output),
             pool: Some(rep.pool),
+            plan: None,
         })
     }
 

@@ -41,10 +41,12 @@ pub use backend::{ExecBackend, InferRequest, InferenceReport, PjrtBackend, SimBa
 pub use sim::{naive_equal_partition, SnetConfig, SnetRun};
 
 pub use crate::pipeline::PipelineSpec;
+pub use crate::planner::{CostObservation, CostSource, PlanStats};
 
 use crate::config::{DeviceProfile, Processor};
 use crate::delay::DelayModel;
 use crate::memsim::MemSim;
+use crate::planner::{PlanCacheConfig, Planner};
 use crate::metrics::MethodReport;
 use crate::model::artifacts::ArtifactModel;
 use crate::model::ModelInfo;
@@ -83,8 +85,10 @@ pub struct RegisteredModel {
 
 struct EngineCore {
     profile: DeviceProfile,
-    dm: DelayModel,
     cfg: SnetConfig,
+    /// The unified planner: cost provider (analytic or measured) + DP
+    /// partitioner + plan cache shared by every registered tenant.
+    planner: Planner,
     /// Default per-registration budget when none is given explicitly.
     budget: Option<u64>,
     backend: Box<dyn ExecBackend>,
@@ -101,6 +105,44 @@ impl EngineCore {
             .and_then(|m| m.as_ref())
             .ok_or_else(|| anyhow!("model handle {id} is stale (evicted or never registered)"))
     }
+
+    /// Plan one model's partition schedule through the shared planner
+    /// (a cache probe when the (model, spec, budget band, fingerprint)
+    /// key is warm), honoring the w/o-pat-sch ablation fallback.
+    fn plan_schedule(&mut self, info: &ModelInfo, budget: u64) -> Result<Schedule, String> {
+        let base = self.planner.plan(info, budget, &self.cfg.pipeline)?;
+        if self.cfg.partition_scheduling {
+            Ok(base)
+        } else {
+            let dm = self.planner.delay_model().clone();
+            sim::naive_schedule(info, base, &dm, &self.cfg.pipeline)
+        }
+    }
+
+    /// Feed one report's measured components back into the cost
+    /// provider (no-op on analytic costs) and stamp the planner's
+    /// counter snapshot onto the report. Takes the chain totals as
+    /// scalars so the hot infer paths don't clone a `ModelInfo`.
+    fn observe_and_stamp(
+        &mut self,
+        bytes: u64,
+        depth: u32,
+        flops: u64,
+        proc: Processor,
+        rep: &mut InferenceReport,
+    ) {
+        self.planner.observe(&CostObservation {
+            n_blocks: rep.n_blocks,
+            bytes,
+            depth,
+            flops,
+            proc,
+            swap_s: rep.swap_s,
+            assembly_s: rep.assembly_s,
+            compute_s: rep.compute_s,
+        });
+        rep.plan = Some(self.planner.stats());
+    }
 }
 
 /// Builder for [`Engine`]: device profile, memory budget, ablation
@@ -109,6 +151,8 @@ pub struct EngineBuilder {
     profile: DeviceProfile,
     cfg: SnetConfig,
     budget: Option<u64>,
+    cost_source: CostSource,
+    plan_cache_bytes: Option<u64>,
 }
 
 impl Default for EngineBuilder {
@@ -123,7 +167,26 @@ impl EngineBuilder {
             profile: DeviceProfile::jetson_nx(),
             cfg: SnetConfig::default(),
             budget: None,
+            cost_source: CostSource::Analytic,
+            plan_cache_bytes: None,
         }
+    }
+
+    /// Where the planner's per-block delay predictions come from:
+    /// `Analytic` (the hand-calibrated device profile, the default) or
+    /// `Measured` (a Fig 9 sweep + regression run at build time, then
+    /// refined online from inference reports).
+    pub fn cost_source(mut self, source: CostSource) -> EngineBuilder {
+        self.cost_source = source;
+        self
+    }
+
+    /// Byte bound on the shared plan cache (plans + DP frontier
+    /// tables; LRU-evicted past the bound). Default 4 MB — the top of
+    /// the paper's §8.5 strategy-table band.
+    pub fn plan_cache_bytes(mut self, bytes: u64) -> EngineBuilder {
+        self.plan_cache_bytes = Some(bytes);
+        self
     }
 
     /// Target device profile (default: Jetson Xavier NX).
@@ -192,12 +255,19 @@ impl EngineBuilder {
 
     /// Build over a caller-provided backend implementation.
     pub fn build_with(self, backend: Box<dyn ExecBackend>) -> Engine {
-        let dm = DelayModel::from_profile(&self.profile);
+        let cache_cfg = PlanCacheConfig {
+            capacity_bytes: self
+                .plan_cache_bytes
+                .unwrap_or(crate::planner::cache::DEFAULT_CACHE_BYTES),
+            ..PlanCacheConfig::default()
+        };
+        let planner =
+            Planner::for_source(self.cost_source, &self.profile, self.cfg.seed, cache_cfg);
         Engine {
             core: Rc::new(RefCell::new(EngineCore {
                 profile: self.profile,
-                dm,
                 cfg: self.cfg,
+                planner,
                 budget: self.budget,
                 backend,
                 models: Vec::new(),
@@ -253,7 +323,7 @@ impl Engine {
     ) -> Result<Vec<ModelHandle>> {
         let (dm, spec) = {
             let core = self.core.borrow();
-            (core.dm.clone(), core.cfg.pipeline)
+            (core.planner.delay_model().clone(), core.cfg.pipeline)
         };
         let budgets = try_fleet_budgets(models, urgency, &dm, total_budget, &spec)
             .map_err(|e| anyhow!("{e}"))?;
@@ -271,8 +341,7 @@ impl Engine {
         artifact: Option<ArtifactModel>,
     ) -> Result<ModelHandle> {
         let core = &mut *self.core.borrow_mut();
-        let schedule = sim::plan(&info, budget, &core.dm, &core.profile, &core.cfg)
-            .map_err(Error::msg)?;
+        let schedule = core.plan_schedule(&info, budget).map_err(Error::msg)?;
         let id = core.models.len();
         let reg = RegisteredModel { info, budget, schedule, artifact };
         core.backend.prepare(id, &reg)?;
@@ -293,10 +362,20 @@ impl Engine {
                 "SNet" => {
                     // Throwaway simulation: scenario sweeps must not grow
                     // the engine's registered-model state (or re-trigger
-                    // backend preparation) on every call.
+                    // backend preparation) on every call. Partitions are
+                    // planned through the engine's planner, so scenario
+                    // sweeps see the configured cost source (and reuse
+                    // the shared plan cache); the simulation itself runs
+                    // against the profile's analytic device truth.
                     let cfg = self.config();
-                    let run = sim::simulate_model(model, budget, &prof, &cfg)
+                    let schedule = self
+                        .core
+                        .borrow_mut()
+                        .plan_schedule(model, budget)
                         .map_err(Error::msg)?;
+                    let run =
+                        sim::simulate_scheduled(model, budget, &prof, &cfg, Some(&schedule))
+                            .map_err(Error::msg)?;
                     Ok(MethodReport {
                         model: model.name.clone(),
                         method: "SNet".into(),
@@ -346,6 +425,31 @@ impl Engine {
     pub fn registered(&self) -> usize {
         self.core.borrow().models.iter().filter(|m| m.is_some()).count()
     }
+
+    /// Counter snapshot of the shared planner (plan-cache hits/misses,
+    /// DP effort, cost source + fingerprint). One planner serves every
+    /// tenant of this engine.
+    pub fn plan_stats(&self) -> PlanStats {
+        self.core.borrow().planner.stats()
+    }
+
+    /// The engine-wide delay model — read live from the planner, so it
+    /// reflects the CURRENT effective coefficients (fitted and
+    /// online-refined for `CostSource::Measured`, where observation
+    /// drift moves them). Budget allocators must use this, not a fresh
+    /// profile-analytic model, so Eq. 1 demands and the partition
+    /// search always agree.
+    pub fn delay_model(&self) -> DelayModel {
+        self.core.borrow().planner.delay_model().clone()
+    }
+
+    /// Feed an externally measured observation (e.g. a multi-tenant
+    /// batch completion) into the planner's cost provider. No-op on
+    /// analytic costs; on measured costs, fingerprint drift invalidates
+    /// stale cached plans.
+    pub fn observe_costs(&self, obs: &CostObservation) {
+        self.core.borrow_mut().planner.observe(obs);
+    }
 }
 
 /// A registered model: the request-side handle of the facade.
@@ -381,20 +485,26 @@ impl ModelHandle {
 
     /// Simulated inference with a seed offset (jittered sampling).
     pub fn infer_sim_seeded(&self, seed_bump: u64) -> Result<InferenceReport> {
-        let core = self.core.borrow();
-        let reg = core.reg(self.id)?;
-        backend::sim_report(reg, &core.profile, &core.cfg, seed_bump)
+        let core = &mut *self.core.borrow_mut();
+        core.reg(self.id)?;
+        let reg = core.models[self.id].as_ref().expect("validated live above");
+        let (bytes, depth, flops, proc) =
+            (reg.info.size_bytes(), reg.info.total_depth(), reg.info.total_flops(), reg.info.processor);
+        let mut rep = backend::sim_report(reg, &core.profile, &core.cfg, seed_bump)?;
+        core.observe_and_stamp(bytes, depth, flops, proc, &mut rep);
+        Ok(rep)
     }
 
     /// Fully general request dispatch to the engine's backend.
     pub fn infer_request(&self, req: &InferRequest<'_>) -> Result<InferenceReport> {
         let core = &mut *self.core.borrow_mut();
-        let reg = core
-            .models
-            .get(self.id)
-            .and_then(|m| m.as_ref())
-            .ok_or_else(|| anyhow!("stale model handle {}", self.id))?;
-        core.backend.run(self.id, reg, &core.profile, &core.cfg, req)
+        core.reg(self.id)?;
+        let reg = core.models[self.id].as_ref().expect("validated live above");
+        let (bytes, depth, flops, proc) =
+            (reg.info.size_bytes(), reg.info.total_depth(), reg.info.total_flops(), reg.info.processor);
+        let mut rep = core.backend.run(self.id, reg, &core.profile, &core.cfg, req)?;
+        core.observe_and_stamp(bytes, depth, flops, proc, &mut rep);
+        Ok(rep)
     }
 
     /// Evict this model from the engine: release backend state (resident
@@ -424,8 +534,7 @@ impl ModelHandle {
             return Ok(reg.schedule.clone());
         }
         let info = reg.info.clone();
-        let schedule =
-            sim::plan(&info, budget, &core.dm, &core.profile, &core.cfg).map_err(Error::msg)?;
+        let schedule = core.plan_schedule(&info, budget).map_err(Error::msg)?;
         let reg = core.models[self.id].as_mut().expect("checked live above");
         reg.budget = budget;
         reg.schedule = schedule.clone();
@@ -709,6 +818,53 @@ mod tests {
         // VGG's feasibility floor (its fc pair) cannot fit 100 MB.
         let err = engine.register_fleet(&models, &[1.0], 100 * MB).unwrap_err();
         assert!(format!("{err:#}").contains("floor"), "{err:#}");
+    }
+
+    #[test]
+    fn plan_stats_flow_through_reports() {
+        let engine = Engine::builder().memory_budget(120 * MB).build();
+        let h = engine.register(families::resnet101()).unwrap();
+        let rep = h.infer_sim().unwrap();
+        let plan = rep.plan.expect("engine reports carry planner stats");
+        assert_eq!(plan.cost_source, "analytic");
+        assert!(plan.misses >= 1, "{plan:?}");
+        assert!(plan.bytes > 0, "frontier tables are cached");
+        // A new budget is a planner probe; re-planning the same budget
+        // for a same-named model answers from the shared cache.
+        h.rebudget(90 * MB).unwrap();
+        let h2 = engine.register_with_budget(families::resnet101(), 90 * MB).unwrap();
+        assert_eq!(h2.schedule().points, h.schedule().points);
+        let st = engine.plan_stats();
+        assert!(st.hits >= 1, "{st:?}");
+        assert!(st.misses >= 2, "{st:?}");
+    }
+
+    #[test]
+    fn measured_cost_source_plans_and_reports() {
+        let engine = Engine::builder()
+            .cost_source(CostSource::Measured)
+            .memory_budget(120 * MB)
+            .seed(5)
+            .build();
+        let h = engine.register(families::resnet101()).unwrap();
+        // The fitted model tracks the analytic one closely at this
+        // budget (the Fig 9 loop: sweep -> fit -> plan).
+        assert!((3..=5).contains(&h.schedule().n_blocks), "{:?}", h.schedule());
+        let rep = h.infer_sim().unwrap();
+        assert_eq!(rep.plan.as_ref().unwrap().cost_source, "measured");
+        assert!(rep.peak_bytes <= 120 * MB);
+        // Simulated truth feeds the measured provider: observations
+        // accumulate (and may legitimately drift the fingerprint).
+        let _ = h.infer_sim().unwrap();
+        assert_eq!(engine.plan_stats().cost_source, "measured");
+    }
+
+    #[test]
+    fn plan_cache_bytes_bounds_planner_state() {
+        let engine = Engine::builder().plan_cache_bytes(2_000).memory_budget(120 * MB).build();
+        let _h = engine.register(families::resnet101()).unwrap();
+        let st = engine.plan_stats();
+        assert!(st.bytes <= 2_000, "{st:?}");
     }
 
     #[test]

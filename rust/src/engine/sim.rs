@@ -91,8 +91,10 @@ pub fn naive_equal_partition(model: &ModelInfo, n: usize) -> Vec<usize> {
 }
 
 /// Partition plan for one model under one budget, honoring the
-/// w/o-pat-sch ablation switch. Registration and simulation both go
-/// through this, so a handle's reported schedule always matches the run.
+/// w/o-pat-sch ablation switch. The one-shot simulation entry points
+/// (`coordinator`) plan through here; engine registration plans through
+/// the engine's cached [`crate::planner::Planner`] and applies the same
+/// [`naive_schedule`] fallback, so both paths stay bit-identical.
 pub(crate) fn plan(
     model: &ModelInfo,
     budget: u64,
@@ -100,34 +102,42 @@ pub(crate) fn plan(
     prof: &DeviceProfile,
     cfg: &SnetConfig,
 ) -> Result<Schedule, String> {
+    let base = scheduler::schedule_model_spec(model, budget, dm, prof, &cfg.pipeline)?;
     if cfg.partition_scheduling {
-        scheduler::schedule_model_spec(model, budget, dm, prof, &cfg.pipeline)
+        Ok(base)
     } else {
-        // w/o-pat-sch: equal split targeting the same block count. The
-        // naive walker can come up short when legal cut points don't
-        // line up with the byte targets, so the schedule is recomputed
-        // from the points that actually exist — n_blocks, peak, and
-        // predicted latency always describe the real partition.
-        let base = scheduler::schedule_model_spec(model, budget, dm, prof, &cfg.pipeline)?;
-        let points = naive_equal_partition(model, base.n_blocks);
-        if points.is_empty() && base.n_blocks > 1 {
-            return Err(format!(
-                "{}: w/o-pat-sch found no legal equal split into {} blocks",
-                model.name, base.n_blocks
-            ));
-        }
-        let (peak, latency) = partition::evaluate_spec(model, &points, dm, &cfg.pipeline)
-            .ok_or_else(|| {
-                format!("{}: equal split {points:?} is not a legal partition", model.name)
-            })?;
-        Ok(Schedule {
-            n_blocks: points.len() + 1,
-            peak_bytes: peak,
-            predicted_latency_s: latency,
-            points,
-            ..base
-        })
+        naive_schedule(model, base, dm, &cfg.pipeline)
     }
+}
+
+/// w/o-pat-sch: equal split targeting the optimized plan's block count.
+/// The naive walker can come up short when legal cut points don't line
+/// up with the byte targets, so the schedule is recomputed from the
+/// points that actually exist — n_blocks, peak, and predicted latency
+/// always describe the real partition.
+pub(crate) fn naive_schedule(
+    model: &ModelInfo,
+    base: Schedule,
+    dm: &DelayModel,
+    spec: &PipelineSpec,
+) -> Result<Schedule, String> {
+    let points = naive_equal_partition(model, base.n_blocks);
+    if points.is_empty() && base.n_blocks > 1 {
+        return Err(format!(
+            "{}: w/o-pat-sch found no legal equal split into {} blocks",
+            model.name, base.n_blocks
+        ));
+    }
+    let (peak, latency) = partition::evaluate_spec(model, &points, dm, spec).ok_or_else(|| {
+        format!("{}: equal split {points:?} is not a legal partition", model.name)
+    })?;
+    Ok(Schedule {
+        n_blocks: points.len() + 1,
+        peak_bytes: peak,
+        predicted_latency_s: latency,
+        points,
+        ..base
+    })
 }
 
 /// Simulate one SwapNet model execution (one inference pass over all

@@ -10,7 +10,7 @@
 //! [`InferenceReport`] — the simulated and real PJRT execution paths are
 //! interchangeable [`engine::ExecBackend`] implementations behind it. The
 //! remaining modules are the substrates the engine composes (swap,
-//! hostmem, memsim, storage, scheduler, pipeline, runtime, metrics) plus the
+//! hostmem, memsim, storage, scheduler, planner, pipeline, runtime, metrics) plus the
 //! paper-experiment surfaces (`coordinator`, `workload`, `power`).
 
 #![forbid(unsafe_code)]
@@ -25,6 +25,7 @@ pub mod memsim;
 pub mod metrics;
 pub mod model;
 pub mod pipeline;
+pub mod planner;
 pub mod power;
 pub mod runtime;
 pub mod scheduler;

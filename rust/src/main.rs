@@ -24,9 +24,10 @@ use anyhow::{anyhow, Result};
 
 use swapnet::config::{DeviceProfile, MB};
 use swapnet::delay::{profiler, DelayModel};
-use swapnet::engine::{scenario_budgets, Engine};
+use swapnet::engine::{scenario_budgets, CostSource, Engine};
 use swapnet::model::{artifacts, families};
 use swapnet::pipeline::PipelineSpec;
+use swapnet::planner::{PlanCacheConfig, PlanStats, Planner};
 use swapnet::scheduler::{self, adapt::AdaptiveScheduler, partition};
 use swapnet::util::table;
 use swapnet::workload;
@@ -57,6 +58,18 @@ const PIPELINE_M_FLAG: FlagSpec = FlagSpec {
     help: "block residency m / swap parallelism (default 2, the paper's overlap)",
 };
 
+const COSTS_FLAG: FlagSpec = FlagSpec {
+    name: "costs",
+    metavar: "SRC",
+    help: "planner cost provider: analytic | measured (Fig 9 fit; default analytic)",
+};
+
+const PLAN_CACHE_FLAG: FlagSpec = FlagSpec {
+    name: "plan-cache-bytes",
+    metavar: "B",
+    help: "byte bound on the shared plan cache (default 4000000)",
+};
+
 const COMMANDS: &[CmdSpec] = &[
     CmdSpec {
         name: "scenario",
@@ -73,6 +86,8 @@ const COMMANDS: &[CmdSpec] = &[
                 help: "DInf | DCha | TPrg | SNet (default: all four)",
             },
             PIPELINE_M_FLAG,
+            COSTS_FLAG,
+            PLAN_CACHE_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -102,6 +117,8 @@ const COMMANDS: &[CmdSpec] = &[
             },
             FlagSpec { name: "blocks", metavar: "N", help: "block count n (default 3)" },
             PIPELINE_M_FLAG,
+            COSTS_FLAG,
+            PLAN_CACHE_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -182,6 +199,8 @@ const COMMANDS: &[CmdSpec] = &[
             },
             FlagSpec { name: "seed", metavar: "S", help: "stream seed (default 1)" },
             PIPELINE_M_FLAG,
+            COSTS_FLAG,
+            PLAN_CACHE_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -314,6 +333,35 @@ fn pipeline_m(flags: &HashMap<String, String>) -> Result<usize> {
     Ok(m)
 }
 
+/// `--costs` flag: the planner's cost provider.
+fn cost_source(flags: &HashMap<String, String>) -> Result<CostSource> {
+    let name = flags.get("costs").map(String::as_str).unwrap_or("analytic");
+    CostSource::by_name(name)
+        .ok_or_else(|| anyhow!("unknown cost source `{name}` (expected analytic | measured)"))
+}
+
+/// `--plan-cache-bytes` flag: shared plan-cache bound.
+fn plan_cache_bytes(flags: &HashMap<String, String>) -> Result<u64> {
+    parsed(flags, "plan-cache-bytes", swapnet::planner::cache::DEFAULT_CACHE_BYTES)
+}
+
+/// One-line planner summary for CLI output.
+fn plan_line(st: &PlanStats) -> String {
+    format!(
+        "planner[{}]: {} plan probes ({} hits), {} tables built ({} reused), {} B cached ({} entries, {} evicted, {} invalidated), {} DP evals",
+        st.cost_source,
+        st.hits + st.misses,
+        st.hits,
+        st.table_misses,
+        st.table_hits,
+        st.bytes,
+        st.entries,
+        st.evictions,
+        st.invalidations,
+        st.dp_evals,
+    )
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
@@ -362,7 +410,12 @@ fn cmd_scenario(flags: &HashMap<String, String>) -> Result<()> {
         table::human_bytes(sc.dnn_budget),
         sc.pressure()
     );
-    let engine = Engine::builder().device(prof).pipeline_m(pipeline_m(flags)?).build();
+    let engine = Engine::builder()
+        .device(prof)
+        .pipeline_m(pipeline_m(flags)?)
+        .cost_source(cost_source(flags)?)
+        .plan_cache_bytes(plan_cache_bytes(flags)?)
+        .build();
     let mut rows = Vec::new();
     for m in methods {
         for r in engine.run_scenario(&sc, m)? {
@@ -370,6 +423,7 @@ fn cmd_scenario(flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     println!("{}", table::render(&["model", "method", "peak mem", "latency", "accuracy"], &rows));
+    println!("{}", plan_line(&engine.plan_stats()));
     Ok(())
 }
 
@@ -436,7 +490,17 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     let model = families::by_name(model_name).ok_or_else(|| anyhow!("unknown model"))?;
     let prof = device(flags)?;
     let spec = PipelineSpec::with_residency(pipeline_m(flags)?);
-    let dm = DelayModel::from_profile(&prof);
+    let source = cost_source(flags)?;
+    // Seed 0 = SnetConfig's default: `--costs measured` fits the SAME
+    // coefficients here as the engine-based commands (scenario,
+    // serve-multi), so tables and plans agree across the CLI.
+    let mut planner = Planner::for_source(
+        source,
+        &prof,
+        0,
+        PlanCacheConfig { capacity_bytes: plan_cache_bytes(flags)?, ..Default::default() },
+    );
+    let dm = planner.delay_model().clone();
     let t = partition::build_lookup_table_spec(&model, n, &dm, &spec);
     println!(
         "{} into {} blocks (residency m={}): {} candidate partitions ({} table)",
@@ -470,6 +534,21 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
         );
         println!("no feasible {n}-block partition within {budget_mb} MB");
     }
+    // The production path: one planner probe (DP + cache) instead of a
+    // table rebuild; a second probe of the same budget is a cache hit.
+    match planner.plan(&model, budget_mb * MB, &spec) {
+        Ok(s) => {
+            let _ = planner.plan(&model, budget_mb * MB, &spec);
+            println!(
+                "planner probe: {} blocks at {:?}, predicted {}",
+                s.n_blocks,
+                s.points,
+                table::human_secs(s.predicted_latency_s)
+            );
+        }
+        Err(e) => println!("planner probe: {e}"),
+    }
+    println!("{}", plan_line(&planner.stats()));
     Ok(())
 }
 
@@ -565,6 +644,8 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
     let engine = Engine::builder()
         .device(device(flags)?)
         .pipeline_m(pipeline_m(flags)?)
+        .cost_source(cost_source(flags)?)
+        .plan_cache_bytes(plan_cache_bytes(flags)?)
         .build();
     let mut server = MultiTenantServer::new(engine, cfg);
     for m in models {
@@ -628,6 +709,9 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
         ));
     }
     println!("zero budget violations (asserted via the shared MemSim ledger)");
+    if let Some(plan) = &rep.plan {
+        println!("{}", plan_line(plan));
+    }
     if let Some(pool) = rep.pool {
         println!(
             "host buffer pool: {} slots ({} each), {} checkouts ({} recycled), {} allocations, {} copied bytes",

@@ -1,0 +1,466 @@
+//! The shared plan cache: (model, spec, budget band, cost fingerprint)
+//! -> partition plan, plus the per-(model, n) DP frontier tables behind
+//! it (the paper's "strategy lookup tables", §8.5: 0.5-3.4 MB resident).
+//!
+//! Re-partition events — `ModelHandle::rebudget`, `scheduler::adapt`,
+//! `server::multi` register/evict storms — used to rebuild lookup
+//! tables from scratch per tenant. With the cache they become probes:
+//! a plan-level hit returns the cached schedule, a table-level hit
+//! reuses the DP frontier and only re-prunes it by the new budget.
+//! Entries are keyed by the cost provider's fingerprint, so measured
+//! cost drift invalidates exactly the plans it obsoletes. Total bytes
+//! are bounded (`--plan-cache-bytes`): inserts evict least-recently
+//! used entries first, and an entry larger than the whole bound is
+//! simply not cached.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::pipeline::PipelineSpec;
+use crate::scheduler::partition::LookupTable;
+use crate::scheduler::Schedule;
+
+/// Budget band width for plan-level keys: budgets within one band share
+/// a cached plan (planned at the lowest budget seen in the band, so the
+/// plan stays feasible for every later probe in the band).
+pub const DEFAULT_BAND_BYTES: u64 = 1_000_000;
+
+/// Default cache capacity — the top of the paper's §8.5 strategy-table
+/// band.
+pub const DEFAULT_CACHE_BYTES: u64 = 4_000_000;
+
+/// Cache sizing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanCacheConfig {
+    /// Hard byte bound across plans + tables (0 disables caching).
+    pub capacity_bytes: u64,
+    /// Plan-key budget quantization.
+    pub band_bytes: u64,
+}
+
+impl Default for PlanCacheConfig {
+    fn default() -> PlanCacheConfig {
+        PlanCacheConfig {
+            capacity_bytes: DEFAULT_CACHE_BYTES,
+            band_bytes: DEFAULT_BAND_BYTES,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    model: String,
+    /// Chain-content fingerprint (`cost::model_fingerprint`): two
+    /// models sharing a name but not a chain must never alias.
+    chain: u64,
+    residency_m: usize,
+    swap_channels: usize,
+    band: u64,
+    fingerprint: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct TableKey {
+    model: String,
+    chain: u64,
+    residency_m: usize,
+    swap_channels: usize,
+    n: usize,
+    fingerprint: u64,
+}
+
+#[derive(Debug, Clone)]
+struct PlanEntry {
+    /// The budget the plan was computed for: reusable for any probe
+    /// budget >= it (feasibility is monotone in budget).
+    planned_budget: u64,
+    schedule: Schedule,
+    bytes: u64,
+    tick: u64,
+}
+
+#[derive(Debug, Clone)]
+struct TableEntry {
+    /// Shared, immutable frontier — probes hand out the Rc instead of
+    /// deep-cloning the whole table per plan-walk step.
+    table: Rc<LookupTable>,
+    bytes: u64,
+    tick: u64,
+}
+
+/// Cumulative cache/planner counters, snapshotted into reports.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanStats {
+    /// Cost provider behind the plans ("analytic" | "measured").
+    pub cost_source: String,
+    /// Current cost fingerprint keying live entries.
+    pub fingerprint: u64,
+    /// Plan-level probes answered from cache.
+    pub hits: u64,
+    /// Plan-level probes that had to (re)plan.
+    pub misses: u64,
+    /// DP frontier tables reused from cache during planning.
+    pub table_hits: u64,
+    /// DP frontier tables built.
+    pub table_misses: u64,
+    /// Entries evicted to respect the byte bound.
+    pub evictions: u64,
+    /// Entries dropped by cost-fingerprint drift.
+    pub invalidations: u64,
+    /// Live entries (plans + tables).
+    pub entries: u64,
+    /// Resident bytes of all live entries.
+    pub bytes: u64,
+    /// Cumulative DP block-interval evaluations.
+    pub dp_evals: u64,
+    /// DP runs whose per-cell frontier hit the safety cap (optimality
+    /// degraded to best-effort for those frontiers) — 0 for every
+    /// in-tree model family.
+    pub capped_frontiers: u64,
+}
+
+/// The shared plan/table cache (see module docs).
+#[derive(Debug)]
+pub struct PlanCache {
+    cfg: PlanCacheConfig,
+    plans: HashMap<PlanKey, PlanEntry>,
+    tables: HashMap<TableKey, TableEntry>,
+    bytes: u64,
+    tick: u64,
+    pub(crate) hits: u64,
+    pub(crate) misses: u64,
+    pub(crate) table_hits: u64,
+    pub(crate) table_misses: u64,
+    pub(crate) evictions: u64,
+    pub(crate) invalidations: u64,
+}
+
+impl PlanCache {
+    pub fn new(cfg: PlanCacheConfig) -> PlanCache {
+        PlanCache {
+            cfg: PlanCacheConfig { band_bytes: cfg.band_bytes.max(1), ..cfg },
+            plans: HashMap::new(),
+            tables: HashMap::new(),
+            bytes: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            table_hits: 0,
+            table_misses: 0,
+            evictions: 0,
+            invalidations: 0,
+        }
+    }
+
+    pub fn config(&self) -> PlanCacheConfig {
+        self.cfg
+    }
+
+    /// Resident bytes across all live entries.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn entries(&self) -> u64 {
+        (self.plans.len() + self.tables.len()) as u64
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn plan_key(
+        &self,
+        model: &str,
+        chain: u64,
+        spec: &PipelineSpec,
+        budget: u64,
+        fp: u64,
+    ) -> PlanKey {
+        PlanKey {
+            model: model.to_string(),
+            chain,
+            residency_m: spec.residency_m,
+            swap_channels: spec.swap_channels,
+            band: budget / self.cfg.band_bytes,
+            fingerprint: fp,
+        }
+    }
+
+    /// Probe for a cached plan serving `budget`. A hit requires the
+    /// entry's planned budget to be <= the probe's (a plan for less
+    /// memory always fits more); the returned schedule is restamped to
+    /// the probe budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_plan(
+        &mut self,
+        model: &str,
+        chain: u64,
+        spec: &PipelineSpec,
+        budget: u64,
+        fp: u64,
+    ) -> Option<Schedule> {
+        let key = self.plan_key(model, chain, spec, budget, fp);
+        let tick = self.bump();
+        match self.plans.get_mut(&key) {
+            Some(e) if e.planned_budget <= budget => {
+                e.tick = tick;
+                self.hits += 1;
+                let mut s = e.schedule.clone();
+                s.budget_bytes = budget;
+                Some(s)
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a freshly planned schedule. Replaces any same-band entry
+    /// (the lower planned budget wins band-wide reuse).
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_plan(
+        &mut self,
+        model: &str,
+        chain: u64,
+        spec: &PipelineSpec,
+        budget: u64,
+        fp: u64,
+        s: &Schedule,
+    ) {
+        let key = self.plan_key(model, chain, spec, budget, fp);
+        let bytes = plan_bytes(s);
+        let tick = self.bump();
+        if let Some(old) = self.plans.remove(&key) {
+            self.bytes -= old.bytes;
+        }
+        if !self.make_room(bytes) {
+            return;
+        }
+        self.bytes += bytes;
+        self.plans.insert(
+            key,
+            PlanEntry { planned_budget: budget, schedule: s.clone(), bytes, tick },
+        );
+    }
+
+    /// Probe for a cached DP frontier table.
+    pub fn get_table(
+        &mut self,
+        model: &str,
+        chain: u64,
+        spec: &PipelineSpec,
+        n: usize,
+        fp: u64,
+    ) -> Option<Rc<LookupTable>> {
+        let key = TableKey {
+            model: model.to_string(),
+            chain,
+            residency_m: spec.residency_m,
+            swap_channels: spec.swap_channels,
+            n,
+            fingerprint: fp,
+        };
+        let tick = self.bump();
+        match self.tables.get_mut(&key) {
+            Some(e) => {
+                e.tick = tick;
+                self.table_hits += 1;
+                Some(e.table.clone())
+            }
+            None => {
+                self.table_misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a DP frontier table.
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_table(
+        &mut self,
+        model: &str,
+        chain: u64,
+        spec: &PipelineSpec,
+        n: usize,
+        fp: u64,
+        t: &Rc<LookupTable>,
+    ) {
+        let key = TableKey {
+            model: model.to_string(),
+            chain,
+            residency_m: spec.residency_m,
+            swap_channels: spec.swap_channels,
+            n,
+            fingerprint: fp,
+        };
+        let bytes = t.approx_bytes();
+        let tick = self.bump();
+        if let Some(old) = self.tables.remove(&key) {
+            self.bytes -= old.bytes;
+        }
+        if !self.make_room(bytes) {
+            return;
+        }
+        self.bytes += bytes;
+        self.tables.insert(key, TableEntry { table: t.clone(), bytes, tick });
+    }
+
+    /// Evict LRU entries until `incoming` bytes fit under the bound.
+    /// Returns false when the incoming entry alone exceeds the bound
+    /// (it is then not cached at all).
+    fn make_room(&mut self, incoming: u64) -> bool {
+        if incoming > self.cfg.capacity_bytes {
+            return false;
+        }
+        while self.bytes + incoming > self.cfg.capacity_bytes {
+            let plan_lru = self.plans.iter().min_by_key(|(_, e)| e.tick).map(|(k, e)| (k.clone(), e.tick));
+            let table_lru =
+                self.tables.iter().min_by_key(|(_, e)| e.tick).map(|(k, e)| (k.clone(), e.tick));
+            match (plan_lru, table_lru) {
+                (Some((pk, pt)), Some((_, tt))) if pt <= tt => {
+                    let e = self.plans.remove(&pk).expect("lru plan present");
+                    self.bytes -= e.bytes;
+                }
+                (_, Some((tk, _))) => {
+                    let e = self.tables.remove(&tk).expect("lru table present");
+                    self.bytes -= e.bytes;
+                }
+                (Some((pk, _)), None) => {
+                    let e = self.plans.remove(&pk).expect("lru plan present");
+                    self.bytes -= e.bytes;
+                }
+                (None, None) => return false,
+            }
+            self.evictions += 1;
+        }
+        true
+    }
+
+    /// Drop every entry not keyed by `fp` — cost-fingerprint drift
+    /// invalidation.
+    pub fn retain_fingerprint(&mut self, fp: u64) {
+        let before = self.entries();
+        let mut freed = 0u64;
+        self.plans.retain(|k, e| {
+            let keep = k.fingerprint == fp;
+            if !keep {
+                freed += e.bytes;
+            }
+            keep
+        });
+        self.tables.retain(|k, e| {
+            let keep = k.fingerprint == fp;
+            if !keep {
+                freed += e.bytes;
+            }
+            keep
+        });
+        self.bytes -= freed;
+        self.invalidations += before - self.entries();
+    }
+}
+
+/// Resident-size estimate of one cached plan (points + fixed header),
+/// mirroring `LookupTable::approx_bytes`'s accounting style.
+pub fn plan_bytes(s: &Schedule) -> u64 {
+    s.points.len() as u64 * 8 + s.model.len() as u64 + 64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(model: &str, budget: u64, points: Vec<usize>) -> Schedule {
+        Schedule {
+            model: model.into(),
+            budget_bytes: budget,
+            n_blocks: points.len() + 1,
+            points,
+            predicted_latency_s: 0.5,
+            peak_bytes: budget / 2,
+        }
+    }
+
+    fn table(model: &str, n: usize, rows: usize) -> LookupTable {
+        LookupTable {
+            model: model.into(),
+            n_blocks: n,
+            rows: (0..rows)
+                .map(|i| crate::scheduler::partition::Row {
+                    points: vec![i + 1],
+                    max_mem_bytes: 1000 + i as u64,
+                    predicted_latency_s: 1.0 - i as f64 * 1e-3,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn plan_probe_hits_same_band_and_higher_budget() {
+        let mut c = PlanCache::new(PlanCacheConfig::default());
+        let spec = PipelineSpec::default();
+        let s = sched("m", 100_000_000, vec![3, 7]);
+        assert!(c.get_plan("m", 9, &spec, 100_000_000, 1).is_none());
+        c.put_plan("m", 9, &spec, 100_000_000, 1, &s);
+        let hit = c.get_plan("m", 9, &spec, 100_000_000, 1).unwrap();
+        assert_eq!(hit.points, s.points);
+        // Higher budget in the same band reuses, restamped.
+        let hit2 = c.get_plan("m", 9, &spec, 100_400_000, 1).unwrap();
+        assert_eq!(hit2.budget_bytes, 100_400_000);
+        // Lower budget in the band must not reuse a bigger-budget plan.
+        assert!(c.get_plan("m", 9, &spec, 99_999_999, 1).is_none());
+        // Other spec, band, or fingerprint: miss.
+        assert!(c.get_plan("m", 9, &PipelineSpec::with_residency(3), 100_000_000, 1).is_none());
+        assert!(c.get_plan("m", 9, &spec, 200_000_000, 1).is_none());
+        assert!(c.get_plan("m", 9, &spec, 100_000_000, 2).is_none());
+        assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn byte_bound_is_hard_and_lru_evicts() {
+        let t = Rc::new(table("m", 3, 100)); // 100 * (3*8 + 16) = 4000 B
+        let cap = 2 * t.approx_bytes() + 10;
+        let mut c = PlanCache::new(PlanCacheConfig { capacity_bytes: cap, band_bytes: 1 });
+        let spec = PipelineSpec::default();
+        for n in 0..6 {
+            c.put_table("m", 9, &spec, n, 1, &t);
+            assert!(c.bytes() <= cap, "{} > {cap}", c.bytes());
+        }
+        assert_eq!(c.entries(), 2, "only two tables fit");
+        assert!(c.evictions >= 4);
+        // An entry bigger than the whole bound is not cached.
+        let big = Rc::new(table("m", 3, 1000));
+        let mut small = PlanCache::new(PlanCacheConfig { capacity_bytes: 100, band_bytes: 1 });
+        small.put_table("m", 9, &spec, 3, 1, &big);
+        assert_eq!(small.bytes(), 0);
+        assert_eq!(small.entries(), 0);
+    }
+
+    #[test]
+    fn fingerprint_drift_invalidates() {
+        let mut c = PlanCache::new(PlanCacheConfig::default());
+        let spec = PipelineSpec::default();
+        c.put_plan("m", 9, &spec, 1_000_000, 1, &sched("m", 1_000_000, vec![2]));
+        c.put_table("m", 9, &spec, 3, 1, &Rc::new(table("m", 3, 10)));
+        c.put_table("m", 9, &spec, 4, 2, &Rc::new(table("m", 4, 10)));
+        c.retain_fingerprint(2);
+        assert_eq!(c.entries(), 1);
+        assert_eq!(c.invalidations, 2);
+        assert!(c.get_plan("m", 9, &spec, 1_000_000, 1).is_none());
+        assert!(c.get_table("m", 9, &spec, 4, 2).is_some());
+        let expected = table("m", 4, 10).approx_bytes();
+        assert_eq!(c.bytes(), expected);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = PlanCache::new(PlanCacheConfig { capacity_bytes: 0, band_bytes: 1_000_000 });
+        let spec = PipelineSpec::default();
+        c.put_plan("m", 9, &spec, 1_000_000, 1, &sched("m", 1_000_000, vec![2]));
+        assert_eq!(c.entries(), 0);
+        assert!(c.get_plan("m", 9, &spec, 1_000_000, 1).is_none());
+    }
+}

@@ -1,0 +1,417 @@
+//! Cost providers: where the planner's per-block delay predictions come
+//! from (paper §6.1 / Fig 9).
+//!
+//! [`CostProvider`] is the seam between "how blocks cost" and "how
+//! partitions are chosen": [`AnalyticCosts`] wraps the hand-calibrated
+//! [`DelayModel`] (the historical path), [`MeasuredCosts`] is fed by the
+//! Fig 9 regression ([`Fit`] -> [`DelayModel::from_fit`]) and refined
+//! online from serving observations ([`CostObservation`]). Both expose a
+//! stable [`fingerprint`](CostProvider::fingerprint) that keys the plan
+//! cache — when measured coefficients drift past the quantization band,
+//! the fingerprint moves and cached plans invalidate.
+
+use crate::config::{DeviceProfile, Processor};
+use crate::delay::profiler::Fit;
+use crate::delay::DelayModel;
+use crate::model::{BlockInfo, ModelInfo};
+use crate::pipeline::BlockTimes;
+
+/// FNV-1a over a stream of u64 words — a dependency-free stable hash for
+/// cost fingerprints (not cryptographic; collision odds are irrelevant
+/// at cache-key scale).
+fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Stable fingerprint of a model's chain content (layer sizes, depths,
+/// FLOPs, cut legality). Cache keys carry it alongside the model name:
+/// two models that share a name but not a chain (e.g. a re-exported
+/// artifact) must never alias each other's cached partitions.
+pub fn model_fingerprint(model: &ModelInfo) -> u64 {
+    fnv1a(model.layers.iter().flat_map(|l| {
+        [l.size_bytes, l.depth as u64, l.flops, l.cut_after as u64]
+    }))
+}
+
+fn delay_model_words(dm: &DelayModel) -> [u64; 8] {
+    [
+        dm.alpha_s_per_byte.to_bits(),
+        dm.beta_s_per_depth.to_bits(),
+        dm.gamma_cpu_s_per_flop.to_bits(),
+        dm.gamma_gpu_s_per_flop.to_bits(),
+        dm.eta_s_per_depth.to_bits(),
+        dm.gc_s.to_bits(),
+        dm.dma_setup_s.to_bits(),
+        dm.dispatch_s_per_block.to_bits(),
+    ]
+}
+
+/// A source of per-block delay predictions for the planner.
+pub trait CostProvider {
+    /// Provider name for reports ("analytic" | "measured").
+    fn name(&self) -> &'static str;
+
+    /// The effective delay model backing the predictions.
+    fn delay_model(&self) -> &DelayModel;
+
+    /// Stable identity of the current predictions: equal fingerprints
+    /// guarantee equal [`block_times`](Self::block_times) for every
+    /// block, so plans keyed by it stay valid until it moves.
+    fn fingerprint(&self) -> u64;
+
+    /// Predicted (t_in, t_ex, t_out) for one block — exactly the triple
+    /// `partition::evaluate_spec` feeds the pipeline timeline.
+    fn block_times(&self, b: &BlockInfo, proc: Processor) -> BlockTimes {
+        let dm = self.delay_model();
+        BlockTimes { t_in: dm.t_in(b), t_ex: dm.t_ex(b, proc), t_out: dm.t_out(b) }
+    }
+}
+
+/// The hand-calibrated analytic cost model (today's `DelayModel` path).
+#[derive(Debug, Clone)]
+pub struct AnalyticCosts {
+    dm: DelayModel,
+    fp: u64,
+}
+
+impl AnalyticCosts {
+    pub fn new(dm: DelayModel) -> AnalyticCosts {
+        let fp = fnv1a(delay_model_words(&dm));
+        AnalyticCosts { dm, fp }
+    }
+
+    pub fn from_profile(prof: &DeviceProfile) -> AnalyticCosts {
+        Self::new(DelayModel::from_profile(prof))
+    }
+}
+
+impl CostProvider for AnalyticCosts {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn delay_model(&self) -> &DelayModel {
+        &self.dm
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+}
+
+/// One serving observation feeding online refinement of measured costs:
+/// what one full inference pass actually cost, against the chain totals
+/// that predicted it. Built from `InferenceReport`s (engine), batch
+/// completions (`server::multi`), or `pipeline::real` run reports.
+#[derive(Debug, Clone)]
+pub struct CostObservation {
+    /// Blocks the pass executed (scales the fixed per-block costs).
+    pub n_blocks: usize,
+    /// Total parameter bytes swapped in.
+    pub bytes: u64,
+    /// Total parameter depth assembled.
+    pub depth: u32,
+    /// Total FLOPs executed.
+    pub flops: u64,
+    pub proc: Processor,
+    /// Measured swap-in I/O seconds (sum over blocks).
+    pub swap_s: f64,
+    /// Measured skeleton-assembly seconds (sum over blocks).
+    pub assembly_s: f64,
+    /// Measured execution seconds (sum over blocks).
+    pub compute_s: f64,
+}
+
+/// EMA weight for online refinement: one observation moves a scale 20%
+/// of the way toward the observed/predicted ratio.
+const OBS_WEIGHT: f64 = 0.2;
+
+/// Refinement ratios are clamped to this band so one garbage sample
+/// (cold cache, preempted worker) cannot wreck the model.
+const RATIO_CLAMP: (f64, f64) = (0.25, 4.0);
+
+/// Fingerprint quantization: scales are bucketed at 1/64 (~1.6%), so
+/// sub-bucket drift refines predictions without thrashing the plan
+/// cache; crossing a bucket edge moves the fingerprint and invalidates.
+const FP_QUANTUM: f64 = 64.0;
+
+/// Measured costs: seeded by the Fig 9 regression, refined online.
+#[derive(Debug, Clone)]
+pub struct MeasuredCosts {
+    /// The fitted base model (Fig 9 sweep -> `DelayModel::from_fit`).
+    base: DelayModel,
+    /// Effective model = base with the refinement scales applied.
+    dm: DelayModel,
+    /// Online refinement factors on the three delay laws.
+    scale_in: f64,
+    scale_asm: f64,
+    scale_ex: f64,
+    observations: u64,
+    fp: u64,
+}
+
+impl MeasuredCosts {
+    /// Seed from a Fig 9 fit against a device profile.
+    pub fn from_fit(fit: &Fit, prof: &DeviceProfile) -> MeasuredCosts {
+        Self::from_delay_model(DelayModel::from_fit(fit, prof))
+    }
+
+    /// Seed from an already-fitted delay model.
+    pub fn from_delay_model(base: DelayModel) -> MeasuredCosts {
+        let mut mc = MeasuredCosts {
+            dm: base.clone(),
+            base,
+            scale_in: 1.0,
+            scale_asm: 1.0,
+            scale_ex: 1.0,
+            observations: 0,
+            fp: 0,
+        };
+        mc.rebuild();
+        mc
+    }
+
+    /// Current (swap-in, assembly, execution) refinement scales.
+    pub fn scales(&self) -> (f64, f64, f64) {
+        (self.scale_in, self.scale_asm, self.scale_ex)
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Fold one observation into the refinement scales. Returns true
+    /// when the fingerprint moved (the caller must invalidate plans).
+    pub fn observe(&mut self, obs: &CostObservation) -> bool {
+        if obs.n_blocks == 0 {
+            return false;
+        }
+        let n = obs.n_blocks as f64;
+        // Predictions under the BASE model, so the scales stay absolute
+        // (an EMA toward observed/base, not a compounding random walk).
+        let pred_in = self.base.alpha_s_per_byte * obs.bytes as f64 + self.base.dma_setup_s * n;
+        let pred_asm = self.base.beta_s_per_depth * obs.depth as f64;
+        let pred_ex = match obs.proc {
+            Processor::Cpu => self.base.gamma_cpu_s_per_flop,
+            Processor::Gpu => self.base.gamma_gpu_s_per_flop,
+        } * obs.flops as f64
+            + self.base.dispatch_s_per_block * n;
+        let fold = |scale: &mut f64, pred: f64, seen: f64| {
+            if pred > 0.0 && seen > 0.0 {
+                let r = (seen / pred).clamp(RATIO_CLAMP.0, RATIO_CLAMP.1);
+                *scale = (1.0 - OBS_WEIGHT) * *scale + OBS_WEIGHT * r;
+            }
+        };
+        fold(&mut self.scale_in, pred_in, obs.swap_s);
+        fold(&mut self.scale_asm, pred_asm, obs.assembly_s);
+        fold(&mut self.scale_ex, pred_ex, obs.compute_s);
+        self.observations += 1;
+        let old_fp = self.fp;
+        self.rebuild();
+        self.fp != old_fp
+    }
+
+    /// Re-derive the effective model and fingerprint from the scales.
+    /// The effective model uses the QUANTIZED scales, so two states with
+    /// equal fingerprints predict identically (the fingerprint contract).
+    fn rebuild(&mut self) {
+        let q = |s: f64| (s * FP_QUANTUM).round() / FP_QUANTUM;
+        let (qi, qa, qe) = (q(self.scale_in), q(self.scale_asm), q(self.scale_ex));
+        self.dm = DelayModel {
+            alpha_s_per_byte: self.base.alpha_s_per_byte * qi,
+            beta_s_per_depth: self.base.beta_s_per_depth * qa,
+            gamma_cpu_s_per_flop: self.base.gamma_cpu_s_per_flop * qe,
+            gamma_gpu_s_per_flop: self.base.gamma_gpu_s_per_flop * qe,
+            eta_s_per_depth: self.base.eta_s_per_depth,
+            gc_s: self.base.gc_s,
+            dma_setup_s: self.base.dma_setup_s,
+            dispatch_s_per_block: self.base.dispatch_s_per_block,
+        };
+        self.fp = fnv1a(delay_model_words(&self.dm).into_iter().chain([1u64]));
+    }
+}
+
+impl CostProvider for MeasuredCosts {
+    fn name(&self) -> &'static str {
+        "measured"
+    }
+
+    fn delay_model(&self) -> &DelayModel {
+        &self.dm
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+}
+
+/// Owned provider storage for planners (concrete, so the measured
+/// variant stays mutable for online refinement without downcasting).
+#[derive(Debug, Clone)]
+pub enum Costs {
+    Analytic(AnalyticCosts),
+    Measured(MeasuredCosts),
+}
+
+impl Costs {
+    pub fn provider(&self) -> &dyn CostProvider {
+        match self {
+            Costs::Analytic(a) => a,
+            Costs::Measured(m) => m,
+        }
+    }
+
+    /// Fold an observation into measured costs (no-op for analytic).
+    /// Returns true when the fingerprint moved.
+    pub fn observe(&mut self, obs: &CostObservation) -> bool {
+        match self {
+            Costs::Analytic(_) => false,
+            Costs::Measured(m) => m.observe(obs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+    use crate::delay::profiler;
+
+    fn block(size_mb: u64, depth: u32, gflops: f64) -> BlockInfo {
+        BlockInfo {
+            index: 0,
+            layer_lo: 0,
+            layer_hi: 1,
+            size_bytes: size_mb * MB,
+            depth,
+            flops: (gflops * 1e9) as u64,
+        }
+    }
+
+    #[test]
+    fn analytic_matches_delay_model_bitwise() {
+        let prof = DeviceProfile::jetson_nx();
+        let dm = DelayModel::from_profile(&prof);
+        let costs = AnalyticCosts::from_profile(&prof);
+        let b = block(50, 40, 8.0);
+        let t = costs.block_times(&b, Processor::Cpu);
+        assert_eq!(t.t_in, dm.t_in(&b));
+        assert_eq!(t.t_ex, dm.t_ex(&b, Processor::Cpu));
+        assert_eq!(t.t_out, dm.t_out(&b));
+        // Same coefficients -> same fingerprint; different -> different.
+        assert_eq!(costs.fingerprint(), AnalyticCosts::new(dm.clone()).fingerprint());
+        let nano = AnalyticCosts::from_profile(&DeviceProfile::jetson_nano());
+        assert_ne!(costs.fingerprint(), nano.fingerprint());
+    }
+
+    #[test]
+    fn measured_seeds_from_fit_and_differs_from_analytic_fp() {
+        let prof = DeviceProfile::jetson_nx();
+        let fit = profiler::fit(&profiler::measure_sweep(&prof, 100, 0.0, 1));
+        let mc = MeasuredCosts::from_fit(&fit, &prof);
+        assert_eq!(mc.scales(), (1.0, 1.0, 1.0));
+        // A noiseless fit tracks the analytic model closely.
+        let dm = DelayModel::from_profile(&prof);
+        let b = block(80, 60, 12.0);
+        let rel = (mc.delay_model().t_ex(&b, Processor::Cpu) - dm.t_ex(&b, Processor::Cpu)).abs()
+            / dm.t_ex(&b, Processor::Cpu);
+        assert!(rel < 0.05, "{rel}");
+    }
+
+    #[test]
+    fn observations_drift_scales_and_fingerprint() {
+        let prof = DeviceProfile::jetson_nx();
+        let fit = profiler::fit(&profiler::measure_sweep(&prof, 100, 0.0, 1));
+        let mut mc = MeasuredCosts::from_fit(&fit, &prof);
+        let fp0 = mc.fingerprint();
+        let b = block(100, 80, 15.0);
+        // The "device" consistently swaps 2x slower than fitted.
+        let obs = CostObservation {
+            n_blocks: 3,
+            bytes: b.size_bytes,
+            depth: b.depth,
+            flops: b.flops,
+            proc: Processor::Cpu,
+            swap_s: 2.0 * (mc.delay_model().alpha_s_per_byte * b.size_bytes as f64
+                + mc.delay_model().dma_setup_s * 3.0),
+            assembly_s: mc.delay_model().beta_s_per_depth * b.depth as f64,
+            compute_s: mc.delay_model().gamma_cpu_s_per_flop * b.flops as f64
+                + mc.delay_model().dispatch_s_per_block * 3.0,
+        };
+        let mut changed = false;
+        for _ in 0..8 {
+            changed |= mc.observe(&obs);
+        }
+        assert!(changed, "2x swap drift must move the fingerprint");
+        assert_ne!(mc.fingerprint(), fp0);
+        let (si, sa, se) = mc.scales();
+        assert!(si > 1.5, "swap scale drifts up: {si}");
+        assert!((sa - 1.0).abs() < 0.05, "assembly stays: {sa}");
+        assert!((se - 1.0).abs() < 0.05, "compute stays: {se}");
+        assert_eq!(mc.observations(), 8);
+    }
+
+    #[test]
+    fn tiny_drift_keeps_the_fingerprint_stable() {
+        let prof = DeviceProfile::jetson_nx();
+        let fit = profiler::fit(&profiler::measure_sweep(&prof, 100, 0.0, 1));
+        let mut mc = MeasuredCosts::from_fit(&fit, &prof);
+        let fp0 = mc.fingerprint();
+        let b = block(100, 80, 15.0);
+        // 0.2% off-prediction: inside the quantization bucket.
+        let obs = CostObservation {
+            n_blocks: 2,
+            bytes: b.size_bytes,
+            depth: b.depth,
+            flops: b.flops,
+            proc: Processor::Cpu,
+            swap_s: 1.002
+                * (mc.delay_model().alpha_s_per_byte * b.size_bytes as f64
+                    + mc.delay_model().dma_setup_s * 2.0),
+            assembly_s: 1.002 * mc.delay_model().beta_s_per_depth * b.depth as f64,
+            compute_s: 1.002
+                * (mc.delay_model().gamma_cpu_s_per_flop * b.flops as f64
+                    + mc.delay_model().dispatch_s_per_block * 2.0),
+        };
+        assert!(!mc.observe(&obs), "sub-bucket drift must not invalidate");
+        assert_eq!(mc.fingerprint(), fp0);
+    }
+
+    #[test]
+    fn model_fingerprint_tracks_chain_content() {
+        let a = crate::model::families::resnet101();
+        let mut b = crate::model::families::resnet101();
+        assert_eq!(model_fingerprint(&a), model_fingerprint(&b));
+        // Same name, different chain -> different fingerprint.
+        b.layers[0].size_bytes += 1;
+        assert_ne!(model_fingerprint(&a), model_fingerprint(&b));
+        let mut c = crate::model::families::resnet101();
+        c.layers[3].cut_after = false;
+        assert_ne!(model_fingerprint(&a), model_fingerprint(&c));
+    }
+
+    #[test]
+    fn costs_enum_routes_observations() {
+        let prof = DeviceProfile::jetson_nx();
+        let mut a = Costs::Analytic(AnalyticCosts::from_profile(&prof));
+        let obs = CostObservation {
+            n_blocks: 1,
+            bytes: MB,
+            depth: 4,
+            flops: 1_000_000,
+            proc: Processor::Cpu,
+            swap_s: 1.0,
+            assembly_s: 1.0,
+            compute_s: 1.0,
+        };
+        assert!(!a.observe(&obs), "analytic ignores observations");
+        assert_eq!(a.provider().name(), "analytic");
+    }
+}

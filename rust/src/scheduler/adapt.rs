@@ -1,109 +1,88 @@
 //! Runtime adaptation to dynamic memory budgets (paper §6.2.2 end, Fig 18).
 //!
 //! The layer chain is extracted once (`get_layers`); adapting to a new
-//! budget only re-selects partition points over the cached chain and
-//! pre-built lookup tables — the paper measures 60-74 ms per adaptation,
-//! dominated by table pruning + block re-referencing, NOT re-dividing the
-//! model from scratch.
+//! budget only re-selects partition points — the paper measures 60-74 ms
+//! per adaptation, dominated by table pruning + block re-referencing,
+//! NOT re-dividing the model from scratch. Since the planner refactor
+//! the cached state is a [`Planner`] (shared plan cache + DP frontier
+//! tables warmed at registration), and adaptation honors the configured
+//! [`PipelineSpec`] — the historical implementation silently planned at
+//! the m = 2 default even when the engine ran a deeper pipeline.
 
-use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::config::DeviceProfile;
-use crate::delay::DelayModel;
 use crate::model::ModelInfo;
-use crate::scheduler::{num_blocks, partition, Schedule};
+use crate::pipeline::PipelineSpec;
+use crate::planner::{PlanStats, Planner};
+use crate::scheduler::Schedule;
 
 /// Cached adaptation state for one registered model.
 pub struct AdaptiveScheduler {
     pub model: ModelInfo,
-    dm: DelayModel,
-    /// Pre-built lookup tables per block count (the "several partition
-    /// strategy lookup tables computed before execution").
-    tables: HashMap<usize, partition::LookupTable>,
+    planner: Planner,
+    spec: PipelineSpec,
     pub current: Option<Schedule>,
     /// History of (budget, n_blocks, adaptation wall seconds).
     pub history: Vec<(u64, usize, f64)>,
 }
 
 impl AdaptiveScheduler {
-    /// Register a model: extract layers (already in `ModelInfo`) and
-    /// precompute lookup tables for the plausible n range.
+    /// Register a model under the default m=2 pipeline: extract layers
+    /// (already in `ModelInfo`) and warm the planner's frontier tables
+    /// for the plausible n range.
     pub fn register(model: ModelInfo, prof: &DeviceProfile, max_n: usize) -> Self {
-        let dm = DelayModel::from_profile(prof);
-        let mut tables = HashMap::new();
+        Self::register_spec(model, prof, max_n, PipelineSpec::default())
+    }
+
+    /// Register under an explicit pipeline spec (`SnetConfig::pipeline`):
+    /// higher residency m raises every row's peak, so the warmed tables
+    /// — and every later adaptation — must be planned against it.
+    pub fn register_spec(
+        model: ModelInfo,
+        prof: &DeviceProfile,
+        max_n: usize,
+        spec: PipelineSpec,
+    ) -> Self {
+        let mut planner = Planner::analytic(prof);
         let cap = (model.legal_cut_points().len() + 1).min(max_n);
-        for n in 2..=cap.max(2) {
-            tables.insert(n, partition::build_lookup_table(&model, n, &dm));
-        }
+        planner.warm(&model, 2..=cap.max(2), &spec);
         AdaptiveScheduler {
             model,
-            dm,
-            tables,
+            planner,
+            spec,
             current: None,
             history: Vec::new(),
         }
     }
 
-    /// Adapt to a new budget: prune the cached tables, choose the best
-    /// feasible row, rebuild blocks. Returns the new schedule; records
-    /// the adaptation wall time (paper: 60-74 ms).
+    /// The pipeline spec adaptations are planned against.
+    pub fn spec(&self) -> PipelineSpec {
+        self.spec
+    }
+
+    /// Adapt to a new budget: probe the plan cache, falling back to a
+    /// prune of the warmed frontier tables (tables beyond the warmed
+    /// range build on demand). Returns the new schedule; records the
+    /// adaptation wall time (paper: 60-74 ms).
     pub fn adapt(&mut self, budget: u64) -> Result<Schedule, String> {
         let t0 = Instant::now();
-        let usable = crate::scheduler::usable_budget(&self.model, budget);
-        let s = self.model.size_bytes();
-        let sched = if s <= usable {
-            let b = self.model.single_block();
-            Schedule {
-                model: self.model.name.clone(),
-                budget_bytes: budget,
-                n_blocks: 1,
-                points: vec![],
-                predicted_latency_s: self.dm.t_in(&b)
-                    + self.dm.t_ex(&b, self.model.processor),
-                peak_bytes: s,
-            }
-        } else {
-            if usable == 0 {
-                return Err(format!("{}: budget {} infeasible", self.model.name, budget));
-            }
-            let max_n = self.model.legal_cut_points().len() + 1;
-            let mut n = num_blocks(s, usable).clamp(2, max_n + 1);
-            loop {
-                let table = match self.tables.get(&n) {
-                    Some(t) => t,
-                    None => {
-                        // beyond the precomputed range: build on demand
-                        let t = partition::build_lookup_table(&self.model, n, &self.dm);
-                        self.tables.entry(n).or_insert(t)
-                    }
-                };
-                if let Some(row) = table.best_within(usable) {
-                    break Schedule {
-                        model: self.model.name.clone(),
-                        budget_bytes: budget,
-                        n_blocks: n,
-                        points: row.points.clone(),
-                        predicted_latency_s: row.predicted_latency_s,
-                        peak_bytes: row.max_mem_bytes,
-                    };
-                }
-                n += 1;
-                if n > self.model.legal_cut_points().len() + 1 {
-                    return Err(format!("{}: budget {} infeasible", self.model.name, budget));
-                }
-            }
-        };
+        let sched = self.planner.plan(&self.model, budget, &self.spec)?;
         let dt = t0.elapsed().as_secs_f64();
         self.history.push((budget, sched.n_blocks, dt));
         self.current = Some(sched.clone());
         Ok(sched)
     }
 
-    /// Total resident bytes of the cached strategy tables (part of the
-    /// paper's delta overhead, §8.5: 0.5-3.4 MB).
+    /// Total resident bytes of the cached planner state (plans + DP
+    /// frontier tables) — part of the paper's delta overhead (§8.5).
     pub fn tables_bytes(&self) -> u64 {
-        self.tables.values().map(|t| t.approx_bytes()).sum()
+        self.planner.stats().bytes
+    }
+
+    /// Planner counter snapshot (cache hits/misses, DP effort).
+    pub fn plan_stats(&self) -> PlanStats {
+        self.planner.stats()
     }
 }
 
@@ -112,6 +91,8 @@ mod tests {
     use super::*;
     use crate::config::{DeviceProfile, MB};
     use crate::model::families;
+    use crate::pipeline::peak_resident_bytes_m;
+    use crate::scheduler::usable_budget;
 
     #[test]
     fn adapts_like_fig18() {
@@ -134,7 +115,7 @@ mod tests {
     #[test]
     fn adaptation_is_fast() {
         // The paper reports 60-74 ms on a Jetson; on this host the cached
-        // table prune must be well under that.
+        // probe must be well under that.
         let prof = DeviceProfile::jetson_nx();
         let mut ad = AdaptiveScheduler::register(families::resnet101(), &prof, 5);
         ad.adapt(136 * MB).unwrap();
@@ -142,6 +123,58 @@ mod tests {
         for (_, _, dt) in &ad.history {
             assert!(*dt < 0.074, "adaptation took {dt}s");
         }
+    }
+
+    #[test]
+    fn repeat_adaptation_is_a_cache_probe() {
+        // The same budget twice: the second adapt answers from the plan
+        // cache (no new DP work), returning the identical schedule.
+        let prof = DeviceProfile::jetson_nx();
+        let mut ad = AdaptiveScheduler::register(families::resnet101(), &prof, 5);
+        let a = ad.adapt(120 * MB).unwrap();
+        let evals = ad.plan_stats().dp_evals;
+        let b = ad.adapt(120 * MB).unwrap();
+        let st = ad.plan_stats();
+        assert_eq!(st.dp_evals, evals, "cache probe must not re-run the DP");
+        assert!(st.hits >= 1, "{st:?}");
+        assert_eq!(a.points, b.points);
+    }
+
+    #[test]
+    fn adapt_honors_residency_three_spec() {
+        // Regression for the spec bug: both historical build_lookup_table
+        // call sites planned at the m=2 default even when the configured
+        // pipeline said otherwise, so m=3 schedules under-counted their
+        // resident peak and blew the budget at runtime.
+        let prof = DeviceProfile::jetson_nx();
+        let m = families::resnet101();
+        let budget = 150 * MB;
+        let mut ad2 = AdaptiveScheduler::register(m.clone(), &prof, 6);
+        let mut ad3 =
+            AdaptiveScheduler::register_spec(m.clone(), &prof, 6, PipelineSpec::with_residency(3));
+        assert_eq!(ad3.spec().residency_m, 3);
+        let s2 = ad2.adapt(budget).unwrap();
+        let s3 = ad3.adapt(budget).unwrap();
+        assert!(
+            s3.n_blocks > s2.n_blocks,
+            "m=3 must cut finer: {} vs {}",
+            s3.n_blocks,
+            s2.n_blocks
+        );
+        // The m=3 schedule's reported peak is the true 3-window maximum
+        // and fits the usable budget.
+        let blocks = m.create_blocks(&s3.points).unwrap();
+        let sizes: Vec<u64> = blocks.iter().map(|b| b.size_bytes).collect();
+        assert_eq!(s3.peak_bytes, peak_resident_bytes_m(&sizes, 3));
+        assert!(s3.peak_bytes <= usable_budget(&m, budget));
+        // The m=2 schedule re-evaluated under m=3 residency would NOT fit
+        // — exactly the bug the spec-aware planner fixes.
+        let blocks2 = m.create_blocks(&s2.points).unwrap();
+        let sizes2: Vec<u64> = blocks2.iter().map(|b| b.size_bytes).collect();
+        assert!(
+            peak_resident_bytes_m(&sizes2, 3) > usable_budget(&m, budget),
+            "the default-spec plan must be infeasible at m=3 for this budget"
+        );
     }
 
     #[test]
@@ -163,9 +196,12 @@ mod tests {
     fn tables_overhead_in_paper_band() {
         let prof = DeviceProfile::jetson_nx();
         let ad = AdaptiveScheduler::register(families::resnet101(), &prof, 4);
-        // Our chain has 36 units vs the paper's 101 layers, so the tables
-        // are proportionally smaller but the same order of magnitude.
+        // The DP frontier tables are far denser in information than the
+        // old full enumerations, so the resident state sits well under
+        // the paper's 0.5-3.4 MB full-table band while covering every
+        // budget optimally.
         let sz = ad.tables_bytes();
-        assert!(sz > 10_000 && sz < 4_000_000, "{sz}");
+        assert!(sz > 0 && sz < 4_000_000, "{sz}");
+        assert!(ad.plan_stats().table_misses >= 3, "n = 2..=4 warmed");
     }
 }

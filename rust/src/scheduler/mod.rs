@@ -56,14 +56,23 @@ pub fn minimal_budget(model: &ModelInfo) -> u64 {
 /// legal partition keeps `residency_m` consecutive atomic segments
 /// resident.
 pub fn minimal_budget_spec(model: &ModelInfo, spec: &PipelineSpec) -> u64 {
-    // Atomic segments: split at EVERY legal cut point.
+    let peak = atomic_peak_bytes(model, spec);
+    (peak as f64 / 0.995).ceil() as u64 + overhead_bytes(model) + 1
+}
+
+/// Peak m-window bytes of the finest legal partition (split at EVERY
+/// legal cut point) — the absolute residency floor: merging segments
+/// only grows windows, so no partition at ANY block count can peak
+/// below this. Shared by [`minimal_budget_spec`] and the planner's
+/// feasibility gate, so "advertised minimal budget" and "budget the
+/// planner accepts" stay definitionally identical.
+pub fn atomic_peak_bytes(model: &ModelInfo, spec: &PipelineSpec) -> u64 {
     let cuts = model.legal_cut_points();
     let segs = model
         .create_blocks(&cuts)
         .expect("all-legal cuts must be valid");
     let sizes: Vec<u64> = segs.iter().map(|b| b.size_bytes).collect();
-    let peak = crate::pipeline::peak_resident_bytes_m(&sizes, spec.residency_m);
-    (peak as f64 / 0.995).ceil() as u64 + overhead_bytes(model) + 1
+    crate::pipeline::peak_resident_bytes_m(&sizes, spec.residency_m)
 }
 
 /// Resident overhead of running one model under SwapNet: skeletons +
@@ -322,10 +331,13 @@ pub fn schedule_model(
     schedule_model_spec(model, budget, dm, prof, &PipelineSpec::default())
 }
 
-/// Schedule one model under an explicit pipeline spec: the lookup table
-/// rows carry the max-over-any-m-consecutive-blocks residency peak and
-/// the spec's pipeline latency, so the pruned best row is the best
-/// (points, m) pair that fits the budget.
+/// Schedule one model under an explicit pipeline spec. Since the
+/// planner refactor this is a thin wrapper over the planner subsystem:
+/// the exact interval DP (`planner::dp`) searches the partition space —
+/// optimal for every budget, replacing the old per-n lookup-table
+/// rebuild — with analytic costs wrapping the given delay model.
+/// Engines plan through a cached, cost-source-aware
+/// [`crate::planner::Planner`] that makes identical decisions.
 pub fn schedule_model_spec(
     model: &ModelInfo,
     budget: u64,
@@ -334,44 +346,8 @@ pub fn schedule_model_spec(
     spec: &PipelineSpec,
 ) -> Result<Schedule, String> {
     let _ = prof;
-    let usable = usable_budget(model, budget);
-    let s = model.size_bytes();
-    if s <= usable {
-        // fits whole: single block, no swapping during steady state
-        let b = model.single_block();
-        return Ok(Schedule {
-            model: model.name.clone(),
-            budget_bytes: budget,
-            n_blocks: 1,
-            points: vec![],
-            predicted_latency_s: dm.t_in(&b) + dm.t_ex(&b, model.processor),
-            peak_bytes: s,
-        });
-    }
-    if usable == 0 {
-        return Err(format!("{}: budget {} infeasible", model.name, budget));
-    }
-    let max_n = model.legal_cut_points().len() + 1;
-    let mut n = num_blocks_m(s, usable, spec.residency_m).clamp(2, max_n + 1);
-    while n <= max_n {
-        let table = partition::build_lookup_table_spec(model, n, dm, spec);
-        if let Some(row) = table.best_within(usable) {
-            return Ok(Schedule {
-                model: model.name.clone(),
-                budget_bytes: budget,
-                n_blocks: n,
-                points: row.points.clone(),
-                predicted_latency_s: row.predicted_latency_s,
-                peak_bytes: row.max_mem_bytes,
-            });
-        }
-        n += 1;
-    }
-    Err(format!(
-        "{}: no feasible partition within {} MB",
-        model.name,
-        usable / 1_000_000
-    ))
+    let costs = crate::planner::AnalyticCosts::new(dm.clone());
+    crate::planner::plan_uncached(&costs, model, budget, spec)
 }
 
 /// Schedule a whole fleet: Eq. 1 budgets then per-model partitions.

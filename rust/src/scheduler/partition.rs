@@ -9,10 +9,18 @@
 //! Like the paper we precompute a lookup table of candidate partitions
 //! with their peak memory and predicted latency (prepared offline per
 //! model), prune it by the allocated budget at run time, and take the
-//! lowest-latency surviving row. Exhaustive enumeration covers n <= 3
-//! (C(L,2) rows, exactly the paper's Table 3 for ResNet-101); larger n
-//! uses beam search over prefix states, which the tests cross-check
-//! against exhaustive search on small models.
+//! lowest-latency surviving row.
+//!
+//! Since the planner refactor this module is a thin compatibility
+//! wrapper over `crate::planner`: production planning (the scheduler,
+//! engine registration, adaptation, multi-tenant re-partition) routes
+//! through the exact interval DP in `planner::dp`, and
+//! [`build_lookup_table_spec`] only materializes tables for display and
+//! compatibility — full exhaustive enumeration for n <= 3 (exactly the
+//! paper's Table 3 for ResNet-101, and the property-test oracle the DP
+//! is checked against), the DP's (memory, latency) Pareto frontier
+//! beyond (optimal for every budget, unlike the old lossy beam search
+//! it replaced).
 
 use crate::delay::DelayModel;
 use crate::model::ModelInfo;
@@ -86,8 +94,10 @@ pub fn build_lookup_table(model: &ModelInfo, n: usize, dm: &DelayModel) -> Looku
 }
 
 /// Build the lookup table for n blocks under an explicit pipeline spec.
-/// Exhaustive for n <= 3; beam search beyond (the paper's run-time
-/// pruning only needs the frontier).
+/// Exhaustive for n <= 3 (Table 3 display + the DP's test oracle); the
+/// planner's exact DP frontier beyond (the run-time pruning only needs
+/// the frontier, and the DP's is optimal for every budget — the old
+/// beam search was not).
 pub fn build_lookup_table_spec(
     model: &ModelInfo,
     n: usize,
@@ -106,7 +116,8 @@ pub fn build_lookup_table_spec(
     } else if n <= 3 {
         enumerate_rows(model, n, dm, spec)
     } else {
-        heuristic_rows(model, n, dm, spec)
+        let costs = crate::planner::AnalyticCosts::new(dm.clone());
+        crate::planner::dp::frontier(model, n, &costs, spec).rows
     };
     LookupTable {
         model: model.name.clone(),
@@ -115,8 +126,10 @@ pub fn build_lookup_table_spec(
     }
 }
 
-/// Exhaustive enumeration of all C(cuts, n-1) partitions.
-fn enumerate_rows(model: &ModelInfo, n: usize, dm: &DelayModel, spec: &PipelineSpec) -> Vec<Row> {
+/// Exhaustive enumeration of all C(cuts, n-1) partitions — the paper's
+/// literal Table 3 construction, kept as the n <= 3 display path and as
+/// the oracle the exact DP partitioner is property-tested against.
+pub fn enumerate_rows(model: &ModelInfo, n: usize, dm: &DelayModel, spec: &PipelineSpec) -> Vec<Row> {
     let cuts = model.legal_cut_points();
     let k = n - 1;
     let mut rows = Vec::new();
@@ -149,134 +162,6 @@ fn enumerate_rows(model: &ModelInfo, n: usize, dm: &DelayModel, spec: &PipelineS
             }
         }
     }
-}
-
-/// Heuristic table construction for large n: greedy byte-balanced seeds
-/// (with "small first block" variants — only the first swap-in is
-/// exposed, so front-loading a small block cuts latency) followed by
-/// hill-climbing under two objectives (min peak, then min latency).
-/// Every exactly-evaluated candidate goes into the table, so the pruned
-/// lookup keeps a (memory, latency) frontier like the exhaustive case.
-fn heuristic_rows(model: &ModelInfo, n: usize, dm: &DelayModel, spec: &PipelineSpec) -> Vec<Row> {
-    use std::collections::BTreeMap;
-    let cuts = model.legal_cut_points();
-    let k = n - 1;
-    if cuts.len() < k {
-        return vec![];
-    }
-    let mut seen: BTreeMap<Vec<usize>, (u64, f64)> = BTreeMap::new();
-    let record = |pts: &[usize], seen: &mut BTreeMap<Vec<usize>, (u64, f64)>| -> Option<(u64, f64)> {
-        if let Some(&v) = seen.get(pts) {
-            return Some(v);
-        }
-        let v = evaluate_spec(model, pts, dm, spec)?;
-        seen.insert(pts.to_vec(), v);
-        Some(v)
-    };
-
-    // Seed partitions: cumulative byte targets with a scaled first block.
-    let total = model.size_bytes();
-    let prefix: Vec<u64> = {
-        let mut acc = 0;
-        model
-            .layers
-            .iter()
-            .map(|l| {
-                acc += l.size_bytes;
-                acc
-            })
-            .collect()
-    };
-    let mut seeds: Vec<Vec<usize>> = Vec::new();
-    for first_frac in [0.1, 0.25, 0.5, 1.0] {
-        let first = (total as f64 / n as f64) * first_frac;
-        let rest = (total as f64 - first) / (n - 1) as f64;
-        let mut targets = Vec::with_capacity(k);
-        let mut t = first;
-        for _ in 0..k {
-            targets.push(t);
-            t += rest;
-        }
-        // choose, for each target, the legal cut whose prefix bytes are
-        // closest (strictly increasing)
-        let mut pts = Vec::with_capacity(k);
-        let mut lo = 0usize; // index into cuts
-        for tgt in targets {
-            let mut best = None;
-            for (ci, &c) in cuts.iter().enumerate().skip(lo) {
-                if cuts.len() - ci < k - pts.len() {
-                    break;
-                }
-                let d = (prefix[c - 1] as f64 - tgt).abs();
-                match best {
-                    None => best = Some((ci, d)),
-                    Some((_, bd)) if d < bd => best = Some((ci, d)),
-                    _ => {}
-                }
-            }
-            if let Some((ci, _)) = best {
-                pts.push(cuts[ci]);
-                lo = ci + 1;
-            }
-        }
-        if pts.len() == k {
-            seeds.push(pts);
-        }
-    }
-
-    // Hill-climb each seed: move one cut to a neighboring legal position
-    // if it improves the objective; min-peak pass then min-latency pass.
-    let pos_of = |c: usize| cuts.binary_search(&c).ok();
-    for seed in seeds {
-        for minimize_peak in [true, false] {
-            let mut cur = seed.clone();
-            let Some(mut cur_v) = record(&cur, &mut seen) else { continue };
-            loop {
-                let mut improved = false;
-                for j in 0..k {
-                    let Some(pj) = pos_of(cur[j]) else { continue };
-                    for step in [-3i64, -2, -1, 1, 2, 3] {
-                        let np = pj as i64 + step;
-                        if np < 0 || np as usize >= cuts.len() {
-                            continue;
-                        }
-                        let cand_cut = cuts[np as usize];
-                        // keep strictly increasing
-                        if (j > 0 && cand_cut <= cur[j - 1])
-                            || (j + 1 < k && cand_cut >= cur[j + 1])
-                        {
-                            continue;
-                        }
-                        let mut cand = cur.clone();
-                        cand[j] = cand_cut;
-                        if let Some(v) = record(&cand, &mut seen) {
-                            let better = if minimize_peak {
-                                v.0 < cur_v.0 || (v.0 == cur_v.0 && v.1 < cur_v.1)
-                            } else {
-                                v.1 < cur_v.1
-                            };
-                            if better {
-                                cur = cand;
-                                cur_v = v;
-                                improved = true;
-                            }
-                        }
-                    }
-                }
-                if !improved {
-                    break;
-                }
-            }
-        }
-    }
-
-    seen.into_iter()
-        .map(|(points, (mem, lat))| Row {
-            points,
-            max_mem_bytes: mem,
-            predicted_latency_s: lat,
-        })
-        .collect()
 }
 
 #[cfg(test)]
@@ -341,23 +226,41 @@ mod tests {
     }
 
     #[test]
-    fn beam_matches_exhaustive_on_small_model() {
+    fn dp_frontier_matches_exhaustive_on_small_model() {
+        // n > 3 routes through the planner's exact DP: its best row must
+        // be bitwise what exhaustive enumeration finds.
         let m = uniform_model(8, 12);
         let spec = PipelineSpec::default();
         let exact = enumerate_rows(&m, 4, &dm(), &spec);
-        let beam = heuristic_rows(&m, 4, &dm(), &spec);
+        let table = build_lookup_table_spec(&m, 4, &dm(), &spec);
         let best_exact = exact
             .iter()
             .min_by(|a, b| a.predicted_latency_s.total_cmp(&b.predicted_latency_s))
             .unwrap();
-        let best_beam = beam
-            .iter()
-            .min_by(|a, b| a.predicted_latency_s.total_cmp(&b.predicted_latency_s))
-            .unwrap();
-        assert!(
-            (best_beam.predicted_latency_s - best_exact.predicted_latency_s).abs() < 1e-9,
-            "beam {best_beam:?} vs exact {best_exact:?}"
+        let best_dp = table.best_within(u64::MAX).unwrap();
+        assert_eq!(
+            best_dp.predicted_latency_s, best_exact.predicted_latency_s,
+            "dp {best_dp:?} vs exact {best_exact:?}"
         );
+        // The frontier covers every budget optimally, not just the top.
+        for r in &exact {
+            let at_budget = table.best_within(r.max_mem_bytes);
+            assert!(
+                at_budget.is_some_and(|b| b.predicted_latency_s <= r.predicted_latency_s),
+                "frontier must dominate enumerated row {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn approx_bytes_formula_is_exact() {
+        // Plan-cache byte accounting leans on this estimate: rows *
+        // (8 B per point + 16 B header).
+        let m = uniform_model(6, 10);
+        let t = build_lookup_table(&m, 3, &dm());
+        assert_eq!(t.approx_bytes(), t.rows.len() as u64 * (3 * 8 + 16));
+        let empty = LookupTable { model: "x".into(), n_blocks: 5, rows: vec![] };
+        assert_eq!(empty.approx_bytes(), 0);
     }
 
     #[test]

@@ -45,7 +45,6 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::DeviceProfile;
-use crate::delay::DelayModel;
 use crate::engine::sim::{simulate_scheduled, SnetConfig};
 use crate::engine::{Engine, ModelHandle};
 use crate::memsim::{AllocId, MemSim};
@@ -281,7 +280,10 @@ impl MultiTenantServer {
         extra: Option<(&ModelInfo, f64)>,
     ) -> Result<(Vec<usize>, Vec<u64>)> {
         let live = self.live_indices();
-        let dm = DelayModel::from_profile(&self.engine.profile());
+        // The engine's delay model, not a fresh profile-analytic one:
+        // under measured costs the Eq. 1 demands must see the same
+        // coefficients the partition search plans with.
+        let dm = self.engine.delay_model();
         let spec = self.engine.config().pipeline;
         let mut demands: Vec<ModelDemand> = Vec::with_capacity(live.len() + 1);
         let mut floors: Vec<u64> = Vec::with_capacity(live.len() + 1);
@@ -318,7 +320,7 @@ impl MultiTenantServer {
         let newcomer_budget = *budgets.last().expect("partition includes the newcomer");
         let handle = self.engine.register_with_budget(model.clone(), newcomer_budget)?;
         self.apply_budgets(&live, &budgets[..budgets.len() - 1])?;
-        let dm = DelayModel::from_profile(&self.engine.profile());
+        let dm = self.engine.delay_model();
         let score = ModelDemand::from_model(&model, &dm, urgency).performance_score();
         let swapper = SwapController::new(SwapMode::ZeroCopy, &model.name);
         self.tenants.push(Tenant {
@@ -502,6 +504,10 @@ impl MultiTenantServer {
             let mut mem = self.mem.lock().expect("ledger poisoned");
             self.tenants[ev.tenant].swapper.release_residency(&mut mem, ev.alloc);
         }
+        // No explicit cost observation here: virtual-clock dispatch runs
+        // through `ModelHandle::infer_sim_seeded`, where the engine
+        // already folds each batch's components into the measured cost
+        // provider exactly once.
         let name = self.tenants[ev.tenant].name.clone();
         let k = ev.reqs.len().max(1);
         for r in &ev.reqs {
@@ -581,6 +587,7 @@ impl MultiTenantServer {
         rep.makespan_s = clock;
         rep.wall_s = wall0.elapsed().as_secs_f64();
         rep.pool = self.pool_stats();
+        rep.plan = Some(self.engine.plan_stats());
         Ok(rep)
     }
 
@@ -692,6 +699,23 @@ impl MultiTenantServer {
                         }
                         Ok(done) => {
                             let now = wall0.elapsed().as_secs_f64();
+                            // Concurrent workers run the cost model off
+                            // engine (Send snapshots), so the engine never
+                            // saw this batch: close the Fig 9 loop here
+                            // (no-op on analytic engines).
+                            {
+                                let t = &self.tenants[tenant];
+                                self.engine.observe_costs(&crate::planner::CostObservation {
+                                    n_blocks: t.handle.schedule().n_blocks,
+                                    bytes: t.model.size_bytes(),
+                                    depth: t.model.total_depth(),
+                                    flops: t.model.total_flops(),
+                                    proc: t.model.processor,
+                                    swap_s: done.swap_s,
+                                    assembly_s: done.assembly_s,
+                                    compute_s: done.compute_s,
+                                });
+                            }
                             let name = self.tenants[tenant].name.clone();
                             let k = reqs.len().max(1);
                             for r in &reqs {
@@ -741,6 +765,7 @@ impl MultiTenantServer {
         rep.oom_events = oom;
         rep.wall_s = wall0.elapsed().as_secs_f64();
         rep.pool = self.pool_stats();
+        rep.plan = Some(self.engine.plan_stats());
         Ok(rep)
     }
 

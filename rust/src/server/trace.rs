@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 
 use crate::hostmem::PoolStats;
 use crate::metrics::LatencyRecorder;
+use crate::planner::PlanStats;
 
 /// One request's delay decomposition.
 ///
@@ -84,6 +85,11 @@ pub struct MultiServeReport {
     /// reuse/allocation counts prove swap buffers recycled across the
     /// whole serving run.
     pub pool: Option<PoolStats>,
+    /// Engine planner counters at run end: how many re-partitions were
+    /// answered from the shared plan cache vs replanned, and the bytes
+    /// the cached strategy state occupies. `None` until a serve loop
+    /// stamps it.
+    pub plan: Option<PlanStats>,
     pub per_model: BTreeMap<String, ModelServeStats>,
     pub traces: Vec<ServeTrace>,
 }
@@ -101,6 +107,7 @@ impl MultiServeReport {
             peak_bytes: 0,
             oom_events: 0,
             pool: None,
+            plan: None,
             per_model: BTreeMap::new(),
             traces: Vec::new(),
         }

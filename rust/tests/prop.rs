@@ -615,3 +615,302 @@ fn prop_standard_path_at_least_doubles() {
         );
     });
 }
+
+// ---------------------------------------------------------------------
+// planner DP invariants (exactness vs enumeration, dominance vs the
+// frozen beam search it replaced)
+// ---------------------------------------------------------------------
+
+use swapnet::delay::DelayModel;
+use swapnet::model::families;
+use swapnet::planner::{dp, AnalyticCosts, CostProvider};
+use swapnet::scheduler::partition::{self, Row};
+
+fn nx_dm() -> DelayModel {
+    DelayModel::from_profile(&DeviceProfile::jetson_nx())
+}
+
+/// Canonical selection shared by the oracle and the DP comparison:
+/// minimal latency, then minimal memory.
+fn canonical_best(rows: &[Row]) -> Option<&Row> {
+    rows.iter().min_by(|a, b| {
+        a.predicted_latency_s
+            .total_cmp(&b.predicted_latency_s)
+            .then(a.max_mem_bytes.cmp(&b.max_mem_bytes))
+    })
+}
+
+#[test]
+fn prop_dp_best_row_identical_to_exhaustive_enumeration() {
+    // The tentpole exactness claim: for every n <= 3 fixture the DP's
+    // best row is a latency-minimal row of the full enumeration with
+    // bitwise-equal (mem, latency), and its points appear verbatim in
+    // the enumeration at exactly that (mem, latency).
+    cases(60, |rng| {
+        let m = random_model(rng);
+        let dm = nx_dm();
+        let costs = AnalyticCosts::new(dm.clone());
+        let spec = if rng.f64() < 0.5 {
+            PipelineSpec::default()
+        } else {
+            PipelineSpec::with_residency(1 + rng.below(3))
+        };
+        for n in 2..=3usize {
+            if m.legal_cut_points().len() < n - 1 {
+                continue;
+            }
+            let all = partition::enumerate_rows(&m, n, &dm, &spec);
+            let front = dp::frontier(&m, n, &costs, &spec);
+            let (Some(want), Some(got)) =
+                (canonical_best(&all), front.best_within(u64::MAX))
+            else {
+                assert!(all.is_empty() && front.rows.is_empty());
+                continue;
+            };
+            assert_eq!(got.predicted_latency_s, want.predicted_latency_s, "n={n}");
+            assert_eq!(got.max_mem_bytes, want.max_mem_bytes, "n={n}");
+            assert!(
+                all.iter().any(|r| r.points == got.points
+                    && r.predicted_latency_s == got.predicted_latency_s
+                    && r.max_mem_bytes == got.max_mem_bytes),
+                "DP points {:?} must appear verbatim in the enumeration",
+                got.points
+            );
+            // Budget-gated probes agree too (bitwise).
+            let lo = all.iter().map(|r| r.max_mem_bytes).min().unwrap();
+            let hi = all.iter().map(|r| r.max_mem_bytes).max().unwrap();
+            let budget = lo + rng.next_u64() % (hi - lo + 1);
+            let feasible: Vec<Row> = all
+                .iter()
+                .filter(|r| r.max_mem_bytes <= budget)
+                .cloned()
+                .collect();
+            match (canonical_best(&feasible), front.best_within(budget)) {
+                (Some(w), Some(g)) => {
+                    assert_eq!(g.predicted_latency_s, w.predicted_latency_s);
+                    assert_eq!(g.max_mem_bytes, w.max_mem_bytes);
+                }
+                (None, None) => {}
+                (w, g) => panic!("feasibility mismatch at {budget}: {w:?} vs {g:?}"),
+            }
+        }
+    });
+}
+
+/// A compact random model for the deeper-n DP properties (keeps the
+/// debug-mode state space small while still exercising every code
+/// path: uneven sizes, forbidden cuts, both processors).
+fn small_random_model(rng: &mut Rng) -> ModelInfo {
+    let mut m = random_model(rng);
+    m.layers.truncate(4 + rng.below(10));
+    m
+}
+
+#[test]
+fn prop_dp_rows_bitwise_equal_batch_evaluation() {
+    // Every frontier row's (mem, latency) must be exactly what
+    // `evaluate_spec` computes for its points — the incremental
+    // timeline performs the same float ops in the same order.
+    cases(40, |rng| {
+        let m = small_random_model(rng);
+        let dm = nx_dm();
+        let costs = AnalyticCosts::new(dm.clone());
+        let spec = PipelineSpec {
+            residency_m: 1 + rng.below(4),
+            swap_channels: 1 + rng.below(2),
+        };
+        let n = 2 + rng.below(5);
+        if m.legal_cut_points().len() < n - 1 {
+            return;
+        }
+        let front = dp::frontier(&m, n, &costs, &spec);
+        for r in &front.rows {
+            let (mem, lat) = partition::evaluate_spec(&m, &r.points, &dm, &spec)
+                .expect("frontier points are legal");
+            assert_eq!(r.max_mem_bytes, mem, "{:?}", r.points);
+            assert_eq!(r.predicted_latency_s, lat, "{:?}", r.points);
+        }
+    });
+}
+
+/// Frozen copy of the beam search the DP replaced (PR 5), kept as the
+/// reference its "never worse" guarantee is tested against — the same
+/// pattern as PR 3's frozen m=2 timeline.
+mod frozen_beam {
+    use std::collections::BTreeMap;
+    use swapnet::delay::DelayModel;
+    use swapnet::model::ModelInfo;
+    use swapnet::pipeline::PipelineSpec;
+    use swapnet::scheduler::partition::{evaluate_spec, Row};
+
+    pub fn heuristic_rows(
+        model: &ModelInfo,
+        n: usize,
+        dm: &DelayModel,
+        spec: &PipelineSpec,
+    ) -> Vec<Row> {
+        let cuts = model.legal_cut_points();
+        let k = n - 1;
+        if cuts.len() < k {
+            return vec![];
+        }
+        let mut seen: BTreeMap<Vec<usize>, (u64, f64)> = BTreeMap::new();
+        let record =
+            |pts: &[usize], seen: &mut BTreeMap<Vec<usize>, (u64, f64)>| -> Option<(u64, f64)> {
+                if let Some(&v) = seen.get(pts) {
+                    return Some(v);
+                }
+                let v = evaluate_spec(model, pts, dm, spec)?;
+                seen.insert(pts.to_vec(), v);
+                Some(v)
+            };
+
+        let total = model.size_bytes();
+        let prefix: Vec<u64> = {
+            let mut acc = 0;
+            model
+                .layers
+                .iter()
+                .map(|l| {
+                    acc += l.size_bytes;
+                    acc
+                })
+                .collect()
+        };
+        let mut seeds: Vec<Vec<usize>> = Vec::new();
+        for first_frac in [0.1, 0.25, 0.5, 1.0] {
+            let first = (total as f64 / n as f64) * first_frac;
+            let rest = (total as f64 - first) / (n - 1) as f64;
+            let mut targets = Vec::with_capacity(k);
+            let mut t = first;
+            for _ in 0..k {
+                targets.push(t);
+                t += rest;
+            }
+            let mut pts = Vec::with_capacity(k);
+            let mut lo = 0usize;
+            for tgt in targets {
+                let mut best = None;
+                for (ci, &c) in cuts.iter().enumerate().skip(lo) {
+                    if cuts.len() - ci < k - pts.len() {
+                        break;
+                    }
+                    let d = (prefix[c - 1] as f64 - tgt).abs();
+                    match best {
+                        None => best = Some((ci, d)),
+                        Some((_, bd)) if d < bd => best = Some((ci, d)),
+                        _ => {}
+                    }
+                }
+                if let Some((ci, _)) = best {
+                    pts.push(cuts[ci]);
+                    lo = ci + 1;
+                }
+            }
+            if pts.len() == k {
+                seeds.push(pts);
+            }
+        }
+
+        let pos_of = |c: usize| cuts.binary_search(&c).ok();
+        for seed in seeds {
+            for minimize_peak in [true, false] {
+                let mut cur = seed.clone();
+                let Some(mut cur_v) = record(&cur, &mut seen) else { continue };
+                loop {
+                    let mut improved = false;
+                    for j in 0..k {
+                        let Some(pj) = pos_of(cur[j]) else { continue };
+                        for step in [-3i64, -2, -1, 1, 2, 3] {
+                            let np = pj as i64 + step;
+                            if np < 0 || np as usize >= cuts.len() {
+                                continue;
+                            }
+                            let cand_cut = cuts[np as usize];
+                            if (j > 0 && cand_cut <= cur[j - 1])
+                                || (j + 1 < k && cand_cut >= cur[j + 1])
+                            {
+                                continue;
+                            }
+                            let mut cand = cur.clone();
+                            cand[j] = cand_cut;
+                            if let Some(v) = record(&cand, &mut seen) {
+                                let better = if minimize_peak {
+                                    v.0 < cur_v.0 || (v.0 == cur_v.0 && v.1 < cur_v.1)
+                                } else {
+                                    v.1 < cur_v.1
+                                };
+                                if better {
+                                    cur = cand;
+                                    cur_v = v;
+                                    improved = true;
+                                }
+                            }
+                        }
+                    }
+                    if !improved {
+                        break;
+                    }
+                }
+            }
+        }
+
+        seen.into_iter()
+            .map(|(points, (mem, lat))| Row {
+                points,
+                max_mem_bytes: mem,
+                predicted_latency_s: lat,
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn dp_never_worse_than_frozen_beam_on_model_families() {
+    // The replacement guarantee for n > 3: the exact DP's best row is
+    // never worse than the old beam search's, on every model family and
+    // n in 4..=8 (unconstrained and at the beam best's own budget).
+    let dm = nx_dm();
+    let costs = AnalyticCosts::new(dm.clone());
+    let spec = PipelineSpec::default();
+    for m in [families::vgg19(), families::resnet101(), families::yolov3(), families::fcn()] {
+        for n in [4usize, 6, 8] {
+            if m.legal_cut_points().len() < n - 1 {
+                continue;
+            }
+            let beam = frozen_beam::heuristic_rows(&m, n, &dm, &spec);
+            let front = dp::frontier(&m, n, &costs, &spec);
+            let Some(beam_best) = canonical_best(&beam) else { continue };
+            let dp_best = front.best_within(u64::MAX).expect("beam found a row, DP must too");
+            assert!(
+                dp_best.predicted_latency_s <= beam_best.predicted_latency_s + 1e-12,
+                "{} n={n}: DP {} worse than beam {}",
+                m.name,
+                dp_best.predicted_latency_s,
+                beam_best.predicted_latency_s
+            );
+            // And under the beam best's own memory budget.
+            let gated = front
+                .best_within(beam_best.max_mem_bytes)
+                .expect("beam row is feasible at its own budget");
+            assert!(gated.predicted_latency_s <= beam_best.predicted_latency_s + 1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_planner_cost_provider_parity() {
+    // AnalyticCosts::block_times is bitwise the DelayModel triple.
+    cases(40, |rng| {
+        let m = random_model(rng);
+        let dm = nx_dm();
+        let costs = AnalyticCosts::new(dm.clone());
+        let blocks = m.create_blocks(&[]).unwrap();
+        for b in &blocks {
+            let t = costs.block_times(b, m.processor);
+            assert_eq!(t.t_in, dm.t_in(b));
+            assert_eq!(t.t_ex, dm.t_ex(b, m.processor));
+            assert_eq!(t.t_out, dm.t_out(b));
+        }
+    });
+}
