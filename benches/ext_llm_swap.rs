@@ -5,29 +5,37 @@
 //!
 //! This realizes the paper's closing claim ("the design of SwapNet also
 //! provides novel and feasible insights for deploying LLMs on edge AI
-//! devices") with the same machinery used for the CNN fleet: the decoder
-//! stack is a layer chain, each decoder layer an atomic swap unit, and
-//! per-token generation is one pipelined pass over the blocks.
+//! devices") with the same machinery used for the CNN fleet, now through
+//! the `Engine` facade and the decode-aware planner: the decoder stack is
+//! a layer chain, each decoder layer an atomic swap unit, per-token
+//! generation is one pipelined pass over the blocks, and the batch sweep
+//! is planned by `Engine::plan_decode` (execution amortized across the
+//! batch, KV pinning shrinking the window) instead of a closed-form
+//! estimate. `--json <path>` emits machine-readable metrics; `--smoke`
+//! is accepted for CLI uniformity (planning probes are already cheap).
 
-use swapnet::config::{DeviceProfile, GB, MB};
-use swapnet::coordinator::{run_snet_model, SnetConfig};
-use swapnet::delay::DelayModel;
+use swapnet::config::{DeviceProfile, GB};
+use swapnet::engine::{Engine, PlanContext};
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
 use swapnet::model::families;
-use swapnet::scheduler;
 use swapnet::util::table;
 
 fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("ext_llm_swap");
     println!("=== EXT: SwapNet for LLMs (paper §10) — LLaMA-7B decode ===\n");
     let prof = DeviceProfile::jetson_nx();
-    let dm = DelayModel::from_profile(&prof);
+    let engine = Engine::builder().build();
+    let dm = engine.delay_model();
     let m = families::llama7b();
     println!(
-        "model: {} = {} over {} chain layers ({} decoder blocks), {:.1} GFLOPs/token",
+        "model: {} = {} over {} chain layers ({} decoder blocks), {:.1} GFLOPs/token, {} KV/token/seq",
         m.name,
         table::human_bytes(m.size_bytes()),
         m.layers.len(),
         m.layers.iter().filter(|l| l.kind == "decoder").count(),
-        m.total_flops() as f64 / 1e9
+        m.total_flops() as f64 / 1e9,
+        table::human_bytes(families::kv_bytes_per_position(&m)),
     );
     println!(
         "device: {} with {} total memory -> model demands {:.1}x the ENTIRE device\n",
@@ -37,25 +45,28 @@ fn main() {
     );
 
     let mut rows = Vec::new();
-    for budget in [6 * GB, 4 * GB, 2 * GB, 1 * GB] {
-        match run_snet_model(&m, budget, &prof, &SnetConfig::default()) {
-            Ok(run) => {
-                let tok_s = 1.0 / run.latency_s;
+    for budget in [6 * GB, 4 * GB, 2 * GB, GB] {
+        match engine.plan_decode(&m, budget, PlanContext::default()) {
+            Ok(sched) => {
+                let tok_s = 1.0 / sched.predicted_latency_s;
+                if budget == 2 * GB {
+                    emit.metric("dev_ext_llm_plan_s_per_token_2gb", sched.predicted_latency_s);
+                }
+                assert!(sched.peak_bytes <= budget, "budget violated");
                 rows.push(vec![
                     table::human_bytes(budget),
-                    run.schedule.n_blocks.to_string(),
-                    table::human_bytes(run.peak_bytes),
-                    format!("{:.2} s", run.latency_s),
+                    sched.n_blocks.to_string(),
+                    table::human_bytes(sched.peak_bytes),
+                    format!("{:.2} s", sched.predicted_latency_s),
                     format!("{tok_s:.2} tok/s"),
                 ]);
-                assert!(run.peak_bytes <= budget, "budget violated");
             }
             Err(e) => {
                 rows.push(vec![
                     table::human_bytes(budget),
                     "-".into(),
                     "-".into(),
-                    format!("infeasible: {e}"),
+                    format!("infeasible: {e:#}"),
                     "-".into(),
                 ]);
             }
@@ -80,27 +91,50 @@ fn main() {
     println!(
         "=> decode is swap-I/O bound at {:.2} tok/s — weights must stream once per token.\n\
         The fix the paper's outlook implies: batch decode (amortize each swapped layer\n\
-        over B sequences). Sweep below (B sequences share one layer swap):",
+        over B sequences). Planner sweep below — `plan_decode` scales execution by the\n\
+        batch width and re-partitions, so each row is a real schedule, not an estimate:",
         1.0 / io_floor
     );
+    let kv_512 = families::kv_bytes_per_position(&m) * 512;
     let mut rows2 = Vec::new();
-    for batch in [1u64, 4, 16, 64] {
-        // per-layer: swap once, execute B times
-        let eff_tok_s = batch as f64 / (io_floor.max(ex_floor * batch as f64));
+    for batch in [1usize, 4, 16, 64] {
+        let sched = engine
+            .plan_decode(&m, 2 * GB, PlanContext { pinned_bytes: 0, batch })
+            .expect("2 GB batch plan");
+        let per_tok = sched.predicted_latency_s / batch as f64;
+        let hidden = (ex_floor * batch as f64 / io_floor).min(1.0);
+        if batch == 16 {
+            emit.metric("dev_ext_llm_plan_s_per_token_2gb_b16", per_tok);
+        }
         rows2.push(vec![
             batch.to_string(),
-            format!("{eff_tok_s:.2} tok/s"),
-            format!(
-                "{:.0}%",
-                100.0 * (ex_floor * batch as f64 / io_floor).min(1.0)
-            ),
+            sched.n_blocks.to_string(),
+            format!("{:.2} tok/s", 1.0 / per_tok),
+            format!("{:.0}%", 100.0 * hidden),
         ]);
     }
     println!(
         "{}",
-        table::render(&["decode batch", "aggregate throughput", "swap channel hidden"], &rows2)
+        table::render(
+            &["decode batch", "blocks", "aggregate throughput", "swap channel hidden"],
+            &rows2
+        )
     );
+    // KV pinning: a 512-token context pins 256 MiB per sequence; the
+    // planner sees the reduced window and still finds a schedule.
+    let pinned = engine
+        .plan_decode(&m, 2 * GB, PlanContext { pinned_bytes: kv_512, batch: 1 })
+        .expect("2 GB plan beside a 512-token KV cache");
+    println!(
+        "\nKV pinning: a 512-token context pins {} -> plan window {} ({} blocks, {:.2} s/token)",
+        table::human_bytes(kv_512),
+        table::human_bytes(pinned.budget_bytes),
+        pinned.n_blocks,
+        pinned.predicted_latency_s
+    );
+    assert!(pinned.peak_bytes + kv_512 <= 2 * GB, "KV + sweep must fit");
     println!("shape check: swapping makes a 13.4 GB model *feasible* at 1-6 GB budgets;");
     println!("throughput is bounded by the swap channel, recovered by batching — the");
     println!("quantitative version of the paper's §10 insight.");
+    emit.finish(&args).expect("write bench json");
 }

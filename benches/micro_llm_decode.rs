@@ -1,0 +1,119 @@
+//! Micro-bench: LLM decode-loop swap serving (`swapnet::llm`), emitted
+//! as deterministic `dev_*` metrics for the CI bench gate.
+//!
+//! 1. **Batch amortization** — decode is IO-bound (every token re-swaps
+//!    the full weight chain), so continuous batching must amortize: the
+//!    tokens/s rate at batch >= 4 is asserted >= 2x the batch-1 rate,
+//!    and the per-token latencies at batch 1/8 are gated.
+//! 2. **KV-growth re-plan cache** — a long-decode storm crosses several
+//!    64 MiB pinned bands; every step probes the planner, and the probe
+//!    stream must hit the plan cache > 0.5 of the time (band crossings
+//!    re-plan, everything between is a cache hit).
+//! 3. **Budget safety** — every run must finish with zero MemSim budget
+//!    violations while KV pinning is active (gated via `oom_plus1`).
+//!
+//! Everything runs on the analytic cost model over the virtual clock —
+//! no jitter, so the metrics are bitwise deterministic. `--json <path>`
+//! emits machine-readable metrics; `--smoke` is accepted for CLI
+//! uniformity (the decode loops here are already cheap).
+
+use std::time::Instant;
+
+use swapnet::config::MB;
+use swapnet::engine::Engine;
+use swapnet::llm::{serve_decode, DecodeReport, LlmServeConfig};
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
+use swapnet::model::families;
+
+fn run(max_batch: usize, new_tokens: usize, requests: usize) -> (Engine, DecodeReport) {
+    let engine = Engine::builder().build();
+    let model = families::llama7b();
+    let cfg = LlmServeConfig {
+        budget: 2048 * MB,
+        rate_hz: 1000.0, // saturating arrivals: the batch fills instantly
+        requests,
+        prompt_len: 16,
+        new_tokens,
+        max_batch,
+        ..Default::default()
+    };
+    let rep = serve_decode(&engine, &model, &cfg).expect("llama7b decodes under 2 GB");
+    assert!(rep.within_budget(), "budget violated: oom={} peak={}", rep.oom_events, rep.peak_bytes);
+    assert_eq!(rep.shed, 0, "nothing sheds in the nominal scenarios");
+    (engine, rep)
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("micro_llm_decode");
+    println!("=== micro: LLM decode serving (batch amortization, KV re-plan cache) ===\n");
+
+    // ---- 1. batch amortization on the IO-bound profile ----------------
+    let t0 = Instant::now();
+    let (_, r1) = run(1, 8, 4);
+    let (_, r4) = run(4, 8, 4);
+    let (_, r8) = run(8, 8, 8);
+    let spt1 = 1.0 / r1.tok_s();
+    let spt8 = 1.0 / r8.tok_s();
+    println!(
+        "batch 1: {:.3} tok/s ({:.2} s/token, amortization {:.2})",
+        r1.tok_s(),
+        spt1,
+        r1.swap_amortization()
+    );
+    println!(
+        "batch 4: {:.3} tok/s (speedup {:.2}x, amortization {:.2})",
+        r4.tok_s(),
+        r4.tok_s() / r1.tok_s(),
+        r4.swap_amortization()
+    );
+    println!(
+        "batch 8: {:.3} tok/s (speedup {:.2}x, amortization {:.2})",
+        r8.tok_s(),
+        r8.tok_s() / r1.tok_s(),
+        r8.swap_amortization()
+    );
+    assert!(
+        r4.tok_s() >= 2.0 * r1.tok_s(),
+        "batch >= 4 must at least double the batch-1 token rate: {} vs {}",
+        r4.tok_s(),
+        r1.tok_s()
+    );
+    assert!(r8.tok_s() >= 1.0, "tokens/s floor at batch 8: {}", r8.tok_s());
+    emit.metric("dev_llm_decode_s_per_token_b1", spt1);
+    emit.metric("dev_llm_decode_s_per_token_b8", spt8);
+    emit.metric("dev_llm_decode_b4_speedup_inv", r1.tok_s() / r4.tok_s());
+
+    // ---- 2. KV-growth storm: band crossings re-plan, the rest hit -----
+    let (engine, storm) = run(4, 96, 4);
+    let plan = engine.plan_stats();
+    let probes = plan.hits + plan.misses;
+    let miss_rate = plan.misses as f64 / probes.max(1) as f64;
+    println!(
+        "\nKV storm: {} steps, pinned peak {} B crossed ~{} bands; {} plan probes, \
+         {} hits ({:.1}% hit rate)",
+        storm.steps,
+        storm.pinned_peak_bytes,
+        storm.pinned_peak_bytes / (64 * 1024 * 1024),
+        probes,
+        plan.hits,
+        100.0 * (1.0 - miss_rate)
+    );
+    assert!(probes as usize >= storm.steps, "every step probes the planner");
+    assert!(
+        1.0 - miss_rate > 0.5,
+        "KV-growth re-plans must hit the cache > 0.5 of the time: {plan:?}"
+    );
+    emit.metric("dev_llm_decode_storm_miss_rate", miss_rate);
+
+    // ---- 3. budget safety across every scenario above -----------------
+    let oom = r1.oom_events + r4.oom_events + r8.oom_events + storm.oom_events;
+    assert_eq!(oom, 0, "zero budget violations with KV pinning active");
+    emit.metric("dev_llm_decode_oom_plus1", (oom + 1) as f64);
+    emit.metric("wall_llm_decode_s", t0.elapsed().as_secs_f64());
+
+    emit.finish(&args).expect("write bench json");
+    println!(
+        "\ndecode invariants hold: >=2x amortization at batch 4, >0.5 re-plan hit rate, 0 OOM"
+    );
+}

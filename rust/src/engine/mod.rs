@@ -41,7 +41,7 @@ pub use backend::{ExecBackend, InferRequest, InferenceReport, PjrtBackend, SimBa
 pub use sim::{naive_equal_partition, SnetConfig, SnetRun};
 
 pub use crate::pipeline::PipelineSpec;
-pub use crate::planner::{CostObservation, CostSource, PlanStats};
+pub use crate::planner::{CostObservation, CostSource, PlanContext, PlanStats};
 
 use crate::config::{DeviceProfile, Processor};
 use crate::delay::DelayModel;
@@ -450,6 +450,23 @@ impl Engine {
     pub fn observe_costs(&self, obs: &CostObservation) {
         self.core.borrow_mut().planner.observe(obs);
     }
+
+    /// Decode-aware planning probe against the shared planner: the swap
+    /// window is reduced by the pinned KV band and execution cost is
+    /// amortized across `ctx.batch` sequences sharing one block sweep.
+    /// Pure planning — nothing is registered or allocated.
+    pub fn plan_decode(
+        &self,
+        model: &ModelInfo,
+        budget: u64,
+        ctx: PlanContext,
+    ) -> Result<Schedule> {
+        let core = &mut *self.core.borrow_mut();
+        let spec = core.cfg.pipeline;
+        core.planner
+            .plan_decode(model, budget, &spec, ctx)
+            .map_err(Error::msg)
+    }
 }
 
 /// A registered model: the request-side handle of the facade.
@@ -684,6 +701,32 @@ mod tests {
         assert!(rep.latency_s > 0.0);
         assert_eq!(rep.n_blocks, rep.block_times.len());
         assert!(rep.output.is_none());
+    }
+
+    #[test]
+    fn plan_decode_probe_respects_pinned_window() {
+        let engine = Engine::builder().build();
+        let budget = 512 * MB;
+        let free = engine
+            .plan_decode(&families::resnet101(), budget, PlanContext::default())
+            .unwrap();
+        let pinned = engine
+            .plan_decode(
+                &families::resnet101(),
+                budget,
+                PlanContext { pinned_bytes: 200 * MB, batch: 1 },
+            )
+            .unwrap();
+        assert!(pinned.budget_bytes < free.budget_bytes, "KV load must shrink the window");
+        // Overloading the budget with KV is a graceful error, not a panic.
+        let err = engine
+            .plan_decode(
+                &families::resnet101(),
+                budget,
+                PlanContext { pinned_bytes: budget, batch: 1 },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("swap window"), "{err}");
     }
 
     #[test]

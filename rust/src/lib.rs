@@ -11,7 +11,8 @@
 //! interchangeable [`engine::ExecBackend`] implementations behind it. The
 //! remaining modules are the substrates the engine composes (swap,
 //! hostmem, memsim, storage, scheduler, planner, pipeline, runtime, metrics) plus the
-//! paper-experiment surfaces (`coordinator`, `workload`, `power`).
+//! paper-experiment surfaces (`coordinator`, `workload`, `power`) and the
+//! LLM decode-serving loop ([`llm`]).
 
 #![forbid(unsafe_code)]
 
@@ -21,6 +22,7 @@ pub mod coordinator;
 pub mod delay;
 pub mod engine;
 pub mod hostmem;
+pub mod llm;
 pub mod memsim;
 pub mod metrics;
 pub mod model;

@@ -1,0 +1,519 @@
+//! LLM decode-loop serving: block swapping across autoregressive steps.
+//!
+//! Autoregressive decoding inverts the paper's economics: a CNN pays the
+//! swap-in cost once per inference, an LLM pays it once per *token*,
+//! because every decode step sweeps the full weight chain through the
+//! budget again. Two mechanisms make that affordable:
+//!
+//!  * **Pinned KV residency** — each sequence's KV cache is a persistent
+//!    allocation in the [`MemSim`] ledger ([`Space::Pinned`]): charged
+//!    against the budget, growing by `kv_bytes_per_position` every step,
+//!    never swapped. The planner sees the *remaining* window
+//!    ([`PlanContext::pinned_bytes`]) and re-partitions as KV grows.
+//!  * **Continuous batching** — one pipelined block sweep per step serves
+//!    every active sequence: block `i` is swapped in once and executed
+//!    `batch` times before block `i+1` replaces it. Swap I/O is amortized
+//!    across the batch while execution scales linearly, so on IO-bound
+//!    profiles tokens/s grows nearly linearly with batch width.
+//!    Admission joins and retires sequences *between* steps (reusing
+//!    [`crate::server::admission`]), so the batch composition tracks the
+//!    request stream.
+//!
+//! The loop runs on the engine's virtual clock against the shared
+//! planner: each step is a [`Engine::plan_decode`] probe (answered from
+//! the plan cache unless the KV load crossed a band or the batch width
+//! changed) followed by one [`timeline_spec`] sweep. The ledger proves
+//! budget safety: pinned KV plus the sweep's transient block residency
+//! never exceeds the budget, or `oom_events` says so.
+
+use std::collections::VecDeque;
+
+use anyhow::{Error, Result};
+
+use crate::engine::{Engine, PlanContext};
+use crate::hostmem::PoolStats;
+use crate::memsim::{AllocId, MemSim, Space};
+use crate::metrics::LatencyRecorder;
+use crate::model::{families, ModelInfo};
+use crate::pipeline::{timeline_spec, BlockTimes};
+use crate::planner::PlanStats;
+use crate::server::admission::{Admission, AdmissionPolicy, TenantQueue, Verdict};
+use crate::server::trace::ServeTrace;
+use crate::util::rng::Rng;
+
+/// One decode request: arrive, prefill `prompt_len` tokens of KV, then
+/// generate `new_tokens` autoregressively.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    pub id: usize,
+    /// Arrival time on the virtual serving clock (s).
+    pub arrival_s: f64,
+    /// Prompt tokens whose KV is pinned at admission (prefill).
+    pub prompt_len: usize,
+    /// Decode tokens to generate.
+    pub new_tokens: usize,
+}
+
+impl DecodeRequest {
+    /// KV bytes this sequence pins at admission (prompt + first slot).
+    pub fn prefill_kv_bytes(&self, kv_per_pos: u64) -> u64 {
+        kv_per_pos * (self.prompt_len as u64 + 1)
+    }
+}
+
+/// Decode-serving configuration.
+#[derive(Debug, Clone)]
+pub struct LlmServeConfig {
+    /// Device memory budget (B) the whole run is accounted against.
+    pub budget: u64,
+    /// Mean Poisson arrival rate (req/s) on the virtual clock.
+    pub rate_hz: f64,
+    /// Requests in the arrival stream.
+    pub requests: usize,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    /// Continuous-batching width cap (active sequences per step).
+    pub max_batch: usize,
+    pub admission: Admission,
+    pub seed: u64,
+}
+
+impl Default for LlmServeConfig {
+    fn default() -> Self {
+        LlmServeConfig {
+            budget: 2_000_000_000,
+            rate_hz: 0.05,
+            requests: 8,
+            prompt_len: 16,
+            new_tokens: 8,
+            max_batch: 4,
+            admission: Admission {
+                policy: AdmissionPolicy::Fifo,
+                per_model: 16,
+                global: 32,
+            },
+            seed: 1,
+        }
+    }
+}
+
+/// Pre-materialize the Poisson arrival stream (deterministic per seed).
+pub fn poisson_requests(cfg: &LlmServeConfig) -> Vec<DecodeRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    (0..cfg.requests)
+        .map(|id| {
+            t += rng.exp(cfg.rate_hz);
+            DecodeRequest {
+                id,
+                arrival_s: t,
+                prompt_len: cfg.prompt_len,
+                new_tokens: cfg.new_tokens.max(1),
+            }
+        })
+        .collect()
+}
+
+/// Outcome of one decode-serving run.
+#[derive(Debug)]
+pub struct DecodeReport {
+    pub model: String,
+    pub budget: u64,
+    /// Sequences that completed their full decode length.
+    pub served: usize,
+    /// Requests refused at admission.
+    pub rejected: usize,
+    /// Sequences evicted mid-decode because KV growth alone would have
+    /// breached the budget (graceful [`crate::memsim::AllocError`] path).
+    pub shed: usize,
+    /// Tokens generated across all sequences.
+    pub tokens: usize,
+    /// Pipelined block sweeps executed.
+    pub steps: usize,
+    /// Virtual-clock time at which the last step completed.
+    pub makespan_s: f64,
+    /// Latency of each generated token (its step's sweep latency).
+    pub per_token: LatencyRecorder,
+    /// Total weight swap-in seconds across all sweeps (paid once per
+    /// sweep, not per token — the quantity batching amortizes).
+    pub swap_io_s: f64,
+    /// Total execution seconds across all sequence-passes.
+    pub compute_s: f64,
+    /// Peak bytes in the residency ledger (pinned KV + sweep blocks).
+    pub peak_bytes: u64,
+    /// Peak pinned KV bytes alone.
+    pub pinned_peak_bytes: u64,
+    /// Ledger overcommit events — 0 means zero budget violations.
+    pub oom_events: u64,
+    pub plan: Option<PlanStats>,
+    pub pool: Option<PoolStats>,
+    pub traces: Vec<ServeTrace>,
+}
+
+impl DecodeReport {
+    /// Aggregate decode throughput (tokens per virtual second).
+    pub fn tok_s(&self) -> f64 {
+        self.tokens as f64 / self.makespan_s.max(1e-9)
+    }
+
+    /// Tokens emitted per block sweep — how many sequences each weight
+    /// swap-in served on average (1.0 = unbatched, no amortization).
+    pub fn swap_amortization(&self) -> f64 {
+        self.tokens as f64 / self.steps.max(1) as f64
+    }
+
+    /// True when the run never exceeded the budget.
+    pub fn within_budget(&self) -> bool {
+        self.oom_events == 0 && self.peak_bytes <= self.budget
+    }
+}
+
+/// One sequence currently in the continuous batch.
+#[derive(Debug)]
+struct ActiveSeq {
+    req: DecodeRequest,
+    /// When the sequence joined the batch (its queueing ends here).
+    admit_s: f64,
+    produced: usize,
+    /// Its pinned KV allocation in the ledger.
+    pin: AllocId,
+    /// Amortized share of sweep swap-in I/O.
+    swap_share_s: f64,
+    /// Its own execution seconds across its steps.
+    compute_s: f64,
+}
+
+/// Serve a Poisson stream of decode requests. See [`serve_decode_stream`].
+pub fn serve_decode(
+    engine: &Engine,
+    model: &ModelInfo,
+    cfg: &LlmServeConfig,
+) -> Result<DecodeReport> {
+    let reqs = poisson_requests(cfg);
+    serve_decode_stream(engine, model, cfg, &reqs)
+}
+
+/// Serve an explicit request stream (ascending `arrival_s`).
+///
+/// The step loop: admit arrivals, join waiting sequences while their
+/// prefill KV pins fit AND a feasible plan remains, run one pipelined
+/// block sweep for the whole batch (planned against the KV-reduced
+/// window, execution cost scaled by the batch width), grow every
+/// survivor's KV pin by one position, retire finished sequences.
+pub fn serve_decode_stream(
+    engine: &Engine,
+    model: &ModelInfo,
+    cfg: &LlmServeConfig,
+    reqs: &[DecodeRequest],
+) -> Result<DecodeReport> {
+    let kv_pos = families::kv_bytes_per_position(model);
+    let dm = engine.delay_model();
+    let spec = engine.config().pipeline;
+    let mut ledger = MemSim::new(cfg.budget);
+    let mut rep = DecodeReport {
+        model: model.name.clone(),
+        budget: cfg.budget,
+        served: 0,
+        rejected: 0,
+        shed: 0,
+        tokens: 0,
+        steps: 0,
+        makespan_s: 0.0,
+        per_token: LatencyRecorder::new(),
+        swap_io_s: 0.0,
+        compute_s: 0.0,
+        peak_bytes: 0,
+        pinned_peak_bytes: 0,
+        oom_events: 0,
+        plan: None,
+        pool: None,
+        traces: Vec::new(),
+    };
+    let mut clock = 0.0f64;
+    let mut next = 0usize;
+    let mut waiting: VecDeque<DecodeRequest> = VecDeque::new();
+    let mut active: Vec<ActiveSeq> = Vec::new();
+
+    loop {
+        if active.is_empty() && waiting.is_empty() {
+            if next >= reqs.len() {
+                break;
+            }
+            // Idle: jump the clock to the next arrival.
+            clock = clock.max(reqs[next].arrival_s);
+        }
+        // Admission: bounded queue over (waiting + active) backlog.
+        while next < reqs.len() && reqs[next].arrival_s <= clock {
+            let q = [TenantQueue { len: waiting.len() + active.len(), score: 1.0 }];
+            match cfg.admission.decide(0, true, &q) {
+                Verdict::Admit | Verdict::AdmitShedding { .. } => {
+                    waiting.push_back(reqs[next].clone());
+                }
+                Verdict::Reject => rep.rejected += 1,
+            }
+            next += 1;
+        }
+        // Continuous batching: join while the batch has room, the prefill
+        // KV pin fits, and the planner still finds a swap window.
+        while active.len() < cfg.max_batch.max(1) {
+            let Some(head) = waiting.front() else { break };
+            let kv0 = head.prefill_kv_bytes(kv_pos);
+            let pin = match ledger.try_alloc_pinned(&format!("kv-{}", head.id), kv0) {
+                Ok(id) => id,
+                Err(_) => break, // no headroom now; retry after retirements
+            };
+            let probe = PlanContext {
+                pinned_bytes: ledger.pinned_bytes(),
+                batch: active.len() + 1,
+            };
+            if engine.plan_decode(model, cfg.budget, probe).is_err() {
+                // Joining would erase the swap window entirely.
+                ledger.free(pin);
+                break;
+            }
+            let req = waiting.pop_front().unwrap();
+            active.push(ActiveSeq {
+                req,
+                admit_s: clock,
+                produced: 0,
+                pin,
+                swap_share_s: 0.0,
+                compute_s: 0.0,
+            });
+        }
+        if active.is_empty() {
+            // Nothing running and the head can never fit: refuse it
+            // rather than stall the stream forever.
+            if waiting.pop_front().is_some() {
+                rep.rejected += 1;
+                continue;
+            }
+            if next >= reqs.len() {
+                break;
+            }
+            clock = reqs[next].arrival_s;
+            continue;
+        }
+
+        // One pipelined block sweep serves the whole batch. KV growth
+        // can shrink the window below feasibility between steps; that is
+        // an overload signal, not an error — shed the youngest sequence
+        // (least sunk work) and retry with the freed headroom.
+        let mut planned = None;
+        while !active.is_empty() {
+            let ctx = PlanContext {
+                pinned_bytes: ledger.pinned_bytes(),
+                batch: active.len(),
+            };
+            match engine.plan_decode(model, cfg.budget, ctx) {
+                Ok(s) => {
+                    planned = Some(s);
+                    break;
+                }
+                Err(_) => {
+                    let victim = active.pop().expect("non-empty batch");
+                    ledger.free(victim.pin);
+                    rep.shed += 1;
+                }
+            }
+        }
+        let Some(sched) = planned else { continue };
+        let batch = active.len();
+        let blocks = model.create_blocks(&sched.points).map_err(Error::msg)?;
+        let times: Vec<BlockTimes> = blocks
+            .iter()
+            .map(|b| BlockTimes {
+                t_in: dm.t_in(b),
+                // Each resident block runs once per active sequence
+                // before being replaced — execution scales, I/O doesn't.
+                t_ex: dm.t_ex(b, model.processor) * batch as f64,
+                t_out: dm.t_out(b),
+            })
+            .collect();
+        let step_s = timeline_spec(&times, &spec).latency();
+        let io_s: f64 = times.iter().map(|t| t.t_in).sum();
+        let ex_s: f64 = blocks.iter().map(|b| dm.t_ex(b, model.processor)).sum();
+        // Charge the sweep's transient block residency while the KV pins
+        // are live — this is the run's budget-violation check.
+        let sweep = ledger.alloc("sweep", Space::Unified, sched.peak_bytes);
+        ledger.free(sweep);
+        clock += step_s;
+        rep.steps += 1;
+        rep.swap_io_s += io_s;
+        rep.compute_s += ex_s * batch as f64;
+
+        // Every active sequence emits one token and grows its KV by one
+        // position; finished (or unpinnable) sequences retire.
+        let mut i = 0;
+        while i < active.len() {
+            let s = &mut active[i];
+            s.produced += 1;
+            s.swap_share_s += io_s / batch as f64;
+            s.compute_s += ex_s;
+            rep.tokens += 1;
+            rep.per_token.record(step_s);
+            let finished = s.produced >= s.req.new_tokens;
+            let evicted = !finished && ledger.try_grow_pinned(s.pin, kv_pos).is_err();
+            if finished || evicted {
+                let s = active.swap_remove(i);
+                ledger.free(s.pin);
+                if evicted {
+                    rep.shed += 1;
+                } else {
+                    rep.served += 1;
+                    rep.traces.push(ServeTrace {
+                        model: model.name.clone(),
+                        queue_s: s.admit_s - s.req.arrival_s,
+                        swap_s: s.swap_share_s,
+                        assembly_s: 0.0,
+                        compute_s: s.compute_s,
+                        e2e_s: clock - s.req.arrival_s,
+                        batch,
+                        tokens: s.produced,
+                        s_per_token: (clock - s.admit_s) / s.produced.max(1) as f64,
+                    });
+                }
+            } else {
+                i += 1;
+            }
+        }
+        rep.makespan_s = clock;
+    }
+
+    rep.peak_bytes = ledger.peak();
+    rep.pinned_peak_bytes = ledger.peak_in(Space::Pinned);
+    rep.oom_events = ledger.oom_events;
+    rep.plan = Some(engine.plan_stats());
+    rep.pool = engine.pool_stats();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+
+    fn engine() -> Engine {
+        Engine::builder().build()
+    }
+
+    fn cfg(budget: u64) -> LlmServeConfig {
+        LlmServeConfig { budget, ..Default::default() }
+    }
+
+    #[test]
+    fn poisson_stream_is_deterministic_and_sorted() {
+        let c = cfg(2048 * MB);
+        let a = poisson_requests(&c);
+        let b = poisson_requests(&c);
+        assert_eq!(a.len(), c.requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn llama7b_decodes_within_2gb_budget() {
+        let e = engine();
+        let model = families::llama7b();
+        let c = cfg(2048 * MB);
+        let rep = serve_decode(&e, &model, &c).unwrap();
+        assert_eq!(rep.served, c.requests, "all sequences finish");
+        assert_eq!(rep.tokens, c.requests * c.new_tokens);
+        assert_eq!(rep.shed, 0);
+        assert!(rep.within_budget(), "oom={} peak={}", rep.oom_events, rep.peak_bytes);
+        assert!(rep.pinned_peak_bytes > 0, "KV was pinned");
+        assert_eq!(rep.per_token.len(), rep.tokens);
+        assert!(rep.tok_s() > 0.0);
+        for tr in &rep.traces {
+            assert_eq!(tr.tokens, c.new_tokens);
+            assert!(tr.s_per_token > 0.0);
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_swap_io() {
+        let e1 = engine();
+        let model = families::llama7b();
+        let solo = LlmServeConfig { max_batch: 1, rate_hz: 1000.0, ..cfg(2048 * MB) };
+        let r1 = serve_decode(&e1, &model, &solo).unwrap();
+        let e8 = engine();
+        let batched = LlmServeConfig { max_batch: 8, rate_hz: 1000.0, ..cfg(2048 * MB) };
+        let r8 = serve_decode(&e8, &model, &batched).unwrap();
+        assert!(r1.swap_amortization() < 1.0 + 1e-9);
+        assert!(
+            r8.swap_amortization() > 2.0,
+            "batched sweeps serve many tokens: {}",
+            r8.swap_amortization()
+        );
+        assert!(
+            r8.tok_s() > 2.0 * r1.tok_s(),
+            "IO-bound decode speeds up with batch: {} vs {}",
+            r8.tok_s(),
+            r1.tok_s()
+        );
+    }
+
+    #[test]
+    fn infeasible_budget_rejects_instead_of_violating() {
+        let e = engine();
+        let model = families::llama7b();
+        // Budget below the largest-block floor: no sequence can ever be
+        // planned, so everything is refused — and nothing overcommits.
+        let c = LlmServeConfig { rate_hz: 1000.0, ..cfg(256 * MB) };
+        let rep = serve_decode(&e, &model, &c).unwrap();
+        assert_eq!(rep.served, 0);
+        assert_eq!(rep.rejected, c.requests);
+        assert_eq!(rep.tokens, 0);
+        assert_eq!(rep.oom_events, 0, "never overcommits");
+    }
+
+    #[test]
+    fn kv_overgrowth_sheds_gracefully_instead_of_violating() {
+        let e = engine();
+        let model = families::llama7b();
+        // Decode far past the context the budget can hold: KV growth
+        // alone eventually eats the swap window. The loop must shed
+        // sequences (graceful AllocError/plan-infeasibility path), never
+        // overcommit the ledger.
+        let c = LlmServeConfig {
+            new_tokens: 10_000,
+            max_batch: 2,
+            rate_hz: 1000.0,
+            requests: 2,
+            ..cfg(2048 * MB)
+        };
+        let rep = serve_decode(&e, &model, &c).unwrap();
+        assert!(rep.shed > 0, "KV overgrowth must shed, got served={}", rep.served);
+        assert_eq!(rep.served, 0, "10k-token decodes cannot fit a 2 GB budget");
+        assert_eq!(rep.oom_events, 0, "never overcommits");
+        assert!(rep.peak_bytes <= c.budget);
+        assert!(rep.tokens > 0, "progress was made before shedding");
+    }
+
+    #[test]
+    fn growth_replans_hit_the_plan_cache() {
+        let e = engine();
+        let model = families::llama7b();
+        // Long decode, steady batch: most steps stay inside one 64 MiB
+        // pinned band, so their plan probes are cache hits.
+        let c = LlmServeConfig {
+            new_tokens: 96,
+            requests: 4,
+            max_batch: 4,
+            rate_hz: 1000.0,
+            ..cfg(2048 * MB)
+        };
+        let rep = serve_decode(&e, &model, &c).unwrap();
+        let plan = rep.plan.as_ref().unwrap();
+        let probes = plan.hits + plan.misses;
+        assert!(probes as usize >= rep.steps, "every step probes the planner");
+        assert!(
+            plan.hits as f64 / probes as f64 > 0.5,
+            "hits {} misses {}",
+            plan.hits,
+            plan.misses
+        );
+    }
+}

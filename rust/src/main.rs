@@ -205,6 +205,52 @@ const COMMANDS: &[CmdSpec] = &[
         ],
     },
     CmdSpec {
+        name: "serve-llm",
+        about: "LLM decode serving: per-token block swapping with pinned KV (paper §10)",
+        flags: &[
+            FlagSpec {
+                name: "model",
+                metavar: "NAME",
+                help: "model family to decode (default llama7b)",
+            },
+            FlagSpec {
+                name: "budget-mb",
+                metavar: "MB",
+                help: "device memory budget in MB (default 2048)",
+            },
+            FlagSpec {
+                name: "requests",
+                metavar: "N",
+                help: "decode requests in the Poisson stream (default 8)",
+            },
+            FlagSpec {
+                name: "rate",
+                metavar: "HZ",
+                help: "mean arrival rate (default 0.05)",
+            },
+            FlagSpec {
+                name: "prompt",
+                metavar: "N",
+                help: "prompt tokens pinned at admission (default 16)",
+            },
+            FlagSpec {
+                name: "tokens",
+                metavar: "N",
+                help: "decode tokens per request (default 8)",
+            },
+            FlagSpec {
+                name: "max-batch",
+                metavar: "N",
+                help: "continuous-batching width cap (default 4)",
+            },
+            FlagSpec { name: "seed", metavar: "S", help: "stream seed (default 1)" },
+            PIPELINE_M_FLAG,
+            COSTS_FLAG,
+            PLAN_CACHE_FLAG,
+            DEVICE_FLAG,
+        ],
+    },
+    CmdSpec {
         name: "overhead",
         about: "SwapNet memory + power overhead (Fig 19)",
         flags: &[DEVICE_FLAG],
@@ -387,6 +433,7 @@ fn main() -> Result<()> {
         "adapt" => cmd_adapt(&flags),
         "serve" => cmd_serve(&flags),
         "serve-multi" => cmd_serve_multi(&flags),
+        "serve-llm" => cmd_serve_llm(&flags),
         "overhead" => cmd_overhead(&flags),
         "table1" => cmd_table1(),
         "table2" => cmd_table2(&flags),
@@ -721,6 +768,93 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
             pool.reuses,
             pool.alloc_events,
             pool.bytes_copied,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve_llm(flags: &HashMap<String, String>) -> Result<()> {
+    use swapnet::llm::{serve_decode, LlmServeConfig};
+    use swapnet::model::families::kv_bytes_per_position;
+
+    let name = flags.get("model").map(String::as_str).unwrap_or("llama7b");
+    let model = families::by_name(name).ok_or_else(|| anyhow!("unknown model `{name}`"))?;
+    let cfg = LlmServeConfig {
+        budget: parsed::<u64>(flags, "budget-mb", 2048)? * MB,
+        rate_hz: parsed(flags, "rate", 0.05)?,
+        requests: parsed(flags, "requests", 8)?,
+        prompt_len: parsed(flags, "prompt", 16)?,
+        new_tokens: parsed(flags, "tokens", 8)?,
+        max_batch: parsed(flags, "max-batch", 4)?,
+        seed: parsed(flags, "seed", 1)?,
+        ..LlmServeConfig::default()
+    };
+
+    let engine = Engine::builder()
+        .device(device(flags)?)
+        .pipeline_m(pipeline_m(flags)?)
+        .cost_source(cost_source(flags)?)
+        .plan_cache_bytes(plan_cache_bytes(flags)?)
+        .build();
+
+    println!(
+        "serve-llm: {} ({} weights, {}/token/seq KV) under budget {} ({:.2}x beyond), batch cap {}",
+        model.name,
+        table::human_bytes(model.size_bytes()),
+        table::human_bytes(kv_bytes_per_position(&model)),
+        table::human_bytes(cfg.budget),
+        model.size_bytes() as f64 / cfg.budget as f64,
+        cfg.max_batch,
+    );
+
+    let rep = serve_decode(&engine, &model, &cfg)?;
+
+    println!("\n== decode outcome ==");
+    println!(
+        "served {}/{} sequences ({} shed, {} rejected): {} tokens in {} steps over {:.1}s",
+        rep.served,
+        cfg.requests,
+        rep.shed,
+        rep.rejected,
+        rep.tokens,
+        rep.steps,
+        rep.makespan_s,
+    );
+    println!(
+        "throughput {:.3} tok/s, per-token latency p50 {} / p99 {}, swap amortization {:.2} tok/sweep",
+        rep.tok_s(),
+        table::human_secs(rep.per_token.p(50.0)),
+        table::human_secs(rep.per_token.p(99.0)),
+        rep.swap_amortization(),
+    );
+    println!(
+        "swap I/O {:.1}s vs compute {:.1}s; peak {} (pinned KV peak {}) of {} budget, {} OOM events",
+        rep.swap_io_s,
+        rep.compute_s,
+        table::human_bytes(rep.peak_bytes),
+        table::human_bytes(rep.pinned_peak_bytes),
+        table::human_bytes(rep.budget),
+        rep.oom_events,
+    );
+    if !rep.within_budget() {
+        return Err(anyhow!(
+            "budget violated: peak {} > {} or {} OOM events",
+            rep.peak_bytes,
+            rep.budget,
+            rep.oom_events
+        ));
+    }
+    println!("zero budget violations (asserted via the MemSim ledger, KV pinning active)");
+    if let Some(plan) = &rep.plan {
+        println!("{}", plan_line(plan));
+    }
+    if let Some(pool) = rep.pool {
+        println!(
+            "host buffer pool: {} slots ({} each), {} checkouts ({} recycled)",
+            pool.slots,
+            table::human_bytes(pool.slot_bytes),
+            pool.checkouts,
+            pool.reuses,
         );
     }
     Ok(())

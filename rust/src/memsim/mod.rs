@@ -29,6 +29,12 @@ pub enum Space {
     PageCache,
     /// cudaMallocManaged unified-addressing allocations (CPU+GPU visible).
     Unified,
+    /// Persistent residency class: bytes that must stay resident for the
+    /// lifetime of a sequence (LLM KV cache). Pinned bytes are charged
+    /// against the budget like any other space but are *never* part of
+    /// the swap window — they are allocated through the checked
+    /// [`MemSim::try_alloc_pinned`] path and only leave via `free`.
+    Pinned,
 }
 
 /// Allocator selection (the Fig 5/6 patch point).
@@ -43,6 +49,32 @@ pub enum AllocMode {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct AllocId(u64);
+
+/// A checked allocation in the pinned residency class failed: granting
+/// it would push the ledger past the device total. Unlike the ordinary
+/// `alloc` path (which models the async OOM killer by overcommitting and
+/// counting an event), pinned bytes are a *promise of residency* — the
+/// promise must be refused up front, gracefully, never made and broken.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocError {
+    /// Bytes the caller asked to pin (or grow by).
+    pub requested: u64,
+    /// Bytes still available under the device total at the time of the
+    /// call.
+    pub available: u64,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pinned allocation of {} B refused: only {} B available under the budget",
+            self.requested, self.available
+        )
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 #[derive(Debug, Clone)]
 struct Allocation {
@@ -123,6 +155,56 @@ impl MemSim {
                 *s -= a.bytes;
             }
         }
+    }
+
+    /// Checked allocation in the pinned residency class ([`Space::Pinned`]).
+    ///
+    /// Pinned bytes (LLM KV cache) must stay resident for the lifetime of
+    /// a sequence, so overcommit cannot be papered over by a later swap —
+    /// the call fails up front when the ledger cannot cover it, with no
+    /// state change and no OOM event. On success the allocation is
+    /// ordinary (shows in `current`/`peak`/per-tag/per-space) and is
+    /// released with `free` when the sequence retires.
+    pub fn try_alloc_pinned(&mut self, tag: &str, bytes: u64) -> Result<AllocId, AllocError> {
+        let available = self.total.saturating_sub(self.cur);
+        if bytes > available {
+            return Err(AllocError { requested: bytes, available });
+        }
+        Ok(self.alloc(tag, Space::Pinned, bytes))
+    }
+
+    /// Checked growth of an existing pinned allocation by `delta` bytes
+    /// (KV cache growing with sequence position). Fails — with no state
+    /// change — when the ledger cannot cover the growth, or when `id` is
+    /// unknown or not pinned (`available = 0` marks the identity error).
+    pub fn try_grow_pinned(&mut self, id: AllocId, delta: u64) -> Result<(), AllocError> {
+        match self.allocs.get(&id) {
+            Some(a) if a.space == Space::Pinned => {}
+            _ => return Err(AllocError { requested: delta, available: 0 }),
+        }
+        let available = self.total.saturating_sub(self.cur);
+        if delta > available {
+            return Err(AllocError { requested: delta, available });
+        }
+        let a = self.allocs.get_mut(&id).expect("checked above");
+        a.bytes += delta;
+        let tag = a.tag.clone();
+        self.cur += delta;
+        self.peak = self.peak.max(self.cur);
+        let t = self.per_tag.entry(tag).or_default();
+        t.cur += delta;
+        t.peak = t.peak.max(t.cur);
+        let sp = self.per_space.entry(Space::Pinned).or_insert(0);
+        *sp += delta;
+        let cur_space = *sp;
+        let pk = self.per_space_peak.entry(Space::Pinned).or_insert(0);
+        *pk = (*pk).max(cur_space);
+        Ok(())
+    }
+
+    /// Bytes currently held by the pinned residency class.
+    pub fn pinned_bytes(&self) -> u64 {
+        self.current_in(Space::Pinned)
     }
 
     pub fn size_of(&self, id: AllocId) -> Option<u64> {
@@ -230,6 +312,64 @@ mod tests {
         assert_eq!(m.peak(), 500);
         m.reset_peaks();
         assert_eq!(m.peak(), 0);
+    }
+
+    #[test]
+    fn pinned_alloc_checked_against_total() {
+        let mut m = MemSim::new(1000);
+        let kv = m.try_alloc_pinned("seq0", 600).expect("fits");
+        assert_eq!(m.pinned_bytes(), 600);
+        assert_eq!(m.current(), 600);
+        // A second pin beyond the remainder is refused with no state
+        // change and no OOM event (graceful, not the async-killer path).
+        let err = m.try_alloc_pinned("seq1", 500).unwrap_err();
+        assert_eq!(err, AllocError { requested: 500, available: 400 });
+        assert_eq!(m.current(), 600);
+        assert_eq!(m.oom_events, 0);
+        assert_eq!(m.live_allocs(), 1);
+        m.free(kv);
+        assert_eq!(m.pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn pinned_growth_checked_and_accounted() {
+        let mut m = MemSim::new(1000);
+        let kv = m.try_alloc_pinned("seq0", 300).unwrap();
+        m.try_grow_pinned(kv, 200).expect("fits");
+        assert_eq!(m.size_of(kv), Some(500));
+        assert_eq!(m.pinned_bytes(), 500);
+        assert_eq!(m.tag_stat("seq0").cur, 500);
+        assert_eq!(m.peak_in(Space::Pinned), 500);
+        // Growth past the total is a typed error, never a panic, and
+        // leaves the allocation untouched.
+        let err = m.try_grow_pinned(kv, 501).unwrap_err();
+        assert_eq!(err, AllocError { requested: 501, available: 500 });
+        assert_eq!(m.size_of(kv), Some(500));
+        assert_eq!(m.oom_events, 0);
+    }
+
+    #[test]
+    fn pinned_growth_rejects_foreign_ids() {
+        let mut m = MemSim::new(1000);
+        let cpu = m.alloc("t", Space::Cpu, 10);
+        assert!(m.try_grow_pinned(cpu, 1).is_err(), "non-pinned id");
+        m.free(cpu);
+        assert!(m.try_grow_pinned(cpu, 1).is_err(), "freed id");
+        assert_eq!(m.current(), 0);
+    }
+
+    #[test]
+    fn pinned_bytes_separate_from_swap_spaces() {
+        // Pinned bytes count toward the global ledger but never leak
+        // into another space's peak (the swap window stays truthful).
+        let mut m = MemSim::new(u64::MAX);
+        let _kv = m.try_alloc_pinned("seq", 700).unwrap();
+        let blk = m.alloc("t", Space::Unified, 100);
+        assert_eq!(m.current(), 800);
+        assert_eq!(m.peak_in(Space::Unified), 100);
+        assert_eq!(m.peak_in(Space::Pinned), 700);
+        m.free(blk);
+        assert_eq!(m.pinned_bytes(), 700);
     }
 
     #[test]

@@ -231,24 +231,49 @@ pub fn fcn() -> ModelInfo {
     b.finish("fcn", "fcn", 62.7, Processor::Gpu)
 }
 
+/// LLaMA-7B architecture constants, shared by the chain builder and the
+/// KV-cache sizing helpers below.
+const LLAMA_E: u64 = 4096;
+const LLAMA_FFN: u64 = 11008;
+const LLAMA_LAYERS: usize = 32;
+const LLAMA_VOCAB: u64 = 32000;
+const LLAMA_CTX: u64 = 512;
+const LLAMA_HEADS: u64 = 32;
+/// fp16 storage for weights and KV entries.
+const LLAMA_DTYPE_BYTES: u64 = 2;
+
+/// KV-cache bytes one decoder layer pins per sequence position: K and V,
+/// each `heads x head_dim` values in fp16 — 16 KiB/layer/position for
+/// LLaMA-7B.
+pub fn llama7b_kv_bytes_per_layer_pos() -> u64 {
+    2 * LLAMA_HEADS * (LLAMA_E / LLAMA_HEADS) * LLAMA_DTYPE_BYTES
+}
+
+/// KV-cache bytes the whole model pins per sequence position (one K+V
+/// row per decoder layer) — 512 KiB/position for LLaMA-7B. Counting the
+/// model's actual `decoder` layers keeps truncated variants honest.
+pub fn kv_bytes_per_position(model: &ModelInfo) -> u64 {
+    let decoders = model.layers.iter().filter(|l| l.kind == "decoder").count() as u64;
+    decoders * llama7b_kv_bytes_per_layer_pos()
+}
+
 /// LLaMA-7B decoder stack (the paper's §10 LLM outlook): 32 decoder
 /// layers in fp16 (~13 GB) + embeddings/head. Each decoder layer is one
 /// atomic swap unit (attention + MLP share the residual stream). FLOPs
 /// are per generated token at a 512-token context (2 FLOPs/param + the
 /// attention quadratic term).
 pub fn llama7b() -> ModelInfo {
-    const E: u64 = 4096;
-    const FFN: u64 = 11008;
-    const LAYERS: usize = 32;
-    const VOCAB: u64 = 32000;
-    const CTX: u64 = 512;
-    const HEADS: u64 = 32;
+    const E: u64 = LLAMA_E;
+    const FFN: u64 = LLAMA_FFN;
+    const LAYERS: usize = LLAMA_LAYERS;
+    const VOCAB: u64 = LLAMA_VOCAB;
+    const CTX: u64 = LLAMA_CTX;
     let mut layers = Vec::new();
     // token embedding (swapped in once for the prompt; cuttable after)
     layers.push(LayerInfo {
         name: "embed".into(),
         kind: "embedding".into(),
-        size_bytes: VOCAB * E * 2,
+        size_bytes: VOCAB * E * LLAMA_DTYPE_BYTES,
         depth: 1,
         flops: 2 * E,
         cut_after: true,
@@ -259,11 +284,10 @@ pub fn llama7b() -> ModelInfo {
             + 2 * E; // rmsnorm scales
         let flops = 2 * (4 * E * E + 3 * E * FFN)      // GEMMs per token
             + 2 * 2 * CTX * E; // attention over the KV cache
-        let _ = HEADS;
         layers.push(LayerInfo {
             name: format!("decoder.{i}"),
             kind: "decoder".into(),
-            size_bytes: params * 2, // fp16
+            size_bytes: params * LLAMA_DTYPE_BYTES,
             depth: 9,
             flops,
             cut_after: true,
@@ -272,7 +296,7 @@ pub fn llama7b() -> ModelInfo {
     layers.push(LayerInfo {
         name: "lm_head".into(),
         kind: "dense".into(),
-        size_bytes: VOCAB * E * 2,
+        size_bytes: VOCAB * E * LLAMA_DTYPE_BYTES,
         depth: 1,
         flops: 2 * VOCAB * E,
         cut_after: true,
@@ -374,5 +398,28 @@ mod tests {
         // per-token GFLOPs ~ 2 x params
         let gf = m.total_flops() as f64 / 1e9;
         assert!((12.0..16.0).contains(&gf), "llama7b {gf} GFLOPs/token");
+        // Embedding and lm_head terminal blocks bracket the decoders,
+        // each the published 32000 x 4096 fp16 matrix (262 MB).
+        assert_eq!(m.layers.first().unwrap().kind, "embedding");
+        assert_eq!(m.layers.last().unwrap().name, "lm_head");
+        assert_eq!(m.layers.first().unwrap().size_bytes, 32000 * 4096 * 2);
+        assert_eq!(m.layers.last().unwrap().size_bytes, 32000 * 4096 * 2);
+    }
+
+    #[test]
+    fn llama7b_kv_byte_math() {
+        // heads x head_dim x 2 (K,V) x 2 B (fp16) = 32 * 128 * 2 * 2
+        // = 16 KiB per layer per position.
+        assert_eq!(llama7b_kv_bytes_per_layer_pos(), 16 * 1024);
+        // 32 decoder layers -> 512 KiB per position for the whole model.
+        let m = llama7b();
+        assert_eq!(kv_bytes_per_position(&m), 512 * 1024);
+        // A full 512-token context pins 256 MiB — ~2% of the 13.4 GB
+        // weights, but it must stay RESIDENT while weights stream.
+        let full_ctx = kv_bytes_per_position(&m) * 512;
+        assert_eq!(full_ctx, 256 * 1024 * 1024);
+        assert!(full_ctx * 50 < m.size_bytes());
+        // Non-transformer chains pin nothing.
+        assert_eq!(kv_bytes_per_position(&resnet101()), 0);
     }
 }

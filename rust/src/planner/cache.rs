@@ -29,6 +29,13 @@ pub const DEFAULT_BAND_BYTES: u64 = 1_000_000;
 /// band.
 pub const DEFAULT_CACHE_BYTES: u64 = 4_000_000;
 
+/// Pinned-bytes band width for decode plan keys. KV caches grow a few
+/// hundred KB per token per sequence, so planning per exact byte count
+/// would make every decode step a cache miss; planning per 64 MB band
+/// (against the band ceiling, so the plan stays feasible as KV grows
+/// within the band) turns growth re-plans into cache probes.
+pub const DEFAULT_PINNED_BAND_BYTES: u64 = 64 * 1024 * 1024;
+
 /// Cache sizing knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanCacheConfig {
@@ -56,6 +63,12 @@ struct PlanKey {
     residency_m: usize,
     swap_channels: usize,
     band: u64,
+    /// Pinned-bytes band (KV-cache load) the plan was made under. Two
+    /// tenants with identical chains but different pinned loads must not
+    /// share a schedule — the swap window they plan against differs.
+    pinned_band: u64,
+    /// Decode batch width (per-step reuse). 1 for ordinary inference.
+    batch: usize,
     fingerprint: u64,
 }
 
@@ -170,6 +183,7 @@ impl PlanCache {
         self.tick
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn plan_key(
         &self,
         model: &str,
@@ -177,6 +191,8 @@ impl PlanCache {
         spec: &PipelineSpec,
         budget: u64,
         fp: u64,
+        pinned_band: u64,
+        batch: usize,
     ) -> PlanKey {
         PlanKey {
             model: model.to_string(),
@@ -184,6 +200,8 @@ impl PlanCache {
             residency_m: spec.residency_m,
             swap_channels: spec.swap_channels,
             band: budget / self.cfg.band_bytes,
+            pinned_band,
+            batch,
             fingerprint: fp,
         }
     }
@@ -201,7 +219,24 @@ impl PlanCache {
         budget: u64,
         fp: u64,
     ) -> Option<Schedule> {
-        let key = self.plan_key(model, chain, spec, budget, fp);
+        self.get_plan_at(model, chain, spec, budget, fp, 0, 1)
+    }
+
+    /// [`Self::get_plan`] with the decode dimensions explicit: the
+    /// pinned-bytes band the swap window was reduced by and the decode
+    /// batch width. Ordinary inference probes use (0, 1).
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_plan_at(
+        &mut self,
+        model: &str,
+        chain: u64,
+        spec: &PipelineSpec,
+        budget: u64,
+        fp: u64,
+        pinned_band: u64,
+        batch: usize,
+    ) -> Option<Schedule> {
+        let key = self.plan_key(model, chain, spec, budget, fp, pinned_band, batch);
         let tick = self.bump();
         match self.plans.get_mut(&key) {
             Some(e) if e.planned_budget <= budget => {
@@ -230,7 +265,23 @@ impl PlanCache {
         fp: u64,
         s: &Schedule,
     ) {
-        let key = self.plan_key(model, chain, spec, budget, fp);
+        self.put_plan_at(model, chain, spec, budget, fp, 0, 1, s);
+    }
+
+    /// [`Self::put_plan`] with the decode dimensions explicit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_plan_at(
+        &mut self,
+        model: &str,
+        chain: u64,
+        spec: &PipelineSpec,
+        budget: u64,
+        fp: u64,
+        pinned_band: u64,
+        batch: usize,
+        s: &Schedule,
+    ) {
+        let key = self.plan_key(model, chain, spec, budget, fp, pinned_band, batch);
         let bytes = plan_bytes(s);
         let tick = self.bump();
         if let Some(old) = self.plans.remove(&key) {
@@ -417,6 +468,22 @@ mod tests {
         assert!(c.get_plan("m", 9, &spec, 200_000_000, 1).is_none());
         assert!(c.get_plan("m", 9, &spec, 100_000_000, 2).is_none());
         assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn pinned_band_and_batch_partition_the_key_space() {
+        let mut c = PlanCache::new(PlanCacheConfig::default());
+        let spec = PipelineSpec::default();
+        let s = sched("m", 100_000_000, vec![3, 7]);
+        c.put_plan_at("m", 9, &spec, 100_000_000, 1, 2, 4, &s);
+        assert!(c.get_plan_at("m", 9, &spec, 100_000_000, 1, 2, 4).is_some());
+        // A different pinned band or batch width is a different plan.
+        assert!(c.get_plan_at("m", 9, &spec, 100_000_000, 1, 3, 4).is_none());
+        assert!(c.get_plan_at("m", 9, &spec, 100_000_000, 1, 2, 8).is_none());
+        // The legacy probe is exactly (pinned_band 0, batch 1).
+        assert!(c.get_plan("m", 9, &spec, 100_000_000, 1).is_none());
+        c.put_plan("m", 9, &spec, 100_000_000, 1, &s);
+        assert!(c.get_plan_at("m", 9, &spec, 100_000_000, 1, 0, 1).is_some());
     }
 
     #[test]

@@ -252,6 +252,57 @@ impl CostProvider for MeasuredCosts {
     }
 }
 
+/// Decode-batch cost wrapper: the per-step reuse dimension of the
+/// planner (LLM continuous batching). In autoregressive decode one
+/// pipelined block sweep serves every active sequence, so each swapped-in
+/// block executes `reuse` times before it leaves — t_in/t_out are paid
+/// once but t_ex scales with the batch width. Since
+/// `t_ex = gamma * flops + dispatch`, scaling gamma (both processors) and
+/// the per-block dispatch cost by `reuse` yields exactly `t_ex * reuse`
+/// through the unmodified [`DelayModel`] laws, so the interval DP and the
+/// whole-model fast path both see the amortized economics with no special
+/// cases.
+#[derive(Debug, Clone)]
+pub struct ReusedCosts {
+    dm: DelayModel,
+    fp: u64,
+}
+
+impl ReusedCosts {
+    /// Wrap `inner` so every block's execution cost counts `reuse` times.
+    /// `reuse = 1` is the identity: same delay model, same fingerprint,
+    /// so batch-1 decode plans share cache entries with the plain path.
+    pub fn new(inner: &dyn CostProvider, reuse: usize) -> ReusedCosts {
+        let base = inner.delay_model();
+        if reuse <= 1 {
+            return ReusedCosts { dm: base.clone(), fp: inner.fingerprint() };
+        }
+        let k = reuse as f64;
+        let dm = DelayModel {
+            gamma_cpu_s_per_flop: base.gamma_cpu_s_per_flop * k,
+            gamma_gpu_s_per_flop: base.gamma_gpu_s_per_flop * k,
+            dispatch_s_per_block: base.dispatch_s_per_block * k,
+            ..base.clone()
+        };
+        let fp = fnv1a([inner.fingerprint(), reuse as u64]);
+        ReusedCosts { dm, fp }
+    }
+}
+
+impl CostProvider for ReusedCosts {
+    fn name(&self) -> &'static str {
+        "reused"
+    }
+
+    fn delay_model(&self) -> &DelayModel {
+        &self.dm
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+}
+
 /// Owned provider storage for planners (concrete, so the measured
 /// variant stays mutable for online refinement without downcasting).
 #[derive(Debug, Clone)]
@@ -395,6 +446,37 @@ mod tests {
         let mut c = crate::model::families::resnet101();
         c.layers[3].cut_after = false;
         assert_ne!(model_fingerprint(&a), model_fingerprint(&c));
+    }
+
+    #[test]
+    fn reused_costs_scale_exactly_t_ex() {
+        let prof = DeviceProfile::jetson_nx();
+        let inner = AnalyticCosts::from_profile(&prof);
+        let b = block(60, 30, 9.0);
+        for reuse in [2usize, 4, 16] {
+            let rc = ReusedCosts::new(&inner, reuse);
+            for proc in [Processor::Cpu, Processor::Gpu] {
+                let base = inner.block_times(&b, proc);
+                let t = rc.block_times(&b, proc);
+                assert_eq!(t.t_in, base.t_in, "swap-in paid once");
+                assert_eq!(t.t_out, base.t_out, "swap-out paid once");
+                assert!(
+                    (t.t_ex - base.t_ex * reuse as f64).abs() < 1e-12 * t.t_ex,
+                    "t_ex must scale by the batch width"
+                );
+            }
+            assert_ne!(rc.fingerprint(), inner.fingerprint());
+        }
+        // Distinct widths key distinct plans; width 1 is the identity.
+        assert_ne!(
+            ReusedCosts::new(&inner, 2).fingerprint(),
+            ReusedCosts::new(&inner, 4).fingerprint()
+        );
+        let id = ReusedCosts::new(&inner, 1);
+        assert_eq!(id.fingerprint(), inner.fingerprint());
+        let t = id.block_times(&b, Processor::Gpu);
+        let base = inner.block_times(&b, Processor::Gpu);
+        assert_eq!(t.t_ex, base.t_ex);
     }
 
     #[test]

@@ -27,8 +27,8 @@ pub mod cache;
 pub mod cost;
 pub mod dp;
 
-pub use cache::{PlanCache, PlanCacheConfig, PlanStats};
-pub use cost::{AnalyticCosts, CostObservation, CostProvider, Costs, MeasuredCosts};
+pub use cache::{PlanCache, PlanCacheConfig, PlanStats, DEFAULT_PINNED_BAND_BYTES};
+pub use cost::{AnalyticCosts, CostObservation, CostProvider, Costs, MeasuredCosts, ReusedCosts};
 
 use std::rc::Rc;
 
@@ -56,6 +56,27 @@ impl CostSource {
             "measured" => Some(CostSource::Measured),
             _ => None,
         }
+    }
+}
+
+/// Decode-planning context: what the autoregressive step loop knows that
+/// an ordinary inference probe does not. `pinned_bytes` is the KV-cache
+/// load currently pinned in the MemSim ledger (it shrinks the swap
+/// window the planner may use); `batch` is the number of active
+/// sequences one pipelined block sweep serves (each swapped-in block
+/// executes `batch` times, amortizing swap-in). The default (0, 1) makes
+/// [`Planner::plan_decode`] identical to [`Planner::plan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanContext {
+    /// Bytes pinned for KV caches, charged against the budget.
+    pub pinned_bytes: u64,
+    /// Decode batch width (per-step execution reuse per block).
+    pub batch: usize,
+}
+
+impl Default for PlanContext {
+    fn default() -> PlanContext {
+        PlanContext { pinned_bytes: 0, batch: 1 }
     }
 }
 
@@ -170,6 +191,30 @@ impl Planner {
         t
     }
 
+    /// [`Self::table`] with an explicit provider (the decode path's
+    /// batch-scaled costs). Tables are keyed by the provider's own
+    /// fingerprint, so batch-2 and batch-8 frontiers never alias each
+    /// other or the plain tables.
+    fn table_with(
+        &mut self,
+        model: &ModelInfo,
+        n: usize,
+        spec: &PipelineSpec,
+        costs: &dyn CostProvider,
+    ) -> Rc<LookupTable> {
+        let fp = costs.fingerprint();
+        let chain = cost::model_fingerprint(model);
+        if let Some(t) = self.cache.get_table(&model.name, chain, spec, n, fp) {
+            return t;
+        }
+        let out = dp::frontier(model, n, costs, spec);
+        self.dp_evals += out.evals;
+        self.capped_frontiers += u64::from(out.capped);
+        let t = Rc::new(LookupTable { model: model.name.clone(), n_blocks: n, rows: out.rows });
+        self.cache.put_table(&model.name, chain, spec, n, fp, &t);
+        t
+    }
+
     /// Pre-build frontier tables for a block-count range (the adaptive
     /// scheduler's offline phase).
     pub fn warm(&mut self, model: &ModelInfo, n_range: std::ops::RangeInclusive<usize>, spec: &PipelineSpec) {
@@ -198,6 +243,57 @@ impl Planner {
             plan_walk(model, budget, spec, &dm, &mut table_for)?
         };
         self.cache.put_plan(&model.name, chain, spec, budget, fp, &sched);
+        Ok(sched)
+    }
+
+    /// Decode-aware planning: [`Self::plan`] with the per-step reuse
+    /// dimension and the KV-reduced swap window.
+    ///
+    /// The effective budget is reduced by the *ceiling* of the pinned
+    /// band `ctx.pinned_bytes` falls in (multiples of
+    /// [`DEFAULT_PINNED_BAND_BYTES`]), so every probe within a band is
+    /// an exact cache key match and the resulting plan stays feasible as
+    /// KV grows toward the band edge — growth re-plans are cache probes,
+    /// not recomputes. Execution costs are scaled by `ctx.batch` through
+    /// [`ReusedCosts`], so the interval DP trades partition granularity
+    /// against the batch-amortized swap economics. The returned
+    /// schedule's `budget_bytes`/`peak_bytes` are relative to the
+    /// effective (KV-reduced) budget. With `ctx == PlanContext::default()`
+    /// this is byte-identical to [`Self::plan`] — same keys, same plans.
+    pub fn plan_decode(
+        &mut self,
+        model: &ModelInfo,
+        budget: u64,
+        spec: &PipelineSpec,
+        ctx: PlanContext,
+    ) -> Result<Schedule, String> {
+        let pinned_band = if ctx.pinned_bytes == 0 {
+            0
+        } else {
+            ctx.pinned_bytes / DEFAULT_PINNED_BAND_BYTES + 1
+        };
+        let eff = budget.saturating_sub(pinned_band * DEFAULT_PINNED_BAND_BYTES);
+        if eff == 0 {
+            return Err(format!(
+                "{}: pinned KV load {} B leaves no swap window under budget {} B",
+                model.name, ctx.pinned_bytes, budget
+            ));
+        }
+        let batch = ctx.batch.max(1);
+        let chain = cost::model_fingerprint(model);
+        let rc = ReusedCosts::new(self.costs.provider(), batch);
+        let fp = rc.fingerprint();
+        if let Some(s) =
+            self.cache.get_plan_at(&model.name, chain, spec, eff, fp, pinned_band, batch)
+        {
+            return Ok(s);
+        }
+        let dm = rc.delay_model().clone();
+        let sched = {
+            let mut table_for = |n: usize| self.table_with(model, n, spec, &rc);
+            plan_walk(model, eff, spec, &dm, &mut table_for)?
+        };
+        self.cache.put_plan_at(&model.name, chain, spec, eff, fp, pinned_band, batch, &sched);
         Ok(sched)
     }
 }
@@ -429,6 +525,92 @@ mod tests {
         let s1_again = p.plan(&a, 120 * MB, &spec).unwrap();
         assert_eq!(s1_again.points, s1.points);
         assert_eq!(p.stats().dp_evals, evals);
+    }
+
+    #[test]
+    fn plan_decode_default_context_is_plain_plan() {
+        let prof = DeviceProfile::jetson_nx();
+        let mut p = Planner::analytic(&prof);
+        let m = families::resnet101();
+        let spec = PipelineSpec::default();
+        let a = p.plan(&m, 120 * MB, &spec).unwrap();
+        // The default-context decode probe hits the SAME cache entry.
+        let hits = p.stats().hits;
+        let b = p.plan_decode(&m, 120 * MB, &spec, PlanContext::default()).unwrap();
+        assert_eq!(p.stats().hits, hits + 1, "shared key with plain plan()");
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.predicted_latency_s, b.predicted_latency_s);
+        assert_eq!(a.peak_bytes, b.peak_bytes);
+    }
+
+    #[test]
+    fn plan_decode_shrinks_window_by_pinned_band_ceiling() {
+        let prof = DeviceProfile::jetson_nx();
+        let mut p = Planner::analytic(&prof);
+        let m = families::llama7b();
+        let spec = PipelineSpec::default();
+        let budget = 2 * 1024 * MB;
+        let plain = p.plan_decode(&m, budget, &spec, PlanContext::default()).unwrap();
+        let pinned = 300 * MB;
+        let ctx = PlanContext { pinned_bytes: pinned, batch: 1 };
+        let s = p.plan_decode(&m, budget, &spec, ctx).unwrap();
+        let band = pinned / DEFAULT_PINNED_BAND_BYTES + 1;
+        let eff = budget - band * DEFAULT_PINNED_BAND_BYTES;
+        assert_eq!(s.budget_bytes, eff, "planned against the KV-reduced window");
+        assert!(s.peak_bytes <= scheduler::usable_budget(&m, eff));
+        assert!(s.n_blocks >= plain.n_blocks, "less window, same or finer partition");
+        // KV growth within the band is a pure cache probe.
+        let hits = p.stats().hits;
+        let evals = p.stats().dp_evals;
+        let grown = PlanContext { pinned_bytes: pinned + MB, batch: 1 };
+        let s2 = p.plan_decode(&m, budget, &spec, grown).unwrap();
+        assert_eq!(p.stats().hits, hits + 1);
+        assert_eq!(p.stats().dp_evals, evals, "no DP on a within-band re-plan");
+        assert_eq!(s2.points, s.points);
+        // Crossing the band edge re-plans against a smaller window.
+        let crossed = PlanContext { pinned_bytes: band * DEFAULT_PINNED_BAND_BYTES + 1, batch: 1 };
+        let s3 = p.plan_decode(&m, budget, &spec, crossed).unwrap();
+        assert_eq!(s3.budget_bytes, eff - DEFAULT_PINNED_BAND_BYTES);
+    }
+
+    #[test]
+    fn plan_decode_batch_amortizes_swap_per_token() {
+        // The reuse dimension: at batch b the planned sweep latency is
+        // less than b times the batch-1 latency on an IO-bound chain
+        // (swap-in is paid once per block, execution b times).
+        let prof = DeviceProfile::jetson_nx();
+        let mut p = Planner::analytic(&prof);
+        let m = families::llama7b();
+        let spec = PipelineSpec::default();
+        let budget = 2 * 1024 * MB;
+        let s1 = p.plan_decode(&m, budget, &spec, PlanContext::default()).unwrap();
+        let s8 = p
+            .plan_decode(&m, budget, &spec, PlanContext { pinned_bytes: 0, batch: 8 })
+            .unwrap();
+        let per_tok_1 = s1.predicted_latency_s;
+        let per_tok_8 = s8.predicted_latency_s / 8.0;
+        assert!(
+            per_tok_8 < per_tok_1 / 2.0,
+            "batch-8 decode must amortize: {per_tok_8} vs {per_tok_1}"
+        );
+        // Distinct batch widths never alias in the cache.
+        let s8_again = p
+            .plan_decode(&m, budget, &spec, PlanContext { pinned_bytes: 0, batch: 8 })
+            .unwrap();
+        assert_eq!(s8_again.points, s8.points);
+        assert_eq!(s8_again.predicted_latency_s, s8.predicted_latency_s);
+    }
+
+    #[test]
+    fn plan_decode_kv_overload_is_a_graceful_error() {
+        let prof = DeviceProfile::jetson_nx();
+        let mut p = Planner::analytic(&prof);
+        let m = families::llama7b();
+        let spec = PipelineSpec::default();
+        let budget = 2 * 1024 * MB;
+        let ctx = PlanContext { pinned_bytes: budget, batch: 2 };
+        let err = p.plan_decode(&m, budget, &spec, ctx).unwrap_err();
+        assert!(err.contains("swap window"), "{err}");
     }
 
     #[test]

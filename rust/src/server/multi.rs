@@ -519,6 +519,8 @@ impl MultiTenantServer {
                 compute_s: ev.compute_s,
                 e2e_s: ev.t_done - r.arrival_s,
                 batch: k,
+                tokens: 1,
+                s_per_token: ev.t_done - ev.t_dispatch,
             });
         }
         rep.record_batch(&name);
@@ -731,6 +733,8 @@ impl MultiTenantServer {
                                     compute_s: done.compute_s,
                                     e2e_s: now - r.arrival_s,
                                     batch: k,
+                                    tokens: 1,
+                                    s_per_token: now - t_dispatch,
                                 });
                             }
                             rep.record_batch(&name);

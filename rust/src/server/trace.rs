@@ -35,6 +35,12 @@ pub struct ServeTrace {
     pub e2e_s: f64,
     /// Batch size the request was served in.
     pub batch: usize,
+    /// Tokens produced for this request. 1 for one-shot inference;
+    /// the decode length for LLM serving (`llm` subsystem).
+    pub tokens: usize,
+    /// Decode-loop latency per generated token (excludes queueing).
+    /// Equal to `e2e_s - queue_s` for single-token requests.
+    pub s_per_token: f64,
 }
 
 /// Per-model serving aggregates.
@@ -168,6 +174,8 @@ mod tests {
             compute_s: 0.4,
             e2e_s: e2e,
             batch: 2,
+            tokens: 1,
+            s_per_token: e2e - 0.1,
         }
     }
 

@@ -346,3 +346,46 @@ fn plan_cache_bytes_bounded_under_register_evict_thrash() {
     let plan = rep.plan.expect("serve stamps planner stats");
     assert!(plan.bytes <= cap);
 }
+
+#[test]
+fn plan_cache_is_not_blind_to_pinned_kv_load() {
+    // Regression: two tenants with IDENTICAL chains but different pinned
+    // KV loads must not share a cached schedule — the KV-heavy tenant
+    // plans against a smaller swap window, so a shared entry would hand
+    // it a partition whose peak overflows its real headroom.
+    use swapnet::engine::PlanContext;
+    let engine = Engine::builder().build();
+    let model = families::llama7b();
+    let budget = 2048 * MB;
+    let light = engine
+        .plan_decode(&model, budget, PlanContext { pinned_bytes: 0, batch: 1 })
+        .unwrap();
+    let heavy_kv = 900 * MB;
+    let heavy = engine
+        .plan_decode(&model, budget, PlanContext { pinned_bytes: heavy_kv, batch: 1 })
+        .unwrap();
+    assert!(
+        heavy.budget_bytes < light.budget_bytes,
+        "heavy tenant must see the KV-reduced window: {} vs {}",
+        heavy.budget_bytes,
+        light.budget_bytes
+    );
+    assert!(
+        heavy.peak_bytes + heavy_kv <= budget,
+        "heavy tenant's schedule must fit beside its KV: peak {} + kv {heavy_kv} > {budget}",
+        heavy.peak_bytes
+    );
+    // Both entries live side by side: re-probing either context is a
+    // cache hit, not a recompute, and returns that context's own plan.
+    let st0 = engine.plan_stats();
+    let light2 = engine
+        .plan_decode(&model, budget, PlanContext { pinned_bytes: 0, batch: 1 })
+        .unwrap();
+    let heavy2 = engine
+        .plan_decode(&model, budget, PlanContext { pinned_bytes: heavy_kv, batch: 1 })
+        .unwrap();
+    let st = engine.plan_stats();
+    assert_eq!(st.hits, st0.hits + 2, "re-probes must hit their own entries");
+    assert_eq!(light2.points, light.points);
+    assert_eq!(heavy2.points, heavy.points);
+}

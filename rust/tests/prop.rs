@@ -514,6 +514,106 @@ fn prop_memsim_accounting_consistent() {
     });
 }
 
+#[test]
+fn prop_pinned_bytes_never_evicted_and_never_double_counted() {
+    // The pinned class is a persistent residency ledger: random
+    // interleavings of pinned allocs/grows with ordinary swap traffic
+    // must (a) keep every live pin's bytes visible until freed, (b)
+    // account pinned bytes in Space::Pinned only — swap spaces' peaks
+    // stay truthful, untouched by KV load.
+    cases(150, |rng| {
+        let total = 500_000_000u64;
+        let mut mem = MemSim::new(total);
+        let mut pins: Vec<(swapnet::memsim::AllocId, u64)> = Vec::new();
+        let mut expect_pinned = 0u64;
+        let mut swap_peak_seen = 0u64;
+        for _ in 0..150 {
+            match rng.below(4) {
+                0 => {
+                    let sz = 1 + rng.next_u64() % 5_000_000;
+                    if let Ok(id) = mem.try_alloc_pinned("kv", sz) {
+                        pins.push((id, sz));
+                        expect_pinned += sz;
+                    }
+                }
+                1 if !pins.is_empty() => {
+                    let i = rng.below(pins.len());
+                    let delta = 1 + rng.next_u64() % 1_000_000;
+                    if mem.try_grow_pinned(pins[i].0, delta).is_ok() {
+                        pins[i].1 += delta;
+                        expect_pinned += delta;
+                    }
+                }
+                2 if !pins.is_empty() => {
+                    let i = rng.below(pins.len());
+                    let (id, sz) = pins.swap_remove(i);
+                    mem.free(id);
+                    expect_pinned -= sz;
+                }
+                _ => {
+                    // Transient swap traffic in an ordinary space.
+                    let sz = 1 + rng.next_u64() % 5_000_000;
+                    let id = mem.alloc("sweep", Space::Unified, sz);
+                    swap_peak_seen = swap_peak_seen.max(sz);
+                    mem.free(id);
+                }
+            }
+            assert_eq!(mem.pinned_bytes(), expect_pinned, "pinned ledger drifted");
+            assert_eq!(mem.current_in(Space::Pinned), expect_pinned);
+            for (id, sz) in &pins {
+                assert_eq!(mem.size_of(*id), Some(*sz), "a live pin was evicted");
+            }
+            assert!(
+                mem.peak_in(Space::Unified) <= swap_peak_seen,
+                "pinned bytes leaked into a swap space's peak: {} > {}",
+                mem.peak_in(Space::Unified),
+                swap_peak_seen
+            );
+        }
+        // The overall peak counts pinned + swap together exactly once.
+        assert!(mem.peak() <= expect_pinned.max(mem.peak_in(Space::Pinned)) + swap_peak_seen);
+    });
+}
+
+#[test]
+fn prop_pinned_growth_beyond_budget_fails_gracefully() {
+    // KV growth alone hitting the budget must surface as a typed
+    // AllocError — never a panic, never an overcommit (oom_events is
+    // the ordinary spaces' overcommit counter and stays 0).
+    cases(150, |rng| {
+        let total = 1 + rng.next_u64() % 50_000_000;
+        let mut mem = MemSim::new(total);
+        let first = 1 + rng.next_u64() % total;
+        let id = mem.try_alloc_pinned("kv", first).expect("first pin fits");
+        let step = 100_000 + rng.next_u64() % 1_000_000;
+        let mut pinned = first;
+        loop {
+            match mem.try_grow_pinned(id, step) {
+                Ok(()) => {
+                    pinned += step;
+                    assert!(pinned <= total);
+                }
+                Err(e) => {
+                    assert_eq!(e.requested, step);
+                    assert_eq!(e.available, total - pinned, "{e}");
+                    assert!(e.requested > e.available);
+                    break;
+                }
+            }
+        }
+        // The refused growth changed nothing.
+        assert_eq!(mem.pinned_bytes(), pinned);
+        assert_eq!(mem.size_of(id), Some(pinned));
+        assert_eq!(mem.oom_events, 0, "the checked path never overcommits");
+        assert!(mem.current() <= total);
+        // An oversized fresh pin is refused the same way.
+        let err = mem.try_alloc_pinned("kv2", total).unwrap_err();
+        assert_eq!(err.available, total - pinned);
+        mem.free(id);
+        assert_eq!(mem.pinned_bytes(), 0);
+    });
+}
+
 // ---------------------------------------------------------------------
 // JSON roundtrip
 // ---------------------------------------------------------------------
