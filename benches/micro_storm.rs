@@ -1,0 +1,132 @@
+//! Micro-bench: the event-driven serving reactor under an open-loop
+//! arrival storm, emitted as deterministic `dev_*` metrics for the CI
+//! bench gate.
+//!
+//! 1. **p99 under storm** — a Poisson storm offers 2x10^4 req/s to a
+//!    3-model fleet whose footprint exceeds the budget; the fleet-wide
+//!    end-to-end latency histogram's p99/p999 are gated. Open-loop
+//!    arrivals keep coming no matter how far behind the reactor falls,
+//!    so these tails reflect genuine queueing, not coordinated omission.
+//! 2. **Shed rate and swap-channel utilization** — overload must shed
+//!    through the admission policy (bounded queues), never through the
+//!    ledger; the swap DMA channel's busy fraction is gated as its idle
+//!    complement (lower = busier = better).
+//! 3. **Determinism** — the same storm is served twice on fresh engines
+//!    and the two reports' [`determinism_key`]s must match exactly;
+//!    the gated metric is `mismatch + 1` so any divergence doubles it.
+//! 4. **Budget safety** — zero MemSim ledger violations across every
+//!    scenario (gated via `oom_plus1`).
+//!
+//! Everything runs on the analytic cost model over the virtual clock —
+//! no jitter, so the metrics are bitwise deterministic. `--json <path>`
+//! emits machine-readable metrics; `--no-wall` drops the wall-clock
+//! metric so two emissions byte-compare; `--smoke` is accepted for CLI
+//! uniformity (the storm here is already cheap).
+//!
+//! [`determinism_key`]: swapnet::server::MultiServeReport::determinism_key
+
+use std::time::Instant;
+
+use swapnet::config::MB;
+use swapnet::engine::Engine;
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
+use swapnet::model::families;
+use swapnet::server::multi::{MultiTenantConfig, MultiTenantServer};
+use swapnet::server::{LoadGen, MultiServeReport};
+
+const REQUESTS: usize = 30_000;
+const RATE_HZ: f64 = 20_000.0;
+
+fn storm_server() -> MultiTenantServer {
+    let engine = Engine::builder().build();
+    let mut cfg = MultiTenantConfig::new(300 * MB);
+    cfg.queue_cap = 16;
+    cfg.max_batch = 8;
+    cfg.sample_dt_s = 0.25;
+    let mut server = MultiTenantServer::new(engine, cfg);
+    for m in [families::resnet101(), families::yolov3(), families::fcn()] {
+        server.register(m, 1.0).expect("fleet partitions under 300 MB");
+    }
+    server
+}
+
+fn run_storm(load: &LoadGen) -> MultiServeReport {
+    let mut server = storm_server();
+    let rep = server.serve_load(load).expect("storm serves");
+    assert!(
+        rep.within_budget(),
+        "budget violated under storm: oom={} peak={}",
+        rep.oom_events,
+        rep.peak_bytes
+    );
+    assert_eq!(rep.resolved(), REQUESTS, "every arrival resolves: {rep:?}");
+    rep
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("micro_storm");
+    println!("=== micro: open-loop storm on the serving reactor ===\n");
+
+    let t0 = Instant::now();
+    let load = LoadGen::poisson(3, REQUESTS, RATE_HZ, 1);
+    // The offered rate is an open-loop fact of the stream, not of the
+    // server: verify the generator really drives >= 10^4 req/s.
+    let last = load.iter().last().expect("non-empty stream").arrival_s;
+    let offered = REQUESTS as f64 / last;
+    assert!(offered >= 1e4, "storm must offer >= 10^4 req/s, got {offered:.0}");
+
+    // ---- 1. tail latency + shed under the Poisson storm ---------------
+    let rep = run_storm(&load);
+    let p99 = rep.hist.p(99.0);
+    let p999 = rep.hist.p(99.9);
+    println!(
+        "poisson storm: {} arrivals at {:.0} req/s offered; served {} ({} shed, {} rejected)",
+        REQUESTS, offered, rep.served, rep.shed, rep.rejected
+    );
+    println!(
+        "latency p50 {:.3}s p99 {:.3}s p999 {:.3}s over {:.2}s makespan",
+        rep.hist.p(50.0),
+        p99,
+        p999,
+        rep.makespan_s
+    );
+    assert!(rep.served > 0, "overload still serves the admitted head of queue");
+    assert_eq!(rep.hist.len(), rep.served as u64, "histogram sees every served request");
+    emit.metric("dev_storm_p99_s", p99);
+    emit.metric("dev_storm_p999_s", p999);
+    emit.metric("dev_storm_shed_rate", rep.shed_rate());
+
+    // ---- 2. swap-channel occupancy ------------------------------------
+    let util = rep.swap_channel_utilization();
+    println!(
+        "swap channels: {} busy {:.2}s ({:.1}% utilized), {} batch starts deferred",
+        rep.swap_channels,
+        rep.swap_busy_s,
+        100.0 * util,
+        rep.deferred_batches
+    );
+    assert!(util > 0.0 && util <= 1.0, "utilization in (0, 1]: {util}");
+    let series = rep.series.as_ref().expect("sample_dt_s > 0 records a series");
+    assert!(series.samples() > 0, "the storm spans at least one sampling tick");
+    println!("series: {} samples, peak queue depth {}", series.samples(), series.max_depth());
+    emit.metric("dev_storm_swap_idle_frac", 1.0 - util);
+
+    // ---- 3. bit-identical reports across repeated runs ----------------
+    let rep2 = run_storm(&load);
+    let mismatch = u64::from(rep.determinism_key() != rep2.determinism_key());
+    assert_eq!(mismatch, 0, "same storm, same report — the reactor is deterministic");
+    println!("\ndeterminism: two fresh runs produced identical report keys");
+    emit.metric("dev_storm_determinism_mismatch_plus1", (mismatch + 1) as f64);
+
+    // ---- 4. budget safety across every scenario above -----------------
+    let oom = rep.oom_events + rep2.oom_events;
+    assert_eq!(oom, 0, "zero ledger violations under storm");
+    emit.metric("dev_storm_oom_plus1", (oom + 1) as f64);
+    emit.metric("wall_storm_s", t0.elapsed().as_secs_f64());
+
+    emit.finish(&args).expect("write bench json");
+    println!(
+        "\nstorm invariants hold: >=10^4 req/s offered, 0 OOM, bit-identical repeated reports"
+    );
+}

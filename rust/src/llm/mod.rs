@@ -19,12 +19,16 @@
 //!    [`crate::server::admission`]), so the batch composition tracks the
 //!    request stream.
 //!
-//! The loop runs on the engine's virtual clock against the shared
-//! planner: each step is a [`Engine::plan_decode`] probe (answered from
-//! the plan cache unless the KV load crossed a band or the batch width
-//! changed) followed by one [`timeline_spec`] sweep. The ledger proves
-//! budget safety: pinned KV plus the sweep's transient block residency
-//! never exceeds the budget, or `oom_events` says so.
+//! The loop runs on the serving reactor's virtual clock
+//! ([`EventQueue`] — the same deterministic scheduler the multi-tenant
+//! server uses): request arrivals and decode-step completions are
+//! timestamped events, the batch composition is frozen for each sweep,
+//! and admission/joins happen at step boundaries. Each step is a
+//! [`Engine::plan_decode`] probe (answered from the plan cache unless
+//! the KV load crossed a band or the batch width changed) followed by
+//! one [`timeline_spec`] sweep. The ledger proves budget safety: pinned
+//! KV plus the sweep's transient block residency never exceeds the
+//! budget, or `oom_events` says so.
 
 use std::collections::VecDeque;
 
@@ -38,6 +42,7 @@ use crate::model::{families, ModelInfo};
 use crate::pipeline::{timeline_spec, BlockTimes};
 use crate::planner::PlanStats;
 use crate::server::admission::{Admission, AdmissionPolicy, TenantQueue, Verdict};
+use crate::server::reactor::EventQueue;
 use crate::server::trace::ServeTrace;
 use crate::util::rng::Rng;
 
@@ -193,193 +198,276 @@ pub fn serve_decode(
     serve_decode_stream(engine, model, cfg, &reqs)
 }
 
-/// Serve an explicit request stream (ascending `arrival_s`).
-///
-/// The step loop: admit arrivals, join waiting sequences while their
-/// prefill KV pins fit AND a feasible plan remains, run one pipelined
-/// block sweep for the whole batch (planned against the KV-reduced
-/// window, execution cost scaled by the batch width), grow every
-/// survivor's KV pin by one position, retire finished sequences.
-pub fn serve_decode_stream(
-    engine: &Engine,
-    model: &ModelInfo,
-    cfg: &LlmServeConfig,
-    reqs: &[DecodeRequest],
-) -> Result<DecodeReport> {
-    let kv_pos = families::kv_bytes_per_position(model);
-    let dm = engine.delay_model();
-    let spec = engine.config().pipeline;
-    let mut ledger = MemSim::new(cfg.budget);
-    let mut rep = DecodeReport {
-        model: model.name.clone(),
-        budget: cfg.budget,
-        served: 0,
-        rejected: 0,
-        shed: 0,
-        tokens: 0,
-        steps: 0,
-        makespan_s: 0.0,
-        per_token: LatencyRecorder::new(),
-        swap_io_s: 0.0,
-        compute_s: 0.0,
-        peak_bytes: 0,
-        pinned_peak_bytes: 0,
-        oom_events: 0,
-        plan: None,
-        pool: None,
-        traces: Vec::new(),
-    };
-    let mut clock = 0.0f64;
-    let mut next = 0usize;
-    let mut waiting: VecDeque<DecodeRequest> = VecDeque::new();
-    let mut active: Vec<ActiveSeq> = Vec::new();
+/// Reactor events of the decode loop: arrivals and decode-step ticks on
+/// the same virtual clock (and the same [`EventQueue`] scheduler) the
+/// multi-tenant server runs on.
+enum LlmEv {
+    /// A request arrives (armed one at a time — lazy stream pull).
+    Arrive(DecodeRequest),
+    /// The in-flight block sweep finishes.
+    StepDone(Step),
+}
 
-    loop {
-        if active.is_empty() && waiting.is_empty() {
-            if next >= reqs.len() {
-                break;
-            }
-            // Idle: jump the clock to the next arrival.
-            clock = clock.max(reqs[next].arrival_s);
-        }
-        // Admission: bounded queue over (waiting + active) backlog.
-        while next < reqs.len() && reqs[next].arrival_s <= clock {
-            let q = [TenantQueue { len: waiting.len() + active.len(), score: 1.0 }];
-            match cfg.admission.decide(0, true, &q) {
+/// One scheduled sweep, captured at step start. The batch composition
+/// is frozen for the sweep's duration — arrivals landing mid-step wait
+/// in the ingress buffer until the step retires.
+struct Step {
+    batch: usize,
+    step_s: f64,
+    io_s: f64,
+    ex_s: f64,
+}
+
+/// Decode-loop state threaded through the reactor events.
+struct DecodeLoop<'a> {
+    engine: &'a Engine,
+    model: &'a ModelInfo,
+    cfg: &'a LlmServeConfig,
+    kv_pos: u64,
+    ledger: MemSim,
+    rep: DecodeReport,
+    /// Arrived but not yet admission-decided: decisions happen at step
+    /// boundaries against the then-current backlog, exactly as the old
+    /// step loop made them.
+    arrived: VecDeque<DecodeRequest>,
+    waiting: VecDeque<DecodeRequest>,
+    active: Vec<ActiveSeq>,
+    /// True while a sweep is in flight (one step at a time).
+    stepping: bool,
+}
+
+impl DecodeLoop<'_> {
+    /// Admission: bounded queue over the (waiting + active) backlog.
+    fn admit_arrived(&mut self) {
+        while let Some(r) = self.arrived.pop_front() {
+            let q = [TenantQueue {
+                len: self.waiting.len() + self.active.len(),
+                score: 1.0,
+            }];
+            match self.cfg.admission.decide(0, true, &q) {
                 Verdict::Admit | Verdict::AdmitShedding { .. } => {
-                    waiting.push_back(reqs[next].clone());
+                    self.waiting.push_back(r);
                 }
-                Verdict::Reject => rep.rejected += 1,
+                Verdict::Reject => self.rep.rejected += 1,
             }
-            next += 1;
         }
-        // Continuous batching: join while the batch has room, the prefill
-        // KV pin fits, and the planner still finds a swap window.
-        while active.len() < cfg.max_batch.max(1) {
-            let Some(head) = waiting.front() else { break };
-            let kv0 = head.prefill_kv_bytes(kv_pos);
-            let pin = match ledger.try_alloc_pinned(&format!("kv-{}", head.id), kv0) {
+    }
+
+    /// Continuous batching: join while the batch has room, the prefill
+    /// KV pin fits, and the planner still finds a swap window.
+    fn join_waiting(&mut self, now: f64) {
+        while self.active.len() < self.cfg.max_batch.max(1) {
+            let Some(head) = self.waiting.front() else { break };
+            let kv0 = head.prefill_kv_bytes(self.kv_pos);
+            let pin = match self
+                .ledger
+                .try_alloc_pinned(&format!("kv-{}", head.id), kv0)
+            {
                 Ok(id) => id,
                 Err(_) => break, // no headroom now; retry after retirements
             };
             let probe = PlanContext {
-                pinned_bytes: ledger.pinned_bytes(),
-                batch: active.len() + 1,
+                pinned_bytes: self.ledger.pinned_bytes(),
+                batch: self.active.len() + 1,
             };
-            if engine.plan_decode(model, cfg.budget, probe).is_err() {
+            if self.engine.plan_decode(self.model, self.cfg.budget, probe).is_err() {
                 // Joining would erase the swap window entirely.
-                ledger.free(pin);
+                self.ledger.free(pin);
                 break;
             }
-            let req = waiting.pop_front().unwrap();
-            active.push(ActiveSeq {
+            let req = self.waiting.pop_front().unwrap();
+            self.active.push(ActiveSeq {
                 req,
-                admit_s: clock,
+                admit_s: now,
                 produced: 0,
                 pin,
                 swap_share_s: 0.0,
                 compute_s: 0.0,
             });
         }
-        if active.is_empty() {
-            // Nothing running and the head can never fit: refuse it
-            // rather than stall the stream forever.
-            if waiting.pop_front().is_some() {
-                rep.rejected += 1;
-                continue;
-            }
-            if next >= reqs.len() {
-                break;
-            }
-            clock = reqs[next].arrival_s;
-            continue;
-        }
+    }
 
-        // One pipelined block sweep serves the whole batch. KV growth
-        // can shrink the window below feasibility between steps; that is
-        // an overload signal, not an error — shed the youngest sequence
-        // (least sunk work) and retry with the freed headroom.
-        let mut planned = None;
-        while !active.is_empty() {
-            let ctx = PlanContext {
-                pinned_bytes: ledger.pinned_bytes(),
-                batch: active.len(),
-            };
-            match engine.plan_decode(model, cfg.budget, ctx) {
-                Ok(s) => {
-                    planned = Some(s);
-                    break;
+    /// Form and launch the next sweep if there is (or can be joined) an
+    /// active batch: plan against the KV-reduced window (shedding the
+    /// youngest sequence on infeasibility — least sunk work), charge the
+    /// sweep's transient residency, and schedule its completion tick.
+    fn try_start_step(&mut self, now: f64, q: &mut EventQueue<LlmEv>) -> Result<()> {
+        debug_assert!(!self.stepping);
+        self.admit_arrived();
+        loop {
+            self.join_waiting(now);
+            if self.active.is_empty() {
+                // Nothing running and the head can never fit: refuse it
+                // rather than stall the stream forever.
+                if self.waiting.pop_front().is_some() {
+                    self.rep.rejected += 1;
+                    continue;
                 }
-                Err(_) => {
-                    let victim = active.pop().expect("non-empty batch");
-                    ledger.free(victim.pin);
-                    rep.shed += 1;
+                return Ok(()); // idle until the next arrival
+            }
+            // KV growth can shrink the window below feasibility between
+            // steps; that is an overload signal, not an error.
+            let mut planned = None;
+            while !self.active.is_empty() {
+                let ctx = PlanContext {
+                    pinned_bytes: self.ledger.pinned_bytes(),
+                    batch: self.active.len(),
+                };
+                match self.engine.plan_decode(self.model, self.cfg.budget, ctx) {
+                    Ok(s) => {
+                        planned = Some(s);
+                        break;
+                    }
+                    Err(_) => {
+                        let victim = self.active.pop().expect("non-empty batch");
+                        self.ledger.free(victim.pin);
+                        self.rep.shed += 1;
+                    }
                 }
             }
+            // Whole batch shed: re-join from the queue with the freed
+            // headroom (or refuse unfittable heads above).
+            let Some(sched) = planned else { continue };
+            let batch = self.active.len();
+            let blocks = self.model.create_blocks(&sched.points).map_err(Error::msg)?;
+            let dm = self.engine.delay_model();
+            let spec = self.engine.config().pipeline;
+            let times: Vec<BlockTimes> = blocks
+                .iter()
+                .map(|b| BlockTimes {
+                    t_in: dm.t_in(b),
+                    // Each resident block runs once per active sequence
+                    // before being replaced — execution scales, I/O
+                    // doesn't.
+                    t_ex: dm.t_ex(b, self.model.processor) * batch as f64,
+                    t_out: dm.t_out(b),
+                })
+                .collect();
+            let step_s = timeline_spec(&times, &spec).latency();
+            let io_s: f64 = times.iter().map(|t| t.t_in).sum();
+            let ex_s: f64 =
+                blocks.iter().map(|b| dm.t_ex(b, self.model.processor)).sum();
+            // Charge the sweep's transient block residency while the KV
+            // pins are live — this is the run's budget-violation check.
+            let sweep = self.ledger.alloc("sweep", Space::Unified, sched.peak_bytes);
+            self.ledger.free(sweep);
+            self.stepping = true;
+            q.push(now + step_s, LlmEv::StepDone(Step { batch, step_s, io_s, ex_s }));
+            return Ok(());
         }
-        let Some(sched) = planned else { continue };
-        let batch = active.len();
-        let blocks = model.create_blocks(&sched.points).map_err(Error::msg)?;
-        let times: Vec<BlockTimes> = blocks
-            .iter()
-            .map(|b| BlockTimes {
-                t_in: dm.t_in(b),
-                // Each resident block runs once per active sequence
-                // before being replaced — execution scales, I/O doesn't.
-                t_ex: dm.t_ex(b, model.processor) * batch as f64,
-                t_out: dm.t_out(b),
-            })
-            .collect();
-        let step_s = timeline_spec(&times, &spec).latency();
-        let io_s: f64 = times.iter().map(|t| t.t_in).sum();
-        let ex_s: f64 = blocks.iter().map(|b| dm.t_ex(b, model.processor)).sum();
-        // Charge the sweep's transient block residency while the KV pins
-        // are live — this is the run's budget-violation check.
-        let sweep = ledger.alloc("sweep", Space::Unified, sched.peak_bytes);
-        ledger.free(sweep);
-        clock += step_s;
-        rep.steps += 1;
-        rep.swap_io_s += io_s;
-        rep.compute_s += ex_s * batch as f64;
+    }
 
-        // Every active sequence emits one token and grows its KV by one
-        // position; finished (or unpinnable) sequences retire.
+    /// Retire a sweep at its completion tick: every active sequence
+    /// emits one token and grows its KV by one position; finished (or
+    /// unpinnable) sequences retire.
+    fn finish_step(&mut self, now: f64, st: Step) {
+        self.rep.steps += 1;
+        self.rep.swap_io_s += st.io_s;
+        self.rep.compute_s += st.ex_s * st.batch as f64;
         let mut i = 0;
-        while i < active.len() {
-            let s = &mut active[i];
+        while i < self.active.len() {
+            let s = &mut self.active[i];
             s.produced += 1;
-            s.swap_share_s += io_s / batch as f64;
-            s.compute_s += ex_s;
-            rep.tokens += 1;
-            rep.per_token.record(step_s);
+            s.swap_share_s += st.io_s / st.batch as f64;
+            s.compute_s += st.ex_s;
+            self.rep.tokens += 1;
+            self.rep.per_token.record(st.step_s);
             let finished = s.produced >= s.req.new_tokens;
-            let evicted = !finished && ledger.try_grow_pinned(s.pin, kv_pos).is_err();
+            let evicted =
+                !finished && self.ledger.try_grow_pinned(s.pin, self.kv_pos).is_err();
             if finished || evicted {
-                let s = active.swap_remove(i);
-                ledger.free(s.pin);
+                let s = self.active.swap_remove(i);
+                self.ledger.free(s.pin);
                 if evicted {
-                    rep.shed += 1;
+                    self.rep.shed += 1;
                 } else {
-                    rep.served += 1;
-                    rep.traces.push(ServeTrace {
-                        model: model.name.clone(),
+                    self.rep.served += 1;
+                    self.rep.traces.push(ServeTrace {
+                        model: self.model.name.clone(),
                         queue_s: s.admit_s - s.req.arrival_s,
                         swap_s: s.swap_share_s,
                         assembly_s: 0.0,
                         compute_s: s.compute_s,
-                        e2e_s: clock - s.req.arrival_s,
-                        batch,
+                        e2e_s: now - s.req.arrival_s,
+                        batch: st.batch,
                         tokens: s.produced,
-                        s_per_token: (clock - s.admit_s) / s.produced.max(1) as f64,
+                        s_per_token: (now - s.admit_s) / s.produced.max(1) as f64,
                     });
                 }
             } else {
                 i += 1;
             }
         }
-        rep.makespan_s = clock;
+        self.rep.makespan_s = now;
+        self.stepping = false;
+    }
+}
+
+/// Serve an explicit request stream (ascending `arrival_s`) on the
+/// shared serving reactor: arrivals and decode-step ticks are events on
+/// one [`EventQueue`] over the virtual clock — the same scheduler the
+/// multi-tenant server runs on, with the same determinism contract.
+pub fn serve_decode_stream(
+    engine: &Engine,
+    model: &ModelInfo,
+    cfg: &LlmServeConfig,
+    reqs: &[DecodeRequest],
+) -> Result<DecodeReport> {
+    let mut dl = DecodeLoop {
+        engine,
+        model,
+        cfg,
+        kv_pos: families::kv_bytes_per_position(model),
+        ledger: MemSim::new(cfg.budget),
+        rep: DecodeReport {
+            model: model.name.clone(),
+            budget: cfg.budget,
+            served: 0,
+            rejected: 0,
+            shed: 0,
+            tokens: 0,
+            steps: 0,
+            makespan_s: 0.0,
+            per_token: LatencyRecorder::new(),
+            swap_io_s: 0.0,
+            compute_s: 0.0,
+            peak_bytes: 0,
+            pinned_peak_bytes: 0,
+            oom_events: 0,
+            plan: None,
+            pool: None,
+            traces: Vec::new(),
+        },
+        arrived: VecDeque::new(),
+        waiting: VecDeque::new(),
+        active: Vec::new(),
+        stepping: false,
+    };
+
+    let mut q: EventQueue<LlmEv> = EventQueue::new();
+    let mut stream = reqs.iter().cloned();
+    if let Some(r) = stream.next() {
+        q.push(r.arrival_s, LlmEv::Arrive(r));
+    }
+    while let Some((t, ev)) = q.pop() {
+        match ev {
+            LlmEv::Arrive(r) => {
+                if let Some(nx) = stream.next() {
+                    q.push(nx.arrival_s, LlmEv::Arrive(nx));
+                }
+                dl.arrived.push_back(r);
+                if !dl.stepping {
+                    dl.try_start_step(t, &mut q)?;
+                }
+            }
+            LlmEv::StepDone(st) => {
+                dl.finish_step(t, st);
+                dl.try_start_step(t, &mut q)?;
+            }
+        }
     }
 
+    let DecodeLoop { ledger, mut rep, .. } = dl;
     rep.peak_bytes = ledger.peak();
     rep.pinned_peak_bytes = ledger.peak_in(Space::Pinned);
     rep.oom_events = ledger.oom_events;

@@ -251,6 +251,72 @@ const COMMANDS: &[CmdSpec] = &[
         ],
     },
     CmdSpec {
+        name: "serve-storm",
+        about: "open-loop storm: event reactor under 10^4+ req/s, tail-latency CDF",
+        flags: &[
+            FlagSpec {
+                name: "models",
+                metavar: "A,B,..",
+                help: "model families to register (default resnet101,yolov3,fcn)",
+            },
+            FlagSpec {
+                name: "budget-mb",
+                metavar: "MB",
+                help: "fleet memory budget in MB (default 400)",
+            },
+            FlagSpec {
+                name: "requests",
+                metavar: "N",
+                help: "arrivals in the open-loop stream (default 50000)",
+            },
+            FlagSpec {
+                name: "rate",
+                metavar: "HZ",
+                help: "nominal offered rate across the fleet (default 20000)",
+            },
+            FlagSpec {
+                name: "process",
+                metavar: "P",
+                help: "arrival process: poisson | bursts (default poisson)",
+            },
+            FlagSpec {
+                name: "deadline",
+                metavar: "S",
+                help: "relative deadline stamped on every request (0 = none)",
+            },
+            FlagSpec {
+                name: "policy",
+                metavar: "P",
+                help: "admission policy: fifo | urgency | deadline (default urgency)",
+            },
+            FlagSpec {
+                name: "queue-cap",
+                metavar: "N",
+                help: "per-model queue bound (default 16)",
+            },
+            FlagSpec {
+                name: "max-batch",
+                metavar: "N",
+                help: "largest batch per resident window (default 8)",
+            },
+            FlagSpec {
+                name: "sample-dt",
+                metavar: "S",
+                help: "queue-depth series period, virtual seconds (default 0.25)",
+            },
+            FlagSpec {
+                name: "hist-json",
+                metavar: "PATH",
+                help: "write the latency histogram CDF as JSON",
+            },
+            FlagSpec { name: "seed", metavar: "S", help: "stream seed (default 1)" },
+            PIPELINE_M_FLAG,
+            COSTS_FLAG,
+            PLAN_CACHE_FLAG,
+            DEVICE_FLAG,
+        ],
+    },
+    CmdSpec {
         name: "overhead",
         about: "SwapNet memory + power overhead (Fig 19)",
         flags: &[DEVICE_FLAG],
@@ -434,6 +500,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&flags),
         "serve-multi" => cmd_serve_multi(&flags),
         "serve-llm" => cmd_serve_llm(&flags),
+        "serve-storm" => cmd_serve_storm(&flags),
         "overhead" => cmd_overhead(&flags),
         "table1" => cmd_table1(),
         "table2" => cmd_table2(&flags),
@@ -769,6 +836,181 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
             pool.alloc_events,
             pool.bytes_copied,
         );
+    }
+    Ok(())
+}
+
+fn cmd_serve_storm(flags: &HashMap<String, String>) -> Result<()> {
+    use swapnet::server::multi::{MultiTenantConfig, MultiTenantServer};
+    use swapnet::server::{AdmissionPolicy, LoadGen};
+    use swapnet::util::json::Json;
+
+    let names = flags.get("models").map(String::as_str).unwrap_or("resnet101,yolov3,fcn");
+    let models: Vec<_> = names
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| families::by_name(s.trim()).ok_or_else(|| anyhow!("unknown model `{s}`")))
+        .collect::<Result<_>>()?;
+    if models.is_empty() {
+        return Err(anyhow!("--models must name at least one model family"));
+    }
+    let budget = parsed::<u64>(flags, "budget-mb", 400)? * MB;
+    let requests: usize = parsed(flags, "requests", 50_000)?;
+    let rate: f64 = parsed(flags, "rate", 20_000.0)?;
+    let seed: u64 = parsed(flags, "seed", 1)?;
+    let deadline: f64 = parsed(flags, "deadline", 0.0)?;
+    let policy_name = flags.get("policy").map(String::as_str).unwrap_or("urgency");
+    let policy = AdmissionPolicy::by_name(policy_name)
+        .ok_or_else(|| anyhow!("unknown policy `{policy_name}` (fifo | urgency | deadline)"))?;
+
+    let mut cfg = MultiTenantConfig::new(budget);
+    cfg.policy = policy;
+    cfg.queue_cap = parsed(flags, "queue-cap", 16)?;
+    cfg.max_batch = parsed(flags, "max-batch", 8)?;
+    cfg.seed = seed;
+    cfg.sample_dt_s = parsed(flags, "sample-dt", 0.25)?;
+
+    let engine = Engine::builder()
+        .device(device(flags)?)
+        .pipeline_m(pipeline_m(flags)?)
+        .cost_source(cost_source(flags)?)
+        .plan_cache_bytes(plan_cache_bytes(flags)?)
+        .build();
+    let mut server = MultiTenantServer::new(engine, cfg);
+    for m in models {
+        server.register(m, 1.0)?;
+    }
+
+    let process = flags.get("process").map(String::as_str).unwrap_or("poisson");
+    let mut load = match process {
+        "poisson" => LoadGen::poisson(server.registered(), requests, rate, seed),
+        // 4:1 on/off square wave around the nominal rate, 1s-ish phases.
+        "bursts" => LoadGen::bursts(
+            server.registered(),
+            requests,
+            rate * 1.6,
+            rate * 0.4,
+            (rate as usize).max(1),
+            seed,
+        ),
+        other => return Err(anyhow!("unknown process `{other}` (poisson | bursts)")),
+    };
+    if deadline > 0.0 {
+        load = load.with_deadline(deadline);
+    }
+
+    let fleet = server.fleet_bytes();
+    println!(
+        "serve-storm: {} models, footprint {} over budget {} ({:.2}x beyond), policy {}, {} arrivals at {:.0} req/s ({})",
+        server.registered(),
+        table::human_bytes(fleet),
+        table::human_bytes(budget),
+        fleet as f64 / budget as f64,
+        policy.name(),
+        requests,
+        load.nominal_rate_hz(),
+        process,
+    );
+
+    let rep = server.serve_load(&load)?;
+
+    println!("\n== tail-latency CDF (fleet, end-to-end) ==");
+    let mut rows = Vec::new();
+    for (upper, count, cum) in rep.hist.rows() {
+        rows.push(vec![
+            table::human_secs(upper),
+            count.to_string(),
+            format!("{:.4}", cum),
+        ]);
+    }
+    println!("{}", table::render(&["<= latency", "requests", "cum frac"], &rows));
+    println!(
+        "p50 {}  p99 {}  p999 {}",
+        table::human_secs(rep.hist.p(50.0)),
+        table::human_secs(rep.hist.p(99.0)),
+        table::human_secs(rep.hist.p(99.9)),
+    );
+    println!(
+        "served {}/{} ({} shed, {} rejected; shed rate {:.3}) over {:.2}s virtual",
+        rep.served,
+        requests,
+        rep.shed,
+        rep.rejected,
+        rep.shed_rate(),
+        rep.makespan_s,
+    );
+    println!(
+        "swap channels: {} busy {:.2}s of {:.2} channel-s ({:.1}% utilized), {} batch starts deferred",
+        rep.swap_channels,
+        rep.swap_busy_s,
+        rep.makespan_s * rep.swap_channels as f64,
+        100.0 * rep.swap_channel_utilization(),
+        rep.deferred_batches,
+    );
+    if let Some(s) = &rep.series {
+        println!(
+            "series: {} samples at dt={:.2}s, peak queue depth {}",
+            s.samples(),
+            s.dt_s,
+            s.max_depth(),
+        );
+    }
+    println!(
+        "peak {} of {} budget, {} OOM events",
+        table::human_bytes(rep.peak_bytes),
+        table::human_bytes(rep.total_budget),
+        rep.oom_events,
+    );
+    if !rep.within_budget() {
+        return Err(anyhow!(
+            "budget violated: peak {} > {} or {} OOM events",
+            rep.peak_bytes,
+            rep.total_budget,
+            rep.oom_events
+        ));
+    }
+    println!("zero budget violations (asserted via the shared MemSim ledger)");
+    if let Some(plan) = &rep.plan {
+        println!("{}", plan_line(plan));
+    }
+
+    if let Some(path) = flags.get("hist-json") {
+        let buckets: Vec<Json> = rep
+            .hist
+            .rows()
+            .into_iter()
+            .map(|(upper, count, cum)| {
+                Json::Obj(
+                    [
+                        ("upper_s".to_string(), Json::Num(upper)),
+                        ("count".to_string(), Json::Num(count as f64)),
+                        ("cum_frac".to_string(), Json::Num(cum)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect();
+        let doc = Json::Obj(
+            [
+                ("bench".to_string(), Json::Str("serve_storm".to_string())),
+                ("requests".to_string(), Json::Num(requests as f64)),
+                ("rate_hz".to_string(), Json::Num(load.nominal_rate_hz())),
+                ("p50_s".to_string(), Json::Num(rep.hist.p(50.0))),
+                ("p99_s".to_string(), Json::Num(rep.hist.p(99.0))),
+                ("p999_s".to_string(), Json::Num(rep.hist.p(99.9))),
+                ("shed_rate".to_string(), Json::Num(rep.shed_rate())),
+                (
+                    "swap_channel_utilization".to_string(),
+                    Json::Num(rep.swap_channel_utilization()),
+                ),
+                ("buckets".to_string(), Json::Arr(buckets)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        std::fs::write(path, format!("{doc}\n"))?;
+        println!("histogram CDF written to {path}");
     }
     Ok(())
 }

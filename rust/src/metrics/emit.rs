@@ -54,10 +54,17 @@ impl BenchEmitter {
     }
 
     /// Write to `args.json` when set (benches call this unconditionally).
+    /// Under `--no-wall` every `wall_*` metric is stripped first, so the
+    /// emitted file is a pure function of the bench's deterministic
+    /// cost-model outputs — the CI determinism job byte-diffs two runs.
     pub fn finish(&self, args: &BenchArgs) -> std::io::Result<()> {
-        match &args.json {
-            Some(path) => self.write(path),
-            None => Ok(()),
+        let Some(path) = &args.json else { return Ok(()) };
+        if args.no_wall {
+            let mut e = self.clone();
+            e.metrics.retain(|k, _| !k.starts_with("wall_"));
+            e.write(path)
+        } else {
+            self.write(path)
         }
     }
 }
@@ -70,6 +77,9 @@ impl BenchEmitter {
 pub struct BenchArgs {
     pub json: Option<PathBuf>,
     pub smoke: bool,
+    /// Strip host-dependent `wall_*` metrics from the emission so two
+    /// runs of a deterministic bench produce byte-identical JSON.
+    pub no_wall: bool,
 }
 
 impl BenchArgs {
@@ -84,6 +94,7 @@ impl BenchArgs {
             match a.as_str() {
                 "--json" => out.json = it.next().map(PathBuf::from),
                 "--smoke" => out.smoke = true,
+                "--no-wall" => out.no_wall = true,
                 _ => {}
             }
         }
@@ -204,9 +215,33 @@ mod tests {
             ["--smoke", "--json", "out/x.json", "ignored"].map(String::from),
         );
         assert!(a.smoke);
+        assert!(!a.no_wall);
         assert_eq!(a.json.as_deref(), Some(Path::new("out/x.json")));
         assert_eq!(a.budget_ms(600), 60);
         assert_eq!(BenchArgs::from_iter(Vec::<String>::new()).budget_ms(600), 600);
+    }
+
+    #[test]
+    fn no_wall_strips_wall_metrics_from_the_emission() {
+        let dir = std::env::temp_dir().join("swapnet_emit_no_wall");
+        let path = dir.join("x.json");
+        let mut e = BenchEmitter::new("micro_x");
+        e.metric("dev_a_s", 0.5);
+        e.metric("wall_total_s", 123.0);
+        let args = BenchArgs {
+            json: Some(path.clone()),
+            smoke: false,
+            no_wall: true,
+        };
+        e.finish(&args).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.path("metrics.dev_a_s").unwrap().as_f64(), Some(0.5));
+        assert!(j.path("metrics.wall_total_s").is_none(), "wall metric stripped");
+        // Without the flag the wall metric survives.
+        e.finish(&BenchArgs { no_wall: false, ..args }).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.path("metrics.wall_total_s").unwrap().as_f64(), Some(123.0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -55,6 +55,122 @@ impl LatencyRecorder {
     }
 }
 
+/// Fixed-bucket latency histogram for tail CDFs (p50/p99/p999).
+///
+/// Buckets are logarithmic — `BUCKETS_PER_DECADE` per decade from 1 µs
+/// to 1000 s, plus an underflow and an overflow bucket — so the layout
+/// is a compile-time constant: two histograms built from the same
+/// samples are bitwise identical, percentiles are quantized to bucket
+/// upper edges (deterministic, byte-diffable in CI), and recording is
+/// O(1) with no per-sample allocation, which is what lets the storm
+/// loops record 10⁵ requests without the recorder itself showing up in
+/// the profile. For small-sample exact percentiles keep using
+/// [`LatencyRecorder`]; the histogram is the tail-latency instrument.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl LatencyHistogram {
+    /// Log-bucket resolution: 10^(1/32) ≈ 7.5% per bucket.
+    pub const BUCKETS_PER_DECADE: usize = 32;
+    /// Lowest decade edge (1 µs) — anything below lands in underflow.
+    pub const LO_EXP: i32 = -6;
+    /// Highest decade edge (1000 s) — anything above lands in overflow.
+    pub const HI_EXP: i32 = 3;
+
+    const DECADES: usize = (Self::HI_EXP - Self::LO_EXP) as usize;
+    /// underflow + log range + overflow
+    const N: usize = Self::DECADES * Self::BUCKETS_PER_DECADE + 2;
+
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { counts: vec![0; Self::N], total: 0 }
+    }
+
+    fn bucket_of(s: f64) -> usize {
+        if !(s > 1e-6) {
+            return 0; // underflow (and non-positive / NaN)
+        }
+        if s >= 1e3 {
+            return Self::N - 1; // overflow
+        }
+        let pos = (s.log10() - Self::LO_EXP as f64) * Self::BUCKETS_PER_DECADE as f64;
+        // `s > 1e-6` guarantees pos > 0; clamp guards the top edge.
+        1 + (pos as usize).min(Self::N - 3)
+    }
+
+    /// Upper edge (seconds) of bucket `i` — the value percentiles report.
+    pub fn bucket_upper(i: usize) -> f64 {
+        if i == 0 {
+            return 1e-6;
+        }
+        if i >= Self::N - 1 {
+            return f64::INFINITY;
+        }
+        10f64.powf(Self::LO_EXP as f64 + i as f64 / Self::BUCKETS_PER_DECADE as f64)
+    }
+
+    pub fn record(&mut self, s: f64) {
+        self.counts[Self::bucket_of(s)] += 1;
+        self.total += 1;
+    }
+
+    pub fn len(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Percentile `q` in [0, 100]: the upper edge of the first bucket
+    /// whose cumulative count covers `q`% of the samples. 0 on empty.
+    pub fn p(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let need = (q / 100.0 * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= need {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(Self::N - 1)
+    }
+
+    /// Non-empty `(bucket_upper_s, count, cumulative_fraction)` rows —
+    /// the machine-readable CDF the storm bench and CLI emit.
+    pub fn rows(&self) -> Vec<(f64, u64, f64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            out.push((Self::bucket_upper(i), c, cum as f64 / self.total as f64));
+        }
+        out
+    }
+
+    /// Fold another histogram in (same fixed layout by construction).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// One (model, method) result row of a scenario figure (Figs 11-13).
 #[derive(Debug, Clone)]
 pub struct MethodReport {
@@ -126,5 +242,82 @@ mod tests {
     #[test]
     fn empty_cdf() {
         assert!(LatencyRecorder::new().cdf(5).is_empty());
+    }
+
+    #[test]
+    fn histogram_percentiles_quantize_to_bucket_edges() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1 ms .. 1 s
+        }
+        assert_eq!(h.len(), 1000);
+        let p50 = h.p(50.0);
+        let p99 = h.p(99.0);
+        let p999 = h.p(99.9);
+        assert!(p50 >= 0.5 && p50 <= 0.54, "p50 {p50}");
+        assert!(p99 >= 0.99 && p99 <= 1.07, "p99 {p99}");
+        assert!(p999 >= p99, "p999 {p999} >= p99 {p99}");
+        // Quantization: the reported value is exactly a bucket edge.
+        let edges: Vec<f64> = h.rows().iter().map(|r| r.0).collect();
+        assert!(edges.contains(&p50) && edges.contains(&p999));
+    }
+
+    #[test]
+    fn histogram_is_bitwise_deterministic() {
+        let build = || {
+            let mut h = LatencyHistogram::new();
+            for i in 0..5000 {
+                h.record((i % 97) as f64 * 3.7e-4 + 1e-5);
+            }
+            h
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn histogram_under_and_overflow() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e9);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.p(1.0), 1e-6, "underflow reports the 1 µs floor");
+        assert_eq!(h.p(100.0), f64::INFINITY, "overflow is honest about the tail");
+        let rows = h.rows();
+        assert_eq!(rows.len(), 2);
+        assert!((rows.last().unwrap().2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_cdf_rows_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..300 {
+            h.record(1e-4 * (1 + i % 40) as f64);
+        }
+        let rows = h.rows();
+        assert!(!rows.is_empty());
+        for w in rows.windows(2) {
+            assert!(w[1].0 > w[0].0);
+            assert!(w[1].2 >= w[0].2);
+        }
+        assert!((rows.last().unwrap().2 - 1.0).abs() < 1e-12);
+        assert!(h.is_empty() || h.len() == 300);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(0.01);
+        b.record(0.01);
+        b.record(10.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.rows().iter().map(|r| r.1).sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn empty_histogram_percentile_is_zero() {
+        assert_eq!(LatencyHistogram::new().p(99.0), 0.0);
     }
 }

@@ -1,0 +1,207 @@
+//! Open-loop load generation for the serving reactor.
+//!
+//! Closed-loop drivers (issue a request, wait, issue the next) can never
+//! overload a server — the measured latency silently caps the offered
+//! rate, the classic *coordinated omission* bug. The storm scenarios
+//! need the opposite: arrivals that keep coming at the configured rate
+//! no matter how far behind the server falls, so the tail of the latency
+//! CDF reflects queueing under genuine oversubscription.
+//!
+//! [`LoadGen`] produces such open-loop arrival streams on the virtual
+//! clock: a Poisson process at a nominal rate, or a trace replay that
+//! cycles a recorded gap sequence (including the deterministic on/off
+//! burst pattern from [`LoadGen::bursts`]). Streams are generated
+//! lazily — [`LoadGen::iter`] is what lets `serve-storm` push 10⁴–10⁵
+//! req/s through the reactor without materializing millions of requests
+//! up front — and are a pure function of `(process, tenants, requests,
+//! seed)`: same inputs, byte-identical stream, which the determinism CI
+//! job depends on.
+
+use crate::util::rng::Rng;
+
+use super::multi::Request;
+
+/// The inter-arrival law of an open-loop stream.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a nominal mean rate.
+    Poisson { rate_hz: f64 },
+    /// Replay a recorded inter-arrival gap sequence (seconds), cycled
+    /// when the stream outlives the trace.
+    Trace { gaps: Vec<f64> },
+}
+
+/// An open-loop arrival stream: `requests` arrivals spread uniformly at
+/// random over `tenants`, timed by an [`ArrivalProcess`].
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    pub process: ArrivalProcess,
+    pub tenants: usize,
+    pub requests: usize,
+    /// Relative deadline stamped on every request (`arrival + d`).
+    pub deadline_rel_s: Option<f64>,
+    pub seed: u64,
+}
+
+impl LoadGen {
+    /// Poisson arrivals at `rate_hz` over `tenants` models.
+    pub fn poisson(tenants: usize, requests: usize, rate_hz: f64, seed: u64) -> LoadGen {
+        LoadGen {
+            process: ArrivalProcess::Poisson { rate_hz: rate_hz.max(1e-9) },
+            tenants,
+            requests,
+            deadline_rel_s: None,
+            seed,
+        }
+    }
+
+    /// Replay `gaps` (seconds between consecutive arrivals), cycling the
+    /// sequence until `requests` arrivals have been produced.
+    pub fn replay(tenants: usize, requests: usize, gaps: Vec<f64>, seed: u64) -> LoadGen {
+        assert!(!gaps.is_empty(), "trace replay needs at least one gap");
+        assert!(
+            gaps.iter().all(|g| g.is_finite() && *g >= 0.0),
+            "trace gaps must be finite and non-negative"
+        );
+        LoadGen {
+            process: ArrivalProcess::Trace { gaps },
+            tenants,
+            requests,
+            deadline_rel_s: None,
+            seed,
+        }
+    }
+
+    /// Deterministic on/off burst trace: `burst_len` arrivals at
+    /// `high_hz`, then `burst_len` at `low_hz`, repeating — the square
+    /// wave that exercises shed-and-recover behavior.
+    pub fn bursts(
+        tenants: usize,
+        requests: usize,
+        high_hz: f64,
+        low_hz: f64,
+        burst_len: usize,
+        seed: u64,
+    ) -> LoadGen {
+        let n = burst_len.max(1);
+        let mut gaps = Vec::with_capacity(2 * n);
+        gaps.extend(std::iter::repeat(1.0 / high_hz.max(1e-9)).take(n));
+        gaps.extend(std::iter::repeat(1.0 / low_hz.max(1e-9)).take(n));
+        Self::replay(tenants, requests, gaps, seed)
+    }
+
+    /// Stamp a relative deadline on every generated request.
+    pub fn with_deadline(mut self, deadline_rel_s: f64) -> LoadGen {
+        self.deadline_rel_s = Some(deadline_rel_s);
+        self
+    }
+
+    /// Mean offered rate (req/s) implied by the process.
+    pub fn nominal_rate_hz(&self) -> f64 {
+        match &self.process {
+            ArrivalProcess::Poisson { rate_hz } => *rate_hz,
+            ArrivalProcess::Trace { gaps } => {
+                let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+                if mean > 0.0 {
+                    1.0 / mean
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+
+    /// Lazy arrival stream, sorted by construction (gaps are
+    /// non-negative). The reactor pulls one request at a time, so memory
+    /// stays O(1) in stream length.
+    pub fn iter(&self) -> impl Iterator<Item = Request> + '_ {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0f64;
+        let tenants = self.tenants.max(1);
+        (0..self.requests).map(move |i| {
+            t += match &self.process {
+                ArrivalProcess::Poisson { rate_hz } => rng.exp(*rate_hz),
+                ArrivalProcess::Trace { gaps } => gaps[i % gaps.len()],
+            };
+            Request {
+                tenant: rng.below(tenants),
+                arrival_s: t,
+                deadline_s: self.deadline_rel_s.map(|d| t + d),
+            }
+        })
+    }
+
+    /// Materialize the whole stream (small runs, existing call sites).
+    pub fn materialize(&self) -> Vec<Request> {
+        self.iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(r: &Request) -> (usize, u64, Option<u64>) {
+        (r.tenant, r.arrival_s.to_bits(), r.deadline_s.map(f64::to_bits))
+    }
+
+    #[test]
+    fn poisson_stream_is_sorted_and_deterministic() {
+        let lg = LoadGen::poisson(4, 5000, 20_000.0, 7);
+        let a: Vec<_> = lg.iter().map(|r| key(&r)).collect();
+        let b: Vec<_> = lg.iter().map(|r| key(&r)).collect();
+        assert_eq!(a, b, "same seed, byte-identical stream");
+        assert_eq!(a.len(), 5000);
+        let times: Vec<f64> = lg.iter().map(|r| r.arrival_s).collect();
+        assert!(times.windows(2).all(|w| w[1] >= w[0]), "sorted by arrival");
+        assert!(lg.iter().all(|r| r.tenant < 4));
+    }
+
+    #[test]
+    fn poisson_rate_is_roughly_nominal() {
+        let lg = LoadGen::poisson(2, 20_000, 10_000.0, 3);
+        let last = lg.iter().last().unwrap().arrival_s;
+        let rate = 20_000.0 / last;
+        assert!(
+            (rate - 10_000.0).abs() / 10_000.0 < 0.05,
+            "empirical rate {rate} vs nominal 10000"
+        );
+        assert_eq!(lg.nominal_rate_hz(), 10_000.0);
+    }
+
+    #[test]
+    fn trace_replay_cycles_gaps() {
+        let lg = LoadGen::replay(1, 6, vec![0.1, 0.3], 1);
+        let times: Vec<f64> = lg.iter().map(|r| r.arrival_s).collect();
+        let expect = [0.1, 0.4, 0.5, 0.8, 0.9, 1.2];
+        for (t, e) in times.iter().zip(expect) {
+            assert!((t - e).abs() < 1e-9, "{t} vs {e}");
+        }
+        assert!((lg.nominal_rate_hz() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bursts_alternate_rates() {
+        let lg = LoadGen::bursts(1, 8, 100.0, 10.0, 2, 1);
+        let times: Vec<f64> = lg.iter().map(|r| r.arrival_s).collect();
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!((gaps[0] - 0.01).abs() < 1e-9);
+        assert!((gaps[1] - 0.1).abs() < 1e-9, "gap into the off phase");
+        assert!((gaps[3] - 0.01).abs() < 1e-9, "gap into the next burst");
+    }
+
+    #[test]
+    fn deadlines_are_relative_to_arrival() {
+        let lg = LoadGen::poisson(1, 10, 100.0, 2).with_deadline(0.5);
+        for r in lg.iter() {
+            assert!((r.deadline_s.unwrap() - r.arrival_s - 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a: Vec<_> = LoadGen::poisson(4, 100, 50.0, 1).iter().map(|r| key(&r)).collect();
+        let b: Vec<_> = LoadGen::poisson(4, 100, 50.0, 2).iter().map(|r| key(&r)).collect();
+        assert_ne!(a, b);
+    }
+}

@@ -20,12 +20,16 @@
 //! [`ServeTrace`]s ([`trace`]).
 
 pub mod admission;
+pub mod load;
 pub mod multi;
+pub mod reactor;
 pub mod trace;
 
 pub use admission::{Admission, AdmissionPolicy, Verdict};
+pub use load::{ArrivalProcess, LoadGen};
 pub use multi::{MultiTenantConfig, MultiTenantServer, Request};
-pub use trace::{ModelServeStats, MultiServeReport, ServeTrace};
+pub use reactor::EventQueue;
+pub use trace::{ModelServeStats, MultiServeReport, ServeTrace, StormSeries};
 
 use anyhow::Result;
 

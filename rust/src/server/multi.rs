@@ -20,42 +20,53 @@
 //!   is busy are served as one batch: the batch pays the block swap-in
 //!   pipeline once and each extra request only re-executes the resident
 //!   blocks, amortizing swap-in cost (`latency + (k-1) * compute`).
-//! * **Budget enforcement** — a shared [`MemSim`] ledger sized to the
-//!   fleet budget; a batch acquires its model's scheduled peak (plus
-//!   delta overhead) for its resident window via the swap controller,
-//!   so `peak() <= budget && oom_events == 0` is a *checked* claim.
+//! * **Swap-channel contention** — the engine's pipeline spec declares
+//!   `swap_channels` DMA channels shared by the whole fleet. A formed
+//!   batch *starts* only when a channel is free; otherwise it waits in
+//!   a FIFO deferral queue and is granted when another batch's swap-in
+//!   completes. Channel busy-seconds accumulate into the report's
+//!   swap-channel utilization — the cross-tenant swap-completion
+//!   ordering the old per-tenant worker threads could not express.
+//! * **Budget enforcement** — a [`MemSim`] ledger sized to the fleet
+//!   budget; a batch acquires its model's scheduled peak (plus delta
+//!   overhead) for its resident window via the swap controller, so
+//!   `peak() <= budget && oom_events == 0` is a *checked* claim.
 //! * **Traces** — every request yields a [`ServeTrace`] (queueing, swap,
-//!   assembly, compute) aggregated into a [`MultiServeReport`].
+//!   assembly, compute) aggregated into a [`MultiServeReport`] with a
+//!   fleet-wide latency histogram and optional queue-depth time series.
 //!
-//! Two drive modes share all of the above state machinery:
-//! [`serve`](MultiTenantServer::serve) replays a pre-materialized
-//! arrival stream on a deterministic virtual clock (CLI, benches), and
-//! [`serve_concurrent`](MultiTenantServer::serve_concurrent) accepts
-//! live submissions from [`MultiClient`]s on other threads and executes
-//! batches in per-tenant worker threads (`std::thread` + channels; the
-//! `Engine` itself is thread-confined, so workers run the same
-//! `engine::sim` cost model over `Send` schedule snapshots while
-//! planning stays on the server thread).
+//! Everything runs on **one event-driven reactor**
+//! ([`serve_events`](MultiTenantServer::serve_events) over a
+//! [`reactor::EventQueue`](super::reactor::EventQueue)): arrivals,
+//! swap-in completions, batch retirements, and series-sampling ticks are
+//! timestamped events on a virtual clock, popped in deterministic
+//! `(time, insertion)` order. No `std::thread::spawn` on the serve path
+//! — [`serve`](MultiTenantServer::serve) replays a pre-materialized
+//! stream, [`serve_load`](MultiTenantServer::serve_load) pulls an
+//! open-loop [`LoadGen`](super::load::LoadGen) lazily (the 10⁴–10⁵
+//! req/s storm path), and
+//! [`serve_concurrent`](MultiTenantServer::serve_concurrent) stamps
+//! live [`MultiClient`] submissions with wall arrival times and then
+//! runs the same reactor over them. One scheduler of record; reports
+//! are bit-identical across repeated runs by construction.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::DeviceProfile;
-use crate::engine::sim::{simulate_scheduled, SnetConfig};
 use crate::engine::{Engine, ModelHandle};
 use crate::memsim::{AllocId, MemSim};
 use crate::model::ModelInfo;
-use crate::scheduler::{self, ModelDemand, Schedule};
+use crate::scheduler::{self, ModelDemand};
 use crate::storage::Storage;
 use crate::swap::{SwapController, SwapMode};
-use crate::util::rng::Rng;
 
 use super::admission::{Admission, AdmissionPolicy, TenantQueue, Verdict};
-use super::trace::{MultiServeReport, ServeTrace};
+use super::load::LoadGen;
+use super::reactor::EventQueue;
+use super::trace::{MultiServeReport, ServeTrace, StormSeries};
 
 /// Multi-tenant serving configuration.
 #[derive(Debug, Clone)]
@@ -70,10 +81,9 @@ pub struct MultiTenantConfig {
     /// Largest batch served inside one resident window.
     pub max_batch: usize,
     pub seed: u64,
-    /// Concurrent mode only: wall seconds slept per simulated second,
-    /// compressing the virtual timescale so batch execution windows
-    /// really overlap across worker threads without slowing tests.
-    pub time_scale: f64,
+    /// Queue-depth / shed time-series sampling period on the virtual
+    /// clock (seconds); 0 disables the series.
+    pub sample_dt_s: f64,
 }
 
 impl MultiTenantConfig {
@@ -85,7 +95,7 @@ impl MultiTenantConfig {
             global_cap: 32,
             max_batch: 8,
             seed: 1,
-            time_scale: 0.0,
+            sample_dt_s: 0.0,
         }
     }
 }
@@ -104,15 +114,10 @@ pub struct Request {
 
 /// Synthetic mixed request stream: Poisson arrivals at `rate_hz`
 /// uniformly spread over `tenants` models, sorted by arrival.
+/// (Materialized form of [`LoadGen::poisson`] — same RNG draw order,
+/// byte-identical streams.)
 pub fn poisson_stream(tenants: usize, requests: usize, rate_hz: f64, seed: u64) -> Vec<Request> {
-    let mut rng = Rng::new(seed);
-    let mut t = 0.0f64;
-    (0..requests)
-        .map(|_| {
-            t += rng.exp(rate_hz);
-            Request { tenant: rng.below(tenants.max(1)), arrival_s: t, deadline_s: None }
-        })
-        .collect()
+    LoadGen::poisson(tenants, requests, rate_hz, seed).materialize()
 }
 
 struct Tenant {
@@ -123,84 +128,94 @@ struct Tenant {
     /// `ModelDemand::performance_score` — the admission policy's rank.
     score: f64,
     queue: VecDeque<Request>,
-    /// Virtual clock at which the current batch's resident window ends.
+    /// Virtual clock at which the current batch's resident window ends
+    /// (an estimate while the batch waits for a swap channel).
     free_at: f64,
+    /// True from batch formation to retirement — at most one batch per
+    /// tenant is formed/inflight at a time.
+    busy: bool,
     batches: u64,
     evicted: bool,
     swapper: SwapController,
 }
 
-/// A batch in its resident window (virtual-clock mode).
-struct Inflight {
+/// A formed batch: requests drained from the queue with its cost-model
+/// outcome, waiting for (or holding) a swap channel.
+struct Batch {
     tenant: usize,
-    t_dispatch: f64,
-    t_done: f64,
     reqs: Vec<Request>,
     swap_s: f64,
     assembly_s: f64,
     compute_s: f64,
+    /// Full resident-window latency: `latency + (k-1) * compute`.
+    latency_s: f64,
+    resident_bytes: u64,
+}
+
+/// A started batch in its resident window.
+struct Inflight {
+    batch: Batch,
+    t_start: f64,
+    t_done: f64,
     alloc: AllocId,
 }
 
-/// Messages feeding the concurrent serve loop: live client submissions
-/// and worker completions share one channel so the single-consumer
-/// server thread needs no select.
-enum ServerMsg {
-    Submit { tenant: usize, deadline_rel_s: Option<f64> },
-    Done { tenant: usize, outcome: Result<WorkerDone, String> },
+/// Reactor events. `BatchDone` carries its batch so completion needs no
+/// side table; boxed to keep the queue entries small.
+enum Ev {
+    /// A pending request arrives (one armed at a time — the lazy pull
+    /// that lets storm streams stay un-materialized).
+    Arrival(Request),
+    /// A batch's swap-in phase finished: its DMA channel frees and the
+    /// deferral FIFO may grant the next batch start.
+    SwapInDone,
+    /// A batch's resident window ended.
+    BatchDone(Box<Inflight>),
+    /// Queue-depth / shed series sampling tick.
+    Sample,
 }
 
-struct WorkerDone {
-    latency_s: f64,
-    swap_s: f64,
-    assembly_s: f64,
-    compute_s: f64,
+/// Live submission from a [`MultiClient`] (concurrent mode).
+struct Submission {
+    tenant: usize,
+    deadline_rel_s: Option<f64>,
 }
 
-/// A batch job shipped to a tenant's worker thread (all `Send` data —
-/// the schedule snapshot taken at dispatch keeps workers correct across
-/// rebudgets).
-struct Job {
-    batch: usize,
-    seed_bump: u64,
-    budget: u64,
-    resident_bytes: u64,
-    schedule: Schedule,
-}
-
-/// Handle for submitting requests to a running
-/// [`MultiTenantServer::serve_concurrent`] loop from any thread.
+/// Handle for submitting requests to a
+/// [`MultiTenantServer::serve_concurrent`] run from any thread.
 #[derive(Clone)]
 pub struct MultiClient {
-    tx: Sender<ServerMsg>,
+    tx: Sender<Submission>,
 }
 
 impl MultiClient {
     /// Submit one request; returns false once the server is gone.
     pub fn submit(&self, tenant: usize) -> bool {
-        self.tx.send(ServerMsg::Submit { tenant, deadline_rel_s: None }).is_ok()
+        self.tx.send(Submission { tenant, deadline_rel_s: None }).is_ok()
     }
 
     /// Submit with a deadline `deadline_rel_s` seconds after arrival.
     pub fn submit_with_deadline(&self, tenant: usize, deadline_rel_s: f64) -> bool {
         self.tx
-            .send(ServerMsg::Submit { tenant, deadline_rel_s: Some(deadline_rel_s) })
+            .send(Submission { tenant, deadline_rel_s: Some(deadline_rel_s) })
             .is_ok()
     }
 }
 
-/// The concurrent multi-tenant serving runtime (see module docs).
+/// The multi-tenant serving runtime (see module docs).
 pub struct MultiTenantServer {
     engine: Engine,
     cfg: MultiTenantConfig,
     admission: Admission,
     tenants: Vec<Tenant>,
-    /// Shared residency ledger sized to the fleet budget.
-    mem: Arc<Mutex<MemSim>>,
+    /// Residency ledger sized to the fleet budget. Single-owner now that
+    /// the reactor is the only scheduler — event order *is* accounting
+    /// order.
+    mem: MemSim,
     /// Long-lived block store (page-cache hygiene across evictions).
     storage: Storage,
-    tx: Sender<ServerMsg>,
-    rx: Receiver<ServerMsg>,
+    tx: Sender<Submission>,
+    rx: Receiver<Submission>,
 }
 
 impl MultiTenantServer {
@@ -216,7 +231,7 @@ impl MultiTenantServer {
         let (tx, rx) = channel();
         MultiTenantServer {
             admission,
-            mem: Arc::new(Mutex::new(MemSim::new(cfg.total_budget))),
+            mem: MemSim::new(cfg.total_budget),
             storage: Storage::new(cfg.total_budget.max(64_000_000)),
             tenants: Vec::new(),
             engine,
@@ -331,6 +346,7 @@ impl MultiTenantServer {
             score,
             queue: VecDeque::new(),
             free_at: 0.0,
+            busy: false,
             batches: 0,
             evicted: false,
             swapper,
@@ -363,11 +379,7 @@ impl MultiTenantServer {
         // (w/o-uni-add ablation config, artifact file reads); blocks
         // reacquire lazily if the model ever returns.
         let files: Vec<u64> = (0..n_blocks).map(|b| block_file(tenant, b)).collect();
-        {
-            let mut mem = self.mem.lock().expect("ledger poisoned");
-            let t = &self.tenants[tenant];
-            t.swapper.evict_files(files, &mut self.storage, &mut mem);
-        }
+        self.tenants[tenant].swapper.evict_files(files, &mut self.storage, &mut self.mem);
         // Survivors re-expand into the freed budget.
         if self.registered() > 0 {
             let (live, budgets) = self.partition_with(None)?;
@@ -378,7 +390,7 @@ impl MultiTenantServer {
     }
 
     // ---------------------------------------------------------------
-    // shared state machinery
+    // admission
     // ---------------------------------------------------------------
 
     /// Apply the admission decision for `req`; returns true if queued.
@@ -416,8 +428,8 @@ impl MultiTenantServer {
         }
     }
 
-    /// Deadline feasibility estimate at admission time (virtual mode):
-    /// the batch starts no earlier than the model frees up.
+    /// Deadline feasibility estimate at admission time: the batch
+    /// starts no earlier than the model frees up.
     fn deadline_ok(&self, req: &Request, now: f64) -> bool {
         let Some(d) = req.deadline_s else { return true };
         let ti = req.tenant;
@@ -446,19 +458,22 @@ impl MultiTenantServer {
         }
     }
 
-    /// Dispatch the next batch for `ti` if it is idle and has work
-    /// (virtual-clock mode).
-    fn try_dispatch(
+    // ---------------------------------------------------------------
+    // reactor batch lifecycle
+    // ---------------------------------------------------------------
+
+    /// Form the next batch for `ti` if it is idle and has work: drain up
+    /// to `max_batch` queued requests and run the cost model once. The
+    /// tenant is busy from here until the batch retires; whether the
+    /// batch *starts* now depends on swap-channel availability.
+    fn form_batch(
         &mut self,
         ti: usize,
         now: f64,
         rep: &mut MultiServeReport,
-    ) -> Result<Option<Inflight>> {
-        if ti >= self.tenants.len() || self.tenants[ti].evicted {
+    ) -> Result<Option<Batch>> {
+        if ti >= self.tenants.len() || self.tenants[ti].evicted || self.tenants[ti].busy {
             return Ok(None);
-        }
-        if self.tenants[ti].free_at > now + 1e-12 {
-            return Ok(None); // resident window still busy
         }
         self.expire_deadlines(ti, now, rep);
         let k = self.tenants[ti].queue.len().min(self.cfg.max_batch);
@@ -472,120 +487,203 @@ impl MultiTenantServer {
         let report = t.handle.infer_sim_seeded(seed_bump)?;
         // Resident-window batching: the swap pipeline runs once, extra
         // requests re-execute the resident blocks.
-        let batch_latency = report.latency_s + (k - 1) as f64 * report.compute_s;
-        let resident = t.handle.schedule().peak_bytes + scheduler::overhead_bytes(&t.model);
-        let alloc = {
-            let mut mem = self.mem.lock().expect("ledger poisoned");
-            t.swapper.acquire_residency(&mut mem, resident)
-        };
-        let t_done = now + batch_latency;
-        t.free_at = t_done;
-        Ok(Some(Inflight {
+        let latency_s = report.latency_s + (k - 1) as f64 * report.compute_s;
+        let resident_bytes =
+            t.handle.schedule().peak_bytes + scheduler::overhead_bytes(&t.model);
+        t.busy = true;
+        // Channel-wait-free estimate; start_batch stamps the real window.
+        t.free_at = now + latency_s;
+        Ok(Some(Batch {
             tenant: ti,
-            t_dispatch: now,
-            t_done,
             reqs,
             swap_s: report.swap_s,
             assembly_s: report.assembly_s,
             compute_s: report.compute_s,
-            alloc,
+            latency_s,
+            resident_bytes,
         }))
     }
 
-    /// Finish a batch: release its residency, emit traces, and dispatch
-    /// the tenant's next batch if one is queued.
-    fn complete(
+    /// Start a formed batch on an acquired swap channel: take its
+    /// residency in the ledger, occupy the channel for the swap-in
+    /// phase, and schedule both completion events. The caller owns the
+    /// channel bookkeeping.
+    fn start_batch(
         &mut self,
-        ev: Inflight,
+        b: Batch,
+        now: f64,
+        q: &mut EventQueue<Ev>,
         rep: &mut MultiServeReport,
-        inflight: &mut Vec<Inflight>,
-    ) -> Result<()> {
-        {
-            let mut mem = self.mem.lock().expect("ledger poisoned");
-            self.tenants[ev.tenant].swapper.release_residency(&mut mem, ev.alloc);
-        }
-        // No explicit cost observation here: virtual-clock dispatch runs
-        // through `ModelHandle::infer_sim_seeded`, where the engine
-        // already folds each batch's components into the measured cost
-        // provider exactly once.
-        let name = self.tenants[ev.tenant].name.clone();
-        let k = ev.reqs.len().max(1);
-        for r in &ev.reqs {
+    ) {
+        let t = &mut self.tenants[b.tenant];
+        let alloc = t.swapper.acquire_residency(&mut self.mem, b.resident_bytes);
+        let t_done = now + b.latency_s;
+        t.free_at = t_done;
+        rep.swap_busy_s += b.swap_s;
+        q.push(now + b.swap_s, Ev::SwapInDone);
+        q.push(t_done, Ev::BatchDone(Box::new(Inflight { batch: b, t_start: now, t_done, alloc })));
+    }
+
+    /// Retire a batch: release its residency and emit traces. The
+    /// follow-up dispatch happens in the reactor loop (it needs the
+    /// channel state).
+    fn finish_batch(&mut self, inf: Inflight, rep: &mut MultiServeReport) {
+        let ti = inf.batch.tenant;
+        self.tenants[ti].swapper.release_residency(&mut self.mem, inf.alloc);
+        // No explicit cost observation here: dispatch runs through
+        // `ModelHandle::infer_sim_seeded`, where the engine already
+        // folds each batch's components into the measured cost provider
+        // exactly once.
+        let name = self.tenants[ti].name.clone();
+        let k = inf.batch.reqs.len().max(1);
+        for r in &inf.batch.reqs {
             rep.record(ServeTrace {
                 model: name.clone(),
-                queue_s: ev.t_dispatch - r.arrival_s,
-                swap_s: ev.swap_s / k as f64,
-                assembly_s: ev.assembly_s / k as f64,
-                compute_s: ev.compute_s,
-                e2e_s: ev.t_done - r.arrival_s,
+                queue_s: inf.t_start - r.arrival_s,
+                swap_s: inf.batch.swap_s / k as f64,
+                assembly_s: inf.batch.assembly_s / k as f64,
+                compute_s: inf.batch.compute_s,
+                e2e_s: inf.t_done - r.arrival_s,
                 batch: k,
                 tokens: 1,
-                s_per_token: ev.t_done - ev.t_dispatch,
+                s_per_token: inf.t_done - inf.t_start,
             });
         }
         rep.record_batch(&name);
-        if let Some(next) = self.try_dispatch(ev.tenant, ev.t_done, rep)? {
-            inflight.push(next);
-        }
-        Ok(())
+        let t = &mut self.tenants[ti];
+        t.busy = false;
+        t.free_at = inf.t_done;
     }
 
     // ---------------------------------------------------------------
-    // virtual-clock serving
+    // the reactor
     // ---------------------------------------------------------------
 
-    /// Serve a pre-materialized request stream on a deterministic
-    /// virtual clock. Per-tenant resident windows overlap in virtual
-    /// time; the shared ledger accounts their concurrent residency in
-    /// event order, so the report's `peak_bytes`/`oom_events` bound the
-    /// fleet's true concurrent footprint.
-    pub fn serve(&mut self, stream: &[Request]) -> Result<MultiServeReport> {
+    /// Run the event-driven reactor over an arrival stream (sorted by
+    /// arrival time; bails otherwise). This is the only scheduler: every
+    /// drive mode funnels here, so the ledger accounting, batching,
+    /// channel contention, and report are identical across them.
+    fn serve_events(
+        &mut self,
+        arrivals: impl Iterator<Item = Request>,
+        sample_dt: f64,
+    ) -> Result<MultiServeReport> {
         let wall0 = Instant::now();
-        {
-            let mut mem = self.mem.lock().expect("ledger poisoned");
-            mem.reset_peaks();
-            mem.oom_events = 0;
-        }
-        // Each run starts a fresh serving clock: rewind every tenant's
-        // resident-window marker (queues are already drained — a
-        // completed run never leaves admitted work behind).
+        self.mem.reset_peaks();
+        self.mem.oom_events = 0;
+        // Each run starts a fresh serving clock (queues are already
+        // drained — a completed run never leaves admitted work behind).
         for t in &mut self.tenants {
             t.free_at = 0.0;
+            t.busy = false;
         }
+        let channels_total = self.engine.config().pipeline.swap_channels.max(1);
+        let mut channels_free = channels_total;
+        let mut deferred: VecDeque<Batch> = VecDeque::new();
         let mut rep = MultiServeReport::new(self.cfg.total_budget);
-        let mut inflight: Vec<Inflight> = Vec::new();
+        rep.swap_channels = channels_total;
+        if sample_dt > 0.0 {
+            rep.series = Some(StormSeries::new(
+                sample_dt,
+                self.tenants.iter().map(|t| t.name.clone()).collect(),
+            ));
+        }
+
+        let mut arrivals = arrivals;
+        // True while an Arrival event is armed in the queue (one at a
+        // time — the next is pulled when the current one fires).
+        let mut pending_arrival = false;
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        if let Some(r) = arrivals.next() {
+            q.push(r.arrival_s, Ev::Arrival(r));
+            pending_arrival = true;
+        }
+        if rep.series.is_some() {
+            q.push(sample_dt, Ev::Sample);
+        }
+
+        // Virtual clock of the last arrival/retirement (sampling ticks
+        // may pop later; they don't extend the makespan).
         let mut clock = 0.0f64;
-        for req in stream {
-            if req.arrival_s + 1e-9 < clock {
-                bail!("request stream must be sorted by arrival time");
-            }
-            // Retire every batch due before this arrival (each may chain
-            // a follow-up dispatch, re-scanned by next_due).
-            while let Some(pos) = next_due(&inflight, req.arrival_s) {
-                let ev = inflight.swap_remove(pos);
-                clock = ev.t_done;
-                self.complete(ev, &mut rep, &mut inflight)?;
-            }
-            clock = req.arrival_s;
-            let deadline_ok = self.deadline_ok(req, clock);
-            if self.admit(*req, deadline_ok, &mut rep) {
-                if let Some(ev) = self.try_dispatch(req.tenant, clock, &mut rep)? {
-                    inflight.push(ev);
+        while let Some((t, ev)) = q.pop() {
+            match ev {
+                Ev::Arrival(req) => {
+                    clock = req.arrival_s;
+                    match arrivals.next() {
+                        Some(r) => {
+                            if r.arrival_s + 1e-9 < req.arrival_s {
+                                bail!("request stream must be sorted by arrival time");
+                            }
+                            q.push(r.arrival_s, Ev::Arrival(r));
+                        }
+                        None => pending_arrival = false,
+                    }
+                    let deadline_ok = self.deadline_ok(&req, t);
+                    if self.admit(req, deadline_ok, &mut rep) {
+                        if let Some(b) = self.form_batch(req.tenant, t, &mut rep)? {
+                            if channels_free > 0 {
+                                channels_free -= 1;
+                                self.start_batch(b, t, &mut q, &mut rep);
+                            } else {
+                                rep.deferred_batches += 1;
+                                deferred.push_back(b);
+                            }
+                        }
+                    }
+                }
+                Ev::SwapInDone => {
+                    channels_free += 1;
+                    // FIFO grant: the longest-deferred batch starts now.
+                    if let Some(b) = deferred.pop_front() {
+                        channels_free -= 1;
+                        self.start_batch(b, t, &mut q, &mut rep);
+                    }
+                }
+                Ev::BatchDone(inf) => {
+                    let ti = inf.batch.tenant;
+                    clock = inf.t_done;
+                    self.finish_batch(*inf, &mut rep);
+                    if let Some(b) = self.form_batch(ti, t, &mut rep)? {
+                        if channels_free > 0 {
+                            channels_free -= 1;
+                            self.start_batch(b, t, &mut q, &mut rep);
+                        } else {
+                            rep.deferred_batches += 1;
+                            deferred.push_back(b);
+                        }
+                    }
+                }
+                Ev::Sample => {
+                    let depth: Vec<u32> = self
+                        .tenants
+                        .iter()
+                        .map(|x| x.queue.len().min(u32::MAX as usize) as u32)
+                        .collect();
+                    let shed: Vec<u64> = self
+                        .tenants
+                        .iter()
+                        .map(|x| {
+                            rep.per_model
+                                .get(&x.name)
+                                .map(|m| (m.shed + m.rejected) as u64)
+                                .unwrap_or(0)
+                        })
+                        .collect();
+                    let series = rep.series.as_mut().expect("sampling without a series");
+                    series.push_sample(depth, shed);
+                    let work_left = pending_arrival
+                        || !deferred.is_empty()
+                        || self.tenants.iter().any(|x| x.busy || !x.queue.is_empty());
+                    if work_left {
+                        q.push(t + sample_dt, Ev::Sample);
+                    }
                 }
             }
         }
-        // Drain the tail.
-        while let Some(pos) = next_due(&inflight, f64::INFINITY) {
-            let ev = inflight.swap_remove(pos);
-            clock = ev.t_done;
-            self.complete(ev, &mut rep, &mut inflight)?;
-        }
-        let (peak, oom) = {
-            let mem = self.mem.lock().expect("ledger poisoned");
-            (mem.peak(), mem.oom_events)
-        };
-        rep.peak_bytes = peak;
-        rep.oom_events = oom;
+        debug_assert!(deferred.is_empty(), "reactor drained with deferred batches");
+
+        rep.peak_bytes = self.mem.peak();
+        rep.oom_events = self.mem.oom_events;
         rep.makespan_s = clock;
         rep.wall_s = wall0.elapsed().as_secs_f64();
         rep.pool = self.pool_stats();
@@ -593,8 +691,24 @@ impl MultiTenantServer {
         Ok(rep)
     }
 
+    /// Serve a pre-materialized request stream on the reactor's virtual
+    /// clock. Per-tenant resident windows overlap in virtual time; the
+    /// ledger accounts their concurrent residency in event order, so the
+    /// report's `peak_bytes`/`oom_events` bound the fleet's true
+    /// concurrent footprint.
+    pub fn serve(&mut self, stream: &[Request]) -> Result<MultiServeReport> {
+        self.serve_events(stream.iter().copied(), self.cfg.sample_dt_s)
+    }
+
+    /// Serve an open-loop [`LoadGen`] stream, pulled lazily — the storm
+    /// path: 10⁴–10⁵ req/s of arrivals flow through the reactor without
+    /// ever materializing the stream.
+    pub fn serve_load(&mut self, load: &LoadGen) -> Result<MultiServeReport> {
+        self.serve_events(load.iter(), self.cfg.sample_dt_s)
+    }
+
     // ---------------------------------------------------------------
-    // concurrent serving
+    // concurrent ingestion
     // ---------------------------------------------------------------
 
     /// A cloneable submission handle for client threads feeding
@@ -603,279 +717,63 @@ impl MultiTenantServer {
         MultiClient { tx: self.tx.clone() }
     }
 
-    /// Serve `expected` live submissions from [`MultiClient`]s. Batches
-    /// execute in one worker thread per tenant (the paper's per-model
-    /// CPU-affinity isolation), overlapping for real; each worker
-    /// acquires its model's scheduled peak in the shared ledger for the
-    /// duration of its (time-compressed) resident window, so the
-    /// returned report proves the fleet never exceeded the budget.
-    /// Returns once every submission is resolved (served/shed/rejected).
+    /// Serve `expected` live submissions from [`MultiClient`]s: each
+    /// submission is stamped with its wall-clock arrival time as it
+    /// lands, and once all are ingested the same reactor replays them —
+    /// identical admission, batching, channel, and ledger behavior as
+    /// [`serve`](Self::serve), with real (wall) arrival spacing. Bails
+    /// with per-tenant ingress queue depths and the last-event timestamp
+    /// if clients stall.
     pub fn serve_concurrent(&mut self, expected: usize) -> Result<MultiServeReport> {
         let wall0 = Instant::now();
-        {
-            let mut mem = self.mem.lock().expect("ledger poisoned");
-            mem.reset_peaks();
-            mem.oom_events = 0;
-        }
-        let mut rep = MultiServeReport::new(self.cfg.total_budget);
-
-        // One worker per live tenant.
-        let mut job_tx: HashMap<usize, Sender<Job>> = HashMap::new();
-        let mut workers = Vec::new();
-        for ti in self.live_indices() {
-            let (jtx, jrx) = channel::<Job>();
-            job_tx.insert(ti, jtx);
-            let done_tx = self.tx.clone();
-            let mem = Arc::clone(&self.mem);
-            let model = self.tenants[ti].model.clone();
-            let tag = self.tenants[ti].name.clone();
-            let prof = self.engine.profile();
-            let base_cfg = self.engine.config();
-            let time_scale = self.cfg.time_scale;
-            workers.push(std::thread::spawn(move || {
-                worker_loop(ti, jrx, done_tx, mem, model, tag, prof, base_cfg, time_scale)
-            }));
-        }
-
-        // (dispatch wall time, batch requests) for the one inflight
-        // batch a tenant may have.
-        let mut inflight: HashMap<usize, (f64, Vec<Request>)> = HashMap::new();
-        let mut fatal: Option<anyhow::Error> = None;
-        while rep.resolved() < expected {
-            let msg = match self.rx.recv_timeout(Duration::from_secs(60)) {
-                Ok(m) => m,
+        let mut reqs: Vec<Request> = Vec::with_capacity(expected);
+        let mut last_event_s = 0.0f64;
+        while reqs.len() < expected {
+            match self.rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(sub) => {
+                    let now = wall0.elapsed().as_secs_f64();
+                    last_event_s = now;
+                    reqs.push(Request {
+                        tenant: sub.tenant,
+                        arrival_s: now,
+                        deadline_s: sub.deadline_rel_s.map(|d| now + d),
+                    });
+                }
                 Err(RecvTimeoutError::Timeout) => {
-                    fatal = Some(anyhow!(
-                        "serve_concurrent stalled: {} of {expected} requests resolved",
-                        rep.resolved()
-                    ));
-                    break;
+                    let mut depth = vec![0usize; self.tenants.len()];
+                    let mut unknown = 0usize;
+                    for r in &reqs {
+                        match depth.get_mut(r.tenant) {
+                            Some(d) => *d += 1,
+                            None => unknown += 1,
+                        }
+                    }
+                    let per_tenant: Vec<String> = self
+                        .tenants
+                        .iter()
+                        .zip(&depth)
+                        .map(|(t, d)| format!("{}={d}", t.name))
+                        .collect();
+                    bail!(
+                        "serve_concurrent stalled: {} of {expected} submissions received; \
+                         per-tenant queue depth [{}{}]; last event at {last_event_s:.3}s",
+                        reqs.len(),
+                        per_tenant.join(", "),
+                        if unknown > 0 { format!(", unknown={unknown}") } else { String::new() },
+                    );
                 }
                 Err(RecvTimeoutError::Disconnected) => {
-                    fatal = Some(anyhow!("server channel disconnected"));
-                    break;
-                }
-            };
-            match msg {
-                ServerMsg::Submit { tenant, deadline_rel_s } => {
-                    let now = wall0.elapsed().as_secs_f64();
-                    let req = Request {
-                        tenant,
-                        arrival_s: now,
-                        deadline_s: deadline_rel_s.map(|d| now + d),
-                    };
-                    // Deadline feasibility against the queued backlog
-                    // (wall-clock mode has no virtual free_at).
-                    let deadline_ok = match deadline_rel_s {
-                        None => true,
-                        Some(d) => {
-                            let backlog = self
-                                .tenants
-                                .get(tenant)
-                                .map(|t| t.queue.len() + usize::from(inflight.contains_key(&tenant)))
-                                .unwrap_or(0);
-                            let predicted = self
-                                .tenants
-                                .get(tenant)
-                                .filter(|t| !t.evicted)
-                                .map(|t| t.handle.schedule().predicted_latency_s)
-                                .unwrap_or(0.0);
-                            (backlog + 1) as f64 * predicted * self.cfg.time_scale.max(1e-9) <= d
-                                || self.cfg.time_scale == 0.0
-                        }
-                    };
-                    if self.admit(req, deadline_ok, &mut rep)
-                        && !inflight.contains_key(&tenant)
-                    {
-                        self.dispatch_concurrent(tenant, &job_tx, &mut inflight, wall0, &mut rep)?;
-                    }
-                }
-                ServerMsg::Done { tenant, outcome } => {
-                    let Some((t_dispatch, reqs)) = inflight.remove(&tenant) else {
-                        continue; // worker completion for a dropped batch
-                    };
-                    match outcome {
-                        Err(e) => {
-                            fatal = Some(anyhow!("tenant {tenant} worker: {e}"));
-                            break;
-                        }
-                        Ok(done) => {
-                            let now = wall0.elapsed().as_secs_f64();
-                            // Concurrent workers run the cost model off
-                            // engine (Send snapshots), so the engine never
-                            // saw this batch: close the Fig 9 loop here
-                            // (no-op on analytic engines).
-                            {
-                                let t = &self.tenants[tenant];
-                                self.engine.observe_costs(&crate::planner::CostObservation {
-                                    n_blocks: t.handle.schedule().n_blocks,
-                                    bytes: t.model.size_bytes(),
-                                    depth: t.model.total_depth(),
-                                    flops: t.model.total_flops(),
-                                    proc: t.model.processor,
-                                    swap_s: done.swap_s,
-                                    assembly_s: done.assembly_s,
-                                    compute_s: done.compute_s,
-                                });
-                            }
-                            let name = self.tenants[tenant].name.clone();
-                            let k = reqs.len().max(1);
-                            for r in &reqs {
-                                // Wall clock end to end (arrival and
-                                // completion are both wall-measured); the
-                                // swap/assembly/compute components stay on
-                                // the cost-model clock as a decomposition.
-                                rep.record(ServeTrace {
-                                    model: name.clone(),
-                                    queue_s: t_dispatch - r.arrival_s,
-                                    swap_s: done.swap_s / k as f64,
-                                    assembly_s: done.assembly_s / k as f64,
-                                    compute_s: done.compute_s,
-                                    e2e_s: now - r.arrival_s,
-                                    batch: k,
-                                    tokens: 1,
-                                    s_per_token: now - t_dispatch,
-                                });
-                            }
-                            rep.record_batch(&name);
-                            rep.makespan_s = rep.makespan_s.max(now);
-                            if !self.tenants[tenant].queue.is_empty() {
-                                self.dispatch_concurrent(
-                                    tenant,
-                                    &job_tx,
-                                    &mut inflight,
-                                    wall0,
-                                    &mut rep,
-                                )?;
-                            }
-                        }
-                    }
+                    bail!("server channel disconnected");
                 }
             }
         }
-        // Retire the workers: closing the job channels ends their loops.
-        drop(job_tx);
-        for w in workers {
-            let _ = w.join();
-        }
-        if let Some(e) = fatal {
-            return Err(e);
-        }
-        let (peak, oom) = {
-            let mem = self.mem.lock().expect("ledger poisoned");
-            (mem.peak(), mem.oom_events)
-        };
-        rep.peak_bytes = peak;
-        rep.oom_events = oom;
-        rep.wall_s = wall0.elapsed().as_secs_f64();
-        rep.pool = self.pool_stats();
-        rep.plan = Some(self.engine.plan_stats());
-        Ok(rep)
+        // Wall stamps are non-decreasing by construction, so the stream
+        // is already sorted for the reactor.
+        self.serve_events(reqs.into_iter(), self.cfg.sample_dt_s)
     }
-
-    /// Drain up to `max_batch` queued requests for `ti` into a worker
-    /// job (concurrent mode).
-    fn dispatch_concurrent(
-        &mut self,
-        ti: usize,
-        job_tx: &HashMap<usize, Sender<Job>>,
-        inflight: &mut HashMap<usize, (f64, Vec<Request>)>,
-        wall0: Instant,
-        rep: &mut MultiServeReport,
-    ) -> Result<()> {
-        let Some(jtx) = job_tx.get(&ti) else {
-            bail!("tenant {ti} registered after serve_concurrent started");
-        };
-        // Same dispatch-time hygiene as the virtual path: deadline-policy
-        // queues drop entries whose (wall) deadline already lapsed.
-        self.expire_deadlines(ti, wall0.elapsed().as_secs_f64(), rep);
-        let t = &mut self.tenants[ti];
-        let k = t.queue.len().min(self.cfg.max_batch);
-        if k == 0 {
-            return Ok(());
-        }
-        let reqs: Vec<Request> = t.queue.drain(..k).collect();
-        let seed_bump = t.batches;
-        t.batches += 1;
-        let job = Job {
-            batch: k,
-            seed_bump,
-            budget: t.handle.budget(),
-            resident_bytes: t.handle.schedule().peak_bytes + scheduler::overhead_bytes(&t.model),
-            schedule: t.handle.schedule(),
-        };
-        jtx.send(job).map_err(|_| anyhow!("tenant {ti} worker is gone"))?;
-        inflight.insert(ti, (wall0.elapsed().as_secs_f64(), reqs));
-        Ok(())
-    }
-}
-
-/// Index of the inflight batch with the earliest `t_done <= limit`.
-fn next_due(inflight: &[Inflight], limit: f64) -> Option<usize> {
-    let mut best: Option<usize> = None;
-    for (i, ev) in inflight.iter().enumerate() {
-        if ev.t_done <= limit {
-            match best {
-                Some(b) if inflight[b].t_done <= ev.t_done => {}
-                _ => best = Some(i),
-            }
-        }
-    }
-    best
 }
 
 /// Deterministic synthetic block-file id for (tenant, block).
 fn block_file(tenant: usize, block: usize) -> u64 {
     0x6000_0000 + ((tenant as u64) << 12) + block as u64
-}
-
-/// Per-tenant worker: runs the same `engine::sim` cost model the engine
-/// itself dispatches, against a `Send` snapshot of the tenant's
-/// schedule, holding the model's residency in the shared ledger for the
-/// (time-compressed) duration of the batch window.
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    tenant: usize,
-    jobs: Receiver<Job>,
-    done: Sender<ServerMsg>,
-    mem: Arc<Mutex<MemSim>>,
-    model: ModelInfo,
-    tag: String,
-    prof: DeviceProfile,
-    base_cfg: SnetConfig,
-    time_scale: f64,
-) {
-    let swapper = SwapController::new(SwapMode::ZeroCopy, &tag);
-    while let Ok(job) = jobs.recv() {
-        let alloc = {
-            let mut mem = mem.lock().expect("ledger poisoned");
-            swapper.acquire_residency(&mut mem, job.resident_bytes)
-        };
-        let mut cfg = base_cfg;
-        cfg.seed = base_cfg.seed.wrapping_add(job.seed_bump);
-        let outcome = simulate_scheduled(&model, job.budget, &prof, &cfg, Some(&job.schedule))
-            .map(|run| {
-                let latency_s = run.latency_s + (job.batch - 1) as f64 * run.compute_s;
-                WorkerDone {
-                    latency_s,
-                    swap_s: run.swap_s,
-                    assembly_s: run.assembly_s,
-                    compute_s: run.compute_s,
-                }
-            });
-        if let (Ok(d), true) = (&outcome, time_scale > 0.0) {
-            // Hold the resident window for real so tenant windows
-            // genuinely overlap across threads.
-            std::thread::sleep(Duration::from_secs_f64(
-                (d.latency_s * time_scale).min(0.25),
-            ));
-        }
-        {
-            let mut mem = mem.lock().expect("ledger poisoned");
-            swapper.release_residency(&mut mem, alloc);
-        }
-        if done.send(ServerMsg::Done { tenant, outcome }).is_err() {
-            break; // server loop ended
-        }
-    }
 }

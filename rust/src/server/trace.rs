@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 
 use crate::hostmem::PoolStats;
-use crate::metrics::LatencyRecorder;
+use crate::metrics::{LatencyHistogram, LatencyRecorder};
 use crate::planner::PlanStats;
 
 /// One request's delay decomposition.
@@ -68,6 +68,44 @@ impl ModelServeStats {
     }
 }
 
+/// Per-tenant queue-depth and shed-rate time series sampled on the
+/// reactor's virtual clock every `dt_s` seconds — the storm scenario's
+/// view of *when* pressure built and who paid for it, not just the
+/// end-of-run totals.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StormSeries {
+    /// Sampling period (virtual seconds).
+    pub dt_s: f64,
+    /// Tenant names, fixing the column order of `depth`/`shed`.
+    pub tenants: Vec<String>,
+    /// `depth[sample][tenant]`: queued requests at the sample instant.
+    pub depth: Vec<Vec<u32>>,
+    /// `shed[sample][tenant]`: cumulative shed+rejected count so far.
+    pub shed: Vec<Vec<u64>>,
+}
+
+impl StormSeries {
+    pub fn new(dt_s: f64, tenants: Vec<String>) -> StormSeries {
+        StormSeries { dt_s, tenants, depth: Vec::new(), shed: Vec::new() }
+    }
+
+    pub fn push_sample(&mut self, depth: Vec<u32>, shed: Vec<u64>) {
+        debug_assert_eq!(depth.len(), self.tenants.len());
+        debug_assert_eq!(shed.len(), self.tenants.len());
+        self.depth.push(depth);
+        self.shed.push(shed);
+    }
+
+    pub fn samples(&self) -> usize {
+        self.depth.len()
+    }
+
+    /// Peak queue depth any tenant reached across the run.
+    pub fn max_depth(&self) -> u32 {
+        self.depth.iter().flatten().copied().max().unwrap_or(0)
+    }
+}
+
 /// Aggregated outcome of one multi-tenant serving run.
 #[derive(Debug)]
 pub struct MultiServeReport {
@@ -96,6 +134,20 @@ pub struct MultiServeReport {
     /// the cached strategy state occupies. `None` until a serve loop
     /// stamps it.
     pub plan: Option<PlanStats>,
+    /// Fleet-wide end-to-end latency histogram (p50/p99/p999 tail CDF);
+    /// fed by every [`record`](Self::record) alongside the exact
+    /// per-model recorders.
+    pub hist: LatencyHistogram,
+    /// Total seconds a swap DMA channel was occupied by batch swap-in.
+    pub swap_busy_s: f64,
+    /// Swap channels the run was modeled with (pipeline spec).
+    pub swap_channels: usize,
+    /// Batches whose start waited in the channel-deferral FIFO because
+    /// every swap channel was busy.
+    pub deferred_batches: u64,
+    /// Virtual-clock queue-depth / shed time series (`None` unless the
+    /// run sampled one).
+    pub series: Option<StormSeries>,
     pub per_model: BTreeMap<String, ModelServeStats>,
     pub traces: Vec<ServeTrace>,
 }
@@ -114,6 +166,11 @@ impl MultiServeReport {
             oom_events: 0,
             pool: None,
             plan: None,
+            hist: LatencyHistogram::new(),
+            swap_busy_s: 0.0,
+            swap_channels: 0,
+            deferred_batches: 0,
+            series: None,
             per_model: BTreeMap::new(),
             traces: Vec::new(),
         }
@@ -122,6 +179,7 @@ impl MultiServeReport {
     /// Record one served request's trace.
     pub fn record(&mut self, tr: ServeTrace) {
         self.served += 1;
+        self.hist.record(tr.e2e_s);
         let m = self.per_model.entry(tr.model.clone()).or_default();
         m.served += 1;
         m.latency.record(tr.e2e_s);
@@ -158,6 +216,83 @@ impl MultiServeReport {
     /// True when the run never exceeded the fleet budget.
     pub fn within_budget(&self) -> bool {
         self.oom_events == 0 && self.peak_bytes <= self.total_budget
+    }
+
+    /// Fraction of served+shed+rejected requests that were not served.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.resolved();
+        if total == 0 {
+            return 0.0;
+        }
+        (self.shed + self.rejected) as f64 / total as f64
+    }
+
+    /// Fraction of total channel-seconds the swap channels spent busy.
+    pub fn swap_channel_utilization(&self) -> f64 {
+        let cap = self.makespan_s * self.swap_channels as f64;
+        if cap <= 0.0 {
+            return 0.0;
+        }
+        (self.swap_busy_s / cap).min(1.0)
+    }
+
+    /// Deterministic digest of everything the reactor computed on the
+    /// virtual clock — counters, clocks (as exact bits), the latency
+    /// histogram CDF, per-model aggregates, and the sampled series.
+    /// Deliberately excludes `wall_s` and the pool/plan counters (host
+    /// wall time is never deterministic; pool stats depend on backend
+    /// presence). Two runs of the same workload must produce equal keys;
+    /// the determinism tests and `micro_storm`'s self-check compare
+    /// exactly this string.
+    pub fn determinism_key(&self) -> String {
+        use std::fmt::Write;
+        let mut k = String::new();
+        let _ = write!(
+            k,
+            "served={} shed={} rejected={} batches={} deferred={} \
+             peak={} oom={} budget={} channels={} makespan={:016x} swap_busy={:016x}",
+            self.served,
+            self.shed,
+            self.rejected,
+            self.batches,
+            self.deferred_batches,
+            self.peak_bytes,
+            self.oom_events,
+            self.total_budget,
+            self.swap_channels,
+            self.makespan_s.to_bits(),
+            self.swap_busy_s.to_bits(),
+        );
+        for (upper, count, _) in self.hist.rows() {
+            let _ = write!(k, " h:{:016x}:{count}", upper.to_bits());
+        }
+        for (name, m) in &self.per_model {
+            let lat_sum: f64 = m.latency.samples().iter().sum();
+            let q_sum: f64 = m.queue.samples().iter().sum();
+            let _ = write!(
+                k,
+                " m:{name}:{}:{}:{}:{}:{:016x}:{:016x}",
+                m.served,
+                m.shed,
+                m.rejected,
+                m.batches,
+                lat_sum.to_bits(),
+                q_sum.to_bits(),
+            );
+        }
+        if let Some(s) = &self.series {
+            let _ = write!(k, " series:{}:{:016x}", s.samples(), s.dt_s.to_bits());
+            for (d, sh) in s.depth.iter().zip(&s.shed) {
+                let _ = write!(k, ";");
+                for v in d {
+                    let _ = write!(k, "{v},");
+                }
+                for v in sh {
+                    let _ = write!(k, "{v},");
+                }
+            }
+        }
+        k
     }
 }
 
@@ -197,6 +332,68 @@ mod tests {
         assert!((a.latency.mean() - 0.6).abs() < 1e-9);
         assert!((a.mean_batch() - 2.0).abs() < 1e-9);
         assert_eq!(rep.per_model["b"].shed, 1);
+    }
+
+    #[test]
+    fn histogram_and_shed_rate_track_records() {
+        let mut rep = MultiServeReport::new(1000);
+        rep.record(trace("a", 0.5));
+        rep.record(trace("a", 0.7));
+        rep.record_shed("a");
+        rep.record_rejected("b");
+        assert_eq!(rep.hist.len(), 2);
+        assert!(rep.hist.p(50.0) > 0.0);
+        assert!((rep.shed_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn swap_channel_utilization_bounds() {
+        let mut rep = MultiServeReport::new(1000);
+        assert_eq!(rep.swap_channel_utilization(), 0.0, "no makespan yet");
+        rep.makespan_s = 10.0;
+        rep.swap_channels = 2;
+        rep.swap_busy_s = 5.0;
+        assert!((rep.swap_channel_utilization() - 0.25).abs() < 1e-9);
+        rep.swap_busy_s = 100.0;
+        assert_eq!(rep.swap_channel_utilization(), 1.0, "clamped");
+    }
+
+    #[test]
+    fn determinism_key_is_stable_and_sensitive() {
+        let build = || {
+            let mut rep = MultiServeReport::new(1000);
+            rep.record(trace("a", 0.5));
+            rep.record(trace("b", 1.0));
+            rep.record_batch("a");
+            rep.makespan_s = 2.5;
+            let mut s = StormSeries::new(0.5, vec!["a".into(), "b".into()]);
+            s.push_sample(vec![1, 0], vec![0, 0]);
+            rep.series = Some(s);
+            rep
+        };
+        let a = build();
+        assert_eq!(a.determinism_key(), build().determinism_key());
+        // wall_s must not perturb the key...
+        let mut b = build();
+        b.wall_s = 99.0;
+        assert_eq!(a.determinism_key(), b.determinism_key());
+        // ...but any virtual-clock outcome must.
+        let mut c = build();
+        c.record_shed("a");
+        assert_ne!(a.determinism_key(), c.determinism_key());
+        let mut d = build();
+        d.series.as_mut().unwrap().push_sample(vec![2, 2], vec![1, 0]);
+        assert_ne!(a.determinism_key(), d.determinism_key());
+    }
+
+    #[test]
+    fn storm_series_max_depth() {
+        let mut s = StormSeries::new(0.1, vec!["a".into()]);
+        assert_eq!(s.max_depth(), 0);
+        s.push_sample(vec![3], vec![0]);
+        s.push_sample(vec![7], vec![2]);
+        assert_eq!(s.samples(), 2);
+        assert_eq!(s.max_depth(), 7);
     }
 
     #[test]

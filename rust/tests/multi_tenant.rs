@@ -3,8 +3,10 @@
 //! resident-window batching, per-request traces, and — the headline
 //! claim — a fleet whose combined footprint is well beyond the memory
 //! budget serving a mixed stream with zero budget violations, asserted
-//! via the shared MemSim residency ledger (virtual-clock mode) and via
-//! real worker threads against live client threads (concurrent mode).
+//! via the shared MemSim residency ledger. Every drive mode funnels into
+//! the same event-driven reactor: virtual-clock streams here, and live
+//! client threads whose submissions are wall-stamped and replayed
+//! (concurrent mode).
 
 use swapnet::config::{DeviceProfile, MB};
 use swapnet::delay::DelayModel;
@@ -226,13 +228,13 @@ fn deadline_policy_rejects_infeasible_and_serves_the_rest() {
 
 #[test]
 fn concurrent_clients_never_exceed_the_budget() {
-    // N client threads against 3 registered models, executing in real
-    // worker threads whose resident windows overlap — the shared MemSim
-    // ledger must never record more than the configured budget.
+    // N client threads submit against 3 registered models; their
+    // submissions are stamped with wall arrival times and replayed on
+    // the reactor, whose resident windows overlap in virtual time — the
+    // shared MemSim ledger must never record more than the budget.
     let mut cfg = MultiTenantConfig::new(300 * MB);
     cfg.queue_cap = 64;
     cfg.global_cap = 256;
-    cfg.time_scale = 0.02; // hold windows ~10-20 ms so they overlap
     let mut server = MultiTenantServer::new(Engine::builder().build(), cfg);
     let ids = [
         server.register(families::resnet101(), 1.0).unwrap(),

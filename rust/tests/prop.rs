@@ -998,6 +998,99 @@ fn dp_never_worse_than_frozen_beam_on_model_families() {
     }
 }
 
+// ---------------------------------------------------------------------
+// serving-reactor invariants
+// ---------------------------------------------------------------------
+
+mod reactor_props {
+    use swapnet::config::MB;
+    use swapnet::engine::Engine;
+    use swapnet::model::families;
+    use swapnet::server::multi::{MultiTenantConfig, MultiTenantServer};
+    use swapnet::server::{AdmissionPolicy, LoadGen};
+
+    use super::cases;
+
+    fn fleet_server(cfg: MultiTenantConfig) -> MultiTenantServer {
+        let mut server = MultiTenantServer::new(Engine::builder().build(), cfg);
+        for m in [families::resnet101(), families::yolov3(), families::fcn()] {
+            server.register(m, 1.0).expect("trio partitions under the budget");
+        }
+        server
+    }
+
+    #[test]
+    fn prop_oversubscribed_reactor_sheds_and_never_violates_the_ledger() {
+        // 10x+ oversubscription: ~200 req/s offered against a fleet
+        // whose batch windows run for seconds. Whatever the admission
+        // policy decides, overload must resolve through shedding or
+        // rejection — never through the MemSim ledger.
+        cases(6, |rng| {
+            let mut cfg = MultiTenantConfig::new(300 * MB);
+            cfg.policy =
+                if rng.f64() < 0.5 { AdmissionPolicy::Fifo } else { AdmissionPolicy::Urgency };
+            cfg.queue_cap = 2 + rng.below(6);
+            cfg.global_cap = cfg.queue_cap * 2 + rng.below(8);
+            cfg.max_batch = 1 + rng.below(8);
+            let mut server = fleet_server(cfg);
+            let n = 100;
+            let load = LoadGen::poisson(3, n, 200.0, rng.next_u64());
+            let rep = server.serve_load(&load).unwrap();
+            assert_eq!(rep.resolved(), n, "every arrival resolves exactly once");
+            assert!(rep.served > 0, "the admitted head of queue is served");
+            assert!(
+                rep.shed + rep.rejected > 0,
+                "10x oversubscription must shed through admission"
+            );
+            assert_eq!(rep.oom_events, 0, "overload never reaches the ledger");
+            assert!(rep.within_budget(), "peak {} vs {}", rep.peak_bytes, rep.total_budget);
+            assert!(rep.peak_bytes > 0);
+            assert_eq!(rep.hist.len(), rep.served as u64);
+            if rep.per_model.values().any(|m| m.shed > 0) {
+                assert_eq!(
+                    rep.shed,
+                    rep.per_model.values().map(|m| m.shed).sum::<usize>(),
+                    "fleet shed total matches the per-model decomposition"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_doubling_arrival_rate_never_decreases_throughput() {
+        // Work conservation: the same 60 requests offered twice as fast
+        // arrive strictly earlier (the exp draws scale by exactly 1/rate
+        // for a fixed seed), batch at least as densely, and finish no
+        // later — so served/makespan throughput is monotone in the
+        // offered rate across the under- to over-subscribed range.
+        cases(3, |rng| {
+            let seed = rng.next_u64();
+            let mut cfg = MultiTenantConfig::new(300 * MB);
+            cfg.policy = AdmissionPolicy::Urgency;
+            // Caps sized so nothing sheds: served counts stay equal and
+            // the comparison is purely about completion times.
+            cfg.queue_cap = 64;
+            cfg.global_cap = 256;
+            let mut server = fleet_server(cfg);
+            let n = 60;
+            let mut prev = 0.0f64;
+            for rate in [5.0, 10.0, 20.0, 40.0, 80.0] {
+                let rep =
+                    server.serve_load(&LoadGen::poisson(3, n, rate, seed)).unwrap();
+                assert_eq!(rep.served, n, "caps admit everything at {rate} Hz");
+                assert!(rep.within_budget());
+                let thr = rep.served as f64 / rep.makespan_s.max(1e-9);
+                assert!(
+                    thr >= prev * 0.999,
+                    "throughput fell from {prev:.3} to {thr:.3} req/s when the \
+                     rate doubled to {rate} Hz"
+                );
+                prev = thr;
+            }
+        });
+    }
+}
+
 #[test]
 fn prop_planner_cost_provider_parity() {
     // AnalyticCosts::block_times is bitwise the DelayModel triple.
