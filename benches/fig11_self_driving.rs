@@ -5,6 +5,10 @@
 //! 35.7-65.0% vs TPrg, 42.0-66.4% vs DCha; latency within 26-46 ms of
 //! DInf; accuracy identical to DInf (TPrg drops 5.0-6.7%).
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use swapnet::config::DeviceProfile;
 use swapnet::coordinator::{run_scenario, SnetConfig};
 use swapnet::metrics::reduction_pct;

@@ -3,6 +3,10 @@
 //! models + large memory; w/o-mod-ske adds 15.7-29.0% latency (no extra
 //! memory, inference-mode assembly); w/o-pat-sch adds 19.0-34.3%.
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use swapnet::config::DeviceProfile;
 use swapnet::coordinator::{run_snet_model, scenario_budgets, SnetConfig};
 use swapnet::util::table;

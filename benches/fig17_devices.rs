@@ -3,6 +3,10 @@
 //! latency overhead vs DInf is 15 ms on NX and 19 ms on Nano — the
 //! design still works on the lower-end device.
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use swapnet::config::{DeviceProfile, MB};
 use swapnet::coordinator::{run_snet_model, SnetConfig};
 use swapnet::delay::DelayModel;

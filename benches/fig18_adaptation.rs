@@ -3,6 +3,10 @@
 //! the first squeeze keeps 3 blocks with new cut points (adaptation 74 ms,
 //! latency ~499 ms); the second squeeze forces 4 blocks (64 ms, ~511 ms).
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use swapnet::config::DeviceProfile;
 use swapnet::coordinator::{run_snet_model, SnetConfig};
 use swapnet::model::families;

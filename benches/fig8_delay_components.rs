@@ -7,6 +7,10 @@
 //! gated in CI against `BENCH_baseline.json`; the partition-dependent
 //! totals ride along unguarded.
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use swapnet::config::{DeviceProfile, MB};
 use swapnet::delay::DelayModel;
 use swapnet::metrics::emit::{BenchArgs, BenchEmitter};

@@ -3,6 +3,10 @@
 //! measure OUR real per-reference cost on the host plus the simulated
 //! device cost model, via the engine's micro probes).
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use swapnet::assembly::{synthetic_skeleton, AssemblyMode};
 use swapnet::config::{DeviceProfile, MB};
 use swapnet::engine::micro::assemble_once;

@@ -3,6 +3,10 @@
 //! a meta file for the scheduler. Paper shows e.g. Layer1 0.38 MB /
 //! depth 1 / 26.2 MFLOPs ... Layer101 17.45 MB.
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use swapnet::model::families;
 use swapnet::util::table;
 

@@ -8,6 +8,10 @@
 //!
 //!     cargo run --release --example perf_stack
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use std::rc::Rc;
 use std::time::Instant;
 

@@ -13,6 +13,10 @@
 //!
 //! Requires `make artifacts` to have run (and a real xla backend).
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use anyhow::{anyhow, Result};
 use swapnet::engine::Engine;
 use swapnet::model::artifacts::{artifacts_dir, ArtifactModel};

@@ -128,6 +128,8 @@ impl AssemblyController {
             AssemblyMode::DummyModel => {
                 // Instantiate the placeholder (full-size allocation) and
                 // copy every real parameter over its random twin.
+                // lint: allow(alloc-pairing): the dummy lives inside the
+                // returned AssembledBlock; disassemble frees it.
                 let dummy = mem.alloc(&self.tag, Space::Cpu, block.size_bytes);
                 let lat = prof.dummy_instantiate_s_per_depth * skeleton.len() as f64
                     + block.size_bytes as f64 * prof.memcpy_s_per_byte;
@@ -145,7 +147,7 @@ impl AssemblyController {
     /// are charged by the swap controller's swap-out.
     pub fn disassemble(&self, ab: AssembledBlock, mem: &mut MemSim) {
         if let Some(id) = ab.dummy {
-            mem.free(id);
+            mem.must_free(id);
         }
     }
 }

@@ -39,6 +39,8 @@ pub fn dinf(
     let file = 0xD1F0_0000 | whole.size_bytes; // synthetic file id
     let _resident = ctl.swap_in_sim(&whole, file, model.processor, storage, mem, prof);
     // activations
+    // lint: allow(alloc-pairing): DInf never releases — that IS the
+    // baseline (whole model + activations resident for the process life).
     let _act = mem.alloc(&model.name, crate::memsim::Space::Cpu, activation_bytes(&model.family));
     let dm = crate::delay::DelayModel::from_profile(prof);
     MethodReport {
@@ -75,6 +77,8 @@ pub fn tprg(
     let whole = compressed.single_block();
     let file = 0x7961_0000 | whole.size_bytes;
     let _resident = ctl.swap_in_sim(&whole, file, model.processor, storage, mem, prof);
+    // lint: allow(alloc-pairing): TPrg keeps the compressed model and
+    // its activations resident for the process life, like DInf.
     let _act = mem.alloc(&compressed.name, crate::memsim::Space::Cpu, activation_bytes(&model.family));
     let dm = crate::delay::DelayModel::from_profile(prof);
     // Accuracy drop: paper band 5.0-6.7%, deterministic per model.
@@ -120,6 +124,8 @@ pub fn dcha(
         }
     }
     // fusion buffers: one activation set per group
+    // lint: allow(alloc-pairing): DCha's fusion buffers stay resident;
+    // only finished groups' page-cache pages are dropped above.
     let _fuse = mem.alloc(&tag, crate::memsim::Space::Cpu, groups * activation_bytes(&model.family));
     let dm = crate::delay::DelayModel::from_profile(prof);
     let whole = model.single_block();

@@ -145,6 +145,28 @@ impl EngineCore {
     }
 }
 
+/// Admission gate (DESIGN.md §11): statically verify a plan before it
+/// serves. The bounded checker enumerates every legal interleaving of
+/// the plan's swap events and proves the ledger invariants; a
+/// provably-unsafe plan is rejected with its minimal counterexample.
+/// `Unprovable` (small-scope bounds exhausted) is admitted — the
+/// dynamic ledger still guards it at run time.
+fn verify_admission(info: &ModelInfo, schedule: &Schedule, cfg: &SnetConfig) -> Result<()> {
+    let prog = crate::verify::ProgramSpec::from_schedule(info, schedule, &cfg.pipeline)
+        .map_err(|e| anyhow!("{}: {e}", info.name))?;
+    // The w/o-pat-sch ablation *intends* to overshoot the budget; the
+    // discipline invariants (residency <= m, claimed peak, every buffer
+    // freed exactly once, deadlock-freedom) still must hold.
+    let prog = if cfg.partition_scheduling { prog } else { prog.unbudgeted() };
+    match crate::verify::run(&prog) {
+        Ok(_) => Ok(()),
+        Err(e) => Err(anyhow!(
+            "{}: schedule verifier rejected the plan: {e}",
+            info.name
+        )),
+    }
+}
+
 /// Builder for [`Engine`]: device profile, memory budget, ablation
 /// switches ([`SnetConfig`]), seed, and the execution backend.
 pub struct EngineBuilder {
@@ -342,6 +364,7 @@ impl Engine {
     ) -> Result<ModelHandle> {
         let core = &mut *self.core.borrow_mut();
         let schedule = core.plan_schedule(&info, budget).map_err(Error::msg)?;
+        verify_admission(&info, &schedule, &core.cfg)?;
         let id = core.models.len();
         let reg = RegisteredModel { info, budget, schedule, artifact };
         core.backend.prepare(id, &reg)?;
@@ -451,6 +474,29 @@ impl Engine {
         self.core.borrow_mut().planner.observe(obs);
     }
 
+    /// Re-run the static schedule verifier over a registered model's
+    /// current plan — the same bounded check [`Engine`] applies before
+    /// admitting any registration or rebudget (DESIGN.md §11). `Ok`
+    /// carries the exhaustiveness certificate; a provably-unsafe plan
+    /// (impossible for plans admitted by this engine) or an
+    /// unprovable-within-bounds one is an error.
+    pub fn verify_plan(&self, handle: &ModelHandle) -> Result<crate::verify::Proof> {
+        let core = self.core.borrow();
+        let reg = core.reg(handle.id)?;
+        let prog =
+            crate::verify::ProgramSpec::from_schedule(&reg.info, &reg.schedule, &core.cfg.pipeline)
+                .map_err(|e| anyhow!("{}: {e}", reg.info.name))?;
+        let prog = if core.cfg.partition_scheduling { prog } else { prog.unbudgeted() };
+        match crate::verify::run(&prog) {
+            Ok(crate::verify::Outcome::Proved(p)) => Ok(p),
+            Ok(crate::verify::Outcome::Unprovable { reason }) => Err(anyhow!(
+                "{}: plan not provable within bounds: {reason}",
+                reg.info.name
+            )),
+            Err(e) => Err(anyhow!("{}: schedule verifier rejected the plan: {e}", reg.info.name)),
+        }
+    }
+
     /// Decode-aware planning probe against the shared planner: the swap
     /// window is reduced by the pinned KV band and execution cost is
     /// amortized across `ctx.batch` sequences sharing one block sweep.
@@ -552,6 +598,7 @@ impl ModelHandle {
         }
         let info = reg.info.clone();
         let schedule = core.plan_schedule(&info, budget).map_err(Error::msg)?;
+        verify_admission(&info, &schedule, &core.cfg)?;
         let reg = core.models[self.id].as_mut().expect("checked live above");
         reg.budget = budget;
         reg.schedule = schedule.clone();

@@ -239,7 +239,7 @@ pub(crate) fn simulate_scheduled(
         // block that was swapped out — NOT to the block whose swap-in
         // triggered it (the historical off-by-one).
         while resident.len() > residency_m - 1 {
-            let old = resident.pop_front().unwrap();
+            let old = resident.pop_front().expect("len > m-1 >= 0 checked by the loop");
             let idx = old.block.index;
             let rep = swapper.swap_out(old, &mut mem, prof);
             if let Some(ab_old) = assembled[idx].take() {

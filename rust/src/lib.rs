@@ -15,6 +15,11 @@
 //! LLM decode-serving loop ([`llm`]).
 
 #![forbid(unsafe_code)]
+// Non-test code must not panic on Option/Result; tests are exempt via
+// clippy.toml (`allow-unwrap-in-tests`). The narrower ledger lints
+// (`arithmetic_side_effects`, `indexing_slicing`) are scoped to the
+// MemSim/PageCache impls in `memsim`.
+#![warn(clippy::unwrap_used)]
 
 pub mod assembly;
 pub mod config;
@@ -35,6 +40,7 @@ pub mod server;
 pub mod storage;
 pub mod swap;
 pub mod util;
+pub mod verify;
 pub mod workload;
 
 // Back-compat path: the comparison methods moved under the engine.

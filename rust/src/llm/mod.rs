@@ -272,10 +272,10 @@ impl DecodeLoop<'_> {
             };
             if self.engine.plan_decode(self.model, self.cfg.budget, probe).is_err() {
                 // Joining would erase the swap window entirely.
-                self.ledger.free(pin);
+                self.ledger.must_free(pin);
                 break;
             }
-            let req = self.waiting.pop_front().unwrap();
+            let req = self.waiting.pop_front().expect("front() checked above");
             self.active.push(ActiveSeq {
                 req,
                 admit_s: now,
@@ -320,7 +320,7 @@ impl DecodeLoop<'_> {
                     }
                     Err(_) => {
                         let victim = self.active.pop().expect("non-empty batch");
-                        self.ledger.free(victim.pin);
+                        self.ledger.must_free(victim.pin);
                         self.rep.shed += 1;
                     }
                 }
@@ -350,7 +350,7 @@ impl DecodeLoop<'_> {
             // Charge the sweep's transient block residency while the KV
             // pins are live — this is the run's budget-violation check.
             let sweep = self.ledger.alloc("sweep", Space::Unified, sched.peak_bytes);
-            self.ledger.free(sweep);
+            self.ledger.must_free(sweep);
             self.stepping = true;
             q.push(now + step_s, LlmEv::StepDone(Step { batch, step_s, io_s, ex_s }));
             return Ok(());
@@ -377,7 +377,7 @@ impl DecodeLoop<'_> {
                 !finished && self.ledger.try_grow_pinned(s.pin, self.kv_pos).is_err();
             if finished || evicted {
                 let s = self.active.swap_remove(i);
-                self.ledger.free(s.pin);
+                self.ledger.must_free(s.pin);
                 if evicted {
                     self.rep.shed += 1;
                 } else {

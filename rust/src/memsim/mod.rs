@@ -76,6 +76,34 @@ impl std::fmt::Display for AllocError {
 
 impl std::error::Error for AllocError {}
 
+/// A ledger free targeted an [`AllocId`] the ledger does not hold —
+/// never allocated, already freed, or already evicted (the ledger cannot
+/// tell these apart once the entry is gone). Tolerating them silently is
+/// exactly how the PR 3 swap-out misattribution survived: the off-by-one
+/// free of an unknown id accounted as a no-op. [`MemSim::free`] now
+/// surfaces the error; steady-state paths route through
+/// [`MemSim::must_free`], which turns it into a debug assertion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LedgerError {
+    /// `free` was called with an id the ledger does not hold.
+    FreeUnknown { id: AllocId },
+}
+
+impl std::fmt::Display for LedgerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            LedgerError::FreeUnknown { id } => write!(
+                f,
+                "free of alloc id {} which the ledger does not hold \
+                 (double free, never allocated, or already evicted)",
+                id.0
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LedgerError {}
+
 #[derive(Debug, Clone)]
 struct Allocation {
     space: Space,
@@ -97,6 +125,10 @@ pub struct MemSim {
     /// Number of alloc calls that exceeded `total` (OOM events — the
     /// paper's DInf handles these by killing non-DNN tasks).
     pub oom_events: u64,
+    /// Number of ledger-discipline violations observed (bad frees). Never
+    /// resets; long-running servers surface it even when a caller ignored
+    /// the `free` Result.
+    pub ledger_errors: u64,
     pub alloc_mode: AllocMode,
 }
 
@@ -106,6 +138,10 @@ pub struct TagStat {
     pub peak: u64,
 }
 
+// Ledger math must never silently wrap or panic on a slice index: an
+// overflow here corrupts every budget decision downstream. Scoped to this
+// impl (not the module) so the tests below stay idiomatic.
+#[warn(clippy::arithmetic_side_effects, clippy::indexing_slicing)]
 impl MemSim {
     pub fn new(total: u64) -> Self {
         MemSim {
@@ -118,6 +154,7 @@ impl MemSim {
             per_space: HashMap::new(),
             per_space_peak: HashMap::new(),
             oom_events: 0,
+            ledger_errors: 0,
             alloc_mode: AllocMode::Malloc,
         }
     }
@@ -127,17 +164,17 @@ impl MemSim {
     /// the real device where the OOM killer fires asynchronously.
     pub fn alloc(&mut self, tag: &str, space: Space, bytes: u64) -> AllocId {
         let id = AllocId(self.next);
-        self.next += 1;
-        self.cur += bytes;
+        self.next = self.next.wrapping_add(1);
+        self.cur = self.cur.saturating_add(bytes);
         if self.cur > self.total {
-            self.oom_events += 1;
+            self.oom_events = self.oom_events.saturating_add(1);
         }
         self.peak = self.peak.max(self.cur);
         let t = self.per_tag.entry(tag.to_string()).or_default();
-        t.cur += bytes;
+        t.cur = t.cur.saturating_add(bytes);
         t.peak = t.peak.max(t.cur);
         let sp = self.per_space.entry(space).or_insert(0);
-        *sp += bytes;
+        *sp = sp.saturating_add(bytes);
         let cur_space = *sp;
         let pk = self.per_space_peak.entry(space).or_insert(0);
         *pk = (*pk).max(cur_space);
@@ -145,14 +182,41 @@ impl MemSim {
         id
     }
 
-    pub fn free(&mut self, id: AllocId) {
-        if let Some(a) = self.allocs.remove(&id) {
-            self.cur -= a.bytes;
-            if let Some(t) = self.per_tag.get_mut(&a.tag) {
-                t.cur -= a.bytes;
+    /// Free `id`, returning the bytes released. Freeing an id the ledger
+    /// does not hold (double free, never allocated, already evicted) is a
+    /// typed [`LedgerError`]: the ledger stays untouched and
+    /// `ledger_errors` is bumped, so the violation is visible even to
+    /// callers that discard the Result.
+    pub fn free(&mut self, id: AllocId) -> Result<u64, LedgerError> {
+        match self.allocs.remove(&id) {
+            Some(a) => {
+                self.cur = self.cur.saturating_sub(a.bytes);
+                if let Some(t) = self.per_tag.get_mut(&a.tag) {
+                    t.cur = t.cur.saturating_sub(a.bytes);
+                }
+                if let Some(s) = self.per_space.get_mut(&a.space) {
+                    *s = s.saturating_sub(a.bytes);
+                }
+                Ok(a.bytes)
             }
-            if let Some(s) = self.per_space.get_mut(&a.space) {
-                *s -= a.bytes;
+            None => {
+                self.ledger_errors = self.ledger_errors.saturating_add(1);
+                Err(LedgerError::FreeUnknown { id })
+            }
+        }
+    }
+
+    /// [`free`](MemSim::free) for the steady-state paths, where a bad
+    /// free is a bug in *our* discipline, not a caller input: asserts in
+    /// debug builds (so tests catch it), counts and tolerates in release
+    /// (the counterexample is in `ledger_errors`). Returns bytes freed,
+    /// 0 on a bad free.
+    pub fn must_free(&mut self, id: AllocId) -> u64 {
+        match self.free(id) {
+            Ok(bytes) => bytes,
+            Err(e) => {
+                debug_assert!(false, "ledger discipline violation: {e}");
+                0
             }
         }
     }
@@ -187,15 +251,15 @@ impl MemSim {
             return Err(AllocError { requested: delta, available });
         }
         let a = self.allocs.get_mut(&id).expect("checked above");
-        a.bytes += delta;
+        a.bytes = a.bytes.saturating_add(delta);
         let tag = a.tag.clone();
-        self.cur += delta;
+        self.cur = self.cur.saturating_add(delta);
         self.peak = self.peak.max(self.cur);
         let t = self.per_tag.entry(tag).or_default();
-        t.cur += delta;
+        t.cur = t.cur.saturating_add(delta);
         t.peak = t.peak.max(t.cur);
         let sp = self.per_space.entry(Space::Pinned).or_insert(0);
-        *sp += delta;
+        *sp = sp.saturating_add(delta);
         let cur_space = *sp;
         let pk = self.per_space_peak.entry(Space::Pinned).or_insert(0);
         *pk = (*pk).max(cur_space);
@@ -267,12 +331,13 @@ mod tests {
         assert_eq!(m.current(), 700);
         assert_eq!(m.peak(), 700);
         assert_eq!(m.current_in(Space::Cpu), 400);
-        m.free(a);
+        assert_eq!(m.free(a), Ok(400));
         assert_eq!(m.current(), 300);
         assert_eq!(m.peak(), 700); // peak sticky
-        m.free(b);
+        assert_eq!(m.free(b), Ok(300));
         assert_eq!(m.current(), 0);
         assert_eq!(m.live_allocs(), 0);
+        assert_eq!(m.ledger_errors, 0);
     }
 
     #[test]
@@ -280,7 +345,7 @@ mod tests {
         let mut m = MemSim::new(10_000);
         let a = m.alloc("vgg", Space::Cpu, 100);
         let _b = m.alloc("resnet", Space::Cpu, 50);
-        m.free(a);
+        m.free(a).expect("live id");
         let _c = m.alloc("vgg", Space::Cpu, 30);
         assert_eq!(m.tag_stat("vgg").peak, 100);
         assert_eq!(m.tag_stat("vgg").cur, 30);
@@ -296,19 +361,32 @@ mod tests {
     }
 
     #[test]
-    fn double_free_harmless() {
+    fn double_free_is_a_typed_error() {
         let mut m = MemSim::new(100);
         let a = m.alloc("t", Space::Cpu, 10);
-        m.free(a);
-        m.free(a);
+        assert_eq!(m.free(a), Ok(10));
+        // The second free must not touch the ledger — and must say so.
+        assert_eq!(m.free(a), Err(LedgerError::FreeUnknown { id: a }));
         assert_eq!(m.current(), 0);
+        assert_eq!(m.live_allocs(), 0);
+        assert_eq!(m.ledger_errors, 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "ledger discipline violation")]
+    fn must_free_asserts_on_double_free_in_debug() {
+        let mut m = MemSim::new(100);
+        let a = m.alloc("t", Space::Cpu, 10);
+        assert_eq!(m.must_free(a), 10);
+        m.must_free(a); // debug_assert fires under cargo test
     }
 
     #[test]
     fn reset_peaks() {
         let mut m = MemSim::new(1000);
         let a = m.alloc("t", Space::Cpu, 500);
-        m.free(a);
+        m.free(a).expect("live id");
         assert_eq!(m.peak(), 500);
         m.reset_peaks();
         assert_eq!(m.peak(), 0);
@@ -327,7 +405,7 @@ mod tests {
         assert_eq!(m.current(), 600);
         assert_eq!(m.oom_events, 0);
         assert_eq!(m.live_allocs(), 1);
-        m.free(kv);
+        m.free(kv).expect("live id");
         assert_eq!(m.pinned_bytes(), 0);
     }
 
@@ -353,7 +431,7 @@ mod tests {
         let mut m = MemSim::new(1000);
         let cpu = m.alloc("t", Space::Cpu, 10);
         assert!(m.try_grow_pinned(cpu, 1).is_err(), "non-pinned id");
-        m.free(cpu);
+        m.free(cpu).expect("live id");
         assert!(m.try_grow_pinned(cpu, 1).is_err(), "freed id");
         assert_eq!(m.current(), 0);
     }
@@ -368,7 +446,7 @@ mod tests {
         assert_eq!(m.current(), 800);
         assert_eq!(m.peak_in(Space::Unified), 100);
         assert_eq!(m.peak_in(Space::Pinned), 700);
-        m.free(blk);
+        m.free(blk).expect("live id");
         assert_eq!(m.pinned_bytes(), 700);
     }
 
@@ -379,7 +457,7 @@ mod tests {
         let mut m = MemSim::new(u64::MAX);
         let a = m.alloc("t", Space::PageCache, 700);
         let _b = m.alloc("t", Space::Cpu, 100);
-        m.free(a);
+        m.free(a).expect("live id");
         let _c = m.alloc("t", Space::PageCache, 50);
         assert_eq!(m.current_in(Space::PageCache), 50);
         assert_eq!(m.peak_in(Space::PageCache), 700, "transient peak is sticky");

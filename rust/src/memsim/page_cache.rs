@@ -39,6 +39,9 @@ pub struct PageCache {
     pub evictions: u64,
 }
 
+// Cache accounting shares the ledger-math discipline of `MemSim` (see
+// memsim/mod.rs): no silent wrap, no panicking index.
+#[warn(clippy::arithmetic_side_effects, clippy::indexing_slicing)]
 impl PageCache {
     pub fn new(capacity: u64) -> Self {
         PageCache {
@@ -73,24 +76,26 @@ impl PageCache {
     /// Touch one page of `file`; returns true on hit. On miss the page is
     /// inserted (evicting LRU pages if needed) and charged to `mem`.
     pub fn touch(&mut self, file: u64, page: u64, mem: &mut MemSim) -> bool {
-        self.stamp += 1;
+        self.stamp = self.stamp.wrapping_add(1);
         let key = PageKey { file, page };
         if let Some((st, _)) = self.pages.get_mut(&key) {
             self.lru.remove(st);
             *st = self.stamp;
             self.lru.insert(self.stamp, key);
-            self.hits += 1;
+            self.hits = self.hits.saturating_add(1);
             return true;
         }
-        self.misses += 1;
-        while self.used + PAGE > self.capacity && !self.pages.is_empty() {
+        self.misses = self.misses.saturating_add(1);
+        while self.used.saturating_add(PAGE) > self.capacity && !self.pages.is_empty() {
             self.evict_lru(mem);
         }
-        if self.used + PAGE <= self.capacity {
+        if self.used.saturating_add(PAGE) <= self.capacity {
+            // lint: allow(alloc-pairing): pages outlive this call; they
+            // are freed by evict_lru/drop_file when they leave the cache.
             let id = mem.alloc("page-cache", Space::PageCache, PAGE);
             self.pages.insert(key, (self.stamp, id));
             self.lru.insert(self.stamp, key);
-            self.used += PAGE;
+            self.used = self.used.saturating_add(PAGE);
         }
         false
     }
@@ -98,9 +103,9 @@ impl PageCache {
     fn evict_lru(&mut self, mem: &mut MemSim) {
         if let Some((_, key)) = self.lru.pop_first() {
             if let Some((_, id)) = self.pages.remove(&key) {
-                mem.free(id);
-                self.used -= PAGE;
-                self.evictions += 1;
+                mem.must_free(id);
+                self.used = self.used.saturating_sub(PAGE);
+                self.evictions = self.evictions.saturating_add(1);
             }
         }
     }
@@ -116,14 +121,14 @@ impl PageCache {
         for k in keys {
             if let Some((st, id)) = self.pages.remove(&k) {
                 self.lru.remove(&st);
-                mem.free(id);
-                self.used -= PAGE;
+                mem.must_free(id);
+                self.used = self.used.saturating_sub(PAGE);
             }
         }
     }
 
     pub fn hit_rate(&self) -> f64 {
-        let tot = self.hits + self.misses;
+        let tot = self.hits.saturating_add(self.misses);
         if tot == 0 {
             0.0
         } else {
@@ -211,6 +216,24 @@ mod tests {
             assert!(pc.touch(1, p, &mut mem), "page {p} must have survived");
         }
         assert_eq!(pc.hits, cap_pages);
+    }
+
+    #[test]
+    fn free_after_evict_is_a_typed_error() {
+        use crate::memsim::LedgerError;
+        let mut mem = MemSim::new(u64::MAX);
+        let mut pc = PageCache::new(PAGE); // room for exactly one page
+        pc.touch(1, 0, &mut mem);
+        // The cache's first page took the ledger's first id.
+        let page_id = AllocId(1);
+        assert_eq!(mem.size_of(page_id), Some(PAGE));
+        pc.touch(1, 1, &mut mem); // evicts page 0, freeing its id
+        assert_eq!(pc.evictions, 1);
+        // A stale free of the evicted id must surface as the typed
+        // error, leaving the surviving page's accounting untouched.
+        assert_eq!(mem.free(page_id), Err(LedgerError::FreeUnknown { id: page_id }));
+        assert_eq!(mem.ledger_errors, 1);
+        assert_eq!(mem.current_in(Space::PageCache), PAGE);
     }
 
     #[test]

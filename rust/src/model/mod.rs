@@ -105,7 +105,10 @@ impl ModelInfo {
 
     /// Whole model as a single block (the DInf view).
     pub fn single_block(&self) -> BlockInfo {
-        self.create_blocks(&[]).unwrap().pop().unwrap()
+        self.create_blocks(&[])
+            .expect("no points is always a legal partition")
+            .pop()
+            .expect("create_blocks returns at least one block")
     }
 }
 

@@ -131,6 +131,8 @@ fn bounded_overlap<T: Send>(
 
 /// Validated block bounds for a partition of `n_units` at `points`.
 fn block_bounds(n_units: usize, points: &[usize]) -> Result<Vec<(usize, usize)>> {
+    // lint: allow(heap-alloc): bounded partition metadata (n+1 cut
+    // points), not payload bytes; built once per plan, not per swap.
     let mut bounds = vec![0usize];
     bounds.extend_from_slice(points);
     bounds.push(n_units);
@@ -146,6 +148,8 @@ fn block_bounds(n_units: usize, points: &[usize]) -> Result<Vec<(usize, usize)>>
 /// unit's payload starts on its own page boundary (so every region can
 /// take an `O_DIRECT` read), and the total is the slot footprint.
 fn unit_regions(model: &ArtifactModel, lo: usize, hi: usize) -> (Vec<(usize, usize)>, usize) {
+    // lint: allow(heap-alloc): per-unit (offset, len) metadata, a few
+    // words per unit — the payload itself lives in the pool slot.
     let mut regions = Vec::with_capacity(hi - lo);
     let mut off = 0usize;
     for ui in lo..hi {
@@ -344,6 +348,8 @@ fn exec_block(
 ) -> Result<(xla::Literal, BlockReport)> {
     let ta = Instant::now();
     let flat = buf.as_slice();
+    // lint: allow(heap-alloc): per-unit literal handles (pointers into
+    // the pool slot), not parameter bytes.
     let mut unit_params = Vec::with_capacity(hi - lo);
     for (k, ui) in (lo..hi).enumerate() {
         let unit = &model.units[ui];

@@ -161,9 +161,9 @@ impl Prefix {
         depth.push(0);
         flops.push(0);
         for l in &model.layers {
-            size.push(size.last().unwrap() + l.size_bytes);
-            depth.push(depth.last().unwrap() + l.depth as u64);
-            flops.push(flops.last().unwrap() + l.flops);
+            size.push(size.last().copied().unwrap_or(0) + l.size_bytes);
+            depth.push(depth.last().copied().unwrap_or(0) + l.depth as u64);
+            flops.push(flops.last().copied().unwrap_or(0) + l.flops);
         }
         Prefix { size, depth, flops }
     }

@@ -516,6 +516,8 @@ impl MultiTenantServer {
         rep: &mut MultiServeReport,
     ) {
         let t = &mut self.tenants[b.tenant];
+        // lint: allow(alloc-pairing): the residency travels inside the
+        // Inflight event and is released when BatchDone fires.
         let alloc = t.swapper.acquire_residency(&mut self.mem, b.resident_bytes);
         let t_done = now + b.latency_s;
         t.free_at = t_done;
@@ -568,6 +570,8 @@ impl MultiTenantServer {
         arrivals: impl Iterator<Item = Request>,
         sample_dt: f64,
     ) -> Result<MultiServeReport> {
+        // lint: allow(wall-clock): wall time is *reported* (runtime_wall_s);
+        // every scheduling decision reads the virtual clock.
         let wall0 = Instant::now();
         self.mem.reset_peaks();
         self.mem.oom_events = 0;
@@ -725,6 +729,9 @@ impl MultiTenantServer {
     /// with per-tenant ingress queue depths and the last-event timestamp
     /// if clients stall.
     pub fn serve_concurrent(&mut self, expected: usize) -> Result<MultiServeReport> {
+        // lint: allow(wall-clock): ingress arrives on real client threads;
+        // wall time only spaces arrivals and feeds the report, never the
+        // virtual event clock.
         let wall0 = Instant::now();
         let mut reqs: Vec<Request> = Vec::with_capacity(expected);
         let mut last_event_s = 0.0f64;

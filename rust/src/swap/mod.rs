@@ -230,9 +230,7 @@ impl SwapController {
 
     /// Release a residency reservation; returns the bytes freed.
     pub fn release_residency(&self, mem: &mut MemSim, id: AllocId) -> u64 {
-        let freed = mem.size_of(id).unwrap_or(0);
-        mem.free(id);
-        freed
+        mem.must_free(id)
     }
 
     /// Eviction hygiene: drop every cached page of the model's block
@@ -260,8 +258,7 @@ impl SwapController {
     ) -> SwapOutReport {
         let mut freed = 0;
         for id in &rb.allocs {
-            freed += mem.size_of(*id).unwrap_or(0);
-            mem.free(*id);
+            freed += mem.must_free(*id);
         }
         SwapOutReport {
             sim_latency_s: prof.gc_s + prof.eta_s_per_depth * rb.block.depth as f64,
@@ -392,8 +389,10 @@ mod tests {
         assert_eq!(ctl.release_residency(&mut mem, a), 120 * MB);
         assert_eq!(ctl.release_residency(&mut mem, b), 40 * MB);
         assert_eq!(mem.current(), 0);
-        // Releasing twice is harmless (MemSim::free is idempotent).
-        assert_eq!(ctl.release_residency(&mut mem, a), 0);
+        // Releasing twice is a ledger-discipline violation: the typed
+        // error path (not silence) records it.
+        assert!(mem.free(a).is_err());
+        assert_eq!(mem.ledger_errors, 1);
     }
 
     #[test]

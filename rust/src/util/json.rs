@@ -249,7 +249,7 @@ impl<'a> Parser<'a> {
                     let start = self.i;
                     let s = std::str::from_utf8(&self.b[start..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let ch = s.chars().next().unwrap();
+                    let ch = s.chars().next().ok_or_else(|| self.err("truncated utf-8"))?;
                     out.push(ch);
                     self.i += ch.len_utf8();
                 }
@@ -266,7 +266,8 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("invalid utf-8 in number"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

@@ -28,7 +28,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -42,7 +42,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 /// Empirical CDF evaluated at `points` (fraction of xs <= point).
 pub fn cdf_at(xs: &[f64], points: &[f64]) -> Vec<f64> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     points
         .iter()
         .map(|p| {
@@ -102,8 +102,8 @@ pub fn linreg2(x1: &[f64], x2: &[f64], ys: &[f64]) -> (f64, f64, f64) {
 fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
     for col in 0..3 {
         let piv = (col..3)
-            .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())
-            .unwrap();
+            .max_by(|&i, &j| m[i][col].abs().total_cmp(&m[j][col].abs()))
+            .expect("col..3 is never empty");
         m.swap(col, piv);
         b.swap(col, piv);
         let d = m[col][col];

@@ -1,0 +1,733 @@
+//! Bounded model checking over the abstract swap-pipeline event system.
+//!
+//! A [`ProgramSpec`] induces a finite transition system: each block walks
+//! the phase chain `NotStarted -> SwapInFlight -> Resident -> Executing ->
+//! Executed -> SwapOutFlight -> Done`, pinned-KV growth events join the
+//! resident set between steps, and a [`Discipline`] selects between the
+//! healthy transition rules (the ones `pipeline::timeline_spec` and the
+//! `server::reactor` implement) and the frozen PR 3 defect rules. The
+//! checker BFS-enumerates *every* reachable interleaving under small-scope
+//! [`Bounds`] and proves the ledger invariants on each transition:
+//!
+//! * ledger bytes (live blocks + pinned KV) never exceed the budget,
+//! * at most `residency_m` blocks are live at once,
+//! * every block's buffer is freed exactly once (no unknown/double free,
+//!   nothing left charged at drain),
+//! * pinned KV growth never overcommits,
+//! * the event graph is deadlock-free (a non-terminal state always has an
+//!   enabled event).
+//!
+//! BFS order makes the first violation found a minimal-length one; the
+//! parent map reconstructs the event sequence and the replayed ledger
+//! timeline for the counterexample.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+
+use super::{Discipline, ProgramSpec};
+
+// Per-block phase values (low nibble of the state byte).
+const NOT_STARTED: u8 = 0;
+const SWAP_IN_FLIGHT: u8 = 1;
+const RESIDENT: u8 = 2;
+const EXECUTING: u8 = 3;
+const EXECUTED: u8 = 4;
+const SWAP_OUT_FLIGHT: u8 = 5;
+const DONE: u8 = 6;
+/// Freed marker (bit 4). Kept separate from the phase because the
+/// misattribution defect frees a *different* block than the one whose
+/// phase advanced.
+const FREED: u8 = 0x10;
+
+// Per-KV-event values (one state byte per `kv_growth` entry).
+const KV_PENDING: u8 = 0;
+const KV_GROWN: u8 = 1;
+const KV_SHED: u8 = 2;
+
+/// One abstract pipeline event. Block/KV indices are into
+/// `ProgramSpec::blocks` / `ProgramSpec::kv_growth`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Swap-in dispatched on a free channel; the buffer is charged here.
+    SwapInStart(usize),
+    /// Swap-in read completed; the channel frees, the block is resident.
+    SwapInDone(usize),
+    /// Execution begins (serial, in block order).
+    ExecStart(usize),
+    /// Execution ends.
+    ExecDone(usize),
+    /// Swap-out begins (write-back-free, unlimited concurrency).
+    SwapOutStart(usize),
+    /// Swap-out completes; the block's buffer is freed here.
+    SwapOutDone(usize),
+    /// A pinned-KV growth request is admitted and charged.
+    KvGrow(usize),
+    /// A pinned-KV growth request is refused by the checked allocator
+    /// (the typed `try_grow_pinned` shed path) — nothing is charged.
+    KvShed(usize),
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Event::SwapInStart(b) => write!(f, "swap-in-start b{b}"),
+            Event::SwapInDone(b) => write!(f, "swap-in-done b{b}"),
+            Event::ExecStart(b) => write!(f, "exec-start b{b}"),
+            Event::ExecDone(b) => write!(f, "exec-done b{b}"),
+            Event::SwapOutStart(b) => write!(f, "swap-out-start b{b}"),
+            Event::SwapOutDone(b) => write!(f, "swap-out-done b{b}"),
+            Event::KvGrow(k) => write!(f, "kv-grow k{k}"),
+            Event::KvShed(k) => write!(f, "kv-shed k{k}"),
+        }
+    }
+}
+
+/// An invariant broken by some reachable interleaving.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    /// More blocks live at once than the pipeline residency allows.
+    ResidencyExceeded { live_blocks: usize, residency_m: usize },
+    /// Live block bytes + pinned bytes exceed the budget.
+    BudgetExceeded { ledger_bytes: u64, budget_bytes: u64 },
+    /// A pinned-KV growth pushed the ledger over the budget (the
+    /// unchecked-growth defect; the checked allocator sheds instead).
+    KvOvercommit { ledger_bytes: u64, budget_bytes: u64 },
+    /// Live block bytes exceed what the schedule claims as `peak_bytes`.
+    ClaimedPeakExceeded { live_bytes: u64, claimed_peak_bytes: u64 },
+    /// A free targeted an AllocId that was never allocated.
+    FreeUnknown { event_block: usize },
+    /// A free targeted an AllocId that was already freed.
+    DoubleFree { block: usize },
+    /// A block's buffer was still charged when the pipeline drained.
+    UnfreedAtDrain { block: usize },
+    /// A non-terminal state with no enabled event.
+    Deadlock { pending_blocks: usize },
+}
+
+impl Violation {
+    /// Stable machine-readable kind tag (corpus expectations key on it).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Violation::ResidencyExceeded { .. } => "residency-exceeded",
+            Violation::BudgetExceeded { .. } => "budget-exceeded",
+            Violation::KvOvercommit { .. } => "kv-overcommit",
+            Violation::ClaimedPeakExceeded { .. } => "claimed-peak-exceeded",
+            Violation::FreeUnknown { .. } => "free-unknown",
+            Violation::DoubleFree { .. } => "double-free",
+            Violation::UnfreedAtDrain { .. } => "unfreed-at-drain",
+            Violation::Deadlock { .. } => "deadlock",
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Violation::ResidencyExceeded { live_blocks, residency_m } => {
+                write!(f, "{live_blocks} blocks live under residency m={residency_m}")
+            }
+            Violation::BudgetExceeded { ledger_bytes, budget_bytes } => {
+                write!(f, "ledger {ledger_bytes} B exceeds budget {budget_bytes} B")
+            }
+            Violation::KvOvercommit { ledger_bytes, budget_bytes } => {
+                write!(
+                    f,
+                    "pinned-KV growth overcommitted the ledger to {ledger_bytes} B \
+                     (budget {budget_bytes} B)"
+                )
+            }
+            Violation::ClaimedPeakExceeded { live_bytes, claimed_peak_bytes } => {
+                write!(
+                    f,
+                    "live block bytes {live_bytes} exceed the schedule's claimed \
+                     peak {claimed_peak_bytes}"
+                )
+            }
+            Violation::FreeUnknown { event_block } => {
+                write!(
+                    f,
+                    "swap-out completion for block {event_block} freed an AllocId \
+                     that was never allocated"
+                )
+            }
+            Violation::DoubleFree { block } => {
+                write!(f, "block {block}'s AllocId was freed twice")
+            }
+            Violation::UnfreedAtDrain { block } => {
+                write!(f, "block {block}'s buffer was still charged after drain")
+            }
+            Violation::Deadlock { pending_blocks } => {
+                write!(f, "deadlock with {pending_blocks} blocks unfinished")
+            }
+        }
+    }
+}
+
+/// One step of the replayed ledger timeline inside a counterexample.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceStep {
+    pub event: Event,
+    /// Charged-and-unfreed blocks after the event.
+    pub live_blocks: usize,
+    /// Bytes of charged-and-unfreed blocks after the event.
+    pub live_bytes: u64,
+    /// Pinned bytes (base + admitted KV growth) after the event.
+    pub pinned_bytes: u64,
+}
+
+/// A minimal-length violating interleaving with its ledger timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Counterexample {
+    /// Label of the program that was checked.
+    pub program: String,
+    pub violation: Violation,
+    pub trace: Vec<TraceStep>,
+}
+
+impl Counterexample {
+    /// Multi-line rendering (CLI output / CI artifact format).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("schedule verifier counterexample — {}\n", self.program));
+        out.push_str(&format!("violation: {} [{}]\n", self.violation, self.violation.kind()));
+        out.push_str(&format!("minimal trace ({} events):\n", self.trace.len()));
+        out.push_str("   #  event                 live  live-bytes  pinned-bytes\n");
+        for (i, step) in self.trace.iter().enumerate() {
+            out.push_str(&format!(
+                "  {:>2}  {:<20}  {:>4}  {:>10}  {:>12}\n",
+                i.saturating_add(1),
+                step.event.to_string(),
+                step.live_blocks,
+                step.live_bytes,
+                step.pinned_bytes,
+            ));
+        }
+        out
+    }
+}
+
+impl fmt::Display for Counterexample {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} after {} events", self.violation, self.trace.len())
+    }
+}
+
+/// Exhaustiveness certificate for a proved program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Proof {
+    /// Distinct reachable states enumerated.
+    pub states: u64,
+    /// Transitions checked (each one invariant-verified).
+    pub transitions: u64,
+    /// Worst live block bytes over every reachable state.
+    pub worst_live_bytes: u64,
+    /// Worst simultaneous live blocks over every reachable state.
+    pub worst_live_blocks: usize,
+}
+
+/// Small-scope bounds for the enumeration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bounds {
+    /// Refuse programs with more blocks than this (state width).
+    pub max_blocks: usize,
+    /// Abort the search past this many distinct states.
+    pub max_states: usize,
+}
+
+impl Default for Bounds {
+    fn default() -> Bounds {
+        // The healthy system only keeps ~(m + channels) blocks in
+        // intermediate phases, so state counts stay linear in n; these
+        // bounds are far above every shipped family plan (llama7b uses
+        // <= 32 blocks) while still refusing degenerate inputs.
+        Bounds { max_blocks: 96, max_states: 1 << 20 }
+    }
+}
+
+/// Result of a bounded check.
+#[derive(Debug, Clone)]
+pub enum Verdict {
+    /// Every reachable interleaving satisfies every invariant.
+    Proved(Proof),
+    /// Some interleaving breaks an invariant; the trace is minimal.
+    Rejected(Box<Counterexample>),
+    /// The bounds were exhausted before the search completed.
+    Inconclusive { reason: String },
+}
+
+struct Node {
+    state: Vec<u8>,
+    parent: Option<(usize, Event)>,
+}
+
+struct Checker<'a> {
+    prog: &'a ProgramSpec,
+    disc: &'a Discipline,
+    n: usize,
+    kv_n: usize,
+    residency_m: usize,
+    swap_channels: usize,
+}
+
+#[inline]
+fn phase(state: &[u8], b: usize) -> u8 {
+    state[b] & 0x0F
+}
+
+#[inline]
+fn is_freed(state: &[u8], b: usize) -> bool {
+    state[b] & FREED != 0
+}
+
+impl<'a> Checker<'a> {
+    fn new(prog: &'a ProgramSpec, disc: &'a Discipline) -> Checker<'a> {
+        Checker {
+            prog,
+            disc,
+            n: prog.blocks.len(),
+            kv_n: prog.kv_growth.len(),
+            residency_m: prog.residency_m.max(1),
+            swap_channels: prog.swap_channels.max(1),
+        }
+    }
+
+    /// (live blocks, live block bytes, pinned bytes) for a state.
+    fn metrics(&self, state: &[u8]) -> (usize, u64, u64) {
+        let mut live_blocks = 0usize;
+        let mut live_bytes = 0u64;
+        for b in 0..self.n {
+            if phase(state, b) >= SWAP_IN_FLIGHT && !is_freed(state, b) {
+                live_blocks = live_blocks.saturating_add(1);
+                live_bytes = live_bytes.saturating_add(self.prog.blocks[b]);
+            }
+        }
+        let mut pinned = self.prog.pinned_bytes;
+        for k in 0..self.kv_n {
+            if state[self.n + k] == KV_GROWN {
+                pinned = pinned.saturating_add(self.prog.kv_growth[k]);
+            }
+        }
+        (live_blocks, live_bytes, pinned)
+    }
+
+    fn is_terminal(&self, state: &[u8]) -> bool {
+        (0..self.n).all(|b| phase(state, b) == DONE)
+            && (0..self.kv_n).all(|k| state[self.n + k] != KV_PENDING)
+    }
+
+    /// All events enabled in `state` under the discipline's rules.
+    fn enabled(&self, state: &[u8]) -> Vec<Event> {
+        let mut evs = Vec::new();
+        // Swap-ins are issued in block order: only the first NotStarted
+        // block is a candidate, gated on a free channel and on the
+        // residency window (block b waits for all j <= b - m).
+        if let Some(b) = (0..self.n).find(|&b| phase(state, b) == NOT_STARTED) {
+            let in_flight =
+                (0..self.n).filter(|&j| phase(state, j) == SWAP_IN_FLIGHT).count();
+            let gate_ok = if b >= self.residency_m {
+                (0..=b - self.residency_m).all(|j| {
+                    if self.disc.gate_on_swap_out_start {
+                        // PR 3 defect: the loader advanced on swap-out
+                        // *start*, leaving the departing buffer charged.
+                        phase(state, j) >= SWAP_OUT_FLIGHT
+                    } else {
+                        phase(state, j) == DONE
+                    }
+                })
+            } else {
+                true
+            };
+            if in_flight < self.swap_channels && gate_ok {
+                evs.push(Event::SwapInStart(b));
+            }
+        }
+        let executing = (0..self.n).any(|b| phase(state, b) == EXECUTING);
+        for b in 0..self.n {
+            match phase(state, b) {
+                SWAP_IN_FLIGHT => evs.push(Event::SwapInDone(b)),
+                RESIDENT => {
+                    // Execution is serial and in block order.
+                    if !executing && (b == 0 || phase(state, b - 1) >= EXECUTED) {
+                        evs.push(Event::ExecStart(b));
+                    }
+                }
+                EXECUTING => evs.push(Event::ExecDone(b)),
+                EXECUTED => evs.push(Event::SwapOutStart(b)),
+                SWAP_OUT_FLIGHT => evs.push(Event::SwapOutDone(b)),
+                _ => {}
+            }
+        }
+        // Pinned-KV growth requests arrive in order, at any point of the
+        // sweep. The checked allocator admits one only if the planner's
+        // claimed window still fits beside the grown pin (the band-ceiling
+        // re-plan discipline); otherwise it sheds. The unchecked defect
+        // always admits.
+        if let Some(k) = (0..self.kv_n).find(|&k| state[self.n + k] == KV_PENDING) {
+            if self.disc.unchecked_kv_growth {
+                evs.push(Event::KvGrow(k));
+            } else {
+                let (_, live_bytes, pinned) = self.metrics(state);
+                let reserved = if self.prog.claimed_peak_bytes > 0 {
+                    self.prog.claimed_peak_bytes
+                } else {
+                    live_bytes
+                };
+                let after = pinned
+                    .saturating_add(self.prog.kv_growth[k])
+                    .saturating_add(reserved);
+                if after <= self.prog.budget_bytes {
+                    evs.push(Event::KvGrow(k));
+                } else {
+                    evs.push(Event::KvShed(k));
+                }
+            }
+        }
+        evs
+    }
+
+    /// Apply `ev` to `state`; free-discipline violations surface here.
+    fn apply(&self, state: &[u8], ev: Event) -> (Vec<u8>, Option<Violation>) {
+        let mut next = state.to_vec();
+        let mut viol = None;
+        let set_phase = |next: &mut Vec<u8>, b: usize, p: u8| {
+            next[b] = (next[b] & FREED) | p;
+        };
+        match ev {
+            Event::SwapInStart(b) => set_phase(&mut next, b, SWAP_IN_FLIGHT),
+            Event::SwapInDone(b) => set_phase(&mut next, b, RESIDENT),
+            Event::ExecStart(b) => set_phase(&mut next, b, EXECUTING),
+            Event::ExecDone(b) => set_phase(&mut next, b, EXECUTED),
+            Event::SwapOutStart(b) => set_phase(&mut next, b, SWAP_OUT_FLIGHT),
+            Event::SwapOutDone(b) => {
+                set_phase(&mut next, b, DONE);
+                // PR 3 defect: completion frees the *previous* block's id
+                // (off-by-one attribution); for b = 0 that id was never
+                // allocated at all.
+                let target = if self.disc.misattribute_swap_out {
+                    if b == 0 {
+                        viol = Some(Violation::FreeUnknown { event_block: b });
+                        None
+                    } else {
+                        Some(b - 1)
+                    }
+                } else {
+                    Some(b)
+                };
+                if let Some(t) = target {
+                    if is_freed(&next, t) {
+                        viol = Some(Violation::DoubleFree { block: t });
+                    } else if phase(&next, t) == NOT_STARTED {
+                        viol = Some(Violation::FreeUnknown { event_block: b });
+                    } else {
+                        next[t] |= FREED;
+                    }
+                }
+            }
+            Event::KvGrow(k) => next[self.n + k] = KV_GROWN,
+            Event::KvShed(k) => next[self.n + k] = KV_SHED,
+        }
+        (next, viol)
+    }
+
+    /// Ledger invariants on the post-event state, in a fixed order so
+    /// counterexamples are deterministic.
+    fn invariants(
+        &self,
+        ev: Event,
+        live_blocks: usize,
+        live_bytes: u64,
+        pinned: u64,
+    ) -> Option<Violation> {
+        if live_blocks > self.residency_m {
+            return Some(Violation::ResidencyExceeded {
+                live_blocks,
+                residency_m: self.residency_m,
+            });
+        }
+        let ledger = live_bytes.saturating_add(pinned);
+        if ledger > self.prog.budget_bytes {
+            if matches!(ev, Event::KvGrow(_)) {
+                return Some(Violation::KvOvercommit {
+                    ledger_bytes: ledger,
+                    budget_bytes: self.prog.budget_bytes,
+                });
+            }
+            return Some(Violation::BudgetExceeded {
+                ledger_bytes: ledger,
+                budget_bytes: self.prog.budget_bytes,
+            });
+        }
+        if self.prog.claimed_peak_bytes > 0 && live_bytes > self.prog.claimed_peak_bytes {
+            return Some(Violation::ClaimedPeakExceeded {
+                live_bytes,
+                claimed_peak_bytes: self.prog.claimed_peak_bytes,
+            });
+        }
+        None
+    }
+
+    /// Reconstruct the event path to `node`, append `last`, and replay
+    /// the ledger timeline.
+    fn counterexample(
+        &self,
+        arena: &[Node],
+        node: usize,
+        last: Option<Event>,
+        violation: Violation,
+    ) -> Box<Counterexample> {
+        let mut events = Vec::new();
+        let mut cur = node;
+        while let Some((parent, ev)) = arena[cur].parent {
+            events.push(ev);
+            cur = parent;
+        }
+        events.reverse();
+        if let Some(ev) = last {
+            events.push(ev);
+        }
+        let mut state = vec![0u8; self.n + self.kv_n];
+        let mut trace = Vec::with_capacity(events.len());
+        for ev in events {
+            let (next, _) = self.apply(&state, ev);
+            let (live_blocks, live_bytes, pinned_bytes) = self.metrics(&next);
+            trace.push(TraceStep { event: ev, live_blocks, live_bytes, pinned_bytes });
+            state = next;
+        }
+        Box::new(Counterexample {
+            program: self.prog.label.clone(),
+            violation,
+            trace,
+        })
+    }
+}
+
+/// Exhaustively check `prog` under `disc` within `bounds`.
+pub fn check(prog: &ProgramSpec, disc: &Discipline, bounds: &Bounds) -> Verdict {
+    let ck = Checker::new(prog, disc);
+    if ck.n > bounds.max_blocks {
+        return Verdict::Inconclusive {
+            reason: format!(
+                "{} blocks exceed the small-scope bound of {}",
+                ck.n, bounds.max_blocks
+            ),
+        };
+    }
+
+    let init = vec![0u8; ck.n + ck.kv_n];
+    // The base pinned load must fit before any event fires.
+    if prog.pinned_bytes > prog.budget_bytes {
+        return Verdict::Rejected(Box::new(Counterexample {
+            program: prog.label.clone(),
+            violation: Violation::BudgetExceeded {
+                ledger_bytes: prog.pinned_bytes,
+                budget_bytes: prog.budget_bytes,
+            },
+            trace: Vec::new(),
+        }));
+    }
+
+    let mut arena = vec![Node { state: init.clone(), parent: None }];
+    let mut seen: HashMap<Vec<u8>, usize> = HashMap::new();
+    seen.insert(init, 0);
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    queue.push_back(0);
+    let mut transitions = 0u64;
+    let mut worst_live_bytes = 0u64;
+    let mut worst_live_blocks = 0usize;
+
+    while let Some(id) = queue.pop_front() {
+        let state = arena[id].state.clone();
+        let evs = ck.enabled(&state);
+        if evs.is_empty() {
+            if ck.is_terminal(&state) {
+                // Drain check: everything charged must have been freed.
+                if let Some(b) = (0..ck.n).find(|&b| !is_freed(&state, b)) {
+                    return Verdict::Rejected(ck.counterexample(
+                        &arena,
+                        id,
+                        None,
+                        Violation::UnfreedAtDrain { block: b },
+                    ));
+                }
+            } else {
+                let pending =
+                    (0..ck.n).filter(|&b| phase(&state, b) != DONE).count();
+                return Verdict::Rejected(ck.counterexample(
+                    &arena,
+                    id,
+                    None,
+                    Violation::Deadlock { pending_blocks: pending },
+                ));
+            }
+            continue;
+        }
+        for ev in evs {
+            transitions = transitions.saturating_add(1);
+            let (next, free_viol) = ck.apply(&state, ev);
+            let (live_blocks, live_bytes, pinned) = ck.metrics(&next);
+            worst_live_bytes = worst_live_bytes.max(live_bytes);
+            worst_live_blocks = worst_live_blocks.max(live_blocks);
+            let viol =
+                free_viol.or_else(|| ck.invariants(ev, live_blocks, live_bytes, pinned));
+            if let Some(v) = viol {
+                return Verdict::Rejected(ck.counterexample(&arena, id, Some(ev), v));
+            }
+            if !seen.contains_key(&next) {
+                if arena.len() >= bounds.max_states {
+                    return Verdict::Inconclusive {
+                        reason: format!(
+                            "state budget of {} exhausted",
+                            bounds.max_states
+                        ),
+                    };
+                }
+                seen.insert(next.clone(), arena.len());
+                arena.push(Node { state: next, parent: Some((id, ev)) });
+                queue.push_back(arena.len() - 1);
+            }
+        }
+    }
+
+    Verdict::Proved(Proof {
+        states: arena.len() as u64,
+        transitions,
+        worst_live_bytes,
+        worst_live_blocks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prog(blocks: Vec<u64>, m: usize, budget: u64, claimed: u64) -> ProgramSpec {
+        ProgramSpec {
+            label: "test".to_string(),
+            blocks,
+            residency_m: m,
+            swap_channels: 1,
+            budget_bytes: budget,
+            claimed_peak_bytes: claimed,
+            pinned_bytes: 0,
+            kv_growth: Vec::new(),
+        }
+    }
+
+    fn healthy_check(p: &ProgramSpec) -> Verdict {
+        check(p, &Discipline::healthy(), &Bounds::default())
+    }
+
+    #[test]
+    fn empty_program_is_trivially_proved() {
+        match healthy_check(&prog(Vec::new(), 2, 100, 0)) {
+            Verdict::Proved(pf) => {
+                assert_eq!(pf.states, 1);
+                assert_eq!(pf.worst_live_bytes, 0);
+            }
+            v => panic!("expected proof, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn healthy_chain_proves_and_matches_window_peak() {
+        let sizes = vec![100u64, 80, 60, 40];
+        for m in 1..=3 {
+            let expect = crate::pipeline::peak_resident_bytes_m(&sizes, m);
+            let p = prog(sizes.clone(), m, u64::MAX, 0);
+            match healthy_check(&p) {
+                Verdict::Proved(pf) => {
+                    assert_eq!(
+                        pf.worst_live_bytes, expect,
+                        "m={m}: checker worst-case must equal the planner's \
+                         m-window peak"
+                    );
+                    assert!(pf.worst_live_blocks <= m);
+                }
+                v => panic!("m={m}: expected proof, got {v:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn healthy_chain_never_exceeds_honest_claimed_peak() {
+        let sizes = vec![100u64, 80, 60, 40];
+        let claimed = crate::pipeline::peak_resident_bytes_m(&sizes, 2);
+        let p = prog(sizes, 2, u64::MAX, claimed);
+        assert!(matches!(healthy_check(&p), Verdict::Proved(_)));
+    }
+
+    #[test]
+    fn under_budget_chain_rejected_with_budget_violation() {
+        // m = 2 window needs 180 B; 150 B budget must be rejected.
+        let p = prog(vec![100, 80, 60], 2, 150, 0);
+        match healthy_check(&p) {
+            Verdict::Rejected(cx) => {
+                assert_eq!(cx.violation.kind(), "budget-exceeded");
+                assert!(!cx.trace.is_empty());
+            }
+            v => panic!("expected rejection, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn two_channels_widen_the_reachable_peak() {
+        // With 2 channels and m = 3, three blocks can be charged at once.
+        let mut p = prog(vec![10, 10, 10], 3, u64::MAX, 0);
+        p.swap_channels = 2;
+        match healthy_check(&p) {
+            Verdict::Proved(pf) => assert_eq!(pf.worst_live_blocks, 3),
+            v => panic!("expected proof, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn block_bound_yields_inconclusive() {
+        let p = prog(vec![1; 97], 2, u64::MAX, 0);
+        assert!(matches!(
+            healthy_check(&p),
+            Verdict::Inconclusive { .. }
+        ));
+    }
+
+    #[test]
+    fn state_budget_yields_inconclusive() {
+        let p = prog(vec![1; 8], 4, u64::MAX, 0);
+        let verdict = check(&p, &Discipline::healthy(), &Bounds { max_blocks: 96, max_states: 4 });
+        assert!(matches!(verdict, Verdict::Inconclusive { .. }));
+    }
+
+    #[test]
+    fn base_pin_over_budget_rejected_with_empty_trace() {
+        let mut p = prog(vec![10], 2, 100, 0);
+        p.pinned_bytes = 200;
+        match healthy_check(&p) {
+            Verdict::Rejected(cx) => {
+                assert_eq!(cx.violation.kind(), "budget-exceeded");
+                assert!(cx.trace.is_empty());
+            }
+            v => panic!("expected rejection, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn checked_kv_growth_sheds_instead_of_overcommitting() {
+        let mut p = prog(vec![40], 2, 100, 40);
+        p.pinned_bytes = 50;
+        p.kv_growth = vec![60];
+        match healthy_check(&p) {
+            Verdict::Proved(pf) => {
+                // The grow would need 50 + 60 + 40 > 100, so it must shed.
+                assert!(pf.worst_live_bytes <= 40);
+            }
+            v => panic!("expected proof via shed, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn kv_growth_that_fits_is_admitted() {
+        let mut p = prog(vec![40], 2, 200, 40);
+        p.pinned_bytes = 50;
+        p.kv_growth = vec![60];
+        assert!(matches!(healthy_check(&p), Verdict::Proved(_)));
+    }
+}

@@ -1,0 +1,128 @@
+//! Golden counterexample corpus: the PR 3 defect class, frozen as
+//! programs the checker must reject with known minimal traces.
+//!
+//! Each case pairs a [`ProgramSpec`] with the [`Discipline`] that
+//! re-enables one historical defect, plus the expected violation kind and
+//! minimal trace length (hand-derived; asserted by `rust/tests/verify.rs`
+//! and by `swapnet verify`). Each case also carries a *fixed* claimed
+//! peak so the healthy twin — same program, defect off, honest claim —
+//! must be proved: the corpus demonstrates both that the checker catches
+//! the bug and that the fix is sufficient.
+
+use super::{Discipline, ProgramSpec};
+
+/// One frozen defect with its expected rejection shape.
+#[derive(Debug, Clone)]
+pub struct CorpusCase {
+    pub name: &'static str,
+    /// What the defect was / why it matters.
+    pub note: &'static str,
+    pub program: ProgramSpec,
+    pub discipline: Discipline,
+    /// Expected `Violation::kind()` of the rejection.
+    pub expected_kind: &'static str,
+    /// Expected minimal counterexample length (events).
+    pub expected_trace_len: usize,
+    /// Claimed peak that makes the healthy twin provable (differs from
+    /// `program.claimed_peak_bytes` only for the post-drain-peak case,
+    /// where the defect *is* the claim).
+    healthy_claimed_peak_bytes: u64,
+}
+
+impl CorpusCase {
+    /// The corrected twin: same blocks/budget, healthy discipline,
+    /// honest claimed peak. The checker must prove it.
+    pub fn fixed(&self) -> (ProgramSpec, Discipline) {
+        let mut prog = self.program.clone();
+        prog.claimed_peak_bytes = self.healthy_claimed_peak_bytes;
+        (prog, Discipline::healthy())
+    }
+}
+
+fn base(name: &str, blocks: Vec<u64>, budget: u64, claimed: u64) -> ProgramSpec {
+    ProgramSpec {
+        label: format!("corpus/{name}"),
+        blocks,
+        residency_m: 2,
+        swap_channels: 1,
+        budget_bytes: budget,
+        claimed_peak_bytes: claimed,
+        pinned_bytes: 0,
+        kv_growth: Vec::new(),
+    }
+}
+
+/// All frozen corpus cases, in fixed order.
+pub fn cases() -> Vec<CorpusCase> {
+    let mut out = Vec::new();
+
+    // PR 3 defect #1: the real-path loader advanced block i's swap-in on
+    // block i-m's swap-out *start*, so the departing buffer was still
+    // charged — 3 live buffers under claimed m=2. Minimal trace: push
+    // b0 through exec to swap-out-start (5 events incl. its swap-in),
+    // complete b1's swap-in (2 events), then b2's swap-in-start makes
+    // three charged-and-unfreed blocks.
+    out.push(CorpusCase {
+        name: "three_buffers_under_m2",
+        note: "loader gated on swap-out start, not completion: 3 live \
+               buffers under claimed m=2",
+        program: base("three_buffers_under_m2", vec![100, 100, 100], u64::MAX, 200),
+        discipline: Discipline { gate_on_swap_out_start: true, ..Discipline::default() },
+        expected_kind: "residency-exceeded",
+        expected_trace_len: 8,
+        healthy_claimed_peak_bytes: 200,
+    });
+
+    // PR 3 defect #2: simulate_scheduled attributed each swap-out report
+    // to the previous block (off-by-one). As a free discipline that means
+    // swap-out-done(i) frees block i-1's AllocId — and block 0's
+    // completion frees an id that was never allocated. Minimal trace is
+    // block 0's full lifecycle: in-start, in-done, exec-start, exec-done,
+    // out-start, out-done.
+    out.push(CorpusCase {
+        name: "swap_out_misattribution",
+        note: "swap-out completion attributed to the previous block: \
+               block 0 frees an unknown AllocId",
+        program: base("swap_out_misattribution", vec![10, 10], u64::MAX, 0),
+        discipline: Discipline { misattribute_swap_out: true, ..Discipline::default() },
+        expected_kind: "free-unknown",
+        expected_trace_len: 6,
+        healthy_claimed_peak_bytes: 0,
+    });
+
+    // PR 3 defect #3: peak memory was read from the post-drain ledger
+    // level instead of the transient per-space peak, so the schedule
+    // claimed 100 B where the m=2 window transiently holds 180 B. The
+    // defect lives in the *claim*, not the transition rules — the healthy
+    // discipline rejects it. Minimal trace: b0 in (2 events), then b1's
+    // swap-in-start charges 180 B > 100 B claimed.
+    out.push(CorpusCase {
+        name: "post_drain_peak_claim",
+        note: "claimed peak taken from the post-drain ledger level; the \
+               transient m=2 window is 180 B, not 100 B",
+        program: base("post_drain_peak_claim", vec![100, 80, 60], u64::MAX, 100),
+        discipline: Discipline::healthy(),
+        expected_kind: "claimed-peak-exceeded",
+        expected_trace_len: 3,
+        healthy_claimed_peak_bytes: 180,
+    });
+
+    // PR 6 guard, re-seeded as a defect: KV growth charged without the
+    // `try_grow_pinned` fit check. With 50 B pinned and a 60 B growth
+    // against a 100 B budget, the very first kv-grow overcommits.
+    let mut kv = base("kv_overcommit_unchecked", vec![40], 100, 40);
+    kv.pinned_bytes = 50;
+    kv.kv_growth = vec![60];
+    out.push(CorpusCase {
+        name: "kv_overcommit_unchecked",
+        note: "pinned-KV growth charged without the fit check: first \
+               join overcommits the ledger",
+        program: kv,
+        discipline: Discipline { unchecked_kv_growth: true, ..Discipline::default() },
+        expected_kind: "kv-overcommit",
+        expected_trace_len: 1,
+        healthy_claimed_peak_bytes: 40,
+    });
+
+    out
+}

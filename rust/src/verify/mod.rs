@@ -1,0 +1,174 @@
+//! Static schedule verification (DESIGN.md §11).
+//!
+//! Every headline invariant in this repro — budget never exceeded (paper
+//! Eq. 1), at most `residency_m` live blocks, pinned KV never
+//! overcommitted, every buffer freed exactly once — was previously
+//! enforced only dynamically, on the single interleaving each simulation
+//! happened to produce. This module proves them *statically*: a planner
+//! [`Schedule`] is abstracted into a [`ProgramSpec`] and handed to a
+//! bounded model checker ([`checker`]) that enumerates every legal event
+//! ordering (swap-channel choice, swap-in/compute/swap-out commutations,
+//! pinned-KV batch joins) under small-scope [`Bounds`] and checks the
+//! ledger invariants on each transition. Rejections carry a
+//! minimal-length [`Counterexample`] with the event sequence and the
+//! replayed ledger timeline.
+//!
+//! The engine calls [`verify_schedule`] at tenant registration and
+//! re-budget (a provably-unsafe plan never serves); the `verify` CLI
+//! subcommand sweeps every `families::*` plan across budgets; and
+//! [`corpus`] freezes the PR 3 defect class as programs the checker must
+//! reject with known minimal traces.
+
+pub mod checker;
+pub mod corpus;
+
+use std::fmt;
+
+use crate::model::ModelInfo;
+use crate::pipeline::PipelineSpec;
+use crate::scheduler::{self, Schedule};
+
+pub use checker::{
+    Bounds, Counterexample, Event, Proof, TraceStep, Verdict, Violation,
+};
+
+/// The abstract swap program the checker enumerates: block sizes plus the
+/// ledger envelope the schedule claims to respect.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProgramSpec {
+    /// Human-readable label carried into counterexamples.
+    pub label: String,
+    /// Per-block buffer bytes, in execution order.
+    pub blocks: Vec<u64>,
+    /// Pipeline residency m (blocks allowed live at once; >= 1).
+    pub residency_m: usize,
+    /// Independent swap-in channels (>= 1).
+    pub swap_channels: usize,
+    /// Ledger budget the program must stay under (`u64::MAX` disables
+    /// the budget invariant — used for the w/o-pat-sch ablation, which
+    /// intentionally overshoots).
+    pub budget_bytes: u64,
+    /// The schedule's claimed peak (`Schedule::peak_bytes`); 0 disables
+    /// the claimed-peak invariant.
+    pub claimed_peak_bytes: u64,
+    /// Pinned bytes charged before any event fires (KV base load).
+    pub pinned_bytes: u64,
+    /// Pinned-KV growth requests that may join mid-sweep, in order.
+    pub kv_growth: Vec<u64>,
+}
+
+impl ProgramSpec {
+    /// Abstract a planner schedule for `model` into a checkable program.
+    /// The budget is the schedule's registration budget reduced to the
+    /// usable window (overhead + safety margin), matching what the
+    /// dynamic ledger enforces.
+    pub fn from_schedule(
+        model: &ModelInfo,
+        sched: &Schedule,
+        spec: &PipelineSpec,
+    ) -> Result<ProgramSpec, VerifyError> {
+        let blocks = model
+            .create_blocks(&sched.points)
+            .map_err(VerifyError::BadProgram)?;
+        Ok(ProgramSpec {
+            label: format!(
+                "{} @ {} B (n={}, m={}, ch={})",
+                sched.model,
+                sched.budget_bytes,
+                sched.n_blocks,
+                spec.residency_m.max(1),
+                spec.swap_channels.max(1),
+            ),
+            blocks: blocks.iter().map(|b| b.size_bytes).collect(),
+            residency_m: spec.residency_m.max(1),
+            swap_channels: spec.swap_channels.max(1),
+            budget_bytes: scheduler::usable_budget(model, sched.budget_bytes),
+            claimed_peak_bytes: sched.peak_bytes,
+            pinned_bytes: 0,
+            kv_growth: Vec::new(),
+        })
+    }
+
+    /// Disable the budget invariant (the discipline invariants — free
+    /// exactly once, residency, claimed peak — still apply).
+    pub fn unbudgeted(mut self) -> ProgramSpec {
+        self.budget_bytes = u64::MAX;
+        self
+    }
+}
+
+/// Which transition rules the checker uses. [`Discipline::healthy`] is
+/// what the shipped pipeline implements; each flag re-enables one frozen
+/// PR 3 defect for corpus/regression checking.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Discipline {
+    /// Gate block i's swap-in on block i-m's swap-out *start* instead of
+    /// its completion (3 live buffers under claimed m=2).
+    pub gate_on_swap_out_start: bool,
+    /// Swap-out completion frees the previous block's AllocId
+    /// (off-by-one attribution; block 0 frees an unknown id).
+    pub misattribute_swap_out: bool,
+    /// Pinned-KV growth is charged without the `try_grow_pinned` fit
+    /// check (overcommit instead of shed).
+    pub unchecked_kv_growth: bool,
+}
+
+impl Discipline {
+    /// The shipped transition rules (no defects enabled).
+    pub fn healthy() -> Discipline {
+        Discipline::default()
+    }
+}
+
+/// Non-rejection result of a verification run.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    /// Every interleaving within bounds satisfies every invariant.
+    Proved(Proof),
+    /// The small-scope bounds were exhausted; the plan is not proved
+    /// unsafe (the dynamic ledger still guards it at run time).
+    Unprovable { reason: String },
+}
+
+/// Typed verification failure, surfaced at tenant registration.
+#[derive(Debug, Clone)]
+pub enum VerifyError {
+    /// A violating interleaving exists; the trace is minimal.
+    Unsafe(Box<Counterexample>),
+    /// The schedule does not describe a checkable program (bad partition
+    /// points, empty chain, ...).
+    BadProgram(String),
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::Unsafe(cx) => write!(f, "{cx}"),
+            VerifyError::BadProgram(msg) => {
+                write!(f, "schedule is not a checkable program: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Check `prog` under the healthy discipline and default bounds.
+pub fn run(prog: &ProgramSpec) -> Result<Outcome, VerifyError> {
+    match checker::check(prog, &Discipline::healthy(), &Bounds::default()) {
+        Verdict::Proved(p) => Ok(Outcome::Proved(p)),
+        Verdict::Rejected(cx) => Err(VerifyError::Unsafe(cx)),
+        Verdict::Inconclusive { reason } => Ok(Outcome::Unprovable { reason }),
+    }
+}
+
+/// Prove a planner schedule safe (or produce a minimal counterexample).
+/// This is the check the engine applies at registration and re-budget.
+pub fn verify_schedule(
+    model: &ModelInfo,
+    sched: &Schedule,
+    spec: &PipelineSpec,
+) -> Result<Outcome, VerifyError> {
+    let prog = ProgramSpec::from_schedule(model, sched, spec)?;
+    run(&prog)
+}

@@ -2,6 +2,10 @@
 //! impossible budgets, broken skeletons — every failure must surface as
 //! a clean error, never a panic or silent wrong answer.
 
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
 use std::path::PathBuf;
 
 use swapnet::assembly::{synthetic_skeleton, AssemblyController, AssemblyMode};

@@ -1,0 +1,167 @@
+//! Integration tests for the static schedule verifier (DESIGN.md §11):
+//! the frozen bug corpus is rejected with exact minimal traces, its
+//! corrected twins prove, every feasible family plan proves, and the
+//! engine's admission gate exposes the same check.
+
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
+use swapnet::config::MB;
+use swapnet::engine::{Engine, PlanContext, SnetConfig};
+use swapnet::model::families;
+use swapnet::pipeline::PipelineSpec;
+use swapnet::planner::{cache::DEFAULT_PINNED_BAND_BYTES, PlanCacheConfig, Planner};
+use swapnet::verify::{self, checker, corpus, Bounds, Outcome, Verdict};
+
+#[test]
+fn corpus_cases_reject_with_exact_minimal_traces() {
+    let cases = corpus::cases();
+    assert!(cases.len() >= 4, "corpus lost cases: {}", cases.len());
+    for case in &cases {
+        match checker::check(&case.program, &case.discipline, &Bounds::default()) {
+            Verdict::Rejected(cx) => {
+                assert_eq!(
+                    cx.violation.kind(),
+                    case.expected_kind,
+                    "{}: wrong violation: {}",
+                    case.name,
+                    cx.violation
+                );
+                assert_eq!(
+                    cx.trace.len(),
+                    case.expected_trace_len,
+                    "{}: trace no longer minimal:\n{}",
+                    case.name,
+                    cx.render()
+                );
+                assert!(!cx.trace.is_empty(), "{}: empty trace", case.name);
+                // The render carries the full ledger timeline (CI artifact
+                // format) — every event with its live/pinned columns.
+                let r = cx.render();
+                assert!(r.contains("minimal trace"), "{}: {r}", case.name);
+                assert!(r.contains(case.expected_kind), "{}: {r}", case.name);
+            }
+            other => panic!("{}: expected rejection, got {other:?}", case.name),
+        }
+    }
+}
+
+#[test]
+fn corpus_fixed_twins_prove() {
+    for case in corpus::cases() {
+        let (prog, disc) = case.fixed();
+        match checker::check(&prog, &disc, &Bounds::default()) {
+            Verdict::Proved(p) => {
+                assert!(p.states > 0 && p.transitions > 0, "{}: empty proof", case.name);
+            }
+            other => panic!(
+                "{}: the corrected twin must prove (the fix is sufficient), got {other:?}",
+                case.name
+            ),
+        }
+    }
+}
+
+#[test]
+fn every_feasible_family_plan_proves() {
+    let prof = swapnet::config::DeviceProfile::jetson_nx();
+    let spec = PipelineSpec::default();
+    let mut planner = Planner::analytic(&prof);
+    for name in ["vgg19", "resnet101", "yolov3", "fcn", "llama7b"] {
+        let model = families::by_name(name).unwrap();
+        let mut proved = 0;
+        for mb in [64u64, 128, 256, 1024, 2048] {
+            let Ok(sched) = planner.plan(&model, mb * MB, &spec) else {
+                continue; // refusal admits nothing — vacuously safe
+            };
+            match verify::verify_schedule(&model, &sched, &spec) {
+                Ok(Outcome::Proved(p)) => {
+                    proved += 1;
+                    // The checker's exhaustive worst case must agree with
+                    // the planner's claimed peak exactly — the claim is
+                    // not an upper bound, it is the reachable maximum.
+                    assert_eq!(
+                        p.worst_live_bytes, sched.peak_bytes,
+                        "{name} @ {mb} MB: claim {} vs reachable {}",
+                        sched.peak_bytes, p.worst_live_bytes
+                    );
+                }
+                other => panic!("{name} @ {mb} MB: {other:?}"),
+            }
+        }
+        assert!(proved > 0, "{name}: no feasible budget in the sweep");
+    }
+}
+
+#[test]
+fn llama7b_decode_plan_proves_at_2gb_with_pinned_kv() {
+    let prof = swapnet::config::DeviceProfile::jetson_nx();
+    let spec = PipelineSpec::default();
+    let mut planner =
+        Planner::for_source(Default::default(), &prof, 0, PlanCacheConfig::default());
+    let model = families::llama7b();
+    let ctx = PlanContext { pinned_bytes: 96 * MB, batch: 4 };
+    let sched = planner
+        .plan_decode(&model, 2048 * MB, &spec, ctx)
+        .expect("llama7b must plan at the paper's 2 GB decode point");
+    // Rebuild the full-ledger program: plan_decode returns a schedule
+    // relative to the KV-reduced budget, so re-add the pinned band
+    // ceiling on both sides and let growth events join mid-sweep.
+    let ceiling = (ctx.pinned_bytes / DEFAULT_PINNED_BAND_BYTES + 1) * DEFAULT_PINNED_BAND_BYTES;
+    let mut prog = verify::ProgramSpec::from_schedule(&model, &sched, &spec).unwrap();
+    prog.budget_bytes = prog.budget_bytes.saturating_add(ceiling);
+    prog.pinned_bytes = ceiling;
+    prog.kv_growth = vec![16 * MB, 16 * MB, 32 * MB];
+    match verify::run(&prog).expect("decode plan must not be rejected") {
+        Outcome::Proved(p) => assert!(p.states > 0),
+        Outcome::Unprovable { reason } => panic!("not provable: {reason}"),
+    }
+}
+
+#[test]
+fn engine_registration_is_verifier_gated_and_reexposes_the_proof() {
+    let engine = Engine::builder().build();
+    let h = engine
+        .register_with_budget(families::resnet101(), 120 * MB)
+        .expect("feasible registration passes the admission gate");
+    let proof = engine.verify_plan(&h).expect("admitted plans re-verify");
+    assert!(proof.states > 0 && proof.transitions >= proof.states.saturating_sub(1));
+    assert!(proof.worst_live_blocks <= 2, "m=2 residency: {}", proof.worst_live_blocks);
+}
+
+#[test]
+fn ablation_without_partition_scheduling_still_admits() {
+    // w/o-pat-sch intentionally overshoots the budget; the admission
+    // gate must drop only the budget invariant for it (residency,
+    // exact-free, claimed-peak, deadlock-freedom still hold).
+    let engine = Engine::builder()
+        .config(SnetConfig { partition_scheduling: false, ..Default::default() })
+        .build();
+    let h = engine
+        .register_with_budget(families::resnet101(), 120 * MB)
+        .expect("naive equal-split plans must still admit");
+    engine.verify_plan(&h).expect("the discipline invariants prove even unbudgeted");
+}
+
+#[test]
+fn overcommitted_pinned_load_is_rejected_before_any_event() {
+    let prog = verify::ProgramSpec {
+        label: "pinned-over-budget".into(),
+        blocks: vec![10],
+        residency_m: 2,
+        swap_channels: 1,
+        budget_bytes: 100,
+        claimed_peak_bytes: 10,
+        pinned_bytes: 150,
+        kv_growth: Vec::new(),
+    };
+    let err = verify::run(&prog).expect_err("base load alone exceeds the budget");
+    match err {
+        verify::VerifyError::Unsafe(cx) => {
+            assert_eq!(cx.violation.kind(), "budget-exceeded");
+            assert!(cx.trace.is_empty(), "violation precedes any event");
+        }
+        other => panic!("expected Unsafe, got {other:?}"),
+    }
+}

@@ -1,0 +1,342 @@
+//! `cargo run --bin xtask -- lint` — the resource-discipline lint pass.
+//!
+//! Three rules, all scoped to the steady-state swap path (DESIGN.md §11):
+//!
+//!   A  alloc-pairing   every non-test fn that acquires ledger memory
+//!                      (`.alloc(`, `try_alloc_pinned(`,
+//!                      `acquire_residency(`) must also release it
+//!                      (`free(`, `release_residency(`, `swap_out(`,
+//!                      `disassemble(`) or hand the id out through its
+//!                      signature (`AllocId` / `ResidentBlock`).
+//!   B  heap-alloc      no `Vec::with_capacity` / `vec!` / `.to_vec()` /
+//!                      `Box::new` in steady-state swap-path modules
+//!                      (hostmem, storage, swap, pipeline::real) — the
+//!                      buffer pool is the only steady-state allocator.
+//!   C  wall-clock      no `thread::spawn` / `Instant::now` in
+//!                      virtual-clock modules (server::reactor,
+//!                      server::multi, llm) — determinism depends on it.
+//!
+//! Suppress a finding with a justification comment on any line of the
+//! offending fn (rule A) or anywhere above the offending line (B, C):
+//!
+//!     // lint: allow(<rule>): <reason>
+//!
+//! The rule names are `alloc-pairing`, `heap-alloc`, `wall-clock`.
+//! `syn` is outside the offline crate universe, so this is a line
+//! scanner: comments and string literals are stripped before token
+//! matching, and everything from the first `#[cfg(test)]` down is
+//! skipped (tests are allowed to allocate and double-free on purpose).
+
+use std::fs;
+use std::path::Path;
+use std::process::ExitCode;
+
+const ACQUIRE_TOKENS: &[&str] = &[".alloc(", "try_alloc_pinned(", "acquire_residency("];
+const RELEASE_TOKENS: &[&str] = &["free(", "release_residency(", "swap_out(", "disassemble("];
+const ESCAPE_TYPES: &[&str] = &["AllocId", "ResidentBlock"];
+
+/// Rule B scope: the modules a swap traverses on every steady-state
+/// block movement. Pool buffers are recycled; any other heap allocation
+/// here is per-swap garbage.
+const HEAP_FREE_FILES: &[&str] = &[
+    "rust/src/hostmem/mod.rs",
+    "rust/src/storage/mod.rs",
+    "rust/src/swap/mod.rs",
+    "rust/src/pipeline/real.rs",
+];
+const HEAP_TOKENS: &[&str] = &["Vec::with_capacity", "vec!", ".to_vec()", "Box::new"];
+
+/// Rule C scope: modules whose correctness proofs assume the virtual
+/// clock is the only clock.
+const CLOCK_FILES: &[&str] =
+    &["rust/src/server/reactor.rs", "rust/src/server/multi.rs", "rust/src/llm/mod.rs"];
+const CLOCK_TOKENS: &[&str] = &["thread::spawn", "Instant::now"];
+
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {}
+        other => {
+            eprintln!("usage: xtask lint  (got {other:?})");
+            return ExitCode::FAILURE;
+        }
+    }
+    let root = repo_root();
+    let mut findings = Vec::new();
+    let mut files = 0usize;
+
+    for file in rust_sources(&root) {
+        let rel = file
+            .strip_prefix(&root)
+            .unwrap_or(&file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(raw) = fs::read_to_string(&file) else {
+            continue;
+        };
+        files += 1;
+        let lines = strip_to_non_test(&raw);
+        check_alloc_pairing(&rel, &lines, &mut findings);
+        if HEAP_FREE_FILES.contains(&rel.as_str()) {
+            check_tokens(&rel, &lines, HEAP_TOKENS, "heap-alloc", &mut findings);
+        }
+        if CLOCK_FILES.contains(&rel.as_str()) {
+            check_tokens(&rel, &lines, CLOCK_TOKENS, "wall-clock", &mut findings);
+        }
+    }
+
+    if findings.is_empty() {
+        println!("xtask lint: {files} files clean (alloc-pairing, heap-alloc, wall-clock)");
+        ExitCode::SUCCESS
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        }
+        println!("xtask lint: {} finding(s) in {files} files", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn repo_root() -> std::path::PathBuf {
+    // CARGO_MANIFEST_DIR when run through cargo; cwd otherwise.
+    std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(Into::into)
+        .unwrap_or_else(|| std::env::current_dir().expect("cwd"))
+}
+
+fn rust_sources(root: &Path) -> Vec<std::path::PathBuf> {
+    let mut out = Vec::new();
+    walk(&root.join("rust").join("src"), &mut out);
+    out.sort();
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return;
+    };
+    for e in rd.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// One scanned line: code with comments/strings blanked, plus the raw
+/// text (suppression comments live in the raw text).
+struct Line {
+    code: String,
+    raw: String,
+    no: usize,
+}
+
+/// Strip the file to scannable lines: cut everything from the first
+/// `#[cfg(test)]` (test modules sit at the bottom of every file in this
+/// repo), blank out string literals and comments in the code view, and
+/// drop block-comment interiors.
+fn strip_to_non_test(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut in_block_comment = false;
+    for (i, raw) in src.lines().enumerate() {
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            break;
+        }
+        let code = blank_line(raw, &mut in_block_comment);
+        out.push(Line { code, raw: raw.to_string(), no: i + 1 });
+    }
+    out
+}
+
+/// Blank string literals, char literals, and comments, preserving
+/// length where convenient (positions are only used for reporting).
+fn blank_line(raw: &str, in_block_comment: &mut bool) -> String {
+    let bytes = raw.as_bytes();
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0;
+    let mut in_str = false;
+    while i < bytes.len() {
+        let rest = &raw[i..];
+        // Multi-byte chars (— or § in prose strings/comments) must advance
+        // by their full width or the next `&raw[i..]` slice panics.
+        let step = rest.chars().next().map_or(1, char::len_utf8);
+        if *in_block_comment {
+            if rest.starts_with("*/") {
+                *in_block_comment = false;
+                i += 2;
+            } else {
+                i += step;
+            }
+            continue;
+        }
+        if in_str {
+            if rest.starts_with('\\') {
+                i += 2;
+            } else if rest.starts_with('"') {
+                in_str = false;
+                i += 1;
+            } else {
+                i += step;
+            }
+            out.push(' ');
+            continue;
+        }
+        if rest.starts_with("//") {
+            break; // line comment: rest of line is not code
+        }
+        if rest.starts_with("/*") {
+            *in_block_comment = true;
+            i += 2;
+            continue;
+        }
+        if rest.starts_with('"') {
+            in_str = true;
+            i += 1;
+            out.push(' ');
+            continue;
+        }
+        // char literal like 'x' or '\n' (lifetimes never close with ').
+        if rest.starts_with('\'') && rest.len() >= 3 {
+            let close = if rest.as_bytes()[1] == b'\\' { 3 } else { 2 };
+            if rest.as_bytes().get(close) == Some(&b'\'') {
+                i += close + 1;
+                out.push(' ');
+                continue;
+            }
+        }
+        out.push(raw[i..].chars().next().expect("in-bounds char"));
+        i += raw[i..].chars().next().map(char::len_utf8).unwrap_or(1);
+    }
+    out
+}
+
+fn suppressed(raw: &str, rule: &str) -> bool {
+    raw.contains(&format!("lint: allow({rule})"))
+}
+
+/// Rule A: per-fn alloc/free pairing over brace-balanced fn bodies.
+fn check_alloc_pairing(file: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    let mut i = 0;
+    while i < lines.len() {
+        let l = &lines[i];
+        let Some(fn_col) = find_fn(&l.code) else {
+            i += 1;
+            continue;
+        };
+        // Collect the fn's signature (through the opening brace) and
+        // body (through the matching close).
+        let mut sig = String::new();
+        let mut depth: i64 = 0;
+        let mut body_lines: Vec<usize> = Vec::new();
+        let mut j = i;
+        let mut opened = false;
+        while j < lines.len() {
+            let code = if j == i { &lines[j].code[fn_col..] } else { &lines[j].code[..] };
+            for c in code.chars() {
+                if !opened {
+                    sig.push(c);
+                }
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            body_lines.push(j);
+            if opened && depth <= 0 {
+                break;
+            }
+            // A bodyless trait/extern fn: `fn foo(...) -> T;`
+            if !opened && code.contains(';') {
+                break;
+            }
+            j += 1;
+        }
+        if opened {
+            let acquire_at = body_lines.iter().find_map(|&k| {
+                ACQUIRE_TOKENS
+                    .iter()
+                    .any(|t| lines[k].code.contains(t))
+                    .then_some(lines[k].no)
+            });
+            if let Some(no) = acquire_at {
+                let releases = body_lines
+                    .iter()
+                    .any(|&k| RELEASE_TOKENS.iter().any(|t| lines[k].code.contains(t)));
+                let escapes = ESCAPE_TYPES.iter().any(|t| sig.contains(t));
+                let allowed =
+                    body_lines.iter().any(|&k| suppressed(&lines[k].raw, "alloc-pairing"));
+                if !releases && !escapes && !allowed {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: no,
+                        rule: "alloc-pairing",
+                        message: "fn acquires ledger memory but neither releases it nor \
+                                  returns the id (AllocId/ResidentBlock) — pair the alloc \
+                                  or add `// lint: allow(alloc-pairing): <reason>`"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        i = j.max(i) + 1;
+    }
+}
+
+/// `fn ` at a word boundary (skips `fn_ptr`-like identifiers).
+fn find_fn(code: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find("fn ") {
+        let at = from + rel;
+        let before_ok = at == 0
+            || !code.as_bytes()[at - 1].is_ascii_alphanumeric() && code.as_bytes()[at - 1] != b'_';
+        if before_ok {
+            return Some(at);
+        }
+        from = at + 3;
+    }
+    None
+}
+
+/// Rules B and C: forbidden tokens in scoped files, suppressible on the
+/// offending line or any preceding line's comment.
+fn check_tokens(
+    file: &str,
+    lines: &[Line],
+    tokens: &[&str],
+    rule: &'static str,
+    findings: &mut Vec<Finding>,
+) {
+    for (idx, l) in lines.iter().enumerate() {
+        for t in tokens {
+            if l.code.contains(t) {
+                let allowed = lines[idx.saturating_sub(4)..=idx]
+                    .iter()
+                    .any(|p| suppressed(&p.raw, rule));
+                if !allowed {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: l.no,
+                        rule,
+                        message: format!(
+                            "`{t}` is banned here (scoped {rule} rule) — use the pool / \
+                             virtual clock, or add `// lint: allow({rule}): <reason>`"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
