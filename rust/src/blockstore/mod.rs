@@ -1,0 +1,477 @@
+//! Content-addressed block store: cross-tenant dedup for swap files and
+//! resident block memory (ROADMAP "cross-tenant block dedup + predictive
+//! prefetch", after FusedInf's shared-structure loading).
+//!
+//! Every block file is keyed by the FNV-1a content hash of its layer
+//! slice — the same [`crate::util::hash::fnv1a`] the planner's chain
+//! fingerprints use — so two tenants cloned from one family resolve to
+//! the same key for every block they share. The store then refcounts two
+//! independent lifetimes per key:
+//!
+//!  * `disk_refs` — how many registered tenants reference the block
+//!    file. Registration of a second same-family tenant is metadata-only
+//!    (no new file bytes); the file is evicted from storage only when the
+//!    last referencing tenant is evicted.
+//!  * `resident_refs` — how many in-flight batch/prefetch windows hold
+//!    the block resident. The `MemSim` ledger is charged exactly once,
+//!    when the count goes 0→1, and credited exactly once, when it
+//!    returns to 0: shared residency costs one budget slot no matter how
+//!    many tenants are executing on it.
+//!
+//! A [`WindowLease`] snapshots the first `residency_m` blocks of a
+//! tenant at acquire time, so re-partitioning (rebudget) between acquire
+//! and release can never unbalance the ledger. Leases are what both the
+//! demand path (batch start) and the prefetcher hold; a prefetch
+//! cancellation is just an early lease release.
+//!
+//! This module is on the steady-state swap path and inside the
+//! virtual-clock domain: `xtask lint` holds it to the no-heap-alloc and
+//! no-wall-clock rules.
+
+use std::collections::HashMap;
+
+use crate::memsim::{AllocId, MemSim, Space};
+use crate::model::ModelInfo;
+use crate::util::hash::fnv1a;
+
+/// Ledger tag for shared resident block slots.
+pub const RESIDENCY_TAG: &str = "blockstore";
+
+/// Content hash of one block: FNV-1a over the `(size, depth, flops,
+/// cut_after)` words of its layer slice — the per-block restriction of
+/// the planner's whole-chain `model_fingerprint`, so identical layer
+/// runs hash identically across tenants regardless of model name.
+pub fn block_hash(model: &ModelInfo, layer_lo: usize, layer_hi: usize) -> u64 {
+    fnv1a(model.layers[layer_lo..layer_hi].iter().flat_map(|l| {
+        [l.size_bytes, l.depth as u64, l.flops, l.cut_after as u64]
+    }))
+}
+
+/// Storage file id for a content hash — the canonical mapping lives in
+/// [`crate::storage::content_file_id`] (the hash-keyed read path), which
+/// keeps the content-addressed id space disjoint from `Storage`'s small
+/// incrementing path-registered ids.
+pub fn file_id(hash: u64) -> u64 {
+    crate::storage::content_file_id(hash)
+}
+
+/// One block reference: content hash plus its byte size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockRef {
+    pub hash: u64,
+    pub bytes: u64,
+}
+
+/// One content-addressed entry: a block file plus (at most) one resident
+/// copy, shared by every tenant whose chain contains this exact slice.
+#[derive(Debug)]
+struct Entry {
+    bytes: u64,
+    file: u64,
+    disk_refs: u32,
+    resident_refs: u32,
+    alloc: Option<AllocId>,
+}
+
+/// Per-tenant registration: the block refs in chain order plus the
+/// residency window length (first `min(residency_m, n_blocks)` blocks).
+#[derive(Debug)]
+struct TenantBlocks {
+    blocks: Vec<BlockRef>,
+    window: usize,
+}
+
+/// Result of registering (or re-registering) a tenant's blocks.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SyncStats {
+    /// Bytes of block files this registration had to materialize.
+    pub new_file_bytes: u64,
+    /// Bytes satisfied by files other tenants already own — the
+    /// metadata-only portion of the registration.
+    pub dedup_bytes: u64,
+}
+
+/// A held residency window: proof that the ledger was charged for the
+/// snapshot's blocks. Must be returned to [`BlockStore::release_window`]
+/// (batch completion or prefetch cancellation) to credit the ledger.
+#[derive(Debug)]
+pub struct WindowLease {
+    tenant: usize,
+    blocks: Vec<BlockRef>,
+}
+
+impl WindowLease {
+    pub fn tenant(&self) -> usize {
+        self.tenant
+    }
+
+    /// Total bytes the window spans (charged + shared).
+    pub fn window_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.bytes).sum()
+    }
+}
+
+/// Result of acquiring a residency window.
+#[derive(Debug)]
+pub struct WindowAcquire {
+    pub lease: WindowLease,
+    /// Bytes newly charged to the ledger (blocks that were not resident).
+    pub charged_bytes: u64,
+    /// Bytes already resident under another lease — the shared-hit bytes
+    /// this acquire got for free.
+    pub shared_bytes: u64,
+}
+
+/// The content-addressed block store (see module docs).
+#[derive(Debug, Default)]
+pub struct BlockStore {
+    entries: HashMap<u64, Entry>,
+    tenants: Vec<Option<TenantBlocks>>,
+    logical_bytes: u64,
+    unique_bytes: u64,
+    /// Files whose last disk ref left while a lease still held them
+    /// resident; drained by the caller once the lease returns.
+    stale_files: Vec<u64>,
+}
+
+impl BlockStore {
+    pub fn new() -> BlockStore {
+        BlockStore::default()
+    }
+
+    /// Register (or re-register after a rebudget) tenant `tenant`'s
+    /// blocks: the partition `points` of `model`, windowed to the first
+    /// `residency_m` blocks. Existing refs for the tenant are released
+    /// first, so calling this after every re-plan is idempotent for an
+    /// unchanged partition.
+    pub fn sync_tenant(
+        &mut self,
+        tenant: usize,
+        model: &ModelInfo,
+        points: &[usize],
+        residency_m: usize,
+    ) -> Result<SyncStats, String> {
+        let blocks = model.create_blocks(points)?;
+        if self.tenants.len() <= tenant {
+            self.tenants.resize_with(tenant + 1, || None);
+        }
+        // Release the previous registration before inserting the new one
+        // so an unchanged partition nets out to a no-op.
+        for f in self.drop_tenant_refs(tenant) {
+            self.stale_files.push(f);
+        }
+
+        let mut refs = Vec::new();
+        let mut stats = SyncStats::default();
+        for b in &blocks {
+            let hash = block_hash(model, b.layer_lo, b.layer_hi);
+            let r = BlockRef { hash, bytes: b.size_bytes };
+            let e = self.entries.entry(hash).or_insert(Entry {
+                bytes: b.size_bytes,
+                file: file_id(hash),
+                disk_refs: 0,
+                resident_refs: 0,
+                alloc: None,
+            });
+            debug_assert_eq!(e.bytes, b.size_bytes, "content hash collision");
+            if e.disk_refs == 0 {
+                stats.new_file_bytes += b.size_bytes;
+                self.unique_bytes += b.size_bytes;
+            } else {
+                stats.dedup_bytes += b.size_bytes;
+            }
+            e.disk_refs += 1;
+            self.logical_bytes += b.size_bytes;
+            refs.push(r);
+        }
+        let window = residency_m.max(1).min(refs.len());
+        self.tenants[tenant] = Some(TenantBlocks { blocks: refs, window });
+        Ok(stats)
+    }
+
+    /// Evict tenant `tenant`: drop its disk refs and return the file ids
+    /// whose last reference just left (the caller evicts those from
+    /// `Storage`). Files still pinned resident by an outstanding lease
+    /// are deferred to [`take_stale_files`](Self::take_stale_files).
+    pub fn release_tenant(&mut self, tenant: usize) -> Vec<u64> {
+        let freed = self.drop_tenant_refs(tenant);
+        if let Some(slot) = self.tenants.get_mut(tenant) {
+            *slot = None;
+        }
+        freed
+    }
+
+    fn drop_tenant_refs(&mut self, tenant: usize) -> Vec<u64> {
+        let mut freed = Vec::new();
+        let Some(Some(tb)) = self.tenants.get_mut(tenant).map(Option::take) else {
+            return freed;
+        };
+        for r in &tb.blocks {
+            let Some(e) = self.entries.get_mut(&r.hash) else {
+                debug_assert!(false, "disk ref without entry");
+                continue;
+            };
+            e.disk_refs -= 1;
+            self.logical_bytes -= r.bytes;
+            if e.disk_refs == 0 {
+                self.unique_bytes -= e.bytes;
+                if e.resident_refs == 0 {
+                    freed.push(e.file);
+                    self.entries.remove(&r.hash);
+                }
+                // else: a lease still holds it; release_window will move
+                // the file id into stale_files when the lease returns.
+            }
+        }
+        freed
+    }
+
+    /// Charge the ledger for tenant `tenant`'s residency window and hand
+    /// back the lease. Blocks already resident under another lease are
+    /// shared for free; only 0→1 transitions allocate. Returns `None`
+    /// for an unregistered tenant.
+    pub fn acquire_window(&mut self, tenant: usize, mem: &mut MemSim) -> Option<WindowAcquire> {
+        // lint: allow(alloc-pairing): the charge travels inside the
+        // WindowLease and is credited by release_window when the batch
+        // retires or the prefetch cancels.
+        let tb = self.tenants.get(tenant)?.as_ref()?;
+        let mut snapshot = Vec::new();
+        for r in &tb.blocks[..tb.window] {
+            snapshot.push(*r);
+        }
+        let mut charged = 0u64;
+        let mut shared = 0u64;
+        for r in &snapshot {
+            let e = self.entries.get_mut(&r.hash).expect("windowed block has an entry");
+            if e.resident_refs == 0 {
+                e.alloc = Some(mem.alloc(RESIDENCY_TAG, Space::Unified, r.bytes));
+                charged += r.bytes;
+            } else {
+                shared += r.bytes;
+            }
+            e.resident_refs += 1;
+        }
+        Some(WindowAcquire {
+            lease: WindowLease { tenant, blocks: snapshot },
+            charged_bytes: charged,
+            shared_bytes: shared,
+        })
+    }
+
+    /// Credit the ledger for a lease: each block's 1→0 transition frees
+    /// its slot. Returns the bytes credited back.
+    pub fn release_window(&mut self, lease: WindowLease, mem: &mut MemSim) -> u64 {
+        let mut freed = 0u64;
+        for r in &lease.blocks {
+            let Some(e) = self.entries.get_mut(&r.hash) else {
+                debug_assert!(false, "lease over a vanished entry");
+                continue;
+            };
+            e.resident_refs -= 1;
+            if e.resident_refs == 0 {
+                if let Some(id) = e.alloc.take() {
+                    freed += mem.must_free(id);
+                }
+                if e.disk_refs == 0 {
+                    // Last disk ref left while we were resident: the file
+                    // eviction was deferred to us.
+                    self.stale_files.push(e.file);
+                    self.entries.remove(&r.hash);
+                }
+            }
+        }
+        freed
+    }
+
+    /// Drain file ids whose eviction was deferred past a lease release.
+    pub fn take_stale_files(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.stale_files)
+    }
+
+    /// Bytes of tenant `tenant`'s residency window already resident under
+    /// some lease — the warm bytes a demand swap-in would get for free
+    /// right now (from a prefetch or a concurrent same-family tenant).
+    pub fn resident_overlap_bytes(&self, tenant: usize) -> u64 {
+        let Some(Some(tb)) = self.tenants.get(tenant) else {
+            return 0;
+        };
+        tb.blocks[..tb.window]
+            .iter()
+            .filter(|r| {
+                self.entries
+                    .get(&r.hash)
+                    .is_some_and(|e| e.resident_refs > 0)
+            })
+            .map(|r| r.bytes)
+            .sum()
+    }
+
+    /// Total bytes of tenant `tenant`'s residency window.
+    pub fn window_bytes(&self, tenant: usize) -> u64 {
+        let Some(Some(tb)) = self.tenants.get(tenant) else {
+            return 0;
+        };
+        tb.blocks[..tb.window].iter().map(|r| r.bytes).sum()
+    }
+
+    /// Registered bytes as tenants see them (every tenant counts its own
+    /// full chain).
+    pub fn logical_bytes(&self) -> u64 {
+        self.logical_bytes
+    }
+
+    /// Bytes actually on disk: each content-addressed file once.
+    pub fn unique_bytes(&self) -> u64 {
+        self.unique_bytes
+    }
+
+    /// Registered-but-deduplicated bytes (`logical - unique`).
+    pub fn dedup_bytes(&self) -> u64 {
+        self.logical_bytes - self.unique_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::families;
+
+    fn store_with_clones(n: usize) -> (BlockStore, Vec<ModelInfo>, Vec<usize>) {
+        let base = families::resnet101();
+        let points: Vec<usize> = base.legal_cut_points().into_iter().take(3).collect();
+        let mut models = Vec::new();
+        for i in 0..n {
+            let mut m = base.clone();
+            m.name = format!("resnet101-{i}");
+            models.push(m);
+        }
+        let mut bs = BlockStore::new();
+        for (i, m) in models.iter().enumerate() {
+            bs.sync_tenant(i, m, &points, 2).expect("legal points");
+        }
+        (bs, models, points)
+    }
+
+    #[test]
+    fn clones_dedup_to_one_file_set() {
+        let (bs, models, _) = store_with_clones(4);
+        let one = models[0].size_bytes();
+        assert_eq!(bs.logical_bytes(), 4 * one);
+        assert_eq!(bs.unique_bytes(), one, "clones share every block file");
+        assert_eq!(bs.dedup_bytes(), 3 * one);
+    }
+
+    #[test]
+    fn sync_stats_report_metadata_only_registration() {
+        let base = families::resnet101();
+        let points: Vec<usize> = base.legal_cut_points().into_iter().take(2).collect();
+        let mut bs = BlockStore::new();
+        let first = bs.sync_tenant(0, &base, &points, 2).expect("plan");
+        assert_eq!(first.new_file_bytes, base.size_bytes());
+        assert_eq!(first.dedup_bytes, 0);
+        let mut clone = base.clone();
+        clone.name = "resnet101-b".into();
+        let second = bs.sync_tenant(1, &clone, &points, 2).expect("plan");
+        assert_eq!(second.new_file_bytes, 0, "second registration is metadata-only");
+        assert_eq!(second.dedup_bytes, base.size_bytes());
+    }
+
+    #[test]
+    fn resync_same_partition_is_a_net_noop() {
+        let (mut bs, models, points) = store_with_clones(2);
+        let before = (bs.logical_bytes(), bs.unique_bytes());
+        let s = bs.sync_tenant(0, &models[0], &points, 2).expect("plan");
+        assert_eq!((bs.logical_bytes(), bs.unique_bytes()), before);
+        assert_eq!(s.new_file_bytes, 0, "all blocks still referenced by tenant 1");
+    }
+
+    #[test]
+    fn shared_window_charges_the_ledger_once() {
+        let (mut bs, _, _) = store_with_clones(2);
+        let mut mem = MemSim::new(u64::MAX);
+        let w0 = bs.window_bytes(0);
+        assert!(w0 > 0);
+        let a = bs.acquire_window(0, &mut mem).expect("registered");
+        assert_eq!(a.charged_bytes, w0);
+        assert_eq!(a.shared_bytes, 0);
+        assert_eq!(mem.current(), w0);
+        // Same-family tenant 1's window is fully shared: zero new charge.
+        let b = bs.acquire_window(1, &mut mem).expect("registered");
+        assert_eq!(b.charged_bytes, 0);
+        assert_eq!(b.shared_bytes, w0);
+        assert_eq!(mem.current(), w0, "shared residency is charged once");
+        // First release keeps the blocks resident (tenant 1 still holds
+        // them); the last release credits everything back.
+        assert_eq!(bs.release_window(a.lease, &mut mem), 0);
+        assert_eq!(mem.current(), w0);
+        assert_eq!(bs.release_window(b.lease, &mut mem), w0);
+        assert_eq!(mem.current(), 0);
+        assert_eq!(mem.ledger_errors, 0);
+    }
+
+    #[test]
+    fn overlap_reports_warm_bytes() {
+        let (mut bs, _, _) = store_with_clones(2);
+        let mut mem = MemSim::new(u64::MAX);
+        assert_eq!(bs.resident_overlap_bytes(1), 0);
+        let a = bs.acquire_window(0, &mut mem).expect("registered");
+        assert_eq!(bs.resident_overlap_bytes(1), bs.window_bytes(1));
+        bs.release_window(a.lease, &mut mem);
+        assert_eq!(bs.resident_overlap_bytes(1), 0);
+    }
+
+    #[test]
+    fn eviction_keeps_shared_files_until_last_ref() {
+        let (mut bs, models, _) = store_with_clones(2);
+        let freed = bs.release_tenant(0);
+        assert!(freed.is_empty(), "tenant 1 still references every file");
+        assert_eq!(bs.unique_bytes(), models[0].size_bytes());
+        let freed = bs.release_tenant(1);
+        assert_eq!(freed.len(), 4, "last ref frees all 4 block files");
+        assert_eq!(bs.unique_bytes(), 0);
+        assert_eq!(bs.logical_bytes(), 0);
+    }
+
+    #[test]
+    fn eviction_under_a_live_lease_defers_file_removal() {
+        let (mut bs, _, _) = store_with_clones(1);
+        let mut mem = MemSim::new(u64::MAX);
+        let a = bs.acquire_window(0, &mut mem).expect("registered");
+        let freed = bs.release_tenant(0);
+        // Window files (2 of 4 blocks) stay pinned by the lease; the
+        // other block files free immediately.
+        assert_eq!(freed.len(), 2);
+        assert!(bs.take_stale_files().is_empty());
+        bs.release_window(a.lease, &mut mem);
+        assert_eq!(bs.take_stale_files().len(), 2, "deferred evictions surface");
+        assert_eq!(mem.current(), 0);
+    }
+
+    #[test]
+    fn distinct_families_share_nothing() {
+        let points_a: Vec<usize> =
+            families::resnet101().legal_cut_points().into_iter().take(3).collect();
+        let points_b: Vec<usize> =
+            families::vgg19().legal_cut_points().into_iter().take(3).collect();
+        let mut bs = BlockStore::new();
+        bs.sync_tenant(0, &families::resnet101(), &points_a, 2).expect("plan");
+        bs.sync_tenant(1, &families::vgg19(), &points_b, 2).expect("plan");
+        assert_eq!(bs.dedup_bytes(), 0);
+        assert_eq!(
+            bs.unique_bytes(),
+            families::resnet101().size_bytes() + families::vgg19().size_bytes()
+        );
+    }
+
+    #[test]
+    fn block_hash_matches_planner_fingerprint_domain() {
+        // Whole-chain block hash == the planner's model_fingerprint: both
+        // are fnv1a over the same per-layer words, so a one-block
+        // partition and the plan-cache key agree exactly.
+        let m = families::resnet101();
+        assert_eq!(
+            block_hash(&m, 0, m.layers.len()),
+            crate::planner::cost::model_fingerprint(&m)
+        );
+    }
+}

@@ -26,6 +26,7 @@
 //! slices straight out of it — zero heap allocations per swap-in after
 //! warmup (see the `micro_hostpath` bench and `tests/hostmem.rs`).
 
+use std::collections::HashMap;
 use std::fmt;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -229,9 +230,21 @@ pub struct PoolStats {
     pub bytes_copied: u64,
 }
 
+/// One content-addressed shared resident slot: the buffer plus how many
+/// tenants currently reference it. While an entry lives here its slot is
+/// neither free nor recyclable — eviction-path shrinks cannot touch it.
+#[derive(Debug)]
+struct SharedEntry {
+    buf: PooledBuf,
+    refs: u32,
+}
+
 #[derive(Debug)]
 struct PoolInner {
     free: Mutex<Vec<BlockBuffer>>,
+    /// Refcounted shared slots, keyed by block content hash
+    /// (`blockstore::block_hash`). See the `*_shared` methods.
+    shared: Mutex<HashMap<u64, SharedEntry>>,
     slot_bytes: AtomicU64,
     slot_limit: u64,
     slots: AtomicU64,
@@ -258,6 +271,7 @@ impl BufferPool {
         BufferPool {
             inner: Arc::new(PoolInner {
                 free: Mutex::new(Vec::new()),
+                shared: Mutex::new(HashMap::new()),
                 slot_bytes: AtomicU64::new(aligned_len(slot_bytes) as u64),
                 slot_limit: slots.max(1) as u64,
                 slots: AtomicU64::new(0),
@@ -335,6 +349,64 @@ impl BufferPool {
         let seen_allocs = buf.alloc_count();
         let seen_copied = buf.copied_bytes();
         PooledBuf { buf: Some(buf), pool: Some(self.inner.clone()), seen_allocs, seen_copied }
+    }
+
+    /// Pin a checked-out slot as the shared resident copy for content
+    /// hash `hash` (refcount 1). A shared slot sits in neither the free
+    /// list nor the checkout flow, so [`set_slot_bytes`](Self::set_slot_bytes)
+    /// shrinks cannot release it and its payload stays byte-stable for
+    /// every referencing tenant. Panics on a double insert — later
+    /// tenants reference through [`retain_shared`](Self::retain_shared).
+    pub fn insert_shared(&self, hash: u64, buf: PooledBuf) {
+        let mut shared = self.inner.shared.lock().expect("pool poisoned");
+        let prev = shared.insert(hash, SharedEntry { buf, refs: 1 });
+        assert!(prev.is_none(), "shared slot {hash:#x} double-inserted");
+    }
+
+    /// Add one tenant reference to an already-resident shared slot.
+    /// Returns false when `hash` is not resident — the caller must swap
+    /// the block in and [`insert_shared`](Self::insert_shared) it.
+    pub fn retain_shared(&self, hash: u64) -> bool {
+        let mut shared = self.inner.shared.lock().expect("pool poisoned");
+        match shared.get_mut(&hash) {
+            Some(e) => {
+                e.refs += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Read a shared resident payload under the registry lock.
+    pub fn with_shared<R>(&self, hash: u64, f: impl FnOnce(&BlockBuffer) -> R) -> Option<R> {
+        let shared = self.inner.shared.lock().expect("pool poisoned");
+        shared.get(&hash).map(|e| f(&e.buf))
+    }
+
+    /// Drop one tenant reference to a shared slot. The payload survives
+    /// untouched until the LAST reference goes: only then does the slot
+    /// leave the registry and return to the pool — where, if the pool
+    /// was shrunk below its capacity while it was shared, the normal
+    /// return path discards it (shrink on last release). Returns true
+    /// when this call was the last reference.
+    pub fn release_shared(&self, hash: u64) -> bool {
+        let mut shared = self.inner.shared.lock().expect("pool poisoned");
+        let Some(e) = shared.get_mut(&hash) else {
+            return false;
+        };
+        e.refs -= 1;
+        if e.refs > 0 {
+            return false;
+        }
+        let entry = shared.remove(&hash);
+        drop(shared);
+        drop(entry); // PooledBuf::drop: recycle, or discard if shrunk
+        true
+    }
+
+    /// Number of live shared slots (diagnostics).
+    pub fn shared_slots(&self) -> usize {
+        self.inner.shared.lock().expect("pool poisoned").len()
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -602,5 +674,59 @@ mod tests {
         let b = BlockBuffer::empty();
         assert_eq!(b.capacity(), 0);
         assert_eq!(b.as_slice(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn shared_slot_survives_evicting_one_tenant() {
+        // The satellite regression: two tenants share one resident
+        // block; evicting one (release + eviction-path shrink) must not
+        // release the slot or disturb its bytes for the other.
+        let pool = BufferPool::new(8 * ALIGN, 2);
+        let mut s = pool.checkout();
+        let pattern: Vec<u8> = (0..4 * ALIGN).map(|i| (i % 251) as u8).collect();
+        s.copy_from(&pattern);
+        pool.insert_shared(42, s); // tenant A swaps the block in
+        assert!(pool.retain_shared(42), "tenant B shares the resident copy");
+        assert_eq!(pool.shared_slots(), 1);
+        // Evict tenant A: not the last reference, and the shrink that
+        // follows an eviction must leave the shared slot alone.
+        assert!(!pool.release_shared(42));
+        pool.set_slot_bytes(ALIGN);
+        let same = pool
+            .with_shared(42, |b| b.as_slice() == &pattern[..])
+            .expect("slot still resident for tenant B");
+        assert!(same, "tenant B's resident block stays byte-identical");
+        // Last release: the slot leaves the registry, and because the
+        // pool shrank below its capacity it is discarded, not recycled.
+        assert!(pool.release_shared(42));
+        assert_eq!(pool.shared_slots(), 0);
+        assert!(pool.with_shared(42, |_| ()).is_none());
+        let st = pool.stats();
+        assert_eq!(st.slots, 0, "shrink applies on last release");
+        assert_eq!(st.checked_out, 0);
+    }
+
+    #[test]
+    fn shared_slot_recycles_when_pool_size_is_unchanged() {
+        let pool = BufferPool::new(2 * ALIGN, 2);
+        let mut s = pool.checkout();
+        s.copy_from(&[9u8; ALIGN]);
+        pool.insert_shared(7, s);
+        assert!(pool.release_shared(7), "single reference releases immediately");
+        // No shrink happened: the slot returns to the free list and the
+        // next checkout reuses it without allocating.
+        drop(pool.checkout());
+        let st = pool.stats();
+        assert_eq!(st.slots, 1);
+        assert_eq!(st.reuses, 1);
+        assert_eq!(st.alloc_events, 1);
+    }
+
+    #[test]
+    fn shared_registry_misses_are_reported() {
+        let pool = BufferPool::new(ALIGN, 1);
+        assert!(!pool.retain_shared(1), "cold block: caller must swap in");
+        assert!(!pool.release_shared(1), "releasing a miss is a no-op");
+        assert!(pool.with_shared(1, |_| ()).is_none());
     }
 }

@@ -22,6 +22,7 @@
 #![warn(clippy::unwrap_used)]
 
 pub mod assembly;
+pub mod blockstore;
 pub mod config;
 pub mod coordinator;
 pub mod delay;

@@ -306,6 +306,11 @@ const COMMANDS: &[CmdSpec] = &[
                 help: "queue-depth series period, virtual seconds (default 0.25)",
             },
             FlagSpec {
+                name: "prefetch",
+                metavar: "",
+                help: "predictive swap-in for the predicted next tenant (EWMA arrival model)",
+            },
+            FlagSpec {
                 name: "hist-json",
                 metavar: "PATH",
                 help: "write the latency histogram CDF as JSON",
@@ -873,6 +878,17 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
             pool.bytes_copied,
         );
     }
+    let (logical, unique) = server.dedup_summary();
+    println!(
+        "content-addressed store: {} registered, {} on disk ({} deduplicated); \
+         {} cold / {} warm / {} shared-hit swap-ins",
+        table::human_bytes(logical),
+        table::human_bytes(unique),
+        table::human_bytes(logical.saturating_sub(unique)),
+        rep.cold_swapins,
+        rep.warm_swapins,
+        rep.shared_hit_swapins,
+    );
     Ok(())
 }
 
@@ -905,6 +921,7 @@ fn cmd_serve_storm(flags: &HashMap<String, String>) -> Result<()> {
     cfg.max_batch = parsed(flags, "max-batch", 8)?;
     cfg.seed = seed;
     cfg.sample_dt_s = parsed(flags, "sample-dt", 0.25)?;
+    cfg.prefetch = flags.contains_key("prefetch");
 
     let engine = Engine::builder()
         .device(device(flags)?)
@@ -983,6 +1000,24 @@ fn cmd_serve_storm(flags: &HashMap<String, String>) -> Result<()> {
         100.0 * rep.swap_channel_utilization(),
         rep.deferred_batches,
     );
+    println!(
+        "swap-ins: {} cold, {} warm, {} shared-hit (cold frac {:.3}); dedup {} of {} registered",
+        rep.cold_swapins,
+        rep.warm_swapins,
+        rep.shared_hit_swapins,
+        rep.cold_frac(),
+        table::human_bytes(rep.dedup_bytes()),
+        table::human_bytes(rep.dedup_logical_bytes),
+    );
+    if rep.prefetch_issued > 0 {
+        println!(
+            "prefetch: {} issued, {} hits, {} cancelled (hit rate {:.3})",
+            rep.prefetch_issued,
+            rep.prefetch_hits,
+            rep.prefetch_cancelled,
+            rep.prefetch_hit_rate(),
+        );
+    }
     if let Some(s) = &rep.series {
         println!(
             "series: {} samples at dt={:.2}s, peak queue depth {}",

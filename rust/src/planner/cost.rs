@@ -15,20 +15,10 @@ use crate::delay::profiler::Fit;
 use crate::delay::DelayModel;
 use crate::model::{BlockInfo, ModelInfo};
 use crate::pipeline::BlockTimes;
-
-/// FNV-1a over a stream of u64 words — a dependency-free stable hash for
-/// cost fingerprints (not cryptographic; collision odds are irrelevant
-/// at cache-key scale).
-fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for w in words {
-        for b in w.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-    h
-}
+// The shared content hash: cost fingerprints and the block store's
+// on-disk keys must agree, so both pull the same `util::hash::fnv1a`
+// (its stability tests pin the constants).
+use crate::util::hash::fnv1a;
 
 /// Stable fingerprint of a model's chain content (layer sizes, depths,
 /// FLOPs, cut legality). Cache keys carry it alongside the model name:

@@ -56,6 +56,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::blockstore::{BlockStore, WindowLease};
 use crate::engine::{Engine, ModelHandle};
 use crate::memsim::{AllocId, MemSim};
 use crate::model::ModelInfo;
@@ -65,7 +66,7 @@ use crate::swap::{SwapController, SwapMode};
 
 use super::admission::{Admission, AdmissionPolicy, TenantQueue, Verdict};
 use super::load::LoadGen;
-use super::reactor::EventQueue;
+use super::reactor::{ArrivalPredictor, EventQueue};
 use super::trace::{MultiServeReport, ServeTrace, StormSeries};
 
 /// Multi-tenant serving configuration.
@@ -84,6 +85,11 @@ pub struct MultiTenantConfig {
     /// Queue-depth / shed time-series sampling period on the virtual
     /// clock (seconds); 0 disables the series.
     pub sample_dt_s: f64,
+    /// Predictive swap-in prefetch: when swap channels and budget
+    /// headroom are idle, begin swap-in for the predicted next tenant's
+    /// residency window before its request lands (EWMA arrival model,
+    /// clean cancellation on misprediction — see DESIGN.md §12).
+    pub prefetch: bool,
 }
 
 impl MultiTenantConfig {
@@ -96,6 +102,7 @@ impl MultiTenantConfig {
             max_batch: 8,
             seed: 1,
             sample_dt_s: 0.0,
+            prefetch: false,
         }
     }
 }
@@ -137,6 +144,11 @@ struct Tenant {
     batches: u64,
     evicted: bool,
     swapper: SwapController,
+    /// EWMA inter-arrival model feeding the prefetcher (reset per run).
+    predictor: ArrivalPredictor,
+    /// Swap seconds of this tenant's last batch — the prefetcher's cost
+    /// basis for sizing a predictive window swap-in.
+    last_swap_s: f64,
 }
 
 /// A formed batch: requests drained from the queue with its cost-model
@@ -157,7 +169,45 @@ struct Inflight {
     batch: Batch,
     t_start: f64,
     t_done: f64,
+    /// Ledger charge for the slack above the residency window (peak
+    /// minus window plus scheduler overhead).
     alloc: AllocId,
+    /// Refcounted charge for the window's content-addressed blocks
+    /// (`None` when the tenant is not in the block store).
+    lease: Option<WindowLease>,
+}
+
+/// The (at most one) outstanding predictive swap-in.
+struct PrefetchSlot {
+    /// Generation stamp matching the armed `Ev::PrefetchDone` — a
+    /// cancelled prefetch leaves a stale event behind, identified by a
+    /// mismatched generation.
+    gen: u64,
+    tenant: usize,
+    lease: WindowLease,
+    /// True while the predictive swap-in occupies a DMA channel.
+    in_flight: bool,
+    /// Virtual time the predictive swap-in completes.
+    done_s: f64,
+    /// Prediction expiry: past this, the arrival did not come and the
+    /// slot cancels (misprediction).
+    expires_s: f64,
+}
+
+/// Mutable reactor-loop state threaded through the dispatch helpers:
+/// swap-channel bookkeeping, the deferral FIFO, and the prefetch slot.
+struct ReactorState {
+    channels_free: usize,
+    deferred: VecDeque<Batch>,
+    /// The (at most one) outstanding predictive swap-in.
+    prefetch: Option<PrefetchSlot>,
+    /// Generation of the prefetch currently occupying a DMA channel
+    /// (`None` once it completes, is inherited by demand, or cancels).
+    prefetch_channel: Option<u64>,
+    next_gen: u64,
+    /// True while an Arrival event is armed in the queue (one at a
+    /// time — the next is pulled when the current one fires).
+    pending_arrival: bool,
 }
 
 /// Reactor events. `BatchDone` carries its batch so completion needs no
@@ -171,6 +221,9 @@ enum Ev {
     SwapInDone,
     /// A batch's resident window ended.
     BatchDone(Box<Inflight>),
+    /// A predictive swap-in finished; stale generations are ignored
+    /// (the prefetch was cancelled or consumed in the meantime).
+    PrefetchDone(u64),
     /// Queue-depth / shed series sampling tick.
     Sample,
 }
@@ -214,6 +267,9 @@ pub struct MultiTenantServer {
     mem: MemSim,
     /// Long-lived block store (page-cache hygiene across evictions).
     storage: Storage,
+    /// Content-addressed block registry: same-family tenants share block
+    /// files and refcounted resident slots (DESIGN.md §12).
+    blocks: BlockStore,
     tx: Sender<Submission>,
     rx: Receiver<Submission>,
 }
@@ -233,6 +289,7 @@ impl MultiTenantServer {
             admission,
             mem: MemSim::new(cfg.total_budget),
             storage: Storage::new(cfg.total_budget.max(64_000_000)),
+            blocks: BlockStore::new(),
             tenants: Vec::new(),
             engine,
             cfg,
@@ -350,8 +407,39 @@ impl MultiTenantServer {
             batches: 0,
             evicted: false,
             swapper,
+            predictor: ArrivalPredictor::new(),
+            last_swap_s: 0.0,
         });
-        Ok(self.tenants.len() - 1)
+        let ti = self.tenants.len() - 1;
+        // Content-addressed registration: a same-family newcomer resolves
+        // to files the fleet already owns (metadata-only), and survivors
+        // whose partitions moved under the rebudget re-key their blocks.
+        self.sync_blockstore(ti)?;
+        for i in live {
+            self.sync_blockstore(i)?;
+        }
+        Ok(ti)
+    }
+
+    /// (Re-)register a tenant's current partition in the content store.
+    /// Idempotent for an unchanged partition; called after every
+    /// register/evict rebudget since block boundaries may have moved.
+    fn sync_blockstore(&mut self, ti: usize) -> Result<()> {
+        if self.tenants[ti].evicted {
+            return Ok(());
+        }
+        let m = self.engine.config().pipeline.residency_m.max(1);
+        let sched = self.tenants[ti].handle.schedule();
+        self.blocks
+            .sync_tenant(ti, &self.tenants[ti].model, &sched.points, m)
+            .map_err(|e| anyhow!("blockstore sync for tenant {ti}: {e}"))?;
+        Ok(())
+    }
+
+    /// Fleet dedup accounting: (logical bytes registered, unique bytes
+    /// materialized). Equal when no tenants share content.
+    pub fn dedup_summary(&self) -> (u64, u64) {
+        (self.blocks.logical_bytes(), self.blocks.unique_bytes())
     }
 
     /// Evict a tenant at runtime: queued requests are dropped, engine
@@ -369,22 +457,28 @@ impl MultiTenantServer {
         }
         let shed = t.queue.len();
         t.queue.clear();
-        let n_blocks = t.handle.schedule().n_blocks;
         t.handle.evict()?;
         t.evicted = true;
-        // Swap hygiene: drop whatever the departed model left in the
-        // shared block store. Zero-copy serving leaves no page-cache
-        // residue by design (the DMA channel bypasses it), so this pass
-        // only finds pages when a tenant ran the standard buffered path
-        // (w/o-uni-add ablation config, artifact file reads); blocks
-        // reacquire lazily if the model ever returns.
-        let files: Vec<u64> = (0..n_blocks).map(|b| block_file(tenant, b)).collect();
+        // Swap hygiene, content-addressed: only files whose *last*
+        // referencing tenant departs leave the store — a block shared
+        // with a surviving same-family tenant stays on disk and in the
+        // page cache. Zero-copy serving leaves no page-cache residue by
+        // design (the DMA channel bypasses it), so this pass only finds
+        // pages when a tenant ran the standard buffered path (w/o-uni-add
+        // ablation config, artifact file reads).
+        let mut files = self.blocks.release_tenant(tenant);
+        // Plus any eviction deferred past an earlier lease release.
+        files.append(&mut self.blocks.take_stale_files());
         self.tenants[tenant].swapper.evict_files(files, &mut self.storage, &mut self.mem);
-        // Survivors re-expand into the freed budget.
+        // Survivors re-expand into the freed budget (and re-key their
+        // blocks where the re-partition moved boundaries).
         if self.registered() > 0 {
             let (live, budgets) = self.partition_with(None)?;
             self.apply_budgets(&live, &budgets)
                 .map_err(|e| e.context("re-expanding survivors after eviction"))?;
+            for i in live {
+                self.sync_blockstore(i)?;
+            }
         }
         Ok(shed)
     }
@@ -485,6 +579,9 @@ impl MultiTenantServer {
         let seed_bump = t.batches;
         t.batches += 1;
         let report = t.handle.infer_sim_seeded(seed_bump)?;
+        // The prefetcher's cost basis: what a full swap-in of this
+        // tenant actually costs under the current cost provider.
+        t.last_swap_s = report.swap_s;
         // Resident-window batching: the swap pipeline runs once, extra
         // requests re-execute the resident blocks.
         let latency_s = report.latency_s + (k - 1) as f64 * report.compute_s;
@@ -510,20 +607,51 @@ impl MultiTenantServer {
     /// channel bookkeeping.
     fn start_batch(
         &mut self,
-        b: Batch,
+        mut b: Batch,
         now: f64,
         q: &mut EventQueue<Ev>,
         rep: &mut MultiServeReport,
     ) {
+        // Shared-hit fast path: window blocks already resident (a
+        // prefetch or a concurrent same-family tenant) are refcounted,
+        // not re-charged, and their swap-in share is free. The ledger
+        // charge splits into the refcounted window plus the slack above
+        // it (peak minus window plus scheduler overhead) — totals are
+        // identical to the undeduplicated charge when nothing is shared.
+        let (lease, shared_bytes, window_bytes) =
+            match self.blocks.acquire_window(b.tenant, &mut self.mem) {
+                Some(a) => {
+                    let w = a.lease.window_bytes();
+                    (Some(a.lease), a.shared_bytes, w)
+                }
+                None => (None, 0, 0),
+            };
+        if window_bytes > 0 && shared_bytes >= window_bytes {
+            rep.shared_hit_swapins += 1;
+        } else if shared_bytes > 0 {
+            rep.warm_swapins += 1;
+        } else {
+            rep.cold_swapins += 1;
+        }
+        if window_bytes > 0 && shared_bytes > 0 {
+            let saved = b.swap_s * shared_bytes as f64 / window_bytes as f64;
+            b.swap_s -= saved;
+            let floor = b.compute_s * b.reqs.len().max(1) as f64;
+            b.latency_s = (b.latency_s - saved).max(floor);
+        }
+        let slack = b.resident_bytes.saturating_sub(window_bytes);
         let t = &mut self.tenants[b.tenant];
         // lint: allow(alloc-pairing): the residency travels inside the
         // Inflight event and is released when BatchDone fires.
-        let alloc = t.swapper.acquire_residency(&mut self.mem, b.resident_bytes);
+        let alloc = t.swapper.acquire_residency(&mut self.mem, slack);
         let t_done = now + b.latency_s;
         t.free_at = t_done;
         rep.swap_busy_s += b.swap_s;
         q.push(now + b.swap_s, Ev::SwapInDone);
-        q.push(t_done, Ev::BatchDone(Box::new(Inflight { batch: b, t_start: now, t_done, alloc })));
+        q.push(
+            t_done,
+            Ev::BatchDone(Box::new(Inflight { batch: b, t_start: now, t_done, alloc, lease })),
+        );
     }
 
     /// Retire a batch: release its residency and emit traces. The
@@ -532,6 +660,9 @@ impl MultiTenantServer {
     fn finish_batch(&mut self, inf: Inflight, rep: &mut MultiServeReport) {
         let ti = inf.batch.tenant;
         self.tenants[ti].swapper.release_residency(&mut self.mem, inf.alloc);
+        if let Some(lease) = inf.lease {
+            self.blocks.release_window(lease, &mut self.mem);
+        }
         // No explicit cost observation here: dispatch runs through
         // `ModelHandle::infer_sim_seeded`, where the engine already
         // folds each batch's components into the measured cost provider
@@ -561,6 +692,152 @@ impl MultiTenantServer {
     // the reactor
     // ---------------------------------------------------------------
 
+    /// Route a formed batch toward a swap channel, resolving it against
+    /// the outstanding prefetch first: a correct prediction is a hit
+    /// whose lease hands over seamlessly (inheriting the channel if the
+    /// speculative swap is still in flight and demand needs it); a wrong
+    /// one under channel or budget pressure cancels cleanly — demand
+    /// traffic never waits behind speculation.
+    fn dispatch_batch(
+        &mut self,
+        b: Batch,
+        now: f64,
+        st: &mut ReactorState,
+        q: &mut EventQueue<Ev>,
+        rep: &mut MultiServeReport,
+    ) {
+        let hit = st.prefetch.as_ref().is_some_and(|p| p.tenant == b.tenant);
+        if hit && st.channels_free == 0 {
+            // The demand batch inherits the prefetch's channel mid-flight
+            // (its own SwapInDone will free it; the stale PrefetchDone is
+            // ignored by generation).
+            if st.prefetch_channel.take().is_some() {
+                st.channels_free += 1;
+                if let Some(p) = st.prefetch.as_mut() {
+                    p.in_flight = false;
+                    rep.swap_busy_s -= (p.done_s - now).max(0.0);
+                }
+            }
+        } else if !hit
+            && st.prefetch.is_some()
+            && (st.channels_free == 0
+                || self.mem.current().saturating_add(b.resident_bytes) > self.cfg.total_budget)
+        {
+            self.cancel_prefetch(st, now, rep);
+        }
+        if st.channels_free > 0 {
+            st.channels_free -= 1;
+            self.start_batch(b, now, q, rep);
+            if hit {
+                if let Some(p) = st.prefetch.take() {
+                    rep.prefetch_hits += 1;
+                    // The batch's own window refcounts are in place:
+                    // returning the prefetch lease keeps the blocks
+                    // resident with no coverage gap.
+                    self.blocks.release_window(p.lease, &mut self.mem);
+                }
+            }
+        } else {
+            rep.deferred_batches += 1;
+            st.deferred.push_back(b);
+        }
+    }
+
+    /// Cancel the outstanding prefetch: credit its window back to the
+    /// ledger, free its DMA channel if the speculative swap was still in
+    /// flight, and refund the unspent channel-busy seconds. The budget
+    /// and channel come back exactly as if the prefetch never happened.
+    fn cancel_prefetch(&mut self, st: &mut ReactorState, now: f64, rep: &mut MultiServeReport) {
+        let Some(p) = st.prefetch.take() else {
+            return;
+        };
+        if p.in_flight && st.prefetch_channel.take().is_some() {
+            st.channels_free += 1;
+            rep.swap_busy_s -= (p.done_s - now).max(0.0);
+        }
+        self.blocks.release_window(p.lease, &mut self.mem);
+        rep.prefetch_cancelled += 1;
+    }
+
+    /// Issue a predictive swap-in when everything is idle: channels
+    /// free, no deferred demand, budget headroom for the whole window,
+    /// and an arrival model with data. At most one speculative window is
+    /// outstanding, and it is only worth issuing while the stream can
+    /// still produce arrivals.
+    fn maybe_prefetch(
+        &mut self,
+        now: f64,
+        st: &mut ReactorState,
+        q: &mut EventQueue<Ev>,
+        rep: &mut MultiServeReport,
+    ) {
+        if !self.cfg.prefetch
+            || !st.pending_arrival
+            || st.prefetch.is_some()
+            || st.channels_free == 0
+            || !st.deferred.is_empty()
+        {
+            return;
+        }
+        // The predicted next tenant: idle, with the earliest predicted
+        // arrival and a known swap cost to size the speculative window.
+        let mut best: Option<(f64, f64, usize)> = None;
+        for (i, x) in self.tenants.iter().enumerate() {
+            if x.evicted || x.busy || !x.queue.is_empty() || x.last_swap_s <= 0.0 {
+                continue;
+            }
+            let (Some(next), Some(gap)) = (x.predictor.predicted_next_s(), x.predictor.gap_s())
+            else {
+                continue;
+            };
+            if gap <= 0.0 {
+                continue;
+            }
+            let better = match best {
+                Some((b, _, _)) => next < b,
+                None => true,
+            };
+            if better {
+                best = Some((next, gap, i));
+            }
+        }
+        let Some((next, gap, ti)) = best else {
+            return;
+        };
+        let window = self.blocks.window_bytes(ti);
+        let need = window.saturating_sub(self.blocks.resident_overlap_bytes(ti));
+        if window == 0 || need == 0 {
+            return; // unregistered, or the window is already resident
+        }
+        // Budget headroom gate: a prefetch must never overcommit — the
+        // whole window has to fit under the fleet budget *now*.
+        if self.mem.current().saturating_add(need) > self.cfg.total_budget {
+            return;
+        }
+        // lint: allow(alloc-pairing): the speculative charge travels in
+        // the PrefetchSlot lease; the hit/cancel paths release it.
+        let Some(a) = self.blocks.acquire_window(ti, &mut self.mem) else {
+            return;
+        };
+        let model_bytes = self.tenants[ti].model.size_bytes().max(1);
+        let swap_s = self.tenants[ti].last_swap_s * a.charged_bytes as f64 / model_bytes as f64;
+        st.next_gen += 1;
+        let done_s = now + swap_s;
+        q.push(done_s, Ev::PrefetchDone(st.next_gen));
+        st.channels_free -= 1;
+        st.prefetch_channel = Some(st.next_gen);
+        rep.prefetch_issued += 1;
+        rep.swap_busy_s += swap_s;
+        st.prefetch = Some(PrefetchSlot {
+            gen: st.next_gen,
+            tenant: ti,
+            lease: a.lease,
+            in_flight: true,
+            done_s,
+            expires_s: next.max(now) + gap,
+        });
+    }
+
     /// Run the event-driven reactor over an arrival stream (sorted by
     /// arrival time; bails otherwise). This is the only scheduler: every
     /// drive mode funnels here, so the ledger accounting, batching,
@@ -580,10 +857,19 @@ impl MultiTenantServer {
         for t in &mut self.tenants {
             t.free_at = 0.0;
             t.busy = false;
+            // The arrival model is per-run: every run restarts the
+            // virtual clock at zero, so stale gaps would mispredict.
+            t.predictor = ArrivalPredictor::new();
         }
         let channels_total = self.engine.config().pipeline.swap_channels.max(1);
-        let mut channels_free = channels_total;
-        let mut deferred: VecDeque<Batch> = VecDeque::new();
+        let mut st = ReactorState {
+            channels_free: channels_total,
+            deferred: VecDeque::new(),
+            prefetch: None,
+            prefetch_channel: None,
+            next_gen: 0,
+            pending_arrival: false,
+        };
         let mut rep = MultiServeReport::new(self.cfg.total_budget);
         rep.swap_channels = channels_total;
         if sample_dt > 0.0 {
@@ -594,13 +880,10 @@ impl MultiTenantServer {
         }
 
         let mut arrivals = arrivals;
-        // True while an Arrival event is armed in the queue (one at a
-        // time — the next is pulled when the current one fires).
-        let mut pending_arrival = false;
         let mut q: EventQueue<Ev> = EventQueue::new();
         if let Some(r) = arrivals.next() {
             q.push(r.arrival_s, Ev::Arrival(r));
-            pending_arrival = true;
+            st.pending_arrival = true;
         }
         if rep.series.is_some() {
             q.push(sample_dt, Ev::Sample);
@@ -610,6 +893,20 @@ impl MultiTenantServer {
         // may pop later; they don't extend the makespan).
         let mut clock = 0.0f64;
         while let Some((t, ev)) = q.pop() {
+            // Misprediction expiry: a completed prefetch whose predicted
+            // arrival never came gives its window back (only while the
+            // tenant truly stayed idle — materialized demand consumes the
+            // slot as a hit instead).
+            let expired = st.prefetch.as_ref().is_some_and(|p| {
+                let idle = match self.tenants.get(p.tenant) {
+                    Some(x) => !x.busy && x.queue.is_empty(),
+                    None => true,
+                };
+                !p.in_flight && t > p.expires_s && idle
+            });
+            if expired {
+                self.cancel_prefetch(&mut st, t, &mut rep);
+            }
             match ev {
                 Ev::Arrival(req) => {
                     clock = req.arrival_s;
@@ -620,27 +917,27 @@ impl MultiTenantServer {
                             }
                             q.push(r.arrival_s, Ev::Arrival(r));
                         }
-                        None => pending_arrival = false,
+                        None => st.pending_arrival = false,
+                    }
+                    // Feed the arrival model regardless of admission:
+                    // shed load still carries timing signal.
+                    if let Some(x) = self.tenants.get_mut(req.tenant) {
+                        if !x.evicted {
+                            x.predictor.observe(req.arrival_s);
+                        }
                     }
                     let deadline_ok = self.deadline_ok(&req, t);
                     if self.admit(req, deadline_ok, &mut rep) {
                         if let Some(b) = self.form_batch(req.tenant, t, &mut rep)? {
-                            if channels_free > 0 {
-                                channels_free -= 1;
-                                self.start_batch(b, t, &mut q, &mut rep);
-                            } else {
-                                rep.deferred_batches += 1;
-                                deferred.push_back(b);
-                            }
+                            self.dispatch_batch(b, t, &mut st, &mut q, &mut rep);
                         }
                     }
                 }
                 Ev::SwapInDone => {
-                    channels_free += 1;
+                    st.channels_free += 1;
                     // FIFO grant: the longest-deferred batch starts now.
-                    if let Some(b) = deferred.pop_front() {
-                        channels_free -= 1;
-                        self.start_batch(b, t, &mut q, &mut rep);
+                    if let Some(b) = st.deferred.pop_front() {
+                        self.dispatch_batch(b, t, &mut st, &mut q, &mut rep);
                     }
                 }
                 Ev::BatchDone(inf) => {
@@ -648,12 +945,22 @@ impl MultiTenantServer {
                     clock = inf.t_done;
                     self.finish_batch(*inf, &mut rep);
                     if let Some(b) = self.form_batch(ti, t, &mut rep)? {
-                        if channels_free > 0 {
-                            channels_free -= 1;
-                            self.start_batch(b, t, &mut q, &mut rep);
-                        } else {
-                            rep.deferred_batches += 1;
-                            deferred.push_back(b);
+                        self.dispatch_batch(b, t, &mut st, &mut q, &mut rep);
+                    }
+                }
+                Ev::PrefetchDone(gen) => {
+                    // Stale generations (cancelled, or channel inherited
+                    // by a demand batch) fall through: nothing to do.
+                    if st.prefetch_channel == Some(gen) {
+                        st.prefetch_channel = None;
+                        st.channels_free += 1;
+                        if let Some(p) = st.prefetch.as_mut() {
+                            if p.gen == gen {
+                                p.in_flight = false;
+                            }
+                        }
+                        if let Some(b) = st.deferred.pop_front() {
+                            self.dispatch_batch(b, t, &mut st, &mut q, &mut rep);
                         }
                     }
                 }
@@ -675,17 +982,23 @@ impl MultiTenantServer {
                         .collect();
                     let series = rep.series.as_mut().expect("sampling without a series");
                     series.push_sample(depth, shed);
-                    let work_left = pending_arrival
-                        || !deferred.is_empty()
+                    let work_left = st.pending_arrival
+                        || !st.deferred.is_empty()
                         || self.tenants.iter().any(|x| x.busy || !x.queue.is_empty());
                     if work_left {
                         q.push(t + sample_dt, Ev::Sample);
                     }
                 }
             }
+            self.maybe_prefetch(t, &mut st, &mut q, &mut rep);
         }
-        debug_assert!(deferred.is_empty(), "reactor drained with deferred batches");
+        // An outstanding speculative window at stream end is a
+        // misprediction by definition: give the budget back.
+        self.cancel_prefetch(&mut st, clock, &mut rep);
+        debug_assert!(st.deferred.is_empty(), "reactor drained with deferred batches");
 
+        rep.dedup_logical_bytes = self.blocks.logical_bytes();
+        rep.dedup_unique_bytes = self.blocks.unique_bytes();
         rep.peak_bytes = self.mem.peak();
         rep.oom_events = self.mem.oom_events;
         rep.makespan_s = clock;
@@ -778,9 +1091,4 @@ impl MultiTenantServer {
         // is already sorted for the reactor.
         self.serve_events(reqs.into_iter(), self.cfg.sample_dt_s)
     }
-}
-
-/// Deterministic synthetic block-file id for (tenant, block).
-fn block_file(tenant: usize, block: usize) -> u64 {
-    0x6000_0000 + ((tenant as u64) << 12) + block as u64
 }

@@ -98,6 +98,52 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// EWMA weight for new inter-arrival observations: heavy enough to track
+/// a rate change within a few requests, light enough that one outlier
+/// gap does not wipe the history.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Per-tenant arrival model for predictive swap-in prefetch: an EWMA
+/// over inter-arrival gaps on the virtual clock. Purely observational —
+/// it never reads a wall clock — so predictions are a deterministic
+/// function of the arrival trace, like everything else in the reactor.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArrivalPredictor {
+    last_s: Option<f64>,
+    ewma_gap_s: Option<f64>,
+}
+
+impl ArrivalPredictor {
+    pub fn new() -> ArrivalPredictor {
+        ArrivalPredictor::default()
+    }
+
+    /// Feed one arrival at virtual time `now_s` (must be monotone per
+    /// tenant, which the serve loop's sorted-arrival invariant supplies).
+    pub fn observe(&mut self, now_s: f64) {
+        if let Some(last) = self.last_s {
+            let gap = (now_s - last).max(0.0);
+            self.ewma_gap_s = Some(match self.ewma_gap_s {
+                Some(e) => e + EWMA_ALPHA * (gap - e),
+                None => gap,
+            });
+        }
+        self.last_s = Some(now_s);
+    }
+
+    /// Smoothed inter-arrival gap, once two arrivals have been seen.
+    pub fn gap_s(&self) -> Option<f64> {
+        self.ewma_gap_s
+    }
+
+    /// Predicted time of the next arrival: last arrival plus the
+    /// smoothed gap. `None` until the model has two observations — the
+    /// prefetcher stays off rather than guessing from nothing.
+    pub fn predicted_next_s(&self) -> Option<f64> {
+        Some(self.last_s? + self.ewma_gap_s?)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +198,34 @@ mod tests {
     fn nan_times_are_rejected() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn predictor_locks_onto_a_periodic_trace() {
+        let mut p = ArrivalPredictor::new();
+        assert_eq!(p.predicted_next_s(), None, "no guess before two arrivals");
+        for i in 0..20 {
+            p.observe(i as f64 * 5.0);
+        }
+        let gap = p.gap_s().expect("gap after 20 arrivals");
+        assert!((gap - 5.0).abs() < 1e-9, "periodic gap converges exactly: {gap}");
+        let next = p.predicted_next_s().expect("prediction");
+        assert!((next - 100.0).abs() < 1e-9, "next = last + gap: {next}");
+    }
+
+    #[test]
+    fn predictor_tracks_a_rate_change() {
+        let mut p = ArrivalPredictor::new();
+        let mut t = 0.0;
+        for _ in 0..10 {
+            t += 10.0;
+            p.observe(t);
+        }
+        for _ in 0..20 {
+            t += 2.0;
+            p.observe(t);
+        }
+        let gap = p.gap_s().expect("gap");
+        assert!(gap < 2.1, "EWMA converges to the new rate: {gap}");
     }
 }

@@ -145,6 +145,26 @@ pub struct MultiServeReport {
     /// Batches whose start waited in the channel-deferral FIFO because
     /// every swap channel was busy.
     pub deferred_batches: u64,
+    /// Registered bytes as tenants see them, vs bytes the
+    /// content-addressed block store actually materialized. Equal when
+    /// no tenants share content; the gap is the dedup win.
+    pub dedup_logical_bytes: u64,
+    pub dedup_unique_bytes: u64,
+    /// Batch starts whose residency window was fully resident already
+    /// (a prefetch or a concurrent same-family tenant paid the swap).
+    pub shared_hit_swapins: u64,
+    /// Batch starts that paid the full swap-in (no resident overlap).
+    pub cold_swapins: u64,
+    /// Batch starts with partial overlap — some blocks free, some paid.
+    pub warm_swapins: u64,
+    /// Predictive swap-ins the prefetcher issued.
+    pub prefetch_issued: u64,
+    /// Prefetches whose predicted tenant's demand arrived while the
+    /// prefetched window was still resident.
+    pub prefetch_hits: u64,
+    /// Prefetches cancelled on misprediction or demand pressure (their
+    /// budget and channel were returned unused).
+    pub prefetch_cancelled: u64,
     /// Virtual-clock queue-depth / shed time series (`None` unless the
     /// run sampled one).
     pub series: Option<StormSeries>,
@@ -170,6 +190,14 @@ impl MultiServeReport {
             swap_busy_s: 0.0,
             swap_channels: 0,
             deferred_batches: 0,
+            dedup_logical_bytes: 0,
+            dedup_unique_bytes: 0,
+            shared_hit_swapins: 0,
+            cold_swapins: 0,
+            warm_swapins: 0,
+            prefetch_issued: 0,
+            prefetch_hits: 0,
+            prefetch_cancelled: 0,
             series: None,
             per_model: BTreeMap::new(),
             traces: Vec::new(),
@@ -227,6 +255,29 @@ impl MultiServeReport {
         (self.shed + self.rejected) as f64 / total as f64
     }
 
+    /// Registered-but-deduplicated bytes (`logical - unique`).
+    pub fn dedup_bytes(&self) -> u64 {
+        self.dedup_logical_bytes
+            .saturating_sub(self.dedup_unique_bytes)
+    }
+
+    /// Fraction of issued prefetches whose prediction came true.
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        if self.prefetch_issued == 0 {
+            return 0.0;
+        }
+        self.prefetch_hits as f64 / self.prefetch_issued as f64
+    }
+
+    /// Fraction of batch starts that paid a fully cold swap-in.
+    pub fn cold_frac(&self) -> f64 {
+        let total = self.cold_swapins + self.warm_swapins + self.shared_hit_swapins;
+        if total == 0 {
+            return 0.0;
+        }
+        self.cold_swapins as f64 / total as f64
+    }
+
     /// Fraction of total channel-seconds the swap channels spent busy.
     pub fn swap_channel_utilization(&self) -> f64 {
         let cap = self.makespan_s * self.swap_channels as f64;
@@ -262,6 +313,18 @@ impl MultiServeReport {
             self.swap_channels,
             self.makespan_s.to_bits(),
             self.swap_busy_s.to_bits(),
+        );
+        let _ = write!(
+            k,
+            " dedup={}:{} swapins={}:{}:{} prefetch={}:{}:{}",
+            self.dedup_logical_bytes,
+            self.dedup_unique_bytes,
+            self.cold_swapins,
+            self.warm_swapins,
+            self.shared_hit_swapins,
+            self.prefetch_issued,
+            self.prefetch_hits,
+            self.prefetch_cancelled,
         );
         for (upper, count, _) in self.hist.rows() {
             let _ = write!(k, " h:{:016x}:{count}", upper.to_bits());
@@ -394,6 +457,30 @@ mod tests {
         s.push_sample(vec![7], vec![2]);
         assert_eq!(s.samples(), 2);
         assert_eq!(s.max_depth(), 7);
+    }
+
+    #[test]
+    fn dedup_and_prefetch_ratios() {
+        let mut rep = MultiServeReport::new(1000);
+        assert_eq!(rep.prefetch_hit_rate(), 0.0, "no prefetches: rate is 0");
+        assert_eq!(rep.cold_frac(), 0.0, "no batches: frac is 0");
+        rep.dedup_logical_bytes = 400;
+        rep.dedup_unique_bytes = 100;
+        assert_eq!(rep.dedup_bytes(), 300);
+        rep.cold_swapins = 1;
+        rep.warm_swapins = 2;
+        rep.shared_hit_swapins = 1;
+        assert!((rep.cold_frac() - 0.25).abs() < 1e-9);
+        rep.prefetch_issued = 4;
+        rep.prefetch_hits = 3;
+        assert!((rep.prefetch_hit_rate() - 0.75).abs() < 1e-9);
+        // The new counters are part of the determinism contract.
+        let base = MultiServeReport::new(1000).determinism_key();
+        assert_ne!(rep.determinism_key(), base);
+        rep.prefetch_cancelled += 1;
+        let with_cancel = rep.determinism_key();
+        rep.prefetch_cancelled -= 1;
+        assert_ne!(rep.determinism_key(), with_cancel);
     }
 
     #[test]

@@ -46,6 +46,19 @@ pub struct ReadReport {
     pub direct_fallback: bool,
 }
 
+/// Tag bit marking a content-addressed synthetic file id. Path-derived
+/// ids count up from 1, so the two namespaces can never collide.
+pub const CONTENT_ID_TAG: u64 = 0x8000_0000_0000_0000;
+
+/// Synthetic file id for a content-addressed block (the dedup store's
+/// hash-keyed read path, DESIGN.md §12): the id *is* the content hash,
+/// tagged into the namespace disjoint from path-registered ids. Every
+/// tenant whose block carries this hash reads — and caches — the same
+/// file.
+pub fn content_file_id(hash: u64) -> u64 {
+    hash | CONTENT_ID_TAG
+}
+
 /// Block store: file-id registry + the page cache + channel cost model.
 pub struct Storage {
     pub cache: PageCache,
@@ -73,6 +86,21 @@ impl Storage {
         self.next_file += 1;
         self.file_ids.insert(path.to_path_buf(), id);
         id
+    }
+
+    /// Cost-model read of a content-addressed block by its hash — the
+    /// hash-keyed twin of [`read_sim`](Self::read_sim). Two tenants
+    /// reading the same hash touch the same pages, so the second one
+    /// runs warm on the buffered channel.
+    pub fn read_content_sim(
+        &mut self,
+        hash: u64,
+        bytes: u64,
+        channel: Channel,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+    ) -> ReadReport {
+        self.read_sim(content_file_id(hash), bytes, channel, mem, prof)
     }
 
     /// Cost-model-only read of `bytes` from a synthetic file id (used by
@@ -380,6 +408,29 @@ mod tests {
         assert_eq!(a, data);
         assert_eq!(b, data);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn content_ids_stay_disjoint_from_path_ids() {
+        let mut st = Storage::new(64 * MB);
+        let pid = st.file_id(Path::new("/models/a/block0.bin"));
+        assert_eq!(pid & CONTENT_ID_TAG, 0, "path ids live below the tag bit");
+        assert_ne!(content_file_id(0), pid);
+        assert_ne!(content_file_id(pid), pid);
+        assert_eq!(content_file_id(42), content_file_id(42), "pure function of the hash");
+    }
+
+    #[test]
+    fn content_reads_share_one_cache_entry() {
+        // Two tenants, one content hash: the second buffered read runs
+        // warm off the first one's pages.
+        let mut st = Storage::new(64 * MB);
+        let mut mem = MemSim::new(u64::MAX);
+        let p = prof();
+        let cold = st.read_content_sim(0xfeed, 8 * MB, Channel::Buffered, &mut mem, &p);
+        assert!(cold.cache_misses > 0);
+        let warm = st.read_content_sim(0xfeed, 8 * MB, Channel::Buffered, &mut mem, &p);
+        assert_eq!(warm.cache_misses, 0, "same hash, same pages");
     }
 
     #[test]

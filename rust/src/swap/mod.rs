@@ -26,7 +26,7 @@ use crate::config::{DeviceProfile, Processor};
 use crate::hostmem::{BlockBuffer, BufferPool, PooledBuf};
 use crate::memsim::{AllocId, MemSim, Space};
 use crate::model::BlockInfo;
-use crate::storage::{Channel, ReadReport, Storage};
+use crate::storage::{content_file_id, Channel, ReadReport, Storage};
 
 /// Which swap-in implementation to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +106,22 @@ impl SwapController {
             cache_hits: report.cache_hits,
             cache_misses: report.cache_misses,
         }
+    }
+
+    /// Swap a block in by content hash (the dedup store's hash-keyed
+    /// read path): resolves the hash to its content-addressed file id,
+    /// so two tenants whose blocks share a hash read the same synthetic
+    /// file — and, on the buffered channel, the same page-cache entry.
+    pub fn swap_in_content(
+        &self,
+        block: &BlockInfo,
+        hash: u64,
+        proc: Processor,
+        storage: &mut Storage,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+    ) -> ResidentBlock {
+        self.swap_in_sim(block, content_file_id(hash), proc, storage, mem, prof)
     }
 
     /// Swap a block in from a real parameter file (artifact execution):
@@ -353,6 +369,20 @@ mod tests {
         let gpu = ctl.swap_in_sim(&block(80), 1, Processor::Gpu, &mut st, &mut mem, &prof);
         let cpu = ctl.swap_in_sim(&block(80), 2, Processor::Cpu, &mut st, &mut mem, &prof);
         assert!((gpu.swap_in_s - cpu.swap_in_s).abs() < 1e-3);
+    }
+
+    #[test]
+    fn content_keyed_swap_ins_share_pages_across_tenants() {
+        // Two controllers (two tenants), one content hash: the second
+        // buffered swap-in runs warm off the first one's cached pages.
+        let (mut st, mut mem, prof) = setup();
+        let a = SwapController::new(SwapMode::Standard, "a");
+        let b = SwapController::new(SwapMode::Standard, "b");
+        let cold = a.swap_in_content(&block(16), 0xfeed, Processor::Cpu, &mut st, &mut mem, &prof);
+        assert!(cold.cache_misses > 0);
+        let warm = b.swap_in_content(&block(16), 0xfeed, Processor::Cpu, &mut st, &mut mem, &prof);
+        assert_eq!(warm.cache_misses, 0, "same content hash, same pages");
+        assert!(warm.swap_in_s < cold.swap_in_s);
     }
 
     #[test]

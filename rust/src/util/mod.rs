@@ -3,6 +3,7 @@
 //! and a micro bench harness used by the `benches/` binaries.
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -324,7 +324,11 @@ impl<'a> Checker<'a> {
         if let Some(b) = (0..self.n).find(|&b| phase(state, b) == NOT_STARTED) {
             let in_flight =
                 (0..self.n).filter(|&j| phase(state, j) == SWAP_IN_FLIGHT).count();
-            let gate_ok = if b >= self.residency_m {
+            let gate_ok = if self.disc.prefetch_ignores_residency {
+                // Buggy-prefetcher defect: speculative swap-ins skip the
+                // residency gate entirely; only the channel gate holds.
+                true
+            } else if b >= self.residency_m {
                 (0..=b - self.residency_m).all(|j| {
                     if self.disc.gate_on_swap_out_start {
                         // PR 3 defect: the loader advanced on swap-out

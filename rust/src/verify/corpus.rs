@@ -124,5 +124,23 @@ pub fn cases() -> Vec<CorpusCase> {
         healthy_claimed_peak_bytes: 40,
     });
 
+    // PR 9 guard: a prefetcher that overcommits — speculative swap-ins
+    // issued without the residency gate. On one channel the swap-ins
+    // still serialize, so the minimal trace is in-start/in-done for b0
+    // and b1 (4 events) plus b2's in-start: three charged-and-unfreed
+    // blocks under claimed m=2. The shipped prefetcher cannot reach this
+    // state (it acquires leased windows under the same gate as demand);
+    // this case proves the checker would catch one that tried.
+    out.push(CorpusCase {
+        name: "prefetch_overcommit",
+        note: "speculative swap-ins issued past the residency window: \
+               3 live buffers under claimed m=2",
+        program: base("prefetch_overcommit", vec![100, 100, 100], 220, 200),
+        discipline: Discipline { prefetch_ignores_residency: true, ..Discipline::default() },
+        expected_kind: "residency-exceeded",
+        expected_trace_len: 5,
+        healthy_claimed_peak_bytes: 200,
+    });
+
     out
 }

@@ -111,6 +111,11 @@ pub struct Discipline {
     /// Pinned-KV growth is charged without the `try_grow_pinned` fit
     /// check (overcommit instead of shed).
     pub unchecked_kv_growth: bool,
+    /// Speculative swap-ins ignore the residency window: a prefetcher
+    /// that begins block i's swap-in before block i-m drained (the
+    /// defect the PR 9 prefetcher's budget/lease gates exist to
+    /// prevent — only the channel gate survives).
+    pub prefetch_ignores_residency: bool,
 }
 
 impl Discipline {

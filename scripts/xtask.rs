@@ -4,17 +4,21 @@
 //!
 //!   A  alloc-pairing   every non-test fn that acquires ledger memory
 //!                      (`.alloc(`, `try_alloc_pinned(`,
-//!                      `acquire_residency(`) must also release it
-//!                      (`free(`, `release_residency(`, `swap_out(`,
-//!                      `disassemble(`) or hand the id out through its
-//!                      signature (`AllocId` / `ResidentBlock`).
+//!                      `acquire_residency(`, `acquire_window(`) must
+//!                      also release it (`free(`, `release_residency(`,
+//!                      `swap_out(`, `disassemble(`, `release_window(`)
+//!                      or hand the id out through its signature
+//!                      (`AllocId` / `ResidentBlock` / `WindowLease` /
+//!                      `WindowAcquire`).
 //!   B  heap-alloc      no `Vec::with_capacity` / `vec!` / `.to_vec()` /
 //!                      `Box::new` in steady-state swap-path modules
-//!                      (hostmem, storage, swap, pipeline::real) — the
-//!                      buffer pool is the only steady-state allocator.
+//!                      (hostmem, storage, swap, pipeline::real,
+//!                      blockstore) — the buffer pool is the only
+//!                      steady-state allocator.
 //!   C  wall-clock      no `thread::spawn` / `Instant::now` in
 //!                      virtual-clock modules (server::reactor,
-//!                      server::multi, llm) — determinism depends on it.
+//!                      server::multi, llm, blockstore) — determinism
+//!                      depends on it.
 //!
 //! Suppress a finding with a justification comment on any line of the
 //! offending fn (rule A) or anywhere above the offending line (B, C):
@@ -31,9 +35,11 @@ use std::fs;
 use std::path::Path;
 use std::process::ExitCode;
 
-const ACQUIRE_TOKENS: &[&str] = &[".alloc(", "try_alloc_pinned(", "acquire_residency("];
-const RELEASE_TOKENS: &[&str] = &["free(", "release_residency(", "swap_out(", "disassemble("];
-const ESCAPE_TYPES: &[&str] = &["AllocId", "ResidentBlock"];
+const ACQUIRE_TOKENS: &[&str] =
+    &[".alloc(", "try_alloc_pinned(", "acquire_residency(", "acquire_window("];
+const RELEASE_TOKENS: &[&str] =
+    &["free(", "release_residency(", "swap_out(", "disassemble(", "release_window("];
+const ESCAPE_TYPES: &[&str] = &["AllocId", "ResidentBlock", "WindowLease", "WindowAcquire"];
 
 /// Rule B scope: the modules a swap traverses on every steady-state
 /// block movement. Pool buffers are recycled; any other heap allocation
@@ -43,13 +49,18 @@ const HEAP_FREE_FILES: &[&str] = &[
     "rust/src/storage/mod.rs",
     "rust/src/swap/mod.rs",
     "rust/src/pipeline/real.rs",
+    "rust/src/blockstore/mod.rs",
 ];
 const HEAP_TOKENS: &[&str] = &["Vec::with_capacity", "vec!", ".to_vec()", "Box::new"];
 
 /// Rule C scope: modules whose correctness proofs assume the virtual
 /// clock is the only clock.
-const CLOCK_FILES: &[&str] =
-    &["rust/src/server/reactor.rs", "rust/src/server/multi.rs", "rust/src/llm/mod.rs"];
+const CLOCK_FILES: &[&str] = &[
+    "rust/src/server/reactor.rs",
+    "rust/src/server/multi.rs",
+    "rust/src/llm/mod.rs",
+    "rust/src/blockstore/mod.rs",
+];
 const CLOCK_TOKENS: &[&str] = &["thread::spawn", "Instant::now"];
 
 struct Finding {
