@@ -1,16 +1,27 @@
 //! Fig 9 reproduction: profiling the four device-dependent coefficients
 //! (alpha, beta, gamma, eta) via linear regression over measured sweeps,
 //! for both device profiles.
+//!
+//! `--json <path>` emits the per-device fit errors as machine-readable
+//! metrics (deterministic: the sweep is seeded); `--smoke` shrinks the
+//! sweep for CI; `--no-wall` drops the wall-clock metric.
+
+use std::time::Instant;
 
 use swapnet::config::DeviceProfile;
 use swapnet::delay::profiler;
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
 use swapnet::util::table;
 
 fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("fig9_regression");
     println!("=== Fig 9: coefficient profiling via linear regression ===\n");
+    let t0 = Instant::now();
+    let sweep_n = if args.smoke { 80 } else { 400 };
     let mut rows = Vec::new();
     for dev in [DeviceProfile::jetson_nx(), DeviceProfile::jetson_nano()] {
-        let sweep = profiler::measure_sweep(&dev, 400, 0.03, 42);
+        let sweep = profiler::measure_sweep(&dev, sweep_n, 0.03, 42);
         let fit = profiler::fit(&sweep);
         let rel = |f: f64, t: f64| 100.0 * (f - t).abs() / t;
         rows.push(vec![
@@ -40,10 +51,22 @@ fn main() {
         ]);
         assert!(rel(fit.alpha_s_per_byte, dev.alpha_s_per_byte) < 10.0);
         assert!(rel(fit.gamma_s_per_flop, dev.gamma_cpu_s_per_flop) < 10.0);
+        // Lower-is-better fit errors, +1 so a perfect fit still gates.
+        let tag = dev.name.replace(' ', "_").to_lowercase();
+        emit.metric(
+            &format!("dev_fig9_{tag}_alpha_err_pct_plus1"),
+            1.0 + rel(fit.alpha_s_per_byte, dev.alpha_s_per_byte),
+        );
+        emit.metric(
+            &format!("dev_fig9_{tag}_gamma_err_pct_plus1"),
+            1.0 + rel(fit.gamma_s_per_flop, dev.gamma_cpu_s_per_flop),
+        );
     }
     println!(
         "{}",
         table::render(&["device", "alpha (s/B)", "beta", "gamma (s/FLOP)", "eta"], &rows)
     );
     println!("paper check: beta lands in the measured 50-55 us band; fits are linear (high R^2)");
+    emit.metric("wall_fig9_s", t0.elapsed().as_secs_f64());
+    emit.finish(&args).expect("write bench json");
 }

@@ -1,0 +1,240 @@
+//! Micro-bench: planner-chosen swap codecs and sub-block tiling,
+//! emitted as deterministic `dev_*` metrics for the CI bench gate.
+//!
+//! 1. **Wire bytes** — a Compressed swap-in must move >=30% fewer bytes
+//!    than Plain, at the swap layer (simulated channel), on a real
+//!    compressed block file, and end-to-end through an engine run.
+//! 2. **`auto` never loses** — the variant DP searches a superset of the
+//!    Plain-only space, so at every budget where `--codec off` plans,
+//!    `--codec auto` must plan at most as slow; on the NX (fast
+//!    decompressor) it wins outright, on the nano (slow decompressor)
+//!    it must fall back to Plain with zero regret.
+//! 3. **Tiling lowers the floor** — the minimal feasible budget under
+//!    `--tile-max 8` must be strictly below the plain floor.
+//! 4. **Zero-alloc steady state** — warm compressed swap-ins decompress
+//!    in place inside recycled pool slots: `alloc_events` must not move.
+//!
+//! Everything asserted here is a pure cost-model / codec output —
+//! bitwise deterministic. `--json <path>` emits machine-readable
+//! metrics; `--no-wall` strips the wall-clock metric so two emissions
+//! byte-compare; `--smoke` trims the budget sweep.
+
+// A failed unwrap IS the failure signal at this grain; the workspace
+// unwrap ban (clippy::unwrap_used) is aimed at production code paths.
+#![allow(clippy::unwrap_used)]
+
+use std::time::Instant;
+
+use swapnet::config::{DeviceProfile, Processor, MB};
+use swapnet::engine::Engine;
+use swapnet::hostmem::{aligned_len, BufferPool};
+use swapnet::memsim::MemSim;
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
+use swapnet::model::{families, BlockInfo};
+use swapnet::pipeline::{CodecMode, PipelineSpec, SwapVariant, VariantPolicy};
+use swapnet::planner::Planner;
+use swapnet::scheduler;
+use swapnet::storage::{write_compressed_file, Storage};
+use swapnet::swap::{SwapController, SwapMode};
+
+const AUTO: VariantPolicy = VariantPolicy { codec: CodecMode::Auto, tile_max: 1 };
+
+fn block(size_mb: u64) -> BlockInfo {
+    BlockInfo {
+        index: 0,
+        layer_lo: 0,
+        layer_hi: 3,
+        size_bytes: size_mb * MB,
+        depth: 12,
+        flops: 1_000_000,
+    }
+}
+
+/// Structured, quantized-weight-like payload: compressible but not
+/// trivial (period 5 run structure over 31 symbols).
+fn compressible_payload(len: usize) -> Vec<u8> {
+    (0..len).map(|i| ((i / 5) % 31) as u8).collect()
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("micro_codec");
+    println!("=== micro: swap codecs + sub-block tiling ===\n");
+    let t0 = Instant::now();
+    let nx = DeviceProfile::jetson_nx();
+    let spec = PipelineSpec::default();
+
+    // ---- 1a. simulated channel: wire bytes at the planned ratio ---------
+    let mut st = Storage::new(512 * MB);
+    let mut mem = MemSim::new(8_000 * MB);
+    let ctl = SwapController::new(SwapMode::ZeroCopy, "bench");
+    let plain = ctl.swap_in_sim(&block(100), 1, Processor::Cpu, &mut st, &mut mem, &nx);
+    let lz = ctl.swap_in_sim_variant(
+        &block(100),
+        2,
+        Processor::Cpu,
+        SwapVariant::Compressed,
+        &mut st,
+        &mut mem,
+        &nx,
+    );
+    let sim_ratio = lz.io_bytes as f64 / plain.io_bytes as f64;
+    println!(
+        "sim channel, 100 MB block: plain {} B / lz {} B on the wire (ratio {:.3}); \
+         swap-in {:.1} ms -> {:.1} ms",
+        plain.io_bytes,
+        lz.io_bytes,
+        sim_ratio,
+        plain.swap_in_s * 1e3,
+        lz.swap_in_s * 1e3
+    );
+    assert!(sim_ratio <= 0.7, ">=30% fewer bytes required: {sim_ratio}");
+    assert!(lz.swap_in_s < plain.swap_in_s, "the NX decompressor must beat the IO it saves");
+    emit.metric("dev_codec_sim_bytes_ratio", sim_ratio);
+    ctl.swap_out(plain, &mut mem, &nx);
+    ctl.swap_out(lz, &mut mem, &nx);
+
+    // ---- 1b. real codec on a compressible block file --------------------
+    let dir = std::env::temp_dir().join(format!("swapnet-codec-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let payload = compressible_payload(1 << 20);
+    let plain_path = dir.join("b.bin");
+    let lz_path = dir.join("b.lz");
+    std::fs::write(&plain_path, &payload).unwrap();
+    let clen = write_compressed_file(&lz_path, &payload).unwrap();
+    let file_ratio = clen as f64 / payload.len() as f64;
+    println!(
+        "real codec, 1 MB quantized-weight payload: {clen} B compressed (ratio {file_ratio:.3})"
+    );
+    assert!(file_ratio <= 0.7, ">=30% fewer file bytes required: {file_ratio}");
+    emit.metric("dev_codec_file_bytes_ratio", file_ratio);
+
+    // ---- 1c + 4. pooled file path: bitwise equality, zero-alloc warm loop
+    let mut b = block(1);
+    b.size_bytes = payload.len() as u64;
+    let pool = BufferPool::new(aligned_len(payload.len()) + aligned_len(clen as usize), 2);
+    let p = ctl
+        .swap_in_file_pooled(&b, &plain_path, Processor::Cpu, &mut st, &mut mem, &nx, &pool)
+        .unwrap();
+    let c = ctl
+        .swap_in_file_compressed(&b, &lz_path, Processor::Cpu, &mut st, &mut mem, &nx, &pool)
+        .unwrap();
+    let mismatch = u64::from(p.data.as_slice() != c.data.as_slice());
+    assert_eq!(mismatch, 0, "decompressed payload must be bitwise identical");
+    emit.metric("dev_codec_bitwise_mismatch_plus1", (mismatch + 1) as f64);
+    ctl.swap_out(p, &mut mem, &nx);
+    ctl.swap_out(c, &mut mem, &nx);
+    let warm0 = pool.stats().alloc_events;
+    for _ in 0..8 {
+        let rb = ctl
+            .swap_in_file_compressed(&b, &lz_path, Processor::Cpu, &mut st, &mut mem, &nx, &pool)
+            .unwrap();
+        assert!(rb.data.is_pooled());
+        ctl.swap_out(rb, &mut mem, &nx);
+    }
+    let steady = pool.stats().alloc_events - warm0;
+    println!(
+        "8 warm compressed swap-ins through the pool: {steady} heap allocations \
+         ({} checkouts, {} reuses)",
+        pool.stats().checkouts,
+        pool.stats().reuses
+    );
+    assert_eq!(steady, 0, "in-place decompress must not allocate in steady state");
+    emit.metric("dev_codec_steady_alloc_plus1", (steady + 1) as f64);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // ---- 1d. end-to-end: engine run moves fewer wire bytes under auto ---
+    let budget = 120 * MB;
+    let e2e = |policy: VariantPolicy| -> u64 {
+        let engine = Engine::builder().device(nx.clone()).variant_policy(policy).build();
+        let h = engine.register_with_budget(families::resnet101(), budget).unwrap();
+        h.infer_sim().unwrap().swap_bytes
+    };
+    let off_bytes = e2e(VariantPolicy::default());
+    let auto_bytes = e2e(AUTO);
+    let e2e_ratio = auto_bytes as f64 / off_bytes as f64;
+    println!(
+        "end-to-end resnet101 @ {} MB: {off_bytes} B swapped under off, {auto_bytes} B \
+         under auto (ratio {e2e_ratio:.3})",
+        budget / MB
+    );
+    assert!(e2e_ratio <= 0.7, "auto must cut end-to-end wire bytes >=30%: {e2e_ratio}");
+    emit.metric("dev_codec_e2e_bytes_ratio", e2e_ratio);
+
+    // ---- 2. auto never slower than off, per device -----------------------
+    let budgets_mb: &[u64] =
+        if args.smoke { &[128, 256] } else { &[96, 128, 192, 256, 512, 1024] };
+    let mut nx_ratio_at_tightest = f64::NAN;
+    for model in [families::resnet101(), families::vgg19()] {
+        let mut off_p = Planner::analytic(&nx);
+        let mut auto_p = Planner::analytic(&nx).with_policy(AUTO);
+        for &mb in budgets_mb {
+            let Ok(off) = off_p.plan(&model, mb * MB, &spec) else { continue };
+            let auto = auto_p
+                .plan(&model, mb * MB, &spec)
+                .expect("auto searches a superset: every off-feasible budget stays feasible");
+            assert!(
+                auto.predicted_latency_s <= off.predicted_latency_s + 1e-9,
+                "{} @ {mb} MB: auto {} s vs off {} s",
+                model.name,
+                auto.predicted_latency_s,
+                off.predicted_latency_s
+            );
+            if nx_ratio_at_tightest.is_nan() {
+                nx_ratio_at_tightest = auto.predicted_latency_s / off.predicted_latency_s;
+                println!(
+                    "{} @ {mb} MB (tightest feasible): auto/off latency ratio {:.3}, \
+                     variants {:?}",
+                    model.name,
+                    nx_ratio_at_tightest,
+                    auto.variants.first()
+                );
+                assert!(
+                    auto.variants.iter().any(|v| matches!(v, SwapVariant::Compressed)),
+                    "the NX swap-bound regime must use the codec"
+                );
+            }
+        }
+    }
+    assert!(nx_ratio_at_tightest <= 1.0);
+    emit.metric("dev_codec_auto_over_off_latency_ratio", nx_ratio_at_tightest);
+
+    // On the nano the decompressor is slower than the PCIe bytes it
+    // saves, so auto must pick Plain everywhere — zero regret vs off.
+    let nano = DeviceProfile::jetson_nano();
+    let m = families::resnet101();
+    let off = Planner::analytic(&nano).plan(&m, 256 * MB, &spec).unwrap();
+    let auto = Planner::analytic(&nano).with_policy(AUTO).plan(&m, 256 * MB, &spec).unwrap();
+    assert!(
+        auto.variants.iter().all(|v| matches!(v, SwapVariant::Plain)),
+        "nano decompress loses; auto must fall back to plain: {:?}",
+        auto.variants
+    );
+    let regret = (auto.predicted_latency_s - off.predicted_latency_s).max(0.0);
+    assert!(regret < 1e-12, "auto regret on the nano: {regret}");
+    println!("nano @ 256 MB: auto falls back to plain, regret {regret:.1e} s");
+    emit.metric("dev_codec_nano_auto_regret_plus1", 1.0 + regret);
+
+    // ---- 3. tiling strictly lowers the minimal feasible budget ----------
+    let tiled_policy = VariantPolicy { codec: CodecMode::Off, tile_max: 8 };
+    let model = families::vgg19();
+    let plain_floor = scheduler::minimal_budget_spec(&model, &spec);
+    let tiled_floor = scheduler::minimal_budget_policy(&model, &spec, tiled_policy);
+    let floor_frac = tiled_floor as f64 / plain_floor as f64;
+    println!(
+        "vgg19 minimal feasible budget: {} MB plain -> {} MB with --tile-max 8 (frac {:.3})",
+        plain_floor / MB,
+        tiled_floor / MB,
+        floor_frac
+    );
+    assert!(tiled_floor < plain_floor, "tiling must strictly lower the floor");
+    emit.metric("dev_codec_tiled_floor_frac", floor_frac);
+
+    emit.metric("wall_codec_s", t0.elapsed().as_secs_f64());
+    emit.finish(&args).expect("write bench json");
+    println!(
+        "\ncodec invariants hold: >=30% fewer wire bytes, auto never loses, tiled floor \
+         {:.0}% of plain, 0 steady-state allocations",
+        floor_frac * 100.0
+    );
+}

@@ -2,12 +2,18 @@
 //! remaining budget for DNN tasks on the autonomous-vehicle platform.
 //! Paper: OS 1038 MB / SLAM 1815 / Map 1229 / Video 488 / CUDA 1518,
 //! remaining 2104 MB (25.7% of 8 GB).
+//!
+//! `--json <path>` emits the remaining-budget check as a metric;
+//! `--smoke` is accepted for CLI uniformity (the table is already tiny).
 
 use swapnet::config::MB;
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
 use swapnet::util::table;
 use swapnet::workload;
 
 fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("table1_budget");
     println!("=== Table 1: non-DNN memory allocation (paper §2.1) ===\n");
     let tasks = workload::table1_non_dnn();
     let total = 8192 * MB;
@@ -30,4 +36,10 @@ fn main() {
     println!("{}", table::render(&["Tasks", "Memory Usage", "Percentage"], &rows));
     assert_eq!((total - used) / MB, 2104, "Table 1 remaining must match paper");
     println!("paper check: remaining 2104 MB (25.7%) -- MATCH");
+    // Paper-drift tripwire: |remaining - 2104| + 1, gated at exactly 1.
+    emit.metric(
+        "dev_table1_remaining_drift_mb_plus1",
+        1.0 + ((total - used) / MB).abs_diff(2104) as f64,
+    );
+    emit.finish(&args).expect("write bench json");
 }

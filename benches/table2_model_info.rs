@@ -2,15 +2,21 @@
 //! (per-layer size / parameter depth / FLOPs) that SwapNet profiles into
 //! a meta file for the scheduler. Paper shows e.g. Layer1 0.38 MB /
 //! depth 1 / 26.2 MFLOPs ... Layer101 17.45 MB.
+//!
+//! `--json <path>` emits each family's total-size drift vs the paper's
+//! reported footprint; `--smoke` is accepted for CLI uniformity.
 
 // A failed unwrap IS the failure signal at this grain; the workspace
 // unwrap ban (clippy::unwrap_used) is aimed at production code paths.
 #![allow(clippy::unwrap_used)]
 
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
 use swapnet::model::families;
 use swapnet::util::table;
 
 fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("table2_model_info");
     println!("=== Table 2: model info tables (paper §6.1) ===\n");
     for name in ["resnet101", "vgg19", "yolov3", "fcn"] {
         let m = families::by_name(name).unwrap();
@@ -31,6 +37,12 @@ fn main() {
                 rows.push(vec!["...".into(), "...".into(), "...".into(), "...".into()]);
             }
         }
+        let paper_mb = match name {
+            "resnet101" => 170,
+            "vgg19" => 548,
+            "yolov3" => 236,
+            _ => 207,
+        };
         println!("{name}:");
         println!("{}", table::render(&["Layer", "Size", "Depth", "FLOPs"], &rows));
         println!(
@@ -38,12 +50,11 @@ fn main() {
             m.size_bytes() as f64 / 1e6,
             m.layers.len(),
             m.total_flops() as f64 / 1e9,
-            match name {
-                "resnet101" => 170,
-                "vgg19" => 548,
-                "yolov3" => 236,
-                _ => 207,
-            }
+            paper_mb
         );
+        // Relative footprint drift vs the paper's table, lower-is-better.
+        let drift = (m.size_bytes() as f64 / 1e6 - paper_mb as f64).abs() / paper_mb as f64;
+        emit.metric(&format!("dev_table2_{name}_size_drift_frac_plus1"), 1.0 + drift);
     }
+    emit.finish(&args).expect("write bench json");
 }

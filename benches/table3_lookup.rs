@@ -2,16 +2,24 @@
 //! candidate partition points with max memory ("exceed" when Eq. 3
 //! fails) and predicted latency ("null" when infeasible). Paper shows
 //! e.g. (30,66) -> 105 MB / 496 ms with extremes exceeding.
+//!
+//! `--json <path>` emits the best feasible row's cost-model outputs
+//! (deterministic); `--smoke` is accepted for CLI uniformity (one n=3
+//! table builds in milliseconds); `--no-wall` drops the build-time
+//! metric so two emissions byte-compare.
 
 use std::time::Instant;
 
 use swapnet::config::{DeviceProfile, MB};
 use swapnet::delay::DelayModel;
+use swapnet::metrics::emit::{BenchArgs, BenchEmitter};
 use swapnet::model::families;
 use swapnet::scheduler::partition;
 use swapnet::util::table;
 
 fn main() {
+    let args = BenchArgs::parse();
+    let mut emit = BenchEmitter::new("table3_lookup");
     println!("=== Table 3: 3-block ResNet-101 lookup table (paper §6.2.2) ===\n");
     let m = families::resnet101();
     let dm = DelayModel::from_profile(&DeviceProfile::jetson_nx());
@@ -65,14 +73,20 @@ fn main() {
         budget / MB
     );
     match t.best_within(usable) {
-        Some(b) => println!(
-            "best: {:?} -> {} MB, {:.0} ms (paper: ~(30,67) -> 109 MB, 488 ms)",
-            b.points,
-            b.max_mem_bytes / MB,
-            b.predicted_latency_s * 1e3
-        ),
+        Some(b) => {
+            println!(
+                "best: {:?} -> {} MB, {:.0} ms (paper: ~(30,67) -> 109 MB, 488 ms)",
+                b.points,
+                b.max_mem_bytes / MB,
+                b.predicted_latency_s * 1e3
+            );
+            emit.metric("dev_table3_best_mem_bytes", b.max_mem_bytes as f64);
+            emit.metric("dev_table3_best_latency_s", b.predicted_latency_s);
+        }
         None => println!("no feasible 3-block row"),
     }
     assert!(!feasible.is_empty());
     assert!(feasible.len() < t.rows.len(), "some rows must exceed");
+    emit.metric("wall_table3_build_s", build_s);
+    emit.finish(&args).expect("write bench json");
 }

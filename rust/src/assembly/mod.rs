@@ -300,6 +300,55 @@ mod tests {
     }
 
     #[test]
+    fn skeleton_params_identical_across_plain_and_compressed_swap_in() {
+        use crate::config::Processor;
+        use crate::hostmem::{aligned_len, BufferPool};
+        use crate::storage::{write_compressed_file, Storage};
+        use crate::swap::{SwapController, SwapMode};
+
+        let dir = std::env::temp_dir().join(format!("swapnet-asm-lz-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let b = block(1, 8);
+        // Quantized-weight-like payload: structured, compressible.
+        let bytes: Vec<u8> = (0..b.size_bytes).map(|i| ((i / 3) % 29) as u8).collect();
+        let plain_path = dir.join("b.bin");
+        let lz_path = dir.join("b.lz");
+        std::fs::write(&plain_path, &bytes).unwrap();
+        let clen = write_compressed_file(&lz_path, &bytes).unwrap();
+
+        let mut st = Storage::new(64 * MB);
+        let mut mem = MemSim::new(u64::MAX);
+        let prof = DeviceProfile::jetson_nx();
+        let ctl = SwapController::new(SwapMode::ZeroCopy, "m");
+        let pool = BufferPool::new(aligned_len(bytes.len()) + aligned_len(clen as usize), 2);
+        let plain = ctl
+            .swap_in_file_pooled(&b, &plain_path, Processor::Cpu, &mut st, &mut mem, &prof, &pool)
+            .unwrap();
+        let lz = ctl
+            .swap_in_file_compressed(&b, &lz_path, Processor::Cpu, &mut st, &mut mem, &prof, &pool)
+            .unwrap();
+
+        // Assemble both buffers against the same skeleton: every
+        // registered tensor view must be bitwise identical — the codec
+        // is invisible above the swap layer.
+        let actl = AssemblyController::new(AssemblyMode::ByReference, "m");
+        let sk = synthetic_skeleton(&b);
+        let ab_plain =
+            actl.assemble(&b, &sk, plain.data.as_slice().len(), &mut mem, &prof).unwrap();
+        let ab_lz = actl.assemble(&b, &sk, lz.data.as_slice().len(), &mut mem, &prof).unwrap();
+        assert_eq!(ab_plain.params.len(), ab_lz.params.len());
+        for (p, q) in ab_plain.params.iter().zip(&ab_lz.params) {
+            assert_eq!(
+                param_slice(plain.data.as_slice(), p),
+                param_slice(lz.data.as_slice(), q),
+                "{}: assembled tensor bytes must not depend on the swap codec",
+                p.name
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn param_slice_views_pooled_buffer_payload() {
         use crate::hostmem::BlockBuffer;
         let b = block(1, 4);

@@ -32,6 +32,7 @@ use std::collections::HashMap;
 
 use crate::memsim::{AllocId, MemSim, Space};
 use crate::model::ModelInfo;
+use crate::pipeline::SwapVariant;
 use crate::util::hash::fnv1a;
 
 /// Ledger tag for shared resident block slots.
@@ -55,7 +56,31 @@ pub fn file_id(hash: u64) -> u64 {
     crate::storage::content_file_id(hash)
 }
 
-/// One block reference: content hash plus its byte size.
+/// Namespace word folded into a block's content hash when the stored
+/// file holds its codec-compressed image (DESIGN.md §13): the plain and
+/// compressed representations have different bytes on disk, so they must
+/// never alias one content-addressed file — while two tenants choosing
+/// Compressed for the same slice still dedup to one compressed file.
+pub const CODEC_TAG: u64 = 0x434f_4445; // "CODE"
+
+/// Content hash of one block *as stored* under `variant`. Plain and
+/// Tiled read the untransformed file (tiling only changes the transfer
+/// granularity), so only Compressed leaves the plain namespace.
+pub fn codec_hash(hash: u64, variant: SwapVariant) -> u64 {
+    match variant {
+        SwapVariant::Compressed => fnv1a([hash, CODEC_TAG]),
+        SwapVariant::Plain | SwapVariant::Tiled { .. } => hash,
+    }
+}
+
+/// Storage file id for a block stored under `variant`.
+pub fn variant_file_id(hash: u64, variant: SwapVariant) -> u64 {
+    crate::storage::content_file_id(codec_hash(hash, variant))
+}
+
+/// One block reference: content hash (codec-tagged for compressed
+/// storage) plus the bytes its resident copy occupies — the variant's
+/// working set, not necessarily the full block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlockRef {
     pub hash: u64,
@@ -66,7 +91,11 @@ pub struct BlockRef {
 /// copy, shared by every tenant whose chain contains this exact slice.
 #[derive(Debug)]
 struct Entry {
+    /// Resident (decompressed working-set) bytes one lease charges.
     bytes: u64,
+    /// Bytes the content file occupies on disk (wire bytes for
+    /// compressed storage; equal to `bytes` for plain).
+    file_bytes: u64,
     file: u64,
     disk_refs: u32,
     resident_refs: u32,
@@ -141,9 +170,9 @@ impl BlockStore {
 
     /// Register (or re-register after a rebudget) tenant `tenant`'s
     /// blocks: the partition `points` of `model`, windowed to the first
-    /// `residency_m` blocks. Existing refs for the tenant are released
-    /// first, so calling this after every re-plan is idempotent for an
-    /// unchanged partition.
+    /// `residency_m` blocks, with every block stored and charged Plain.
+    /// Existing refs for the tenant are released first, so calling this
+    /// after every re-plan is idempotent for an unchanged partition.
     pub fn sync_tenant(
         &mut self,
         tenant: usize,
@@ -151,7 +180,32 @@ impl BlockStore {
         points: &[usize],
         residency_m: usize,
     ) -> Result<SyncStats, String> {
+        self.sync_tenant_variants(tenant, model, points, residency_m, &[])
+    }
+
+    /// [`sync_tenant`](Self::sync_tenant) with the planner's per-block
+    /// swap variants: compressed blocks register their codec-tagged
+    /// content file at wire bytes (dedup still applies across clones
+    /// that chose the same variant), tiled blocks charge their tile
+    /// working set at residency instead of the full block. `variants`
+    /// must be empty (all-Plain) or one per block.
+    pub fn sync_tenant_variants(
+        &mut self,
+        tenant: usize,
+        model: &ModelInfo,
+        points: &[usize],
+        residency_m: usize,
+        variants: &[SwapVariant],
+    ) -> Result<SyncStats, String> {
         let blocks = model.create_blocks(points)?;
+        if !variants.is_empty() && variants.len() != blocks.len() {
+            return Err(format!(
+                "{}: {} variants for {} blocks",
+                model.name,
+                variants.len(),
+                blocks.len()
+            ));
+        }
         if self.tenants.len() <= tenant {
             self.tenants.resize_with(tenant + 1, || None);
         }
@@ -163,25 +217,38 @@ impl BlockStore {
 
         let mut refs = Vec::new();
         let mut stats = SyncStats::default();
-        for b in &blocks {
-            let hash = block_hash(model, b.layer_lo, b.layer_hi);
-            let r = BlockRef { hash, bytes: b.size_bytes };
+        for (i, b) in blocks.iter().enumerate() {
+            let v = variants.get(i).copied().unwrap_or(SwapVariant::Plain);
+            let hash = codec_hash(block_hash(model, b.layer_lo, b.layer_hi), v);
+            let resident = v.working_set(b.size_bytes);
+            let file_bytes = match v {
+                SwapVariant::Compressed => {
+                    (b.size_bytes as f64 * crate::codec::PLANNED_RATIO).ceil() as u64
+                }
+                SwapVariant::Plain | SwapVariant::Tiled { .. } => b.size_bytes,
+            };
+            let r = BlockRef { hash, bytes: resident };
             let e = self.entries.entry(hash).or_insert(Entry {
-                bytes: b.size_bytes,
+                bytes: resident,
+                file_bytes,
                 file: file_id(hash),
                 disk_refs: 0,
                 resident_refs: 0,
                 alloc: None,
             });
-            debug_assert_eq!(e.bytes, b.size_bytes, "content hash collision");
+            debug_assert_eq!(e.file_bytes, file_bytes, "content hash collision");
+            // Tenants may window the same content at different tile
+            // working sets; the entry charges the largest so the shared
+            // resident copy covers every reader.
+            e.bytes = e.bytes.max(resident);
             if e.disk_refs == 0 {
-                stats.new_file_bytes += b.size_bytes;
-                self.unique_bytes += b.size_bytes;
+                stats.new_file_bytes += file_bytes;
+                self.unique_bytes += file_bytes;
             } else {
-                stats.dedup_bytes += b.size_bytes;
+                stats.dedup_bytes += file_bytes;
             }
             e.disk_refs += 1;
-            self.logical_bytes += b.size_bytes;
+            self.logical_bytes += file_bytes;
             refs.push(r);
         }
         let window = residency_m.max(1).min(refs.len());
@@ -212,9 +279,9 @@ impl BlockStore {
                 continue;
             };
             e.disk_refs -= 1;
-            self.logical_bytes -= r.bytes;
+            self.logical_bytes -= e.file_bytes;
             if e.disk_refs == 0 {
-                self.unique_bytes -= e.bytes;
+                self.unique_bytes -= e.file_bytes;
                 if e.resident_refs == 0 {
                     freed.push(e.file);
                     self.entries.remove(&r.hash);
@@ -244,8 +311,11 @@ impl BlockStore {
         for r in &snapshot {
             let e = self.entries.get_mut(&r.hash).expect("windowed block has an entry");
             if e.resident_refs == 0 {
-                e.alloc = Some(mem.alloc(RESIDENCY_TAG, Space::Unified, r.bytes));
-                charged += r.bytes;
+                // Charge the entry's resident bytes (the max working set
+                // over referencing tenants), not this lease's view, so
+                // the shared copy covers every reader.
+                e.alloc = Some(mem.alloc(RESIDENCY_TAG, Space::Unified, e.bytes));
+                charged += e.bytes;
             } else {
                 shared += r.bytes;
             }
@@ -461,6 +531,66 @@ mod tests {
             bs.unique_bytes(),
             families::resnet101().size_bytes() + families::vgg19().size_bytes()
         );
+    }
+
+    #[test]
+    fn compressed_variant_registers_codec_tagged_wire_bytes() {
+        let base = families::resnet101();
+        let points: Vec<usize> = base.legal_cut_points().into_iter().take(2).collect();
+        let n = points.len() + 1;
+        let mut bs = BlockStore::new();
+        let plain = bs.sync_tenant(0, &base, &points, 2).unwrap();
+        let mut clone = base.clone();
+        clone.name = "resnet101-lz".into();
+        let comp = bs
+            .sync_tenant_variants(1, &clone, &points, 2, &vec![SwapVariant::Compressed; n])
+            .unwrap();
+        // Different namespace: nothing dedups against the plain files,
+        // and the compressed registration costs wire bytes on disk.
+        assert_eq!(comp.dedup_bytes, 0);
+        assert!(comp.new_file_bytes < plain.new_file_bytes, "{comp:?} vs {plain:?}");
+        // A second compressed clone dedups fully inside the codec
+        // namespace.
+        let mut c2 = base.clone();
+        c2.name = "resnet101-lz2".into();
+        let again = bs
+            .sync_tenant_variants(2, &c2, &points, 2, &vec![SwapVariant::Compressed; n])
+            .unwrap();
+        assert_eq!(again.new_file_bytes, 0);
+        assert_eq!(again.dedup_bytes, comp.new_file_bytes);
+        // Residency still charges the decompressed block, not wire bytes.
+        let mut mem = MemSim::new(u64::MAX);
+        let a = bs.acquire_window(1, &mut mem).unwrap();
+        assert_eq!(a.charged_bytes, bs.window_bytes(1));
+        bs.release_window(a.lease, &mut mem);
+        assert_eq!(mem.current(), 0);
+    }
+
+    #[test]
+    fn tiled_variant_shares_plain_files_but_windows_its_working_set() {
+        let base = families::resnet101();
+        let points: Vec<usize> = base.legal_cut_points().into_iter().take(2).collect();
+        let n = points.len() + 1;
+        let mut bs = BlockStore::new();
+        let t = bs
+            .sync_tenant_variants(0, &base, &points, 2, &vec![SwapVariant::Tiled { t: 4 }; n])
+            .unwrap();
+        assert_eq!(t.new_file_bytes, base.size_bytes(), "tiling reads the plain files");
+        let mut plain_clone = base.clone();
+        plain_clone.name = "resnet101-p".into();
+        bs.sync_tenant(1, &plain_clone, &points, 2).unwrap();
+        // The tile working set bounds the resident window below plain.
+        assert!(bs.window_bytes(0) < bs.window_bytes(1));
+        // Same namespace: the plain clone dedups against the tiled files.
+        assert_eq!(bs.dedup_bytes(), base.size_bytes());
+        let mut mem = MemSim::new(u64::MAX);
+        let a = bs.acquire_window(0, &mut mem).unwrap();
+        // Shared entries charge the max working set over their tenants
+        // (here the plain clone's full blocks cover the tiled reader).
+        assert_eq!(a.charged_bytes, bs.window_bytes(1));
+        bs.release_window(a.lease, &mut mem);
+        assert_eq!(mem.current(), 0);
+        assert_eq!(mem.ledger_errors, 0);
     }
 
     #[test]

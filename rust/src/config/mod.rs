@@ -74,6 +74,17 @@ pub struct DeviceProfile {
     /// overhead behind the paper's m = 2 cap and Fig 16's latency growth
     /// with block count.
     pub dispatch_s_per_block: f64,
+    /// CPU seconds per *uncompressed* byte to decompress a block read
+    /// through the swap codec (the compressed-variant trade: fewer IO
+    /// bytes for this CPU cost). LZ-style decompression streams near
+    /// memcpy speed on the NX Carmel cores and proportionally slower on
+    /// the Nano's A57s — the ratio is what makes the planner's variant
+    /// choice device-dependent.
+    pub decompress_s_per_byte: f64,
+    /// Extra serial dispatch cost per additional sub-block tile when a
+    /// block's swap+exec is split into `t` tiles (the tiled variant's
+    /// latency price for its smaller working set).
+    pub tile_dispatch_s: f64,
 
     // ---- standard-path costs SwapNet bypasses ------------------------
     /// Buffered (page-cache) read bandwidth on a cache miss.
@@ -117,6 +128,13 @@ impl DeviceProfile {
             dma_setup_s: 150e-6,
             // Carmel thread wake-up + dispatch between blocks.
             dispatch_s_per_block: 3.5e-3,
+            // LZ-style decompress streams ~9 GB/s on the Carmel cores —
+            // cheaper than the DMA bytes it saves, so compression wins
+            // here when IO binds.
+            decompress_s_per_byte: 1.0 / 9.0e9,
+            // Sub-block tile dispatch: a fraction of the full block
+            // dispatch (no thread wake-up, just another kernel launch).
+            tile_dispatch_s: 1.0e-3,
             // Buffered reads land around 2.2 GB/s and leave a cache copy.
             cached_read_s_per_byte: 1.0 / 2.2e9,
             cache_hit_s_per_byte: 1.0 / 10e9,
@@ -152,6 +170,12 @@ impl DeviceProfile {
             // (scaled like the other coefficients, ~1.2x the NX).
             dma_setup_s: 180e-6,
             dispatch_s_per_block: 4.2e-3,
+            // The A57s decompress ~1.4x slower than the Carmel cores —
+            // slow enough that the bytes saved no longer pay for the CPU
+            // time, so the Nano's planner keeps Plain where the NX
+            // chooses Compressed.
+            decompress_s_per_byte: 1.36 / 9.0e9,
+            tile_dispatch_s: 1.2e-3,
             cache_mgmt_s: 1.6e-3,
             dummy_instantiate_s_per_depth: 410e-6,
             power: PowerProfile {

@@ -31,6 +31,12 @@ pub struct DelayModel {
     /// ("higher order of parallelism often leads more thread switching
     /// overhead") and why Fig 16's latency grows with block count.
     pub dispatch_s_per_block: f64,
+    /// CPU seconds per uncompressed byte for the swap codec's
+    /// decompression (the Compressed variant's CPU price).
+    pub decompress_s_per_byte: f64,
+    /// Extra dispatch cost per additional sub-block tile (the Tiled
+    /// variant's latency price).
+    pub tile_dispatch_s: f64,
 }
 
 impl DelayModel {
@@ -44,6 +50,8 @@ impl DelayModel {
             gc_s: p.gc_s,
             dma_setup_s: p.dma_setup_s,
             dispatch_s_per_block: p.dispatch_s_per_block,
+            decompress_s_per_byte: p.decompress_s_per_byte,
+            tile_dispatch_s: p.tile_dispatch_s,
         }
     }
 
@@ -65,6 +73,8 @@ impl DelayModel {
             gc_s: fit.gc_s,
             dma_setup_s: p.dma_setup_s,
             dispatch_s_per_block: p.dispatch_s_per_block,
+            decompress_s_per_byte: p.decompress_s_per_byte,
+            tile_dispatch_s: p.tile_dispatch_s,
         }
     }
 

@@ -65,6 +65,11 @@ pub struct InferenceReport {
     /// Aggregate swap-in I/O seconds across blocks (the `ServeTrace`
     /// decomposition the multi-tenant server emits per request).
     pub swap_s: f64,
+    /// Aggregate bytes that crossed the swap channel. Under a compressed
+    /// variant this is the *wire* (compressed) byte count, so it is the
+    /// metric the codec trades CPU time against; 0 on the device-resident
+    /// fast path, which swaps nothing.
+    pub swap_bytes: u64,
     /// Aggregate skeleton-assembly seconds across blocks.
     pub assembly_s: f64,
     /// Aggregate pure execution seconds across blocks.
@@ -148,6 +153,13 @@ impl ExecBackend for SimBackend {
                 let schedule = Schedule {
                     points: points.to_vec(),
                     n_blocks: points.len() + 1,
+                    // Registered per-block variants describe the
+                    // registered partition; an override re-cuts the
+                    // model, so fall back to plain swap-in everywhere.
+                    variants: vec![
+                        crate::pipeline::SwapVariant::Plain;
+                        points.len() + 1
+                    ],
                     ..reg.schedule.clone()
                 };
                 let mut c = *cfg;
@@ -190,6 +202,7 @@ fn report_from_run(model: &str, run: crate::engine::SnetRun) -> InferenceReport 
         cache_hits: run.cache_hits,
         cache_misses: run.cache_misses,
         swap_s: run.swap_s,
+        swap_bytes: run.swap_bytes,
         assembly_s: run.assembly_s,
         compute_s: run.compute_s,
         output: None,
@@ -327,6 +340,7 @@ impl ExecBackend for PjrtBackend {
                 cache_hits: 0,
                 cache_misses: 0,
                 swap_s: 0.0,
+                swap_bytes: 0,
                 assembly_s: 0.0,
                 compute_s: dt,
                 output: Some(output),
@@ -382,6 +396,7 @@ impl ExecBackend for PjrtBackend {
             cache_hits: 0,
             cache_misses: 0,
             swap_s,
+            swap_bytes: sizes.iter().sum(),
             assembly_s,
             compute_s,
             output: Some(rep.output),

@@ -175,6 +175,7 @@ pub struct EngineBuilder {
     budget: Option<u64>,
     cost_source: CostSource,
     plan_cache_bytes: Option<u64>,
+    policy: crate::pipeline::VariantPolicy,
 }
 
 impl Default for EngineBuilder {
@@ -191,7 +192,17 @@ impl EngineBuilder {
             budget: None,
             cost_source: CostSource::Analytic,
             plan_cache_bytes: None,
+            policy: crate::pipeline::VariantPolicy::default(),
         }
+    }
+
+    /// Swap-variant policy (DESIGN.md §13): whether the planner may
+    /// choose Compressed / Tiled variants per block, and the tile-count
+    /// cap. The default (`CodecMode::Off`, `tile_max = 1`) plans
+    /// bit-identically to a variant-unaware build.
+    pub fn variant_policy(mut self, policy: crate::pipeline::VariantPolicy) -> EngineBuilder {
+        self.policy = policy;
+        self
     }
 
     /// Where the planner's per-block delay predictions come from:
@@ -284,7 +295,8 @@ impl EngineBuilder {
             ..PlanCacheConfig::default()
         };
         let planner =
-            Planner::for_source(self.cost_source, &self.profile, self.cfg.seed, cache_cfg);
+            Planner::for_source(self.cost_source, &self.profile, self.cfg.seed, cache_cfg)
+                .with_policy(self.policy);
         Engine {
             core: Rc::new(RefCell::new(EngineCore {
                 profile: self.profile,

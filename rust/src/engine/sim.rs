@@ -70,6 +70,10 @@ pub struct SnetRun {
     pub assembly_s: f64,
     /// Aggregate pure execution seconds across blocks.
     pub compute_s: f64,
+    /// Bytes that crossed the storage channel across all swap-ins (wire
+    /// bytes: below the parameter bytes when the planner chose
+    /// Compressed variants).
+    pub swap_bytes: u64,
 }
 
 /// Naive equal-memory partition (the w/o-pat-sch ablation): walk layers
@@ -135,6 +139,10 @@ pub(crate) fn naive_schedule(
         n_blocks: points.len() + 1,
         peak_bytes: peak,
         predicted_latency_s: latency,
+        // The ablation path never considers swap variants, and the
+        // optimized plan's variants are per-block so they cannot carry
+        // over to a different partition anyway.
+        variants: vec![crate::pipeline::SwapVariant::Plain; points.len() + 1],
         points,
         ..base
     })
@@ -212,24 +220,43 @@ pub(crate) fn simulate_scheduled(
     let mut times: Vec<BlockTimes> = Vec::with_capacity(blocks.len());
     let mut cache_hits = 0u64;
     let mut cache_misses = 0u64;
+    let mut swap_bytes = 0u64;
     let (mut swap_s, mut assembly_s, mut compute_s) = (0.0f64, 0.0f64, 0.0f64);
     let mut resident: std::collections::VecDeque<crate::swap::ResidentBlock> =
         std::collections::VecDeque::new();
     let mut assembled = Vec::new();
     for (i, b) in blocks.iter().enumerate() {
         let file = 0x5A00_0000 + i as u64;
-        let rb = swapper.swap_in_sim(b, file, model.processor, &mut storage, &mut mem, prof);
+        // Planner-chosen swap variant for this block (DESIGN.md §13):
+        // the swap controller charges its working set and wire bytes,
+        // and tiled execution pays the per-tile dispatch overhead.
+        let v = schedule
+            .variants
+            .get(i)
+            .copied()
+            .unwrap_or(crate::pipeline::SwapVariant::Plain);
+        let rb =
+            swapper.swap_in_sim_variant(b, file, model.processor, v, &mut storage, &mut mem, prof);
         let ab = assembler
             .assemble(b, &skeletons[i], b.size_bytes as usize, &mut mem, prof)
             .map_err(|e| format!("{}: {e}", model.name))?;
         let j_in = jit(&mut rng, cfg.jitter);
         let t_in = (rb.swap_in_s + ab.sim_latency_s) * j_in;
-        let t_ex = dm.t_ex(b, model.processor) * cfg.cpu_load_factor * jit(&mut rng, cfg.jitter);
+        let tile_overhead = match v {
+            crate::pipeline::SwapVariant::Tiled { t } => {
+                dm.tile_dispatch_s * t.saturating_sub(1) as f64
+            }
+            _ => 0.0,
+        };
+        let t_ex = (dm.t_ex(b, model.processor) + tile_overhead)
+            * cfg.cpu_load_factor
+            * jit(&mut rng, cfg.jitter);
         swap_s += rb.swap_in_s * j_in;
         assembly_s += ab.sim_latency_s * j_in;
         compute_s += t_ex;
         cache_hits += rb.cache_hits;
         cache_misses += rb.cache_misses;
+        swap_bytes += rb.io_bytes;
         resident.push_back(rb);
         assembled.push(Some(ab));
         times.push(BlockTimes { t_in, t_ex, t_out: dm.t_out(b) });
@@ -277,6 +304,7 @@ pub(crate) fn simulate_scheduled(
         swap_s,
         assembly_s,
         compute_s,
+        swap_bytes,
     })
 }
 
@@ -321,6 +349,7 @@ mod tests {
             points: vec![1, 2],
             predicted_latency_s: 0.0,
             peak_bytes: 80 * MB,
+            variants: vec![crate::pipeline::SwapVariant::Plain; 3],
         }
     }
 

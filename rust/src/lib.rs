@@ -23,6 +23,7 @@
 
 pub mod assembly;
 pub mod blockstore;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod delay;

@@ -27,7 +27,7 @@ use swapnet::config::{DeviceProfile, MB};
 use swapnet::delay::{profiler, DelayModel};
 use swapnet::engine::{scenario_budgets, CostSource, Engine};
 use swapnet::model::{artifacts, families};
-use swapnet::pipeline::PipelineSpec;
+use swapnet::pipeline::{CodecMode, PipelineSpec, VariantPolicy};
 use swapnet::planner::{PlanCacheConfig, PlanStats, Planner};
 use swapnet::scheduler::{self, adapt::AdaptiveScheduler, partition};
 use swapnet::util::table;
@@ -71,6 +71,18 @@ const PLAN_CACHE_FLAG: FlagSpec = FlagSpec {
     help: "byte bound on the shared plan cache (default 4000000)",
 };
 
+const CODEC_FLAG: FlagSpec = FlagSpec {
+    name: "codec",
+    metavar: "MODE",
+    help: "swap codec policy: off | auto | force (default off; auto lets the DP pick per block)",
+};
+
+const TILE_MAX_FLAG: FlagSpec = FlagSpec {
+    name: "tile-max",
+    metavar: "T",
+    help: "largest sub-block tile count the planner may choose (default 1 = tiling off)",
+};
+
 const COMMANDS: &[CmdSpec] = &[
     CmdSpec {
         name: "scenario",
@@ -89,6 +101,8 @@ const COMMANDS: &[CmdSpec] = &[
             PIPELINE_M_FLAG,
             COSTS_FLAG,
             PLAN_CACHE_FLAG,
+            CODEC_FLAG,
+            TILE_MAX_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -120,6 +134,8 @@ const COMMANDS: &[CmdSpec] = &[
             PIPELINE_M_FLAG,
             COSTS_FLAG,
             PLAN_CACHE_FLAG,
+            CODEC_FLAG,
+            TILE_MAX_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -202,6 +218,8 @@ const COMMANDS: &[CmdSpec] = &[
             PIPELINE_M_FLAG,
             COSTS_FLAG,
             PLAN_CACHE_FLAG,
+            CODEC_FLAG,
+            TILE_MAX_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -319,6 +337,8 @@ const COMMANDS: &[CmdSpec] = &[
             PIPELINE_M_FLAG,
             COSTS_FLAG,
             PLAN_CACHE_FLAG,
+            CODEC_FLAG,
+            TILE_MAX_FLAG,
             DEVICE_FLAG,
         ],
     },
@@ -497,6 +517,19 @@ fn plan_cache_bytes(flags: &HashMap<String, String>) -> Result<u64> {
     parsed(flags, "plan-cache-bytes", swapnet::planner::cache::DEFAULT_CACHE_BYTES)
 }
 
+/// `--codec` / `--tile-max` flags: the planner's swap-variant policy
+/// (DESIGN.md §13). The default is the historical plain-only space.
+fn variant_policy(flags: &HashMap<String, String>) -> Result<VariantPolicy> {
+    let name = flags.get("codec").map(String::as_str).unwrap_or("off");
+    let codec = CodecMode::by_name(name)
+        .ok_or_else(|| anyhow!("unknown codec mode `{name}` (expected off | auto | force)"))?;
+    let tile_max: usize = parsed(flags, "tile-max", 1)?;
+    if tile_max == 0 {
+        return Err(anyhow!("--tile-max must be at least 1 (1 disables tiling)"));
+    }
+    Ok(VariantPolicy { codec, tile_max })
+}
+
 /// One-line planner summary for CLI output.
 fn plan_line(st: &PlanStats) -> String {
     format!(
@@ -570,6 +603,7 @@ fn cmd_scenario(flags: &HashMap<String, String>) -> Result<()> {
         .pipeline_m(pipeline_m(flags)?)
         .cost_source(cost_source(flags)?)
         .plan_cache_bytes(plan_cache_bytes(flags)?)
+        .variant_policy(variant_policy(flags)?)
         .build();
     let mut rows = Vec::new();
     for m in methods {
@@ -649,19 +683,23 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     // Seed 0 = SnetConfig's default: `--costs measured` fits the SAME
     // coefficients here as the engine-based commands (scenario,
     // serve-multi), so tables and plans agree across the CLI.
+    let policy = variant_policy(flags)?;
     let mut planner = Planner::for_source(
         source,
         &prof,
         0,
         PlanCacheConfig { capacity_bytes: plan_cache_bytes(flags)?, ..Default::default() },
     );
+    planner.set_policy(policy);
     let dm = planner.delay_model().clone();
-    let t = partition::build_lookup_table_spec(&model, n, &dm, &spec);
+    let t = partition::build_lookup_table_policy(&model, n, &dm, &spec, policy);
     println!(
-        "{} into {} blocks (residency m={}): {} candidate partitions ({} table)",
+        "{} into {} blocks (residency m={}, codec {:?}, tile-max {}): {} candidate partitions ({} table)",
         model.name,
         n,
         spec.residency_m,
+        policy.codec,
+        policy.tile_max,
         t.rows.len(),
         table::human_bytes(t.approx_bytes())
     );
@@ -670,23 +708,19 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     for r in t.rows.iter().take(5) {
         rows.push(row_of(r, usable));
     }
-    rows.push(vec!["...".into(), "...".into(), "...".into()]);
+    rows.push(vec!["...".into(), "...".into(), "...".into(), "...".into()]);
+    let headers = ["partition points", "variants", "max memory", "predicted latency"];
     if let Some(best) = t.best_within(usable) {
         rows.push(row_of(best, usable));
+        println!("{}", table::render(&headers, &rows));
         println!(
-            "{}",
-            table::render(&["partition points", "max memory", "predicted latency"], &rows)
-        );
-        println!(
-            "best within {budget_mb} MB: {:?} -> {}",
+            "best within {budget_mb} MB: {:?} [{}] -> {}",
             best.points,
+            variant_labels(&best.variants),
             table::human_secs(best.predicted_latency_s)
         );
     } else {
-        println!(
-            "{}",
-            table::render(&["partition points", "max memory", "predicted latency"], &rows)
-        );
+        println!("{}", table::render(&headers, &rows));
         println!("no feasible {n}-block partition within {budget_mb} MB");
     }
     // The production path: one planner probe (DP + cache) instead of a
@@ -695,9 +729,10 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
         Ok(s) => {
             let _ = planner.plan(&model, budget_mb * MB, &spec);
             println!(
-                "planner probe: {} blocks at {:?}, predicted {}",
+                "planner probe: {} blocks at {:?} [{}], predicted {}",
                 s.n_blocks,
                 s.points,
+                variant_labels(&s.variants),
                 table::human_secs(s.predicted_latency_s)
             );
         }
@@ -707,9 +742,14 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn variant_labels(vs: &[swapnet::pipeline::SwapVariant]) -> String {
+    vs.iter().map(|v| v.label()).collect::<Vec<_>>().join(",")
+}
+
 fn row_of(r: &partition::Row, usable: u64) -> Vec<String> {
     vec![
         format!("{:?}", r.points),
+        variant_labels(&r.variants),
         if r.max_mem_bytes <= usable {
             table::human_bytes(r.max_mem_bytes)
         } else {
@@ -801,6 +841,7 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
         .pipeline_m(pipeline_m(flags)?)
         .cost_source(cost_source(flags)?)
         .plan_cache_bytes(plan_cache_bytes(flags)?)
+        .variant_policy(variant_policy(flags)?)
         .build();
     let mut server = MultiTenantServer::new(engine, cfg);
     for m in models {
@@ -928,6 +969,7 @@ fn cmd_serve_storm(flags: &HashMap<String, String>) -> Result<()> {
         .pipeline_m(pipeline_m(flags)?)
         .cost_source(cost_source(flags)?)
         .plan_cache_bytes(plan_cache_bytes(flags)?)
+        .variant_policy(variant_policy(flags)?)
         .build();
     let mut server = MultiTenantServer::new(engine, cfg);
     for m in models {

@@ -65,6 +65,137 @@ pub struct BlockTimes {
     pub t_out: f64,
 }
 
+/// How one block's bytes move through a swap-in (DESIGN.md §13).
+///
+/// The planner's interval DP picks one variant per block per budget:
+/// `Plain` is the historical direct read; `Compressed` reads the
+/// codec-compressed content file and decompresses in the pool slot
+/// (fewer IO bytes, extra CPU); `Tiled { t }` splits the block's
+/// swap+exec into `t` sub-units so only a bounded working set — not the
+/// whole block — is ever resident (higher latency, lower peak).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SwapVariant {
+    /// One direct read of the full block (the historical path).
+    Plain,
+    /// Swap codec: read compressed bytes, decompress into the slot.
+    Compressed,
+    /// Split swap+exec into `t` double-buffered sub-block tiles.
+    Tiled {
+        /// Tile count (>= 2; 1 degenerates to `Plain`).
+        t: usize,
+    },
+}
+
+impl SwapVariant {
+    /// Bytes of a `size`-byte block this variant keeps resident at its
+    /// peak. Plain and Compressed materialize the full uncompressed
+    /// block (decompression lands in the same slot); a tiled block only
+    /// ever holds two tiles (the one executing and the one streaming in).
+    pub fn working_set(&self, size_bytes: u64) -> u64 {
+        match *self {
+            SwapVariant::Plain | SwapVariant::Compressed => size_bytes,
+            SwapVariant::Tiled { t } => {
+                let t = t.max(1) as u64;
+                let tile = size_bytes.div_ceil(t);
+                (tile * 2.min(t)).min(size_bytes)
+            }
+        }
+    }
+
+    /// Compact label for tables and traces.
+    pub fn label(&self) -> String {
+        match *self {
+            SwapVariant::Plain => "plain".to_string(),
+            SwapVariant::Compressed => "lz".to_string(),
+            SwapVariant::Tiled { t } => format!("tile{t}"),
+        }
+    }
+}
+
+impl Default for SwapVariant {
+    fn default() -> SwapVariant {
+        SwapVariant::Plain
+    }
+}
+
+/// Whether the planner may (or must) use the swap codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CodecMode {
+    /// Never compress (the historical default; plans are bit-identical
+    /// to the pre-codec planner).
+    #[default]
+    Off,
+    /// The DP picks Compressed per block when it predicts a win.
+    Auto,
+    /// Every swapped block uses the codec (measurement/debug mode).
+    Force,
+}
+
+impl CodecMode {
+    pub fn by_name(name: &str) -> Option<CodecMode> {
+        match name {
+            "off" => Some(CodecMode::Off),
+            "auto" => Some(CodecMode::Auto),
+            "force" => Some(CodecMode::Force),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecMode::Off => "off",
+            CodecMode::Auto => "auto",
+            CodecMode::Force => "force",
+        }
+    }
+}
+
+/// The variant search space the planner is allowed to explore — the
+/// `--codec` / `--tile-max` surface. The default (`Off`, tile_max 1)
+/// spans exactly `{Plain}`, keeping default plans bit-identical to the
+/// pre-variant planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VariantPolicy {
+    pub codec: CodecMode,
+    /// Largest tile count the DP may try (power-of-two candidates in
+    /// `2..=tile_max`; 1 disables tiling).
+    pub tile_max: usize,
+}
+
+impl Default for VariantPolicy {
+    fn default() -> VariantPolicy {
+        VariantPolicy { codec: CodecMode::Off, tile_max: 1 }
+    }
+}
+
+impl VariantPolicy {
+    /// Does this policy span more than the historical `{Plain}` space?
+    pub fn is_default(&self) -> bool {
+        *self == VariantPolicy::default()
+    }
+
+    /// The variant candidates the DP may cost for one block, in a fixed
+    /// deterministic order. `Plain` is always first except under
+    /// `Force`, where the codec replaces it.
+    pub fn candidates(&self) -> Vec<SwapVariant> {
+        let mut out = Vec::new();
+        match self.codec {
+            CodecMode::Off => out.push(SwapVariant::Plain),
+            CodecMode::Auto => {
+                out.push(SwapVariant::Plain);
+                out.push(SwapVariant::Compressed);
+            }
+            CodecMode::Force => out.push(SwapVariant::Compressed),
+        }
+        let mut t = 2usize;
+        while t <= self.tile_max {
+            out.push(SwapVariant::Tiled { t });
+            t *= 2;
+        }
+        out
+    }
+}
+
 /// Exact pipeline schedule of n blocks: per-block swap/exec intervals.
 #[derive(Debug, Clone)]
 pub struct Timeline {

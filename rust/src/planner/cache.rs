@@ -425,13 +425,15 @@ mod tests {
     use super::*;
 
     fn sched(model: &str, budget: u64, points: Vec<usize>) -> Schedule {
+        let n_blocks = points.len() + 1;
         Schedule {
             model: model.into(),
             budget_bytes: budget,
-            n_blocks: points.len() + 1,
+            n_blocks,
             points,
             predicted_latency_s: 0.5,
             peak_bytes: budget / 2,
+            variants: vec![crate::pipeline::SwapVariant::Plain; n_blocks],
         }
     }
 
@@ -444,6 +446,7 @@ mod tests {
                     points: vec![i + 1],
                     max_mem_bytes: 1000 + i as u64,
                     predicted_latency_s: 1.0 - i as f64 * 1e-3,
+                    variants: vec![crate::pipeline::SwapVariant::Plain; 2],
                 })
                 .collect(),
         }

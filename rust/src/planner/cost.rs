@@ -14,7 +14,7 @@ use crate::config::{DeviceProfile, Processor};
 use crate::delay::profiler::Fit;
 use crate::delay::DelayModel;
 use crate::model::{BlockInfo, ModelInfo};
-use crate::pipeline::BlockTimes;
+use crate::pipeline::{BlockTimes, SwapVariant};
 // The shared content hash: cost fingerprints and the block store's
 // on-disk keys must agree, so both pull the same `util::hash::fnv1a`
 // (its stability tests pin the constants).
@@ -30,7 +30,7 @@ pub fn model_fingerprint(model: &ModelInfo) -> u64 {
     }))
 }
 
-fn delay_model_words(dm: &DelayModel) -> [u64; 8] {
+fn delay_model_words(dm: &DelayModel) -> [u64; 10] {
     [
         dm.alpha_s_per_byte.to_bits(),
         dm.beta_s_per_depth.to_bits(),
@@ -40,6 +40,8 @@ fn delay_model_words(dm: &DelayModel) -> [u64; 8] {
         dm.gc_s.to_bits(),
         dm.dma_setup_s.to_bits(),
         dm.dispatch_s_per_block.to_bits(),
+        dm.decompress_s_per_byte.to_bits(),
+        dm.tile_dispatch_s.to_bits(),
     ]
 }
 
@@ -61,6 +63,47 @@ pub trait CostProvider {
     fn block_times(&self, b: &BlockInfo, proc: Processor) -> BlockTimes {
         let dm = self.delay_model();
         BlockTimes { t_in: dm.t_in(b), t_ex: dm.t_ex(b, proc), t_out: dm.t_out(b) }
+    }
+
+    /// Predicted delays for one block swapped under a specific variant
+    /// (DESIGN.md §13). `Plain` is exactly [`block_times`](Self::block_times),
+    /// so the default planner path is bit-identical to the pre-variant one.
+    ///
+    /// `Compressed` trades IO bytes for CPU: the wire carries
+    /// `ceil(size * PLANNED_RATIO)` bytes at the swap bandwidth, then the
+    /// CPU pays `decompress_s_per_byte` per *uncompressed* byte. Whether
+    /// that trade wins is device-dependent — the NX's Carmel cores
+    /// decompress faster than the saved IO, the Nano's A57s don't.
+    ///
+    /// `Tiled { t }` splits the read into `t` serial sub-reads (t DMA
+    /// setups instead of one) and adds `tile_dispatch_s` per extra tile
+    /// to execution: strictly slower than `Plain`, but its working set is
+    /// two tiles instead of the whole block, so it survives dominance
+    /// pruning as the low-memory end of the frontier.
+    fn variant_times(&self, b: &BlockInfo, proc: Processor, v: SwapVariant) -> BlockTimes {
+        let base = self.block_times(b, proc);
+        let dm = self.delay_model();
+        match v {
+            SwapVariant::Plain => base,
+            SwapVariant::Compressed => {
+                let wire = (b.size_bytes as f64 * crate::codec::PLANNED_RATIO).ceil();
+                BlockTimes {
+                    t_in: dm.dma_setup_s
+                        + dm.alpha_s_per_byte * wire
+                        + dm.beta_s_per_depth * b.depth as f64
+                        + dm.decompress_s_per_byte * b.size_bytes as f64,
+                    ..base
+                }
+            }
+            SwapVariant::Tiled { t } => {
+                let extra = t.saturating_sub(1) as f64;
+                BlockTimes {
+                    t_in: base.t_in + dm.dma_setup_s * extra,
+                    t_ex: base.t_ex + dm.tile_dispatch_s * extra,
+                    ..base
+                }
+            }
+        }
     }
 }
 
@@ -143,6 +186,11 @@ pub struct MeasuredCosts {
     scale_in: f64,
     scale_asm: f64,
     scale_ex: f64,
+    /// Refinement factor on the codec's decompress law (fed by
+    /// [`observe_decompress`](Self::observe_decompress), not by the
+    /// three-law [`CostObservation`] — decompress CPU time is measured
+    /// separately on the swap-in path).
+    scale_dec: f64,
     observations: u64,
     fp: u64,
 }
@@ -161,6 +209,7 @@ impl MeasuredCosts {
             scale_in: 1.0,
             scale_asm: 1.0,
             scale_ex: 1.0,
+            scale_dec: 1.0,
             observations: 0,
             fp: 0,
         };
@@ -208,12 +257,33 @@ impl MeasuredCosts {
         self.fp != old_fp
     }
 
+    /// Fold one decompress measurement (`seen_s` CPU seconds to inflate
+    /// `bytes` uncompressed bytes) into the codec refinement scale, with
+    /// the same EMA / clamp / quantization machinery as [`observe`](Self::observe).
+    /// Returns true when the fingerprint moved — cached variant choices
+    /// made under the old decompress coefficient are then stale (a plan
+    /// that chose Compressed because decompression looked cheap must not
+    /// survive the discovery that it isn't).
+    pub fn observe_decompress(&mut self, bytes: u64, seen_s: f64) -> bool {
+        let pred = self.base.decompress_s_per_byte * bytes as f64;
+        if pred <= 0.0 || seen_s <= 0.0 {
+            return false;
+        }
+        let r = (seen_s / pred).clamp(RATIO_CLAMP.0, RATIO_CLAMP.1);
+        self.scale_dec = (1.0 - OBS_WEIGHT) * self.scale_dec + OBS_WEIGHT * r;
+        self.observations += 1;
+        let old_fp = self.fp;
+        self.rebuild();
+        self.fp != old_fp
+    }
+
     /// Re-derive the effective model and fingerprint from the scales.
     /// The effective model uses the QUANTIZED scales, so two states with
     /// equal fingerprints predict identically (the fingerprint contract).
     fn rebuild(&mut self) {
         let q = |s: f64| (s * FP_QUANTUM).round() / FP_QUANTUM;
-        let (qi, qa, qe) = (q(self.scale_in), q(self.scale_asm), q(self.scale_ex));
+        let (qi, qa, qe, qd) =
+            (q(self.scale_in), q(self.scale_asm), q(self.scale_ex), q(self.scale_dec));
         self.dm = DelayModel {
             alpha_s_per_byte: self.base.alpha_s_per_byte * qi,
             beta_s_per_depth: self.base.beta_s_per_depth * qa,
@@ -223,6 +293,8 @@ impl MeasuredCosts {
             gc_s: self.base.gc_s,
             dma_setup_s: self.base.dma_setup_s,
             dispatch_s_per_block: self.base.dispatch_s_per_block,
+            decompress_s_per_byte: self.base.decompress_s_per_byte * qd,
+            tile_dispatch_s: self.base.tile_dispatch_s,
         };
         self.fp = fnv1a(delay_model_words(&self.dm).into_iter().chain([1u64]));
     }
@@ -315,6 +387,15 @@ impl Costs {
         match self {
             Costs::Analytic(_) => false,
             Costs::Measured(m) => m.observe(obs),
+        }
+    }
+
+    /// Fold a decompress measurement into measured costs (no-op for
+    /// analytic). Returns true when the fingerprint moved.
+    pub fn observe_decompress(&mut self, bytes: u64, seen_s: f64) -> bool {
+        match self {
+            Costs::Analytic(_) => false,
+            Costs::Measured(m) => m.observe_decompress(bytes, seen_s),
         }
     }
 }
@@ -467,6 +548,55 @@ mod tests {
         let t = id.block_times(&b, Processor::Gpu);
         let base = inner.block_times(&b, Processor::Gpu);
         assert_eq!(t.t_ex, base.t_ex);
+    }
+
+    #[test]
+    fn variant_times_follow_the_device_tradeoff() {
+        use crate::pipeline::SwapVariant;
+        let b = block(100, 40, 2.0); // IO-bound: 100 MB, 2 GFLOPs
+        let nx = AnalyticCosts::from_profile(&DeviceProfile::jetson_nx());
+        let nano = AnalyticCosts::from_profile(&DeviceProfile::jetson_nano());
+        for costs in [&nx, &nano] {
+            let plain = costs.variant_times(&b, Processor::Gpu, SwapVariant::Plain);
+            assert_eq!(plain, costs.block_times(&b, Processor::Gpu), "Plain is the base path");
+        }
+        // NX Carmel decompresses faster than the saved IO; Nano doesn't.
+        let nx_plain = nx.variant_times(&b, Processor::Gpu, SwapVariant::Plain);
+        let nx_lz = nx.variant_times(&b, Processor::Gpu, SwapVariant::Compressed);
+        assert!(nx_lz.t_in < nx_plain.t_in, "{} !< {}", nx_lz.t_in, nx_plain.t_in);
+        let nano_plain = nano.variant_times(&b, Processor::Gpu, SwapVariant::Plain);
+        let nano_lz = nano.variant_times(&b, Processor::Gpu, SwapVariant::Compressed);
+        assert!(nano_lz.t_in > nano_plain.t_in, "{} !> {}", nano_lz.t_in, nano_plain.t_in);
+        // Tiling is strictly slower on both axes but halves the peak.
+        let tiled = nx.variant_times(&b, Processor::Gpu, SwapVariant::Tiled { t: 4 });
+        assert!(tiled.t_in > nx_plain.t_in && tiled.t_ex > nx_plain.t_ex);
+        assert_eq!(tiled.t_out, nx_plain.t_out);
+        assert_eq!(SwapVariant::Tiled { t: 4 }.working_set(b.size_bytes), b.size_bytes / 2);
+        assert_eq!(SwapVariant::Compressed.working_set(b.size_bytes), b.size_bytes);
+    }
+
+    #[test]
+    fn decompress_drift_moves_the_fingerprint() {
+        let prof = DeviceProfile::jetson_nx();
+        let fit = profiler::fit(&profiler::measure_sweep(&prof, 100, 0.0, 1));
+        let mut mc = MeasuredCosts::from_fit(&fit, &prof);
+        let fp0 = mc.fingerprint();
+        let bytes = 100 * MB;
+        // Sub-bucket drift (0.2% slow) stays inside the quantization band.
+        let pred = mc.delay_model().decompress_s_per_byte * bytes as f64;
+        assert!(!mc.observe_decompress(bytes, pred * 1.002), "sub-bucket must hold");
+        assert_eq!(mc.fingerprint(), fp0);
+        // A consistent 2x-slow decompressor must invalidate.
+        let mut changed = false;
+        for _ in 0..8 {
+            changed |= mc.observe_decompress(bytes, pred * 2.0);
+        }
+        assert!(changed, "2x decompress drift must move the fingerprint");
+        assert_ne!(mc.fingerprint(), fp0);
+        assert!(
+            mc.delay_model().decompress_s_per_byte > mc.delay_model().alpha_s_per_byte * 0.5,
+            "after drift the NX codec win is gone"
+        );
     }
 
     #[test]

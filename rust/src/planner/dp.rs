@@ -25,7 +25,7 @@
 //! gates the >= 10x claim in CI).
 
 use crate::model::{BlockInfo, ModelInfo};
-use crate::pipeline::PipelineSpec;
+use crate::pipeline::{PipelineSpec, SwapVariant, VariantPolicy};
 use crate::scheduler::partition::Row;
 
 use super::cost::CostProvider;
@@ -85,13 +85,19 @@ struct State {
     /// Swap-out completion times of the last min(k, m) blocks, oldest
     /// first (the ones future residency gates will fold).
     out_tail: Vec<f64>,
-    /// Sizes of the last min(k, m-1) blocks, oldest first (the open
-    /// part of the next m-window).
+    /// Working-set bytes of the last min(k, m-1) blocks, oldest first
+    /// (the open part of the next m-window). Equal to the block sizes
+    /// for Plain/Compressed; two tiles for Tiled.
     tail_sizes: Vec<u64>,
     /// Running max over completed m-windows.
     peak: u64,
+    /// Sum of all placed blocks' working sets (the n < m whole-window
+    /// peak, where no m-window ever completes).
+    ws_sum: u64,
     /// Cut points chosen so far.
     points: Vec<usize>,
+    /// Swap variant chosen for each placed block.
+    variants: Vec<SwapVariant>,
 }
 
 impl State {
@@ -103,13 +109,19 @@ impl State {
             out_tail: Vec::new(),
             tail_sizes: Vec::new(),
             peak: 0,
+            ws_sum: 0,
             points: Vec::new(),
+            variants: Vec::new(),
         }
     }
 }
 
 /// `a` dominates `b`: every cost component of `a` is <= `b`'s, so every
 /// continuation of `a` costs no more than the same continuation of `b`.
+/// `ws_sum` is deliberately NOT compared: it only reaches a row's memory
+/// column when n < m, and in that regime the tail never trims (at most
+/// n - 1 < m - 1 prefix blocks), so `tail_sizes` already carries every
+/// working set and elementwise tail dominance implies ws_sum dominance.
 fn dominates(a: &State, b: &State) -> bool {
     a.exec_end <= b.exec_end
         && a.gate_max <= b.gate_max
@@ -181,8 +193,11 @@ impl Prefix {
 }
 
 /// Advance the incremental timeline by the block spanning layers
-/// (lo, hi]. Replicates `pipeline::timeline_spec`'s per-block float
-/// operations exactly (see the parity property tests).
+/// (lo, hi], swapped under `variant`. Replicates
+/// `pipeline::timeline_spec`'s per-block float operations exactly for
+/// `SwapVariant::Plain` (see the parity property tests); other variants
+/// substitute the variant's delay triple and charge its working set in
+/// place of the block size.
 #[allow(clippy::too_many_arguments)]
 fn extend(
     st: &State,
@@ -193,10 +208,12 @@ fn extend(
     prefix: &Prefix,
     costs: &dyn CostProvider,
     m: usize,
+    variant: SwapVariant,
     is_final: bool,
 ) -> State {
     let b = prefix.block(index, lo, hi);
-    let t = costs.block_times(&b, model.processor);
+    let t = costs.variant_times(&b, model.processor, variant);
+    let ws = variant.working_set(b.size_bytes);
     let mut next = st.clone();
     // Residency gate: fold the (k-m)-th block's swap-out completion once
     // the tail holds m entries — identical to the i >= m branch of
@@ -216,16 +233,18 @@ fn extend(
     let exec_start = next.exec_end.max(swap_end);
     next.exec_end = exec_start + t.t_ex;
     next.out_tail.push(next.exec_end + t.t_out);
-    // m-window memory peak: a window completes once m-1 older sizes are
-    // open in the tail.
+    // m-window memory peak: a window completes once m-1 older working
+    // sets are open in the tail.
     if next.tail_sizes.len() == m - 1 {
-        let window: u64 = next.tail_sizes.iter().sum::<u64>() + b.size_bytes;
+        let window: u64 = next.tail_sizes.iter().sum::<u64>() + ws;
         next.peak = next.peak.max(window);
     }
-    next.tail_sizes.push(b.size_bytes);
+    next.tail_sizes.push(ws);
     if next.tail_sizes.len() > m.saturating_sub(1) {
         next.tail_sizes.remove(0);
     }
+    next.ws_sum += ws;
+    next.variants.push(variant);
     if !is_final {
         next.points.push(hi);
     }
@@ -234,13 +253,31 @@ fn extend(
 
 /// Exact DP over legal cut points: the (memory, latency) Pareto
 /// frontier of all n-block partitions of `model` under `spec`, with the
-/// per-block times supplied by `costs`.
+/// per-block times supplied by `costs`. Plain-only — the historical
+/// search space, bit-identical to the pre-variant planner.
 pub fn frontier(
     model: &ModelInfo,
     n: usize,
     costs: &dyn CostProvider,
     spec: &PipelineSpec,
 ) -> DpResult {
+    frontier_with(model, n, costs, spec, VariantPolicy::default())
+}
+
+/// The variant-aware DP (DESIGN.md §13): identical interval search, but
+/// each block placement branches over `policy.candidates()` — the same
+/// dominance pruning then keeps compressed prefixes when the codec wins
+/// on latency and tiled prefixes as the low-memory end of each cell.
+/// Under the default policy the candidate set is `{Plain}` and every
+/// float operation matches [`frontier`] exactly.
+pub fn frontier_with(
+    model: &ModelInfo,
+    n: usize,
+    costs: &dyn CostProvider,
+    spec: &PipelineSpec,
+    policy: VariantPolicy,
+) -> DpResult {
+    let cands = policy.candidates();
     let m = spec.residency_m.max(1);
     let channels = spec.swap_channels.max(1);
     let cuts = model.legal_cut_points();
@@ -268,8 +305,10 @@ pub fn frontier(
 
     let mut finals: Vec<State> = Vec::new();
     if k_cuts == 0 {
-        evals += 1;
-        finals.push(extend(&start, 0, l, 0, model, &prefix, costs, m, true));
+        for &v in &cands {
+            evals += 1;
+            finals.push(extend(&start, 0, l, 0, model, &prefix, costs, m, v, true));
+        }
     } else {
         // cells[j]: dominance frontier of prefixes whose last block ends
         // at cuts[j].
@@ -278,9 +317,11 @@ pub fn frontier(
         // cuts strictly after it.
         let last_ok = |stage: usize| cuts.len() + stage - k_cuts - 1;
         for j in 0..=last_ok(1) {
-            evals += 1;
-            let cand = extend(&start, 0, cuts[j], 0, model, &prefix, costs, m, false);
-            insert(&mut cells[j], cand, &mut capped);
+            for &v in &cands {
+                evals += 1;
+                let cand = extend(&start, 0, cuts[j], 0, model, &prefix, costs, m, v, false);
+                insert(&mut cells[j], cand, &mut capped);
+            }
         }
         for stage in 2..=k_cuts {
             let mut next_cells: Vec<Vec<State>> = vec![Vec::new(); cuts.len()];
@@ -291,10 +332,22 @@ pub fn frontier(
                 for st in &cells[j_prev] {
                     for (j, &c) in cuts.iter().enumerate().take(last_ok(stage) + 1).skip(j_prev + 1)
                     {
-                        evals += 1;
-                        let cand =
-                            extend(st, cuts[j_prev], c, stage - 1, model, &prefix, costs, m, false);
-                        insert(&mut next_cells[j], cand, &mut capped);
+                        for &v in &cands {
+                            evals += 1;
+                            let cand = extend(
+                                st,
+                                cuts[j_prev],
+                                c,
+                                stage - 1,
+                                model,
+                                &prefix,
+                                costs,
+                                m,
+                                v,
+                                false,
+                            );
+                            insert(&mut next_cells[j], cand, &mut capped);
+                        }
                     }
                 }
             }
@@ -302,22 +355,26 @@ pub fn frontier(
         }
         for (j, cell) in cells.iter().enumerate() {
             for st in cell {
-                evals += 1;
-                finals.push(extend(st, cuts[j], l, n - 1, model, &prefix, costs, m, true));
+                for &v in &cands {
+                    evals += 1;
+                    finals.push(extend(st, cuts[j], l, n - 1, model, &prefix, costs, m, v, true));
+                }
             }
         }
     }
 
     // Collapse final states to the (memory, latency) Pareto frontier.
     // For n <= m the whole chain coexists, matching
-    // `peak_resident_bytes_m`'s min(m, n)-wide window.
-    let total = prefix.size[l];
+    // `peak_resident_bytes_m`'s min(m, n)-wide window — with variants,
+    // that window holds each block's working set, tracked in `ws_sum`
+    // (equal to the chain total under Plain).
     let mut rows: Vec<Row> = finals
         .into_iter()
         .map(|st| Row {
-            max_mem_bytes: if n < m { total } else { st.peak },
+            max_mem_bytes: if n < m { st.ws_sum } else { st.peak },
             predicted_latency_s: st.exec_end,
             points: st.points,
+            variants: st.variants,
         })
         .collect();
     rows.sort_by(|a, b| {
@@ -325,6 +382,7 @@ pub fn frontier(
             .cmp(&b.max_mem_bytes)
             .then(a.predicted_latency_s.total_cmp(&b.predicted_latency_s))
             .then(a.points.cmp(&b.points))
+            .then(a.variants.cmp(&b.variants))
     });
     let mut front: Vec<Row> = Vec::new();
     for r in rows.drain(..) {
@@ -447,5 +505,77 @@ mod tests {
     fn too_few_cuts_yields_empty() {
         let m = model(&[10, 10]);
         assert!(frontier(&m, 4, &costs(), &PipelineSpec::default()).rows.is_empty());
+    }
+
+    #[test]
+    fn default_policy_is_bit_identical_to_plain_frontier() {
+        let m = model(&[12, 7, 21, 9, 15, 11, 18]);
+        let spec = PipelineSpec::default();
+        for n in 1..=4 {
+            let a = frontier(&m, n, &costs(), &spec);
+            let b = frontier_with(&m, n, &costs(), &spec, VariantPolicy::default());
+            assert_eq!(a.evals, b.evals, "n={n}");
+            assert_eq!(a.rows.len(), b.rows.len(), "n={n}");
+            for (ra, rb) in a.rows.iter().zip(&b.rows) {
+                assert_eq!(ra.max_mem_bytes, rb.max_mem_bytes);
+                assert_eq!(ra.predicted_latency_s, rb.predicted_latency_s);
+                assert_eq!(ra.points, rb.points);
+                assert!(ra.variants.iter().all(|v| *v == SwapVariant::Plain));
+            }
+        }
+    }
+
+    #[test]
+    fn auto_codec_never_loses_to_plain() {
+        // Plain stays a candidate under Auto, so for every budget the
+        // auto frontier's best row is at least as fast as plain's.
+        let m = model(&[40, 35, 50, 45, 38, 42]);
+        let spec = PipelineSpec::default();
+        let plain = frontier(&m, 4, &costs(), &spec);
+        let auto = frontier_with(
+            &m,
+            4,
+            &costs(),
+            &spec,
+            VariantPolicy { codec: crate::pipeline::CodecMode::Auto, tile_max: 1 },
+        );
+        for r in &plain.rows {
+            let best = auto.best_within(r.max_mem_bytes).expect("plain row stays feasible");
+            assert!(
+                best.predicted_latency_s <= r.predicted_latency_s,
+                "auto must not lose at {} bytes: {} vs {}",
+                r.max_mem_bytes,
+                best.predicted_latency_s,
+                r.predicted_latency_s
+            );
+        }
+        // On the NX the codec is a genuine win on IO-bound blocks.
+        let b_plain = plain.best_within(u64::MAX).unwrap();
+        let b_auto = auto.best_within(u64::MAX).unwrap();
+        assert!(b_auto.predicted_latency_s < b_plain.predicted_latency_s);
+        assert!(b_auto.variants.contains(&SwapVariant::Compressed));
+    }
+
+    #[test]
+    fn tiling_extends_the_frontier_below_plain_minimum() {
+        let m = model(&[40, 35, 50, 45, 38, 42]);
+        let spec = PipelineSpec::default();
+        let plain = frontier(&m, 3, &costs(), &spec);
+        let tiled = frontier_with(
+            &m,
+            3,
+            &costs(),
+            &spec,
+            VariantPolicy { codec: crate::pipeline::CodecMode::Off, tile_max: 4 },
+        );
+        let plain_floor = plain.rows.first().unwrap().max_mem_bytes;
+        let tiled_floor = tiled.rows.first().unwrap().max_mem_bytes;
+        assert!(
+            tiled_floor < plain_floor,
+            "tiling must reach below the plain floor: {tiled_floor} vs {plain_floor}"
+        );
+        // Budgets only plain can't satisfy become feasible.
+        assert!(plain.best_within(tiled_floor).is_none());
+        assert!(tiled.best_within(tiled_floor).is_some());
     }
 }

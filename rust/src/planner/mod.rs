@@ -35,9 +35,10 @@ use std::rc::Rc;
 use crate::config::DeviceProfile;
 use crate::delay::{profiler, DelayModel};
 use crate::model::ModelInfo;
-use crate::pipeline::PipelineSpec;
+use crate::pipeline::{PipelineSpec, SwapVariant, VariantPolicy};
 use crate::scheduler::partition::LookupTable;
 use crate::scheduler::{self, Schedule};
+use crate::util::hash::fnv1a;
 
 /// Builder-facing choice of cost provider.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -86,18 +87,57 @@ impl Default for PlanContext {
 /// the analytic truth.
 const MEASURED_SWEEP: (usize, f64) = (240, 0.01);
 
+/// Fold the variant policy into a cost fingerprint. The default policy
+/// is the identity, so default-path cache keys are byte-identical to the
+/// pre-variant planner's; any wider policy gets its own key space (a
+/// codec-aware plan must never answer a plain probe, and vice versa).
+fn policy_fp(fp: u64, policy: VariantPolicy) -> u64 {
+    if policy.is_default() {
+        fp
+    } else {
+        fnv1a([fp, 0x5641 /* "VA" */, policy.codec as u64, policy.tile_max as u64])
+    }
+}
+
 /// The planner: cost provider + DP partitioner + shared plan cache.
 #[derive(Debug)]
 pub struct Planner {
     costs: Costs,
     cache: PlanCache,
+    policy: VariantPolicy,
     dp_evals: u64,
     capped_frontiers: u64,
 }
 
 impl Planner {
     pub fn new(costs: Costs, cache_cfg: PlanCacheConfig) -> Planner {
-        Planner { costs, cache: PlanCache::new(cache_cfg), dp_evals: 0, capped_frontiers: 0 }
+        Planner {
+            costs,
+            cache: PlanCache::new(cache_cfg),
+            policy: VariantPolicy::default(),
+            dp_evals: 0,
+            capped_frontiers: 0,
+        }
+    }
+
+    /// Set the swap-variant search space (builder style). Plans and
+    /// tables made under different policies never share cache entries.
+    pub fn with_policy(mut self, policy: VariantPolicy) -> Planner {
+        self.policy = policy;
+        self
+    }
+
+    pub fn set_policy(&mut self, policy: VariantPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn policy(&self) -> VariantPolicy {
+        self.policy
+    }
+
+    /// The cache-keying fingerprint: cost fingerprint + variant policy.
+    fn eff_fp(&self) -> u64 {
+        policy_fp(self.costs.provider().fingerprint(), self.policy)
     }
 
     /// Analytic planner for a device profile with default cache sizing.
@@ -150,7 +190,19 @@ impl Planner {
     /// stale fingerprint are dropped.
     pub fn observe(&mut self, obs: &CostObservation) {
         if self.costs.observe(obs) {
-            let fp = self.costs.provider().fingerprint();
+            let fp = self.eff_fp();
+            self.cache.retain_fingerprint(fp);
+        }
+    }
+
+    /// Fold one decompress measurement into the cost provider (no-op for
+    /// analytic costs). When the decompress coefficient drifts past the
+    /// quantization band, the fingerprint moves and every cached plan —
+    /// in particular the variant choices made under the stale codec
+    /// price — is invalidated.
+    pub fn observe_decompress(&mut self, bytes: u64, seen_s: f64) {
+        if self.costs.observe_decompress(bytes, seen_s) {
+            let fp = self.eff_fp();
             self.cache.retain_fingerprint(fp);
         }
     }
@@ -178,12 +230,12 @@ impl Planner {
     /// carry the model's chain-content fingerprint alongside its name,
     /// so a same-named model with a different chain never aliases.
     pub fn table(&mut self, model: &ModelInfo, n: usize, spec: &PipelineSpec) -> Rc<LookupTable> {
-        let fp = self.fingerprint();
+        let fp = self.eff_fp();
         let chain = cost::model_fingerprint(model);
         if let Some(t) = self.cache.get_table(&model.name, chain, spec, n, fp) {
             return t;
         }
-        let out = dp::frontier(model, n, self.costs.provider(), spec);
+        let out = dp::frontier_with(model, n, self.costs.provider(), spec, self.policy);
         self.dp_evals += out.evals;
         self.capped_frontiers += u64::from(out.capped);
         let t = Rc::new(LookupTable { model: model.name.clone(), n_blocks: n, rows: out.rows });
@@ -202,12 +254,12 @@ impl Planner {
         spec: &PipelineSpec,
         costs: &dyn CostProvider,
     ) -> Rc<LookupTable> {
-        let fp = costs.fingerprint();
+        let fp = policy_fp(costs.fingerprint(), self.policy);
         let chain = cost::model_fingerprint(model);
         if let Some(t) = self.cache.get_table(&model.name, chain, spec, n, fp) {
             return t;
         }
-        let out = dp::frontier(model, n, costs, spec);
+        let out = dp::frontier_with(model, n, costs, spec, self.policy);
         self.dp_evals += out.evals;
         self.capped_frontiers += u64::from(out.capped);
         let t = Rc::new(LookupTable { model: model.name.clone(), n_blocks: n, rows: out.rows });
@@ -232,15 +284,16 @@ impl Planner {
         budget: u64,
         spec: &PipelineSpec,
     ) -> Result<Schedule, String> {
-        let fp = self.fingerprint();
+        let fp = self.eff_fp();
         let chain = cost::model_fingerprint(model);
         if let Some(s) = self.cache.get_plan(&model.name, chain, spec, budget, fp) {
             return Ok(s);
         }
         let dm = self.delay_model().clone();
+        let policy = self.policy;
         let sched = {
             let mut table_for = |n: usize| self.table(model, n, spec);
-            plan_walk(model, budget, spec, &dm, &mut table_for)?
+            plan_walk(model, budget, spec, &dm, policy, &mut table_for)?
         };
         self.cache.put_plan(&model.name, chain, spec, budget, fp, &sched);
         Ok(sched)
@@ -282,16 +335,17 @@ impl Planner {
         let batch = ctx.batch.max(1);
         let chain = cost::model_fingerprint(model);
         let rc = ReusedCosts::new(self.costs.provider(), batch);
-        let fp = rc.fingerprint();
+        let fp = policy_fp(rc.fingerprint(), self.policy);
         if let Some(s) =
             self.cache.get_plan_at(&model.name, chain, spec, eff, fp, pinned_band, batch)
         {
             return Ok(s);
         }
         let dm = rc.delay_model().clone();
+        let policy = self.policy;
         let sched = {
             let mut table_for = |n: usize| self.table_with(model, n, spec, &rc);
-            plan_walk(model, eff, spec, &dm, &mut table_for)?
+            plan_walk(model, eff, spec, &dm, policy, &mut table_for)?
         };
         self.cache.put_plan_at(&model.name, chain, spec, eff, fp, pinned_band, batch, &sched);
         Ok(sched)
@@ -307,12 +361,24 @@ pub fn plan_uncached(
     budget: u64,
     spec: &PipelineSpec,
 ) -> Result<Schedule, String> {
+    plan_uncached_policy(costs, model, budget, spec, VariantPolicy::default())
+}
+
+/// [`plan_uncached`] under an explicit variant policy (identical
+/// decisions to a fresh `Planner::with_policy`, without cache state).
+pub fn plan_uncached_policy(
+    costs: &dyn CostProvider,
+    model: &ModelInfo,
+    budget: u64,
+    spec: &PipelineSpec,
+    policy: VariantPolicy,
+) -> Result<Schedule, String> {
     let dm = costs.delay_model().clone();
     let mut table_for = |n: usize| {
-        let out = dp::frontier(model, n, costs, spec);
+        let out = dp::frontier_with(model, n, costs, spec, policy);
         Rc::new(LookupTable { model: model.name.clone(), n_blocks: n, rows: out.rows })
     };
-    plan_walk(model, budget, spec, &dm, &mut table_for)
+    plan_walk(model, budget, spec, &dm, policy, &mut table_for)
 }
 
 /// The shared budget walk (paper §6.2.2): whole-model fast path, then
@@ -323,11 +389,14 @@ fn plan_walk(
     budget: u64,
     spec: &PipelineSpec,
     dm: &DelayModel,
+    policy: VariantPolicy,
     table_for: &mut dyn FnMut(usize) -> Rc<LookupTable>,
 ) -> Result<Schedule, String> {
     let usable = scheduler::usable_budget(model, budget);
     let s = model.size_bytes();
     if s <= usable {
+        // Whole-model fast path: nothing swaps in steady state, so no
+        // variant applies — the single resident block is always Plain.
         let b = model.single_block();
         return Ok(Schedule {
             model: model.name.clone(),
@@ -336,6 +405,7 @@ fn plan_walk(
             points: vec![],
             predicted_latency_s: dm.t_in(&b) + dm.t_ex(&b, model.processor),
             peak_bytes: s,
+            variants: vec![SwapVariant::Plain],
         });
     }
     if usable == 0 {
@@ -344,11 +414,12 @@ fn plan_walk(
     // Feasibility floor: the finest legal partition minimizes the
     // m-window peak (merging segments only grows windows), so a budget
     // under the atomic peak is infeasible at EVERY n — error now
-    // instead of walking the whole n range through the DP.
+    // instead of walking the whole n range through the DP. The floor is
+    // policy-aware: tiling shrinks each segment's working set, so a
+    // tiling policy accepts budgets the plain floor rejects
+    // (`scheduler::minimal_budget_policy` advertises the same bound).
     let cuts = model.legal_cut_points();
-    let segs = model.create_blocks(&cuts).expect("all-legal cuts must be valid");
-    let seg_sizes: Vec<u64> = segs.iter().map(|b| b.size_bytes).collect();
-    if crate::pipeline::peak_resident_bytes_m(&seg_sizes, spec.residency_m) > usable {
+    if scheduler::atomic_peak_bytes_policy(model, spec, policy) > usable {
         return Err(format!(
             "{}: no feasible partition within {} MB",
             model.name,
@@ -373,6 +444,7 @@ fn plan_walk(
                 points: row.points.clone(),
                 predicted_latency_s: row.predicted_latency_s,
                 peak_bytes: row.max_mem_bytes,
+                variants: row.variants.clone(),
             });
         }
         n += 1;
@@ -611,6 +683,79 @@ mod tests {
         let ctx = PlanContext { pinned_bytes: budget, batch: 2 };
         let err = p.plan_decode(&m, budget, &spec, ctx).unwrap_err();
         assert!(err.contains("swap window"), "{err}");
+    }
+
+    #[test]
+    fn variant_policy_keys_its_own_cache_space() {
+        use crate::pipeline::CodecMode;
+        let prof = DeviceProfile::jetson_nx();
+        let m = families::resnet101();
+        let spec = PipelineSpec::default();
+        let budget = 102 * MB;
+        let mut plain = Planner::analytic(&prof);
+        let base = plain.plan(&m, budget, &spec).unwrap();
+        assert!(base.variants.iter().all(|v| *v == SwapVariant::Plain));
+        let mut auto = Planner::analytic(&prof)
+            .with_policy(VariantPolicy { codec: CodecMode::Auto, tile_max: 1 });
+        let lz = auto.plan(&m, budget, &spec).unwrap();
+        // Plain stays a candidate, so auto never predicts slower; on the
+        // NX's IO-bound ResNet blocks the codec is a strict win.
+        assert!(lz.predicted_latency_s < base.predicted_latency_s, "{lz:?}");
+        assert!(lz.variants.contains(&SwapVariant::Compressed));
+        assert_eq!(lz.variants.len(), lz.n_blocks);
+        // The cached auto plan answers auto probes only.
+        let again = auto.plan(&m, budget, &spec).unwrap();
+        assert_eq!(auto.stats().hits, 1);
+        assert_eq!(again.points, lz.points);
+        assert_eq!(again.variants, lz.variants);
+        // Uncached policy planning makes the identical decision.
+        let costs = AnalyticCosts::from_profile(&prof);
+        let one_shot = plan_uncached_policy(
+            &costs,
+            &m,
+            budget,
+            &spec,
+            VariantPolicy { codec: CodecMode::Auto, tile_max: 1 },
+        )
+        .unwrap();
+        assert_eq!(one_shot.points, lz.points);
+        assert_eq!(one_shot.variants, lz.variants);
+        assert_eq!(one_shot.predicted_latency_s, lz.predicted_latency_s);
+    }
+
+    #[test]
+    fn tiling_policy_accepts_budgets_below_the_plain_floor() {
+        use crate::pipeline::CodecMode;
+        let prof = DeviceProfile::jetson_nx();
+        let m = crate::model::ModelInfo {
+            name: "tile-toy".into(),
+            family: "toy".into(),
+            layers: (0..8)
+                .map(|i| crate::model::LayerInfo {
+                    name: format!("l{i}"),
+                    kind: "conv".into(),
+                    size_bytes: 30 * MB,
+                    depth: 4,
+                    flops: 2_000_000_000,
+                    cut_after: true,
+                })
+                .collect(),
+            accuracy: 90.0,
+            processor: crate::config::Processor::Cpu,
+        };
+        let spec = PipelineSpec::default();
+        let plain_min = scheduler::minimal_budget_spec(&m, &spec);
+        let policy = VariantPolicy { codec: CodecMode::Off, tile_max: 8 };
+        let tiled_min = scheduler::minimal_budget_policy(&m, &spec, policy);
+        assert!(tiled_min < plain_min, "{tiled_min} !< {plain_min}");
+        // A budget between the floors: plain rejects, tiling plans.
+        let budget = (tiled_min + plain_min) / 2;
+        let mut p = Planner::analytic(&prof);
+        assert!(p.plan(&m, budget, &spec).is_err(), "below the plain floor");
+        let mut t = Planner::analytic(&prof).with_policy(policy);
+        let s = t.plan(&m, budget, &spec).unwrap();
+        assert!(s.variants.iter().any(|v| matches!(v, SwapVariant::Tiled { .. })));
+        assert!(s.peak_bytes <= scheduler::usable_budget(&m, budget));
     }
 
     #[test]

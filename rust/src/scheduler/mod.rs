@@ -9,7 +9,7 @@ pub mod partition;
 use crate::config::{DeviceProfile, Processor, PARALLELISM_M};
 use crate::delay::DelayModel;
 use crate::model::ModelInfo;
-use crate::pipeline::PipelineSpec;
+use crate::pipeline::{PipelineSpec, SwapVariant, VariantPolicy};
 
 /// One model's demand as seen by the budget allocator.
 #[derive(Debug, Clone)]
@@ -72,6 +72,48 @@ pub fn atomic_peak_bytes(model: &ModelInfo, spec: &PipelineSpec) -> u64 {
         .create_blocks(&cuts)
         .expect("all-legal cuts must be valid");
     let sizes: Vec<u64> = segs.iter().map(|b| b.size_bytes).collect();
+    crate::pipeline::peak_resident_bytes_m(&sizes, spec.residency_m)
+}
+
+/// Minimal feasible budget under an explicit variant policy: sub-block
+/// tiling shrinks each atomic segment's working set to two tiles, so the
+/// residency floor — and with it the smallest budget the planner will
+/// accept — drops strictly below the plain floor once `tile_max >= 4`.
+/// The default policy reproduces [`minimal_budget_spec`] exactly.
+pub fn minimal_budget_policy(
+    model: &ModelInfo,
+    spec: &PipelineSpec,
+    policy: VariantPolicy,
+) -> u64 {
+    let peak = atomic_peak_bytes_policy(model, spec, policy);
+    (peak as f64 / 0.995).ceil() as u64 + overhead_bytes(model) + 1
+}
+
+/// Peak m-window bytes of the finest legal partition when every segment
+/// may use its cheapest-memory variant from `policy` — the policy-aware
+/// analogue of [`atomic_peak_bytes`], shared with the planner's
+/// feasibility gate so the advertised floor and the accepted floor stay
+/// definitionally identical.
+pub fn atomic_peak_bytes_policy(
+    model: &ModelInfo,
+    spec: &PipelineSpec,
+    policy: VariantPolicy,
+) -> u64 {
+    let cuts = model.legal_cut_points();
+    let segs = model
+        .create_blocks(&cuts)
+        .expect("all-legal cuts must be valid");
+    let cands = policy.candidates();
+    let sizes: Vec<u64> = segs
+        .iter()
+        .map(|b| {
+            cands
+                .iter()
+                .map(|v| v.working_set(b.size_bytes))
+                .min()
+                .unwrap_or(b.size_bytes)
+        })
+        .collect();
     crate::pipeline::peak_resident_bytes_m(&sizes, spec.residency_m)
 }
 
@@ -317,6 +359,10 @@ pub struct Schedule {
     pub points: Vec<usize>,
     pub predicted_latency_s: f64,
     pub peak_bytes: u64,
+    /// Swap variant per block (`n_blocks` entries; all-`Plain` under the
+    /// default policy). `peak_bytes` is the max m-window over these
+    /// variants' working sets.
+    pub variants: Vec<SwapVariant>,
 }
 
 /// Schedule one model into its budget under the default m=2 pipeline:
@@ -518,6 +564,27 @@ mod tests {
         let m3 = minimal_budget_spec(&m, &PipelineSpec::with_residency(3));
         assert_eq!(m2, minimal_budget_spec(&m, &PipelineSpec::default()));
         assert!(m3 > m2, "{m3} vs {m2}");
+    }
+
+    #[test]
+    fn tiling_policy_lowers_the_minimal_budget() {
+        let m = families::resnet101();
+        let spec = PipelineSpec::default();
+        // The default policy is definitionally the plain floor.
+        assert_eq!(
+            minimal_budget_policy(&m, &spec, VariantPolicy::default()),
+            minimal_budget_spec(&m, &spec)
+        );
+        // tile_max = 4 halves each segment's working set -> strictly
+        // lower floor; the codec alone changes nothing (same bytes once
+        // decompressed).
+        let tiled = VariantPolicy { codec: crate::pipeline::CodecMode::Off, tile_max: 4 };
+        assert!(
+            minimal_budget_policy(&m, &spec, tiled) < minimal_budget_spec(&m, &spec),
+            "tiled floor must undercut plain"
+        );
+        let lz = VariantPolicy { codec: crate::pipeline::CodecMode::Auto, tile_max: 1 };
+        assert_eq!(minimal_budget_policy(&m, &spec, lz), minimal_budget_spec(&m, &spec));
     }
 
     #[test]

@@ -24,15 +24,21 @@
 
 use crate::delay::DelayModel;
 use crate::model::ModelInfo;
-use crate::pipeline::{peak_resident_bytes_m, timeline_spec, BlockTimes, PipelineSpec};
+use crate::pipeline::{
+    peak_resident_bytes_m, timeline_spec, BlockTimes, PipelineSpec, SwapVariant, VariantPolicy,
+};
 
 /// One lookup-table row (paper Table 3: partition points, max memory,
-/// predicted latency).
+/// predicted latency, and — since the variant planner — the swap variant
+/// chosen for each block).
 #[derive(Debug, Clone)]
 pub struct Row {
     pub points: Vec<usize>,
     pub max_mem_bytes: u64,
     pub predicted_latency_s: f64,
+    /// Per-block swap variants (one per block, `points.len() + 1`).
+    /// All-`Plain` on the historical paths.
+    pub variants: Vec<SwapVariant>,
 }
 
 /// The run-time lookup table for one (model, n) pair.
@@ -88,9 +94,56 @@ pub fn evaluate_spec(
     Some((peak, timeline_spec(&times, spec).latency()))
 }
 
+/// Evaluate one candidate partition with an explicit per-block variant
+/// assignment: (max m-window working-set bytes, pipeline latency). The
+/// working set — not the raw block size — is what each variant keeps
+/// resident, so a tiled assignment's peak is genuinely smaller. The
+/// all-`Plain` assignment reproduces [`evaluate_spec`] bitwise.
+pub fn evaluate_variants_spec(
+    model: &ModelInfo,
+    points: &[usize],
+    variants: &[SwapVariant],
+    costs: &dyn crate::planner::CostProvider,
+    spec: &PipelineSpec,
+) -> Option<(u64, f64)> {
+    let blocks = model.create_blocks(points).ok()?;
+    if variants.len() != blocks.len() {
+        return None;
+    }
+    let ws: Vec<u64> =
+        blocks.iter().zip(variants).map(|(b, v)| v.working_set(b.size_bytes)).collect();
+    let peak = peak_resident_bytes_m(&ws, spec.residency_m);
+    let times: Vec<BlockTimes> = blocks
+        .iter()
+        .zip(variants)
+        .map(|(b, v)| costs.variant_times(b, model.processor, *v))
+        .collect();
+    Some((peak, timeline_spec(&times, spec).latency()))
+}
+
 /// Build the lookup table for n blocks under the default m=2 spec.
 pub fn build_lookup_table(model: &ModelInfo, n: usize, dm: &DelayModel) -> LookupTable {
     build_lookup_table_spec(model, n, dm, &PipelineSpec::default())
+}
+
+/// Build the lookup table under an explicit variant policy. The default
+/// policy routes through [`build_lookup_table_spec`] unchanged; any
+/// wider policy materializes the variant-aware DP frontier for every n
+/// (including n <= 3 — enumeration is plain-only, so the display table
+/// switches to the frontier the planner actually uses).
+pub fn build_lookup_table_policy(
+    model: &ModelInfo,
+    n: usize,
+    dm: &DelayModel,
+    spec: &PipelineSpec,
+    policy: VariantPolicy,
+) -> LookupTable {
+    if policy.is_default() {
+        return build_lookup_table_spec(model, n, dm, spec);
+    }
+    let costs = crate::planner::AnalyticCosts::new(dm.clone());
+    let rows = crate::planner::dp::frontier_with(model, n.max(1), &costs, spec, policy).rows;
+    LookupTable { model: model.name.clone(), n_blocks: n, rows }
 }
 
 /// Build the lookup table for n blocks under an explicit pipeline spec.
@@ -110,6 +163,7 @@ pub fn build_lookup_table_spec(
                 points: vec![],
                 max_mem_bytes: mem,
                 predicted_latency_s: lat,
+                variants: vec![SwapVariant::Plain],
             }],
             None => vec![],
         }
@@ -144,6 +198,7 @@ pub fn enumerate_rows(model: &ModelInfo, n: usize, dm: &DelayModel, spec: &Pipel
                 points,
                 max_mem_bytes: mem,
                 predicted_latency_s: lat,
+                variants: vec![SwapVariant::Plain; n],
             });
         }
         // next combination
@@ -308,6 +363,49 @@ mod tests {
             assert!(r3.max_mem_bytes >= r2.max_mem_bytes);
             assert!(r3.predicted_latency_s <= r2.predicted_latency_s + 1e-12);
         }
+    }
+
+    #[test]
+    fn all_plain_variant_evaluation_matches_legacy_bitwise() {
+        let m = uniform_model(6, 10);
+        let spec = PipelineSpec::with_residency(2);
+        let costs = crate::planner::AnalyticCosts::new(dm());
+        for points in [vec![2, 4], vec![1, 3], vec![3]] {
+            let n = points.len() + 1;
+            let legacy = evaluate_spec(&m, &points, &dm(), &spec).unwrap();
+            let plain = vec![SwapVariant::Plain; n];
+            let v = evaluate_variants_spec(&m, &points, &plain, &costs, &spec).unwrap();
+            assert_eq!(legacy, v, "points {points:?}");
+        }
+        // A tiled assignment lowers the evaluated peak below legacy.
+        let tiled = vec![SwapVariant::Tiled { t: 4 }; 3];
+        let (mem, lat) =
+            evaluate_variants_spec(&m, &[2, 4], &tiled, &costs, &spec).unwrap();
+        let (legacy_mem, legacy_lat) = evaluate_spec(&m, &[2, 4], &dm(), &spec).unwrap();
+        assert!(mem < legacy_mem, "{mem} !< {legacy_mem}");
+        assert!(lat > legacy_lat, "tiling pays latency: {lat} !> {legacy_lat}");
+        // Length mismatch is a contract violation, not a panic.
+        assert!(evaluate_variants_spec(&m, &[2, 4], &tiled[..2], &costs, &spec).is_none());
+    }
+
+    #[test]
+    fn policy_table_reaches_below_the_plain_floor() {
+        let m = uniform_model(6, 20);
+        let spec = PipelineSpec::default();
+        let plain = build_lookup_table_spec(&m, 3, &dm(), &spec);
+        let tiled = build_lookup_table_policy(
+            &m,
+            3,
+            &dm(),
+            &spec,
+            VariantPolicy { codec: crate::pipeline::CodecMode::Off, tile_max: 4 },
+        );
+        let plain_floor = plain.rows.iter().map(|r| r.max_mem_bytes).min().unwrap();
+        let tiled_floor = tiled.rows.iter().map(|r| r.max_mem_bytes).min().unwrap();
+        assert!(tiled_floor < plain_floor, "{tiled_floor} !< {plain_floor}");
+        // Default policy is the pass-through path.
+        let same = build_lookup_table_policy(&m, 3, &dm(), &spec, VariantPolicy::default());
+        assert_eq!(same.rows.len(), plain.rows.len());
     }
 
     #[test]

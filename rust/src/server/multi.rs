@@ -430,8 +430,11 @@ impl MultiTenantServer {
         }
         let m = self.engine.config().pipeline.residency_m.max(1);
         let sched = self.tenants[ti].handle.schedule();
+        // Variant-aware sync: compressed blocks register codec-tagged
+        // content files (wire bytes on disk), tiled blocks share the
+        // plain files but window their resident charge.
         self.blocks
-            .sync_tenant(ti, &self.tenants[ti].model, &sched.points, m)
+            .sync_tenant_variants(ti, &self.tenants[ti].model, &sched.points, m, &sched.variants)
             .map_err(|e| anyhow!("blockstore sync for tenant {ti}: {e}"))?;
         Ok(())
     }

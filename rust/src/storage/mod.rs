@@ -190,6 +190,57 @@ impl Storage {
         Ok(report)
     }
 
+    /// Real read of a codec-compressed block file, decompressed in place
+    /// inside `buf` (DESIGN.md §13): the compressed image lands in an
+    /// aligned scratch region *past* the payload window of the same
+    /// buffer, then streams front-to-front through
+    /// [`crate::codec::decompress`] — one checked-out slot, no second
+    /// buffer, no heap allocation once the slot is warm. `payload_len`
+    /// is the uncompressed block size the caller planned for (the codec
+    /// header is cross-checked against it).
+    ///
+    /// The cost report charges the *wire* bytes through the channel
+    /// model plus the device's decompress rate over the payload — the
+    /// same law [`CostProvider::variant_times`] plans with.
+    ///
+    /// [`CostProvider::variant_times`]: crate::planner::CostProvider::variant_times
+    pub fn read_compressed_into(
+        &mut self,
+        path: &Path,
+        channel: Channel,
+        payload_len: usize,
+        buf: &mut BlockBuffer,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+    ) -> Result<ReadReport> {
+        let clen = std::fs::metadata(path)?.len() as usize;
+        let scratch_off = aligned_len(payload_len);
+        buf.ensure_capacity(scratch_off + aligned_len(clen));
+        let outcome = {
+            let dst = buf.region_mut(scratch_off, aligned_len(clen));
+            read_into_slice_len(path, channel == Channel::DirectDma, dst, clen)
+                .with_context(|| format!("{channel:?} read {}", path.display()))?
+        };
+        let produced = {
+            let region = buf.region_mut(0, scratch_off + aligned_len(clen));
+            let (payload, scratch) = region.split_at_mut(scratch_off);
+            crate::codec::decompress(&scratch[..outcome.bytes], &mut payload[..payload_len])
+                .with_context(|| format!("decompress {}", path.display()))?
+        };
+        if produced != payload_len {
+            anyhow::bail!(
+                "{}: decompressed to {produced} B, planned {payload_len} B",
+                path.display()
+            );
+        }
+        buf.set_len(payload_len);
+        let id = self.file_id(path);
+        let mut report = self.read_sim(id, outcome.bytes as u64, channel, mem, prof);
+        report.sim_latency_s += prof.decompress_s_per_byte * payload_len as f64;
+        report.direct_fallback = outcome.fallback;
+        Ok(report)
+    }
+
     /// Drop a file's cached pages (swap-out hygiene for baselines).
     pub fn drop_cached(&mut self, path: &Path, mem: &mut MemSim) {
         if let Some(&id) = self.file_ids.get(path) {
@@ -321,6 +372,21 @@ pub fn read_file_into(path: &Path, direct: bool, buf: &mut BlockBuffer) -> std::
     outcome.grew = grew;
     buf.set_len(outcome.bytes);
     Ok(outcome)
+}
+
+/// Compress `payload` with the swap codec and write the image to `path`,
+/// returning the compressed length. Block-file materialization happens
+/// at registration time (offline phase), not on the steady-state swap
+/// path, so the scratch buffer here is acceptable. Callers that find the
+/// image larger than the payload should store plain instead (the
+/// planner's degrade-to-Plain rule).
+pub fn write_compressed_file(path: &Path, payload: &[u8]) -> std::io::Result<u64> {
+    // lint: allow(heap-alloc): offline registration-time materialization,
+    // not the swap path.
+    let mut img = vec![0u8; crate::codec::max_compressed_len(payload.len())];
+    let n = crate::codec::compress(payload, &mut img).expect("img sized by max_compressed_len");
+    std::fs::write(path, &img[..n])?;
+    Ok(n as u64)
 }
 
 /// O_DIRECT read with 4 KiB-aligned buffer; transparently falls back to a
@@ -464,6 +530,41 @@ mod tests {
         // Pre-sized buffer: neither read allocated.
         let o = read_file_into(&path, true, &mut buf).unwrap();
         assert!(!o.grew, "pre-sized buffer must be reused in place");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compressed_read_decompresses_in_place_without_allocating() {
+        let dir = std::env::temp_dir().join(format!("swapnet-lz-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("block.lz");
+        // Structured, quantized-weight-like payload (compressible family).
+        let data: Vec<u8> = (0..200_000usize).map(|i| ((i / 7) % 23) as u8).collect();
+        let clen = write_compressed_file(&path, &data).unwrap() as usize;
+        assert!(clen < data.len() / 2, "structured payload compresses: {clen}");
+        let mut st = Storage::new(64 * MB);
+        let mut mem = MemSim::new(u64::MAX);
+        let p = prof();
+        let mut buf = BlockBuffer::with_capacity(aligned_len(data.len()) + aligned_len(clen));
+        for channel in [Channel::Buffered, Channel::DirectDma] {
+            let rep = st
+                .read_compressed_into(&path, channel, data.len(), &mut buf, &mut mem, &p)
+                .unwrap();
+            assert_eq!(buf.as_slice(), &data[..], "{channel:?}");
+            assert_eq!(rep.bytes, clen as u64, "the report charges wire bytes");
+        }
+        // Pre-sized slot: the read + in-place decompress allocate nothing.
+        let allocs = buf.alloc_count();
+        st.read_compressed_into(&path, Channel::DirectDma, data.len(), &mut buf, &mut mem, &p)
+            .unwrap();
+        assert_eq!(buf.alloc_count(), allocs, "steady-state compressed read is zero-alloc");
+        // A plain (uncompressed) file is rejected, not misdecoded.
+        let plain = dir.join("plain.bin");
+        std::fs::write(&plain, &data).unwrap();
+        let err = st
+            .read_compressed_into(&plain, Channel::Buffered, data.len(), &mut buf, &mut mem, &p)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not swap-codec compressed"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -26,6 +26,7 @@ use crate::config::{DeviceProfile, Processor};
 use crate::hostmem::{BlockBuffer, BufferPool, PooledBuf};
 use crate::memsim::{AllocId, MemSim, Space};
 use crate::model::BlockInfo;
+use crate::pipeline::SwapVariant;
 use crate::storage::{content_file_id, Channel, ReadReport, Storage};
 
 /// Which swap-in implementation to use.
@@ -55,6 +56,9 @@ pub struct ResidentBlock {
     allocs: Vec<AllocId>,
     /// Simulated swap-in latency.
     pub swap_in_s: f64,
+    /// Bytes that actually crossed the storage channel for this swap-in
+    /// (wire bytes: less than the block size for compressed variants).
+    pub io_bytes: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
 }
@@ -95,14 +99,61 @@ impl SwapController {
         mem: &mut MemSim,
         prof: &DeviceProfile,
     ) -> ResidentBlock {
-        let io = storage.read_sim(file, block.size_bytes, self.channel(), mem, prof);
-        let (report, allocs) = self.dispatch_and_copy(block, proc, mem, prof, io);
+        self.swap_in_sim_variant(block, file, proc, SwapVariant::Plain, storage, mem, prof)
+    }
+
+    /// [`swap_in_sim`](Self::swap_in_sim) under a planner-chosen swap
+    /// variant (DESIGN.md §13). The IO and residency consequences follow
+    /// the variant's cost law exactly:
+    ///
+    /// * `Compressed` — wire bytes at the planner's provisioning ratio
+    ///   cross the channel, then the CPU decompressor streams over the
+    ///   full payload; the resident copy is the decompressed block.
+    /// * `Tiled { t }` — the same payload bytes cross in `t`
+    ///   sub-transfers (extra DMA setups, or cache-management passes on
+    ///   the buffered channel), and only the tile working set is ever
+    ///   resident at once — the memory ledger is charged for that, not
+    ///   the full block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn swap_in_sim_variant(
+        &self,
+        block: &BlockInfo,
+        file: u64,
+        proc: Processor,
+        variant: SwapVariant,
+        storage: &mut Storage,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+    ) -> ResidentBlock {
+        let io = match variant {
+            SwapVariant::Plain => {
+                storage.read_sim(file, block.size_bytes, self.channel(), mem, prof)
+            }
+            SwapVariant::Compressed => {
+                let wire = (block.size_bytes as f64 * crate::codec::PLANNED_RATIO).ceil() as u64;
+                let mut r = storage.read_sim(file, wire, self.channel(), mem, prof);
+                r.sim_latency_s += prof.decompress_s_per_byte * block.size_bytes as f64;
+                r
+            }
+            SwapVariant::Tiled { t } => {
+                let mut r = storage.read_sim(file, block.size_bytes, self.channel(), mem, prof);
+                let extra = t.saturating_sub(1) as f64;
+                r.sim_latency_s += match self.channel() {
+                    Channel::DirectDma => storage.dma_setup_s * extra,
+                    Channel::Buffered => prof.cache_mgmt_s * extra,
+                };
+                r
+            }
+        };
+        let resident = variant.working_set(block.size_bytes);
+        let (report, allocs) = self.dispatch_and_copy(block, proc, resident, mem, prof, io);
         ResidentBlock {
             block: block.clone(),
             data: PooledBuf::detached(BlockBuffer::empty()),
             direct_fallback: false,
             allocs,
             swap_in_s: report.sim_latency_s,
+            io_bytes: report.bytes,
             cache_hits: report.cache_hits,
             cache_misses: report.cache_misses,
         }
@@ -122,6 +173,26 @@ impl SwapController {
         prof: &DeviceProfile,
     ) -> ResidentBlock {
         self.swap_in_sim(block, content_file_id(hash), proc, storage, mem, prof)
+    }
+
+    /// Content-hash swap-in under a planner-chosen variant: the file id
+    /// is resolved through the codec-tagged namespace
+    /// ([`crate::blockstore::variant_file_id`]), so compressed reads
+    /// share pages with other tenants that chose Compressed — and never
+    /// alias the plain file.
+    #[allow(clippy::too_many_arguments)]
+    pub fn swap_in_content_variant(
+        &self,
+        block: &BlockInfo,
+        hash: u64,
+        proc: Processor,
+        variant: SwapVariant,
+        storage: &mut Storage,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+    ) -> ResidentBlock {
+        let file = crate::blockstore::variant_file_id(hash, variant);
+        self.swap_in_sim_variant(block, file, proc, variant, storage, mem, prof)
     }
 
     /// Swap a block in from a real parameter file (artifact execution):
@@ -158,6 +229,46 @@ impl SwapController {
         self.swap_in_file_buf(block, path, proc, storage, mem, prof, pool.checkout())
     }
 
+    /// Swap a block in from a codec-compressed parameter file: the wire
+    /// bytes land in a scratch region of the checked-out slot and are
+    /// decompressed in place in front of it
+    /// ([`Storage::read_compressed_into`]) — one slot, no second buffer,
+    /// zero heap allocations once the slot is warm. The resident payload
+    /// is bitwise-identical to what the plain path reads.
+    #[allow(clippy::too_many_arguments)]
+    pub fn swap_in_file_compressed(
+        &self,
+        block: &BlockInfo,
+        path: &Path,
+        proc: Processor,
+        storage: &mut Storage,
+        mem: &mut MemSim,
+        prof: &DeviceProfile,
+        pool: &BufferPool,
+    ) -> Result<ResidentBlock> {
+        let mut buf = pool.checkout();
+        let io = storage.read_compressed_into(
+            path,
+            self.channel(),
+            block.size_bytes as usize,
+            &mut buf,
+            mem,
+            prof,
+        )?;
+        let fallback = io.direct_fallback;
+        let (report, allocs) = self.dispatch_and_copy(block, proc, block.size_bytes, mem, prof, io);
+        Ok(ResidentBlock {
+            block: block.clone(),
+            data: buf,
+            direct_fallback: fallback,
+            allocs,
+            swap_in_s: report.sim_latency_s,
+            io_bytes: report.bytes,
+            cache_hits: report.cache_hits,
+            cache_misses: report.cache_misses,
+        })
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn swap_in_file_buf(
         &self,
@@ -171,23 +282,30 @@ impl SwapController {
     ) -> Result<ResidentBlock> {
         let io = storage.read_into(path, self.channel(), &mut buf, mem, prof)?;
         let fallback = io.direct_fallback;
-        let (report, allocs) = self.dispatch_and_copy(block, proc, mem, prof, io);
+        let (report, allocs) = self.dispatch_and_copy(block, proc, block.size_bytes, mem, prof, io);
         Ok(ResidentBlock {
             block: block.clone(),
             data: buf,
             direct_fallback: fallback,
             allocs,
             swap_in_s: report.sim_latency_s,
+            io_bytes: report.bytes,
             cache_hits: report.cache_hits,
             cache_misses: report.cache_misses,
         })
     }
 
     /// The post-I/O part of swap-in: tensor allocation + GPU dispatch.
+    /// `resident_bytes` is what the memory ledger is charged — the full
+    /// block for plain/compressed variants, the tile working set for
+    /// tiled ones. Copy/convert costs always cover the full payload
+    /// (every byte passes through), and the report keeps `io.bytes`:
+    /// the wire bytes that actually crossed the channel.
     fn dispatch_and_copy(
         &self,
         block: &BlockInfo,
         proc: Processor,
+        resident_bytes: u64,
         mem: &mut MemSim,
         prof: &DeviceProfile,
         io: ReadReport,
@@ -197,7 +315,7 @@ impl SwapController {
         match self.mode {
             SwapMode::Standard => {
                 // CPU tensor: malloc + copy from the page cache / read buf.
-                let cpu = mem.alloc(&self.tag, Space::Cpu, block.size_bytes);
+                let cpu = mem.alloc(&self.tag, Space::Cpu, resident_bytes);
                 allocs.push(cpu);
                 lat += block.size_bytes as f64 * prof.memcpy_s_per_byte;
                 if proc == Processor::Gpu {
@@ -206,7 +324,7 @@ impl SwapController {
                     // tensor stays referenced) — the paper's "two
                     // unnecessary copies co-existing in the same physical
                     // system memory".
-                    let gpu = mem.alloc(&self.tag, Space::Gpu, block.size_bytes);
+                    let gpu = mem.alloc(&self.tag, Space::Gpu, resident_bytes);
                     allocs.push(gpu);
                     lat += prof.gpu_dispatch_s
                         + block.size_bytes as f64 * prof.gpu_convert_s_per_byte;
@@ -214,7 +332,7 @@ impl SwapController {
             }
             SwapMode::ZeroCopy => {
                 // One unified allocation; dispatch returns the pointer.
-                let uni = mem.alloc(&self.tag, Space::Unified, block.size_bytes);
+                let uni = mem.alloc(&self.tag, Space::Unified, resident_bytes);
                 allocs.push(uni);
                 if proc == Processor::Gpu {
                     // Revised dispatch (Fig 6): cudaDeviceSynchronize only.
@@ -224,7 +342,7 @@ impl SwapController {
         }
         (
             ReadReport {
-                bytes: block.size_bytes,
+                bytes: io.bytes,
                 sim_latency_s: lat,
                 cache_hits: io.cache_hits,
                 cache_misses: io.cache_misses,
@@ -383,6 +501,116 @@ mod tests {
         let warm = b.swap_in_content(&block(16), 0xfeed, Processor::Cpu, &mut st, &mut mem, &prof);
         assert_eq!(warm.cache_misses, 0, "same content hash, same pages");
         assert!(warm.swap_in_s < cold.swap_in_s);
+    }
+
+    #[test]
+    fn compressed_variant_moves_fewer_bytes_and_pays_cpu() {
+        let (mut st, mut mem, prof) = setup();
+        let ctl = SwapController::new(SwapMode::ZeroCopy, "m");
+        let plain = ctl.swap_in_sim(&block(100), 1, Processor::Cpu, &mut st, &mut mem, &prof);
+        let lz = ctl.swap_in_sim_variant(
+            &block(100),
+            2,
+            Processor::Cpu,
+            SwapVariant::Compressed,
+            &mut st,
+            &mut mem,
+            &prof,
+        );
+        assert_eq!(plain.io_bytes, 100 * MB);
+        assert_eq!(lz.io_bytes, 50 * MB, "wire bytes at the planned ratio");
+        // On the NX the decompress rate beats the IO it saves.
+        assert!(lz.swap_in_s < plain.swap_in_s, "{} vs {}", lz.swap_in_s, plain.swap_in_s);
+        // The resident copy is still the full decompressed block.
+        let out = ctl.swap_out(lz, &mut mem, &prof);
+        assert_eq!(out.freed_bytes, 100 * MB);
+    }
+
+    #[test]
+    fn tiled_variant_charges_the_tile_working_set() {
+        let (mut st, mut mem, prof) = setup();
+        let ctl = SwapController::new(SwapMode::ZeroCopy, "m");
+        let v = SwapVariant::Tiled { t: 4 };
+        let ws = v.working_set(100 * MB);
+        assert!(ws < 100 * MB);
+        let rb =
+            ctl.swap_in_sim_variant(&block(100), 1, Processor::Cpu, v, &mut st, &mut mem, &prof);
+        assert_eq!(mem.current(), ws, "only the tile working set is resident");
+        assert_eq!(rb.io_bytes, 100 * MB, "every payload byte still crosses the wire");
+        // t-1 extra DMA setups over the plain transfer.
+        let plain = ctl.swap_in_sim(&block(100), 2, Processor::Cpu, &mut st, &mut mem, &prof);
+        assert!(
+            (rb.swap_in_s - plain.swap_in_s - 3.0 * st.dma_setup_s).abs() < 1e-9,
+            "{} vs {}",
+            rb.swap_in_s,
+            plain.swap_in_s
+        );
+        let out = ctl.swap_out(rb, &mut mem, &prof);
+        assert_eq!(out.freed_bytes, ws, "freed exactly what was charged");
+    }
+
+    #[test]
+    fn compressed_content_ids_never_alias_plain_pages() {
+        let (mut st, mut mem, prof) = setup();
+        let ctl = SwapController::new(SwapMode::Standard, "a");
+        let plain =
+            ctl.swap_in_content(&block(16), 0xfeed, Processor::Cpu, &mut st, &mut mem, &prof);
+        assert!(plain.cache_misses > 0);
+        // Same content hash under the Compressed variant: a different
+        // (codec-tagged) file, so its pages start cold.
+        let lz = ctl.swap_in_content_variant(
+            &block(16),
+            0xfeed,
+            Processor::Cpu,
+            SwapVariant::Compressed,
+            &mut st,
+            &mut mem,
+            &prof,
+        );
+        assert!(lz.cache_misses > 0, "codec namespace must not alias plain pages");
+        // But it dedups with itself: a second compressed reader is warm.
+        let warm = ctl.swap_in_content_variant(
+            &block(16),
+            0xfeed,
+            Processor::Cpu,
+            SwapVariant::Compressed,
+            &mut st,
+            &mut mem,
+            &prof,
+        );
+        assert_eq!(warm.cache_misses, 0);
+    }
+
+    #[test]
+    fn compressed_file_swap_in_lands_identical_bytes() {
+        use crate::hostmem::aligned_len;
+        let dir = std::env::temp_dir().join(format!("swapnet-swap-lz-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let plain_path = dir.join("b.bin");
+        let lz_path = dir.join("b.lz");
+        // Structured (quantized-weight-like) payload: compressible.
+        let bytes: Vec<u8> = (0..1usize << 20).map(|i| ((i / 5) % 31) as u8).collect();
+        std::fs::write(&plain_path, &bytes).unwrap();
+        let clen = crate::storage::write_compressed_file(&lz_path, &bytes).unwrap();
+        assert!(clen < bytes.len() as u64 / 2);
+        let (mut st, mut mem, prof) = setup();
+        let ctl = SwapController::new(SwapMode::ZeroCopy, "m");
+        let mut b = block(1);
+        b.size_bytes = bytes.len() as u64;
+        let pool =
+            BufferPool::new(aligned_len(bytes.len()) + aligned_len(clen as usize), 2);
+        let plain = ctl
+            .swap_in_file_pooled(&b, &plain_path, Processor::Cpu, &mut st, &mut mem, &prof, &pool)
+            .unwrap();
+        let lz = ctl
+            .swap_in_file_compressed(&b, &lz_path, Processor::Cpu, &mut st, &mut mem, &prof, &pool)
+            .unwrap();
+        // The zero-copy invariant holds and the payloads are bitwise equal.
+        assert!(lz.data.is_pooled());
+        assert_eq!(plain.data.as_slice(), lz.data.as_slice());
+        assert_eq!(lz.io_bytes, clen, "only wire bytes crossed the channel");
+        assert!(lz.io_bytes < plain.io_bytes / 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

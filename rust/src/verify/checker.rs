@@ -291,6 +291,21 @@ impl<'a> Checker<'a> {
         }
     }
 
+    /// Bytes block `b` charges the ledger while live. Healthy rules
+    /// charge `blocks[b]` (the variant working set); the stale-tiling
+    /// defect charges the full pre-tiling block instead.
+    fn charged_bytes(&self, b: usize) -> u64 {
+        if self.disc.tile_accounts_full_block {
+            self.prog
+                .tile_full_bytes
+                .get(b)
+                .copied()
+                .unwrap_or(self.prog.blocks[b])
+        } else {
+            self.prog.blocks[b]
+        }
+    }
+
     /// (live blocks, live block bytes, pinned bytes) for a state.
     fn metrics(&self, state: &[u8]) -> (usize, u64, u64) {
         let mut live_blocks = 0usize;
@@ -298,7 +313,7 @@ impl<'a> Checker<'a> {
         for b in 0..self.n {
             if phase(state, b) >= SWAP_IN_FLIGHT && !is_freed(state, b) {
                 live_blocks = live_blocks.saturating_add(1);
-                live_bytes = live_bytes.saturating_add(self.prog.blocks[b]);
+                live_bytes = live_bytes.saturating_add(self.charged_bytes(b));
             }
         }
         let mut pinned = self.prog.pinned_bytes;
@@ -608,6 +623,7 @@ mod tests {
         ProgramSpec {
             label: "test".to_string(),
             blocks,
+            tile_full_bytes: Vec::new(),
             residency_m: m,
             swap_channels: 1,
             budget_bytes: budget,

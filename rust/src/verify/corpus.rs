@@ -43,6 +43,7 @@ fn base(name: &str, blocks: Vec<u64>, budget: u64, claimed: u64) -> ProgramSpec 
     ProgramSpec {
         label: format!("corpus/{name}"),
         blocks,
+        tile_full_bytes: Vec::new(),
         residency_m: 2,
         swap_channels: 1,
         budget_bytes: budget,
@@ -140,6 +141,31 @@ pub fn cases() -> Vec<CorpusCase> {
         expected_kind: "residency-exceeded",
         expected_trace_len: 5,
         healthy_claimed_peak_bytes: 200,
+    });
+
+    // PR 10 guard: a tiled schedule whose claimed peak assumes the tile
+    // working set (60 + 50 = 110 B under the m=2 window), run through a
+    // stale accounting path that still charges each block's *full*
+    // pre-tiling bytes (90 / 80 B). Minimal trace: b0 swap-in start +
+    // done (90 B, fits the claim), then b1's swap-in-start charges
+    // 90 + 80 = 170 B > 110 B claimed. The healthy discipline charges
+    // the tile windows and proves the same claim.
+    let mut tiled = base(
+        "tiled_full_block_accounting",
+        vec![60, 50],
+        u64::MAX,
+        110,
+    );
+    tiled.tile_full_bytes = vec![90, 80];
+    out.push(CorpusCase {
+        name: "tiled_full_block_accounting",
+        note: "tiled swap-ins charged the full pre-tiling block while \
+               the claimed peak assumes the tile working set",
+        program: tiled,
+        discipline: Discipline { tile_accounts_full_block: true, ..Discipline::default() },
+        expected_kind: "claimed-peak-exceeded",
+        expected_trace_len: 3,
+        healthy_claimed_peak_bytes: 110,
     });
 
     out

@@ -38,8 +38,15 @@ pub use checker::{
 pub struct ProgramSpec {
     /// Human-readable label carried into counterexamples.
     pub label: String,
-    /// Per-block buffer bytes, in execution order.
+    /// Per-block buffer bytes, in execution order. For tiled swap
+    /// variants this is the tile *working set* — what the healthy
+    /// pipeline actually charges.
     pub blocks: Vec<u64>,
+    /// Full (pre-tiling) block bytes per block; empty means "same as
+    /// `blocks`". Only the `tile_accounts_full_block` defect discipline
+    /// reads it: a stale accounting path that charges the whole block
+    /// even though the schedule's claimed peak assumed the tile window.
+    pub tile_full_bytes: Vec<u64>,
     /// Pipeline residency m (blocks allowed live at once; >= 1).
     pub residency_m: usize,
     /// Independent swap-in channels (>= 1).
@@ -70,6 +77,17 @@ impl ProgramSpec {
         let blocks = model
             .create_blocks(&sched.points)
             .map_err(VerifyError::BadProgram)?;
+        // Each block is charged its variant's working set (the tile
+        // window for Tiled, the decompressed payload for Compressed);
+        // the full sizes ride along so the stale-accounting defect
+        // discipline can model charging the whole block instead.
+        let variant_of = |i: usize| {
+            sched
+                .variants
+                .get(i)
+                .copied()
+                .unwrap_or(crate::pipeline::SwapVariant::Plain)
+        };
         Ok(ProgramSpec {
             label: format!(
                 "{} @ {} B (n={}, m={}, ch={})",
@@ -79,7 +97,12 @@ impl ProgramSpec {
                 spec.residency_m.max(1),
                 spec.swap_channels.max(1),
             ),
-            blocks: blocks.iter().map(|b| b.size_bytes).collect(),
+            blocks: blocks
+                .iter()
+                .enumerate()
+                .map(|(i, b)| variant_of(i).working_set(b.size_bytes))
+                .collect(),
+            tile_full_bytes: blocks.iter().map(|b| b.size_bytes).collect(),
             residency_m: spec.residency_m.max(1),
             swap_channels: spec.swap_channels.max(1),
             budget_bytes: scheduler::usable_budget(model, sched.budget_bytes),
@@ -116,6 +139,11 @@ pub struct Discipline {
     /// defect the PR 9 prefetcher's budget/lease gates exist to
     /// prevent — only the channel gate survives).
     pub prefetch_ignores_residency: bool,
+    /// Tiled swap-ins are charged the *full* block instead of the tile
+    /// working set (`ProgramSpec::tile_full_bytes`), while the
+    /// schedule's claimed peak still assumes the tile window — a stale
+    /// accounting path that makes the claim a lie.
+    pub tile_accounts_full_block: bool,
 }
 
 impl Discipline {

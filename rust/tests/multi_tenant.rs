@@ -395,3 +395,65 @@ fn plan_cache_is_not_blind_to_pinned_kv_load() {
     assert_eq!(light2.points, light.points);
     assert_eq!(heavy2.points, heavy.points);
 }
+
+#[test]
+fn plan_cache_is_not_blind_to_decompress_drift() {
+    // Regression (mirror of the pinned-KV blindness test above, for the
+    // codec axis): a measured planner that chose Compressed because the
+    // decompressor looked cheap must not keep serving that plan from the
+    // cache after the decompress coefficient drifts past the fingerprint
+    // quantization band. Sub-band noise, on the other hand, must not
+    // shed warm entries.
+    use swapnet::pipeline::{CodecMode, PipelineSpec, SwapVariant, VariantPolicy};
+    use swapnet::planner::Planner;
+    let prof = DeviceProfile::jetson_nx();
+    let spec = PipelineSpec::default();
+    let policy = VariantPolicy { codec: CodecMode::Auto, tile_max: 1 };
+    let mut planner = Planner::measured(&prof, 7).with_policy(policy);
+    let model = families::vgg19();
+    let budget = 256 * MB;
+
+    let sched0 = planner.plan(&model, budget, &spec).unwrap();
+    assert!(
+        sched0.variants.iter().any(|v| matches!(v, SwapVariant::Compressed)),
+        "on the NX the fitted codec is cheaper than the PCIe bytes it saves, \
+         so auto must pick Compressed: {:?}",
+        sched0.variants
+    );
+    let st0 = planner.stats();
+    let _ = planner.plan(&model, budget, &spec).unwrap();
+    let st1 = planner.stats();
+    assert_eq!(st1.hits, st0.hits + 1, "warm re-probe must hit");
+
+    // Sub-band drift: a 0.2%-slow decompress observation stays inside the
+    // quantization bucket — the fingerprint holds and the cache survives.
+    let bytes = 100 * MB;
+    let pred = planner.delay_model().decompress_s_per_byte * bytes as f64;
+    planner.observe_decompress(bytes, pred * 1.002);
+    let st2 = planner.stats();
+    assert_eq!(st2.invalidations, st1.invalidations, "sub-band drift must not invalidate");
+    let _ = planner.plan(&model, budget, &spec).unwrap();
+    assert_eq!(planner.stats().hits, st1.hits + 1, "cache must stay warm under sub-band noise");
+
+    // Band-crossing drift: a consistently 3x-slow decompressor. The EMA
+    // pulls the codec scale past the 1/64 quantum within a few folds, the
+    // fingerprint moves, and every cached plan keyed by the stale price
+    // is dropped.
+    for _ in 0..8 {
+        planner.observe_decompress(bytes, pred * 3.0);
+    }
+    let st3 = planner.stats();
+    assert!(
+        st3.invalidations > st2.invalidations,
+        "band-crossing decompress drift must invalidate cached variant choices: {st3:?}"
+    );
+    let sched1 = planner.plan(&model, budget, &spec).unwrap();
+    let st4 = planner.stats();
+    assert_eq!(st4.misses, st3.misses + 1, "post-drift probe must re-plan, not replay");
+    assert!(
+        !sched1.variants.iter().any(|v| matches!(v, SwapVariant::Compressed)),
+        "a ~3x decompressor erases the NX codec win, so the re-plan must \
+         fall back to plain swap-ins: {:?}",
+        sched1.variants
+    );
+}

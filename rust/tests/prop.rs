@@ -844,7 +844,7 @@ mod frozen_beam {
     use std::collections::BTreeMap;
     use swapnet::delay::DelayModel;
     use swapnet::model::ModelInfo;
-    use swapnet::pipeline::PipelineSpec;
+    use swapnet::pipeline::{PipelineSpec, SwapVariant};
     use swapnet::scheduler::partition::{evaluate_spec, Row};
 
     pub fn heuristic_rows(
@@ -961,6 +961,7 @@ mod frozen_beam {
 
         seen.into_iter()
             .map(|(points, (mem, lat))| Row {
+                variants: vec![SwapVariant::Plain; points.len() + 1],
                 points,
                 max_mem_bytes: mem,
                 predicted_latency_s: lat,

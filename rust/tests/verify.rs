@@ -95,6 +95,37 @@ fn every_feasible_family_plan_proves() {
 }
 
 #[test]
+fn tiled_plans_prove_with_working_set_accounting() {
+    use swapnet::pipeline::{CodecMode, SwapVariant, VariantPolicy};
+    use swapnet::scheduler;
+    let prof = swapnet::config::DeviceProfile::jetson_nx();
+    let spec = PipelineSpec::default();
+    let policy = VariantPolicy { codec: CodecMode::Off, tile_max: 4 };
+    let model = families::vgg19();
+    let plain_floor = scheduler::minimal_budget_spec(&model, &spec);
+    let tiled_floor = scheduler::minimal_budget_policy(&model, &spec, policy);
+    assert!(tiled_floor < plain_floor, "tiling must lower the feasible floor");
+    let mut planner = Planner::analytic(&prof).with_policy(policy);
+    let sched = planner
+        .plan(&model, tiled_floor, &spec)
+        .expect("the advertised policy floor must be accepted under the policy");
+    assert!(
+        sched.variants.iter().any(|v| matches!(v, SwapVariant::Tiled { .. })),
+        "a sub-plain-floor budget requires at least one tiled block: {:?}",
+        sched.variants
+    );
+    // The admission gate abstracts each tiled block to its tile working
+    // set; the checker's exhaustive worst case must equal the claim.
+    match verify::verify_schedule(&model, &sched, &spec).unwrap() {
+        Outcome::Proved(p) => assert_eq!(
+            p.worst_live_bytes, sched.peak_bytes,
+            "claim vs reachable max under working-set accounting"
+        ),
+        Outcome::Unprovable { reason } => panic!("not provable: {reason}"),
+    }
+}
+
+#[test]
 fn llama7b_decode_plan_proves_at_2gb_with_pinned_kv() {
     let prof = swapnet::config::DeviceProfile::jetson_nx();
     let spec = PipelineSpec::default();
@@ -149,6 +180,7 @@ fn overcommitted_pinned_load_is_rejected_before_any_event() {
     let prog = verify::ProgramSpec {
         label: "pinned-over-budget".into(),
         blocks: vec![10],
+        tile_full_bytes: Vec::new(),
         residency_m: 2,
         swap_channels: 1,
         budget_bytes: 100,

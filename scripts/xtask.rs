@@ -13,7 +13,7 @@
 //!   B  heap-alloc      no `Vec::with_capacity` / `vec!` / `.to_vec()` /
 //!                      `Box::new` in steady-state swap-path modules
 //!                      (hostmem, storage, swap, pipeline::real,
-//!                      blockstore) — the buffer pool is the only
+//!                      blockstore, codec) — the buffer pool is the only
 //!                      steady-state allocator.
 //!   C  wall-clock      no `thread::spawn` / `Instant::now` in
 //!                      virtual-clock modules (server::reactor,
@@ -50,6 +50,7 @@ const HEAP_FREE_FILES: &[&str] = &[
     "rust/src/swap/mod.rs",
     "rust/src/pipeline/real.rs",
     "rust/src/blockstore/mod.rs",
+    "rust/src/codec/mod.rs",
 ];
 const HEAP_TOKENS: &[&str] = &["Vec::with_capacity", "vec!", ".to_vec()", "Box::new"];
 
